@@ -1,0 +1,67 @@
+//! CacheHash tour: the paper's §4 table under different big-atomic
+//! strategies, plus a head-to-head mini benchmark.
+//!
+//! ```bash
+//! cargo run --release --example hashtable_tour
+//! ```
+
+use std::time::Duration;
+
+use big_atomics::bench::driver::{run_map, MapImpl, OpSource};
+use big_atomics::bench::workload::WorkloadSpec;
+use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
+use big_atomics::atomics::{CachedMemEff, SeqLock};
+
+fn api_tour<M: ConcurrentMap>(table: M) {
+    // Insert-if-absent semantics, 8-byte keys and values.
+    assert!(table.insert(1, 100));
+    assert!(table.insert(2, 200));
+    assert!(!table.insert(1, 999), "duplicate insert rejected");
+    assert_eq!(table.find(1), Some(100));
+    assert_eq!(table.find(3), None);
+    assert!(table.remove(1));
+    assert!(!table.remove(1));
+    println!("  {:<24} api OK", table.map_name());
+}
+
+fn main() {
+    println!("CacheHash API (generic over the big-atomic strategy):");
+    api_tour(CacheHash::<SeqLock<LinkVal>>::new(1024));
+    api_tour(CacheHash::<CachedMemEff<LinkVal>>::new(1024));
+
+    // Collision behaviour: tiny table, long chains, still correct.
+    println!("\nchain stress (capacity 4, 1000 keys):");
+    let t = CacheHash::<CachedMemEff<LinkVal>>::new(4);
+    for k in 0..1000u64 {
+        assert!(t.insert(k, k * 3));
+    }
+    for k in 0..1000u64 {
+        assert_eq!(t.find(k), Some(k * 3));
+    }
+    for k in (0..1000u64).filter(|k| k % 7 == 0) {
+        assert!(t.remove(k));
+    }
+    assert_eq!(t.find(700), None);
+    assert_eq!(t.find(701), Some(2103));
+    println!("  1000 keys through 4 buckets OK");
+
+    // Head-to-head: inlined vs not, 2 threads, 50% updates.
+    println!("\nmini benchmark (n=16K, u=50%, z=0, p=2, 200ms/point):");
+    let spec = WorkloadSpec {
+        n: 1 << 14,
+        theta: 0.0,
+        update_pct: 50,
+        seed: 42,
+    };
+    for imp in [
+        MapImpl::CacheHashMemEff,
+        MapImpl::CacheHashSeqLock,
+        MapImpl::Chaining,
+        MapImpl::ShardedLock,
+        MapImpl::GlobalLock,
+    ] {
+        let r = run_map(imp, &spec, 2, Duration::from_millis(200), &OpSource::Rust);
+        println!("  {:<28} {:>8.3} Mop/s", imp.name(), r.mops());
+    }
+    println!("\nhashtable tour OK");
+}

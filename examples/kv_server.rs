@@ -1,0 +1,62 @@
+//! End-to-end driver: the whole three-layer stack on a real workload.
+//!
+//! ```bash
+//! make artifacts                       # once: AOT-compile the L1/L2 models
+//! cargo run --release --example kv_server
+//! ```
+//!
+//! Flow: the leader loads `artifacts/workload.hlo.txt` (the JAX/Pallas
+//! workload model) on the PJRT CPU client, generates batched requests
+//! through it, and pushes them through a bounded queue to worker threads
+//! serving a shared `CacheHash<CachedMemEff>` table.  Batch latencies are
+//! summarized by `artifacts/stats.hlo.txt` (the L2 stats model).  Python
+//! is not involved at any point of this run.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::time::Duration;
+
+use big_atomics::coordinator::kv_service::{run, KvConfig};
+use big_atomics::runtime::{default_artifact_dir, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // Artifacts are required for this example — it's the end-to-end
+    // proof that L1 (Pallas kernels) → L2 (JAX model) → HLO → PJRT →
+    // L3 (Rust service) compose.
+    let rt = Runtime::new(default_artifact_dir()).map_err(|e| {
+        anyhow::anyhow!("{e}\n\nthis example needs the AOT artifacts: run `make artifacts` first")
+    })?;
+    println!("PJRT platform: {}", rt.platform());
+
+    for (workers, label) in [(2usize, "2 workers"), (4, "4 workers (oversubscribed)")] {
+        let cfg = KvConfig {
+            n: 1 << 16,
+            workers,
+            batch: 512,
+            duration: Duration::from_secs(3),
+            update_pct: 30,
+            theta: 0.9,
+            seed: 0x4B56,
+        };
+        println!(
+            "\nkv_server: n={} {} batch={} u={}% z={} for {:?}",
+            cfg.n, label, cfg.batch, cfg.update_pct, cfg.theta, cfg.duration
+        );
+        let rep = run(&cfg, Some(&rt))?;
+        println!(
+            "  served {} requests in {:.2}s = {:.3} Mop/s",
+            rep.total_requests,
+            rep.elapsed.as_secs_f64(),
+            rep.mops()
+        );
+        println!(
+            "  mix: {} finds / {} inserts / {} deletes",
+            rep.finds, rep.inserts, rep.deletes
+        );
+        if let Some(lat) = rep.latency {
+            println!("  request latency ({} batches): {}", rep.sample_count, lat);
+        }
+    }
+    println!("\nkv_server end-to-end OK");
+    Ok(())
+}

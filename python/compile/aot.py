@@ -1,0 +1,77 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Artifacts (written to --outdir, default ../artifacts):
+    workload.hlo.txt  — model.workload_model  (bits, op_bits, cdf, u) -> (idx, op, key)
+    stats.hlo.txt     — model.stats_model     (latencies) -> summary[5]
+    manifest.txt      — key=value contract (batch size, cdf resolution, ...)
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # uint64 keys in hashmix
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(outdir: str) -> dict[str, str]:
+    os.makedirs(outdir, exist_ok=True)
+    written = {}
+
+    wl = jax.jit(model.workload_model).lower(*model.example_args_workload())
+    written["workload.hlo.txt"] = to_hlo_text(wl)
+
+    st = jax.jit(model.stats_model).lower(*model.example_args_stats())
+    written["stats.hlo.txt"] = to_hlo_text(st)
+
+    manifest = (
+        f"batch={model.BATCH}\n"
+        f"n_cdf={model.N_CDF}\n"
+        "workload_inputs=bits:u32[batch],op_bits:u32[batch],cdf:f32[n_cdf],u_frac:f32[]\n"
+        "workload_outputs=idx:s32[batch],op:s32[batch],key:u64[batch]\n"
+        "stats_inputs=latencies_ns:f32[batch]\n"
+        "stats_outputs=summary:f32[5]  # mean,p50,p90,p99,max\n"
+        "op_encoding=0:find 1:insert 2:delete\n"
+    )
+    written["manifest.txt"] = manifest
+
+    for name, text in written.items():
+        path = os.path.join(outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

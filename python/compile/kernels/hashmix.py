@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: 64-bit key mixing (murmur3 fmix64 variant).
+
+CacheHash (paper §4) hashes 8-byte keys to bucket indices.  The benchmark
+workload derives the key stream from the Zipfian index stream by a strong
+64-bit mix so that (a) contended indices map to stable keys, preserving the
+Zipfian contention structure, and (b) bucket residency is uniform, matching
+the paper's "load factor one" setup.
+
+This is the exact finalizer used by rust/src/hash/mod.rs::mix64 — the
+integration test `runtime_artifacts.rs` cross-checks the two bit-for-bit.
+
+Runs under jax_enable_x64 (uint64 lanes); interpret=True as always.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# murmur3 fmix64 constants.
+_C1 = 0xFF51AFD7ED558CCD
+_C2 = 0xC4CEB9FE1A85EC53
+
+
+def _mix64(x: jax.Array) -> jax.Array:
+    x = x ^ (x >> jnp.uint64(33))
+    x = x * jnp.uint64(_C1)
+    x = x ^ (x >> jnp.uint64(33))
+    x = x * jnp.uint64(_C2)
+    x = x ^ (x >> jnp.uint64(33))
+    return x
+
+
+def _hashmix_kernel(keys_ref, out_ref):
+    out_ref[...] = _mix64(keys_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def hashmix(keys: jax.Array, *, batch: int) -> jax.Array:
+    """Mix uint64[batch] keys with murmur3's fmix64 (Pallas, interpret)."""
+    return pl.pallas_call(
+        _hashmix_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.uint64),
+        interpret=True,
+    )(keys)

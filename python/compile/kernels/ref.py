@@ -1,0 +1,52 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package has an oracle here with the same signature;
+python/tests asserts bit-exact (integer) or allclose (float) agreement.
+The oracles deliberately use a *different* formulation (searchsorted vs
+unrolled binary search; scalar-python vs lane-wise mix) so a shared bug
+cannot hide.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INV_2_32 = 2.3283064365386963e-10
+
+_C1 = 0xFF51AFD7ED558CCD
+_C2 = 0xC4CEB9FE1A85EC53
+_MASK64 = (1 << 64) - 1
+
+
+def zipfian_indices_ref(bits: jax.Array, cdf: jax.Array) -> jax.Array:
+    """Oracle for zipfian.zipfian_indices: jnp.searchsorted formulation.
+
+    Returns the first index j with cdf[j] > u, identical to the kernel's
+    "count of entries <= u".
+    """
+    u = bits.astype(jnp.float32) * jnp.float32(_INV_2_32)
+    idx = jnp.searchsorted(cdf, u, side="right").astype(jnp.int32)
+    return jnp.minimum(idx, cdf.shape[0] - 1)  # clamp the u == 1.0 edge
+
+
+def hashmix_ref(keys: jax.Array) -> jax.Array:
+    """Oracle for hashmix.hashmix (vector jnp, same algebra)."""
+    x = keys.astype(jnp.uint64)
+    x = x ^ (x >> jnp.uint64(33))
+    x = x * jnp.uint64(_C1)
+    x = x ^ (x >> jnp.uint64(33))
+    x = x * jnp.uint64(_C2)
+    x = x ^ (x >> jnp.uint64(33))
+    return x
+
+
+def mix64_py(x: int) -> int:
+    """Scalar python reference of the same mix (used to validate both)."""
+    x &= _MASK64
+    x ^= x >> 33
+    x = (x * _C1) & _MASK64
+    x ^= x >> 33
+    x = (x * _C2) & _MASK64
+    x ^= x >> 33
+    return x

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: inverse-CDF Zipfian sampling.
+
+The Big Atomics paper's evaluation (§5) draws every operation's target
+index from a Zipfian distribution with parameter z (z=0 uniform,
+z→1 extremely contended).  This kernel is the hot loop of the workload
+generator: it maps a batch of uniform 32-bit random words to Zipfian
+indices by an unrolled, branch-free binary search over a precomputed,
+monotone CDF table.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+  * the CDF table (N_CDF f32 entries, 16 KB at 4K) is a single VMEM
+    block via BlockSpec — it is reused by every lane, the classic
+    "broadcast small table, stream big batch" shape;
+  * the binary search is unrolled to exactly log2(N_CDF) steps with no
+    data-dependent control flow, so it lowers to pure vector selects
+    (VPU-friendly, nothing for the MXU to do);
+  * interpret=True is mandatory here: real-TPU lowering produces a
+    Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed table resolution for the AOT artifact.  4096 gives a max CDF
+# quantization error of ~2.4e-4 in probability, far below anything the
+# throughput benchmarks can resolve; Rust builds an exact n-entry CDF when
+# n <= N_CDF and a stratified one otherwise (see rust/src/bench/workload.rs).
+N_CDF = 4096
+LOG2_N_CDF = 12
+
+# 1/2^32 as f32; converts a uniform u32 to a uniform f32 in [0, 1).
+_INV_2_32 = 2.3283064365386963e-10
+
+
+def _zipfian_kernel(bits_ref, cdf_ref, out_ref):
+    """Map uniform u32 `bits` to indices via binary search on `cdf`.
+
+    out[i] = smallest j such that u[i] < cdf[j], where u = bits * 2^-32.
+    cdf must be non-decreasing with cdf[N_CDF - 1] >= 1.0.
+    """
+    bits = bits_ref[...]
+    cdf = cdf_ref[...]
+    u = bits.astype(jnp.float32) * jnp.float32(_INV_2_32)
+
+    # Branch-free unrolled binary search: after the loop, `lo` is the count
+    # of CDF entries <= u, i.e. the first index with cdf[idx] > u.
+    lo = jnp.zeros(bits.shape, dtype=jnp.int32)
+    step = N_CDF // 2
+    for _ in range(LOG2_N_CDF):
+        probe = lo + (step - 1)
+        val = jnp.take(cdf, probe, axis=0)
+        lo = jnp.where(val <= u, lo + step, lo)
+        step //= 2
+    # bits >= 2^32 - 128 round to u == 1.0 (f32), which is <= every padded
+    # CDF entry and would index one past the table: clamp (same clamp in
+    # ref.py and rust/src/bench/workload.rs — the contract is bit-exact).
+    out_ref[...] = jnp.minimum(lo, N_CDF - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def zipfian_indices(bits: jax.Array, cdf: jax.Array, *, batch: int) -> jax.Array:
+    """Batch-map uniform u32 words to Zipfian indices (Pallas, interpret).
+
+    Args:
+      bits: uint32[batch] uniform random words.
+      cdf:  float32[N_CDF] non-decreasing CDF table, cdf[-1] >= 1.0.
+      batch: static batch size (== bits.shape[0]).
+
+    Returns:
+      int32[batch] indices in [0, N_CDF).
+    """
+    return pl.pallas_call(
+        _zipfian_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        interpret=True,
+    )(bits, cdf)
+
+
+def make_zipf_cdf(n: int, theta: float) -> jax.Array:
+    """Zipfian CDF over n items with exponent theta, padded to N_CDF.
+
+    Matches the YCSB [13] Zipfian used by the paper: P(i) ∝ 1/(i+1)^theta.
+    For n < N_CDF the tail is padded with 1.0 (those indices are never
+    produced).  Computed in float64-ish via cumulative sums of f32 — fine
+    for the table sizes used here.
+    """
+    if n > N_CDF:
+        raise ValueError(f"n={n} exceeds CDF table resolution {N_CDF}")
+    ranks = jnp.arange(1, n + 1, dtype=jnp.float32)
+    weights = ranks ** jnp.float32(-theta)
+    cdf = jnp.cumsum(weights) / jnp.sum(weights)
+    cdf = cdf.at[n - 1].set(1.0)
+    pad = jnp.ones((N_CDF - n,), dtype=jnp.float32)
+    return jnp.concatenate([cdf, pad]).astype(jnp.float32)

@@ -1,0 +1,98 @@
+"""L2 JAX model: the benchmark workload model and the report statistics model.
+
+The Big Atomics paper's experimental methodology (§5) is parameterized
+operation streams: each of p threads repeatedly draws a target index from a
+Zipfian(z) distribution over n items and an operation kind from an update
+fraction u (updates split evenly between insert and delete; the rest are
+finds — §5.1/§5.2).  This module is that methodology as a JAX computation:
+
+    workload_model:  (bits, op_bits, cdf, u_frac) -> (idx, op, key)
+    stats_model:     (latencies_ns)               -> (mean, p50, p90, p99, max)
+
+Both call the L1 Pallas kernels, are lowered ONCE by aot.py to HLO text,
+and are executed from the Rust coordinator via PJRT (rust/src/runtime/).
+Python never runs on the benchmark path.
+
+Operation encoding (shared contract with rust/src/bench/workload.rs):
+    0 = find/load, 1 = insert/cas-install, 2 = delete/cas-clear
+An op is an update iff op_bits * 2^-32 < u_frac; updates alternate
+insert/delete by the low bit of the op word, exactly like the Rust
+generator — the two are cross-validated bit-for-bit in
+rust/tests/runtime_artifacts.rs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hashmix, zipfian
+
+# Static shapes baked into the AOT artifacts (see aot.py and
+# artifacts/manifest.txt).  One artifact execution produces BATCH ops.
+BATCH = 65536
+N_CDF = zipfian.N_CDF
+
+_INV_2_32 = 2.3283064365386963e-10
+
+
+def workload_model(
+    bits: jax.Array,      # uint32[BATCH] — index randomness
+    op_bits: jax.Array,   # uint32[BATCH] — op-kind randomness
+    cdf: jax.Array,       # float32[N_CDF] — Zipfian CDF (see zipfian.make_zipf_cdf)
+    u_frac: jax.Array,    # float32[] — update fraction in [0, 1]
+):
+    """One batch of benchmark operations: (idx int32, op int32, key uint64)."""
+    idx = zipfian.zipfian_indices(bits, cdf, batch=BATCH)
+    r = op_bits.astype(jnp.float32) * jnp.float32(_INV_2_32)
+    is_update = r < u_frac
+    # Updates split evenly between insert (1) and delete (2) on the op
+    # word's low bit; finds are 0.
+    upd_kind = 1 + (op_bits & jnp.uint32(1)).astype(jnp.int32)
+    op = jnp.where(is_update, upd_kind, 0)
+    key = hashmix.hashmix(idx.astype(jnp.uint64), batch=BATCH)
+    return idx, op, key
+
+
+def stats_model(latencies_ns: jax.Array):
+    """Latency summary for the coordinator's reports.
+
+    Args:
+      latencies_ns: float32[BATCH] per-request latencies (ns).
+
+    Returns:
+      float32[5]: (mean, p50, p90, p99, max).
+    """
+    s = jnp.sort(latencies_ns)
+    n = latencies_ns.shape[0]
+
+    def q(p):
+        return s[jnp.int32(min(n - 1, int(round(p * (n - 1)))))]
+
+    return jnp.stack([jnp.mean(s), q(0.50), q(0.90), q(0.99), s[n - 1]])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def workload_jit(bits, op_bits, cdf, u_frac):
+    return workload_model(bits, op_bits, cdf, u_frac)
+
+
+@jax.jit
+def stats_jit(latencies_ns):
+    return stats_model(latencies_ns)
+
+
+def example_args_workload():
+    """ShapeDtypeStructs matching the AOT signature of workload_model."""
+    return (
+        jax.ShapeDtypeStruct((BATCH,), jnp.uint32),
+        jax.ShapeDtypeStruct((BATCH,), jnp.uint32),
+        jax.ShapeDtypeStruct((N_CDF,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+
+
+def example_args_stats():
+    return (jax.ShapeDtypeStruct((BATCH,), jnp.float32),)

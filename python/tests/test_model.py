@@ -1,0 +1,76 @@
+"""L2 model tests: workload stream semantics and stats model."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref, zipfian
+
+
+def _streams(seed: int):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    bits = jax.random.bits(k1, (model.BATCH,), dtype=jnp.uint32)
+    op_bits = jax.random.bits(k2, (model.BATCH,), dtype=jnp.uint32)
+    return bits, op_bits
+
+
+def test_workload_shapes_and_dtypes():
+    bits, op_bits = _streams(0)
+    cdf = zipfian.make_zipf_cdf(1000, 0.5)
+    idx, op, key = model.workload_jit(bits, op_bits, cdf, jnp.float32(0.5))
+    assert idx.shape == (model.BATCH,) and idx.dtype == jnp.int32
+    assert op.shape == (model.BATCH,) and op.dtype == jnp.int32
+    assert key.shape == (model.BATCH,) and key.dtype == jnp.uint64
+
+
+@pytest.mark.parametrize("u", [0.0, 0.05, 0.5, 1.0])
+def test_update_fraction(u):
+    bits, op_bits = _streams(1)
+    cdf = zipfian.make_zipf_cdf(1000, 0.0)
+    _, op, _ = model.workload_jit(bits, op_bits, cdf, jnp.float32(u))
+    op = np.asarray(op)
+    frac = np.mean(op != 0)
+    assert abs(frac - u) < 0.01
+    if u > 0:
+        ins, dele = np.mean(op == 1), np.mean(op == 2)
+        assert abs(ins - dele) < 0.02  # even insert/delete split
+
+
+def test_ops_only_in_encoding():
+    bits, op_bits = _streams(2)
+    cdf = zipfian.make_zipf_cdf(16, 0.99)
+    _, op, _ = model.workload_jit(bits, op_bits, cdf, jnp.float32(0.3))
+    assert set(np.unique(np.asarray(op))) <= {0, 1, 2}
+
+
+def test_keys_are_mixed_indices():
+    bits, op_bits = _streams(3)
+    cdf = zipfian.make_zipf_cdf(100, 0.5)
+    idx, _, key = model.workload_jit(bits, op_bits, cdf, jnp.float32(0.0))
+    want = ref.hashmix_ref(np.asarray(idx).astype(np.uint64))
+    np.testing.assert_array_equal(np.asarray(key), np.asarray(want))
+
+
+def test_stats_model():
+    lat = jnp.arange(model.BATCH, dtype=jnp.float32)
+    out = np.asarray(model.stats_jit(lat))
+    n = model.BATCH
+    assert out.shape == (5,)
+    np.testing.assert_allclose(out[0], (n - 1) / 2.0, rtol=1e-5)  # mean
+    np.testing.assert_allclose(out[1], round(0.50 * (n - 1)), rtol=1e-6)
+    np.testing.assert_allclose(out[2], round(0.90 * (n - 1)), rtol=1e-6)
+    np.testing.assert_allclose(out[3], round(0.99 * (n - 1)), rtol=1e-6)
+    np.testing.assert_allclose(out[4], n - 1, rtol=0)
+
+
+def test_stats_model_unsorted_input():
+    rng = np.random.default_rng(0)
+    lat = rng.permutation(np.arange(model.BATCH)).astype(np.float32)
+    out = np.asarray(model.stats_jit(jnp.asarray(lat)))
+    assert out[4] == model.BATCH - 1
+    assert out[1] <= out[2] <= out[3] <= out[4]

@@ -1,0 +1,107 @@
+"""L1 kernel vs oracle: Zipfian inverse-CDF sampler.
+
+Bit-exact agreement between the unrolled-binary-search Pallas kernel and
+the jnp.searchsorted oracle, plus distributional sanity (empirical
+frequencies track the analytic Zipfian pmf).  Hypothesis sweeps seeds,
+table sizes, and exponents.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, zipfian
+
+SMALL_BATCH = 1024
+
+
+def _bits(seed: int, batch: int) -> jax.Array:
+    key = jax.random.PRNGKey(seed)
+    return jax.random.bits(key, (batch,), dtype=jnp.uint32)
+
+
+@pytest.mark.parametrize("theta", [0.0, 0.5, 0.75, 0.99])
+@pytest.mark.parametrize("n", [2, 16, 1000, zipfian.N_CDF])
+def test_kernel_matches_oracle(theta, n):
+    cdf = zipfian.make_zipf_cdf(n, theta)
+    bits = _bits(n * 31 + int(theta * 100), SMALL_BATCH)
+    got = zipfian.zipfian_indices(bits, cdf, batch=SMALL_BATCH)
+    want = ref.zipfian_indices_ref(bits, cdf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, zipfian.N_CDF),
+    theta=st.floats(0.0, 0.999),
+)
+def test_kernel_matches_oracle_hypothesis(seed, n, theta):
+    cdf = zipfian.make_zipf_cdf(n, theta)
+    bits = _bits(seed, SMALL_BATCH)
+    got = zipfian.zipfian_indices(bits, cdf, batch=SMALL_BATCH)
+    want = ref.zipfian_indices_ref(bits, cdf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_indices_in_range():
+    n = 100
+    cdf = zipfian.make_zipf_cdf(n, 0.9)
+    bits = _bits(7, SMALL_BATCH)
+    idx = np.asarray(zipfian.zipfian_indices(bits, cdf, batch=SMALL_BATCH))
+    assert idx.min() >= 0
+    assert idx.max() < n  # padded tail must be unreachable
+
+
+def test_uniform_is_uniform():
+    """theta=0 must be the uniform distribution (paper's z=0)."""
+    n = 64
+    cdf = zipfian.make_zipf_cdf(n, 0.0)
+    bits = _bits(11, 1 << 16)
+    idx = np.asarray(zipfian.zipfian_indices(bits, cdf, batch=1 << 16))
+    counts = np.bincount(idx, minlength=n)
+    expected = (1 << 16) / n
+    # chi^2-ish loose bound: every bucket within 5 sigma of expectation.
+    assert np.all(np.abs(counts - expected) < 5 * np.sqrt(expected) + 10)
+
+
+def test_zipf_frequencies_match_pmf():
+    """Empirical frequencies track the analytic Zipf pmf at theta=0.9."""
+    n, theta = 32, 0.9
+    cdf = zipfian.make_zipf_cdf(n, theta)
+    bits = _bits(13, 1 << 17)
+    idx = np.asarray(zipfian.zipfian_indices(bits, cdf, batch=1 << 17))
+    counts = np.bincount(idx, minlength=n).astype(np.float64)
+    freqs = counts / counts.sum()
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    pmf = ranks**-theta / np.sum(ranks**-theta)
+    np.testing.assert_allclose(freqs, pmf, atol=0.01)
+
+
+def test_hot_key_dominates_at_high_theta():
+    """As z -> 1 the head index dominates (the paper's contention knob)."""
+    n = 1000
+    cdf = zipfian.make_zipf_cdf(n, 0.99)
+    bits = _bits(17, 1 << 16)
+    idx = np.asarray(zipfian.zipfian_indices(bits, cdf, batch=1 << 16))
+    head_share = np.mean(idx == 0)
+    assert head_share > 0.10  # analytic ~0.13 at n=1000, z=.99
+
+
+def test_cdf_monotone_and_complete():
+    for n in (1, 7, 4096):
+        cdf = np.asarray(zipfian.make_zipf_cdf(n, 0.7))
+        assert np.all(np.diff(cdf) >= -1e-7)
+        assert cdf[-1] >= 1.0
+        assert cdf.shape == (zipfian.N_CDF,)
+
+
+def test_cdf_rejects_oversize():
+    with pytest.raises(ValueError):
+        zipfian.make_zipf_cdf(zipfian.N_CDF + 1, 0.5)

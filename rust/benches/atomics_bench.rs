@@ -1,0 +1,91 @@
+//! `cargo bench` — big-atomic benchmarks (custom harness; criterion is
+//! not in the offline crate set, DESIGN.md §Substitutions).
+//!
+//! Part 1: per-operation latencies (ns/op) for load and cas on every
+//! implementation — the hot-path numbers the §Perf pass optimizes.
+//! Part 2: quick versions of the Fig 1/2/5 throughput sweeps so
+//! `cargo bench` alone regenerates the paper's microbenchmark shapes.
+//!
+//! Full-resolution figures: `./target/release/repro all --secs 1`.
+
+use std::time::Duration;
+
+use big_atomics::atomics::{
+    BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
+    SimpLock, Words,
+};
+use big_atomics::bench::driver::OpSource;
+use big_atomics::bench::figures::{fig1, fig2_p, fig2_u, fig2_w, fig2_z, fig5, FigureCfg};
+use big_atomics::util::{ns_per_op, time_for};
+
+const WARMUP: Duration = Duration::from_millis(30);
+const MEASURE: Duration = Duration::from_millis(200);
+
+fn bench_ops<A: BigAtomic<Words<4>>>(name: &str) {
+    let a = A::new(Words([1, 2, 3, 4]));
+
+    // load (fast path / cached)
+    time_for(WARMUP, || {
+        std::hint::black_box(a.load());
+    });
+    let (iters, el) = time_for(MEASURE, || {
+        std::hint::black_box(a.load());
+    });
+    let load_ns = ns_per_op(iters, el);
+
+    // successful cas (value changes every time)
+    let mut i = 0u64;
+    time_for(WARMUP, || {
+        let cur = a.load();
+        i += 1;
+        let _ = a.cas(cur, Words([i, i ^ 1, i ^ 2, i ^ 3]));
+    });
+    let (iters, el) = time_for(MEASURE, || {
+        let cur = a.load();
+        i += 1;
+        let _ = a.cas(cur, Words([i, i ^ 1, i ^ 2, i ^ 3]));
+    });
+    let cas_ns = ns_per_op(iters, el);
+
+    // failing cas (stale expected)
+    let stale = Words([u64::MAX, 0, 0, 0]);
+    let (iters, el) = time_for(MEASURE, || {
+        let _ = a.cas(stale, Words([0, 0, 0, 0]));
+    });
+    let fail_ns = ns_per_op(iters, el);
+
+    println!(
+        "{name:<26} load {load_ns:>8.1} ns   cas(ok) {cas_ns:>8.1} ns   cas(fail) {fail_ns:>8.1} ns"
+    );
+}
+
+fn main() {
+    println!("== per-op latency, k=4 (32-byte values), single thread ==");
+    bench_ops::<SeqLock<Words<4>>>("SeqLock");
+    bench_ops::<SimpLock<Words<4>>>("SimpLock");
+    bench_ops::<LockPool<Words<4>>>("LockPool(std::atomic)");
+    bench_ops::<Indirect<Words<4>>>("Indirect");
+    bench_ops::<CachedWaitFree<Words<4>>>("Cached-WaitFree");
+    bench_ops::<CachedMemEff<Words<4>>>("Cached-MemEff");
+    bench_ops::<CachedWritable<Words<4>>>("Cached-WF-Writable");
+    bench_ops::<HtmSim<Words<4>>>("HTM(sim)");
+
+    // Quick paper-shape sweeps (scaled; CSV under reports/bench/).
+    let cfg = FigureCfg {
+        secs_per_point: 0.08,
+        n: 1 << 14,
+        report_dir: "reports/bench".into(),
+        use_artifact: false,
+    };
+    let src = OpSource::Rust;
+    let _ = fig1(&cfg, &src).save(&cfg.report_dir);
+    let _ = fig2_u(&cfg, &src, false).save(&cfg.report_dir);
+    let _ = fig2_u(&cfg, &src, true).save(&cfg.report_dir);
+    let _ = fig2_z(&cfg, &src, true).save(&cfg.report_dir);
+    let _ = fig2_w(&cfg, &src).save(&cfg.report_dir);
+    let _ = fig2_p(&cfg, &src).save(&cfg.report_dir);
+    for r in fig5(&cfg, &src) {
+        let _ = r.save(&cfg.report_dir);
+    }
+    println!("\natomics bench done (CSV in reports/bench/)");
+}

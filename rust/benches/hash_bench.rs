@@ -1,0 +1,86 @@
+//! `cargo bench` — hash-table benchmarks (custom harness).
+//!
+//! Part 1: per-operation latencies for find/insert/remove on CacheHash
+//! (per big-atomic strategy), Chaining, and the comparator stand-ins.
+//! Part 2: quick versions of the Fig 3/4 throughput sweeps.
+
+use std::time::Duration;
+
+use big_atomics::bench::driver::OpSource;
+use big_atomics::bench::figures::{fig3, fig4, FigureCfg};
+use big_atomics::bench::memory::memory_census;
+use big_atomics::hash::{
+    CacheHash, Chaining, ConcurrentMap, GlobalLockMap, LinkVal, ShardedLockMap,
+};
+use big_atomics::atomics::{CachedMemEff, CachedWaitFree, Indirect, SeqLock};
+use big_atomics::util::{ns_per_op, time_for};
+use big_atomics::util::rng::mix64;
+
+const MEASURE: Duration = Duration::from_millis(200);
+const N: usize = 1 << 14;
+
+fn bench_map<M: ConcurrentMap>(map: M) {
+    // Half-full table, like the figure benchmarks.
+    for r in (0..N).step_by(2) {
+        map.insert(mix64(r as u64), r as u64);
+    }
+    let mut i = 0u64;
+
+    // find (hit half the time)
+    let (iters, el) = time_for(MEASURE, || {
+        i = i.wrapping_add(0x9E3779B97F4A7C15);
+        std::hint::black_box(map.find(mix64((i as usize % N) as u64)));
+    });
+    let find_ns = ns_per_op(iters, el);
+
+    // insert/remove toggle on a private key range (always succeed)
+    let mut toggle = false;
+    let mut j = 0u64;
+    let (iters, el) = time_for(MEASURE, || {
+        let key = mix64(1_000_000 + (j % 4096));
+        if toggle {
+            map.remove(key);
+        } else {
+            map.insert(key, j);
+        }
+        if j % 4096 == 4095 {
+            toggle = !toggle;
+        }
+        j += 1;
+    });
+    let upd_ns = ns_per_op(iters, el);
+
+    println!(
+        "{:<28} find {:>8.1} ns   insert/remove {:>8.1} ns",
+        map.map_name(),
+        find_ns,
+        upd_ns
+    );
+}
+
+fn main() {
+    println!("== hash table per-op latency, n=16K, single thread ==");
+    bench_map(CacheHash::<SeqLock<LinkVal>>::new(N));
+    bench_map(CacheHash::<CachedMemEff<LinkVal>>::new(N));
+    bench_map(CacheHash::<CachedWaitFree<LinkVal>>::new(N));
+    bench_map(CacheHash::<Indirect<LinkVal>>::new(N));
+    bench_map(Chaining::new(N));
+    bench_map(ShardedLockMap::new(N, 16));
+    bench_map(GlobalLockMap::new(N));
+
+    let cfg = FigureCfg {
+        secs_per_point: 0.08,
+        n: 1 << 14,
+        report_dir: "reports/bench".into(),
+        use_artifact: false,
+    };
+    let src = OpSource::Rust;
+    let _ = fig3(&cfg, &src, "u", false).save(&cfg.report_dir);
+    let _ = fig3(&cfg, &src, "u", true).save(&cfg.report_dir);
+    let _ = fig3(&cfg, &src, "z", true).save(&cfg.report_dir);
+    let (a, b) = fig4(&cfg, &src);
+    let _ = a.save(&cfg.report_dir);
+    let _ = b.save(&cfg.report_dir);
+    let _ = memory_census(&cfg).save(&cfg.report_dir);
+    println!("\nhash bench done (CSV in reports/bench/)");
+}

@@ -1,0 +1,18 @@
+//! Applications of big atomics (paper §2, "Applications of big atomics").
+//!
+//! The paper argues big atomics simplify a family of classic concurrent
+//! constructions that otherwise need clever packing or indirection.
+//! This module implements two of them on top of [`crate::atomics`]:
+//!
+//! * [`llsc`] — load-linked / store-conditional from a (value, tag)
+//!   2-field big atomic (cf. [39]'s 4-field construction; the tag makes
+//!   SC's "no intervening store" check a plain value compare);
+//! * [`stats`] — a multi-field statistics cell (count, sum, min, max)
+//!   updated atomically in one CAS — the kind of 4-field record that is
+//!   impossible with hardware atomics and painful with packing.
+//!
+//! A third application, concurrent union-find with (parent, rank) in one
+//! atomic (cf. [30]), lives in `examples/union_find.rs`.
+
+pub mod llsc;
+pub mod stats;

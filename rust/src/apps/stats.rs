@@ -1,0 +1,146 @@
+//! An atomically-updated statistics cell: (count, sum, min, max) in one
+//! 4-word big atomic — the "handful of fields updated together" shape
+//! the paper's §2 applications all share.
+//!
+//! Without big atomics this needs a lock or four separate atomics whose
+//! combination can be observed torn (count updated, max not yet);
+//! with one CAS the snapshot any reader takes is always consistent:
+//! `min <= sum/count <= max` holds at every instant.
+
+use crate::atomics::BigAtomic;
+
+/// The atomically-consistent record.
+#[repr(C, align(8))]
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct Snapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for Snapshot {
+    fn default() -> Self {
+        Self {
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+crate::impl_atomic_value!(Snapshot);
+
+impl Snapshot {
+    pub fn mean(&self) -> Option<f64> {
+        (self.count > 0).then(|| self.sum as f64 / self.count as f64)
+    }
+}
+
+/// A concurrent statistics accumulator over any big-atomic backend.
+pub struct StatsCell<A: BigAtomic<Snapshot>> {
+    cell: A,
+}
+
+impl<A: BigAtomic<Snapshot>> Default for StatsCell<A> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<A: BigAtomic<Snapshot>> StatsCell<A> {
+    pub fn new() -> Self {
+        Self {
+            cell: A::new(Snapshot::default()),
+        }
+    }
+
+    /// Record one sample (lock-free if the backend is).
+    pub fn record(&self, sample: u64) {
+        loop {
+            let cur = self.cell.load();
+            let next = Snapshot {
+                count: cur.count + 1,
+                sum: cur.sum.wrapping_add(sample),
+                min: cur.min.min(sample),
+                max: cur.max.max(sample),
+            };
+            if self.cell.cas(cur, next) {
+                return;
+            }
+        }
+    }
+
+    /// A consistent snapshot of all four fields.
+    pub fn snapshot(&self) -> Snapshot {
+        self.cell.load()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::{CachedMemEff, SeqLock};
+    use std::sync::Arc;
+
+    #[test]
+    fn test_single_thread_exact() {
+        let s: StatsCell<SeqLock<Snapshot>> = StatsCell::new();
+        for v in [5u64, 1, 9, 3] {
+            s.record(v);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.count, 4);
+        assert_eq!(snap.sum, 18);
+        assert_eq!(snap.min, 1);
+        assert_eq!(snap.max, 9);
+        assert_eq!(snap.mean(), Some(4.5));
+    }
+
+    #[test]
+    fn test_concurrent_consistent_snapshots() {
+        let s: Arc<StatsCell<CachedMemEff<Snapshot>>> = Arc::new(StatsCell::new());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        // Readers: every snapshot must be internally consistent.
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        let snap = s.snapshot();
+                        if snap.count > 0 {
+                            let mean = snap.mean().unwrap();
+                            assert!(
+                                snap.min as f64 <= mean && mean <= snap.max as f64,
+                                "torn stats snapshot: {snap:?}"
+                            );
+                            assert!(snap.sum >= snap.max);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let writers: Vec<_> = (0..3)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        s.record(10 + ((i * 7 + t) % 100));
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        for r in readers {
+            r.join().unwrap();
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.count, 15_000);
+        assert!(snap.min >= 10 && snap.max <= 109);
+    }
+}

@@ -1,0 +1,104 @@
+//! Bytewise-atomic (word-wise) loads and stores.
+//!
+//! The paper's algorithms read and write the inlined cache with
+//! "bytewise-atomic" memory operations: individually atomic word accesses
+//! whose *combination* is made consistent by the surrounding version
+//! protocol.  In Rust (as in C++, Boehm [11]) the UB-free rendering is
+//! relaxed per-word atomic accesses through `AtomicU64`, with the seqlock
+//! version check deciding whether the assembled value is used.
+//!
+//! `WordBuf<T>` is the inline storage: an `UnsafeCell<T>` whose words are
+//! accessed as `AtomicU64`s. It adds zero indirection — the whole point
+//! of the paper's cached fast path.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::AtomicValue;
+
+/// Inline k-word storage with word-wise atomic access.
+#[repr(C)]
+pub struct WordBuf<T: AtomicValue> {
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: all access goes through word-wise atomics.
+unsafe impl<T: AtomicValue> Send for WordBuf<T> {}
+unsafe impl<T: AtomicValue> Sync for WordBuf<T> {}
+
+impl<T: AtomicValue> WordBuf<T> {
+    pub fn new(init: T) -> Self {
+        debug_assert_eq!(std::mem::align_of::<T>(), 8);
+        debug_assert!(std::mem::size_of::<T>() % 8 == 0 && std::mem::size_of::<T>() > 0);
+        Self {
+            data: UnsafeCell::new(init),
+        }
+    }
+
+    #[inline]
+    fn words(&self) -> *const AtomicU64 {
+        // SAFETY: AtomicU64 is repr(transparent) over u64; T is pod with
+        // align 8 and size a multiple of 8 (AtomicValue contract).
+        self.data.get() as *const AtomicU64
+    }
+
+    /// Word-wise relaxed read of the whole value. The caller's version
+    /// protocol decides whether the (possibly torn) result is used.
+    #[inline]
+    pub fn read(&self) -> T {
+        let mut out = MaybeUninit::<T>::uninit();
+        let src = self.words();
+        let dst = out.as_mut_ptr() as *mut u64;
+        for i in 0..T::WORDS {
+            // SAFETY: i < WORDS words of valid storage on both sides.
+            unsafe { *dst.add(i) = (*src.add(i)).load(Ordering::Relaxed) };
+        }
+        // SAFETY: T is pod (AtomicValue) — any word combination is a
+        // valid bit pattern; torn values are discarded by the caller.
+        unsafe { out.assume_init() }
+    }
+
+    /// Word-wise relaxed write. Caller must hold the write side of the
+    /// version protocol (seqlock lock bit etc.).
+    #[inline]
+    pub fn write(&self, val: T) {
+        let dst = self.words();
+        let src = &val as *const T as *const u64;
+        for i in 0..T::WORDS {
+            // SAFETY: as in read().
+            unsafe { (*dst.add(i)).store(*src.add(i), Ordering::Relaxed) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+
+    #[test]
+    fn test_read_write_roundtrip() {
+        let buf: WordBuf<Words<4>> = WordBuf::new(Words([1, 2, 3, 4]));
+        assert_eq!(buf.read(), Words([1, 2, 3, 4]));
+        buf.write(Words([9, 8, 7, 6]));
+        assert_eq!(buf.read(), Words([9, 8, 7, 6]));
+    }
+
+    #[test]
+    fn test_single_word() {
+        let buf: WordBuf<Words<1>> = WordBuf::new(Words([42]));
+        assert_eq!(buf.read(), Words([42]));
+        buf.write(Words([7]));
+        assert_eq!(buf.read(), Words([7]));
+    }
+
+    #[test]
+    fn test_no_indirection() {
+        // The buffer must be exactly the value, inline (fast-path claim).
+        assert_eq!(
+            std::mem::size_of::<WordBuf<Words<8>>>(),
+            std::mem::size_of::<Words<8>>()
+        );
+    }
+}

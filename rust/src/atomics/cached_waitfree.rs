@@ -1,0 +1,299 @@
+//! `CachedWaitFree<T>` — **Algorithm 1**: the paper's wait-free big
+//! atomic supporting `load` + `cas` in O(k) time (§3.1).
+//!
+//! Layout per atomic: a seqlock-style `version`, a `backup` pointer that
+//! *always* references a heap node holding the current value, and an
+//! inlined `cache`.  The backup pointer carries a mark bit: marked ⇒ the
+//! cache is invalid.  Loads take the fast path (version / cache / backup
+//! / version — no indirection, no hazard) whenever the pointer is
+//! unmarked and the version is stable; otherwise they do one protected
+//! read through the backup.  Updates linearize on the single-word CAS
+//! that installs a new (marked) backup node, then opportunistically copy
+//! the value into the cache and validate the pointer.
+//!
+//! Key invariants (proof sketch of Theorem 3.1):
+//! 1. the current backup node always holds the current value;
+//! 2. whenever the backup pointer is unmarked, cache == backup value.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::bytewise::WordBuf;
+use super::{AtomicValue, BigAtomic};
+use crate::smr::hazard::{retire_box, HazardPointer};
+
+#[repr(C, align(8))]
+struct Node<T> {
+    value: T,
+}
+
+const MARK: usize = 1;
+
+#[inline]
+fn unmark(raw: usize) -> usize {
+    raw & !MARK
+}
+
+#[inline]
+fn is_marked(raw: usize) -> bool {
+    raw & MARK == MARK
+}
+
+pub struct CachedWaitFree<T: AtomicValue> {
+    version: AtomicU64,
+    /// Marked pointer to `Node<T>`; mark set ⇒ cache invalid.
+    backup: AtomicUsize,
+    cache: WordBuf<T>,
+}
+
+impl<T: AtomicValue> CachedWaitFree<T> {
+    #[inline]
+    fn node_value(raw: usize) -> T {
+        // SAFETY: caller protected `unmark(raw)` with a hazard pointer
+        // (or owns it exclusively); nodes are immutable after publish.
+        unsafe { (*(unmark(raw) as *const Node<T>)).value }
+    }
+
+    /// Protect the current backup, announcing the *unmarked* node address
+    /// (the address reclaimers compare against).
+    #[inline]
+    fn protect_backup(&self, h: &HazardPointer) -> usize {
+        h.protect_raw_with(|| self.backup.load(Ordering::SeqCst), unmark)
+    }
+}
+
+impl<T: AtomicValue> Drop for CachedWaitFree<T> {
+    fn drop(&mut self) {
+        let raw = self.backup.load(Ordering::Relaxed);
+        // SAFETY: exclusive in Drop; backup is always a live node.
+        drop(unsafe { Box::from_raw(unmark(raw) as *mut Node<T>) });
+    }
+}
+
+impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
+    fn new(init: T) -> Self {
+        Self {
+            version: AtomicU64::new(0),
+            // Unmarked: cache starts valid and equal to the backup.
+            backup: AtomicUsize::new(Box::into_raw(Box::new(Node { value: init })) as usize),
+            cache: WordBuf::new(init),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        let ver = self.version.load(Ordering::SeqCst);
+        let val = self.cache.read();
+        let raw = self.backup.load(Ordering::SeqCst);
+        if !is_marked(raw) && ver == self.version.load(Ordering::SeqCst) {
+            // Fast path: cache was valid and untouched through the window.
+            return val;
+        }
+        // Slow path: one protected indirect read. The backup always holds
+        // the current value, so no loop — wait-free.
+        let h = HazardPointer::new();
+        let raw = self.protect_backup(&h);
+        Self::node_value(raw)
+    }
+
+    #[inline]
+    fn store(&self, val: T) {
+        // Table 1: the load+cas variant has no native store; this CAS
+        // loop is lock-free (each failure implies another update won).
+        loop {
+            let cur = self.load();
+            if cur == val || self.cas(cur, val) {
+                return;
+            }
+        }
+    }
+
+    fn cas(&self, expected: T, desired: T) -> bool {
+        let h = HazardPointer::new();
+        let ver = self.version.load(Ordering::SeqCst);
+        let mut val = self.cache.read();
+        // Protect early: the install CAS below must only succeed if the
+        // backup hasn't changed since this read (hazard prevents the
+        // address being recycled — no ABA).
+        let raw = self.protect_backup(&h);
+        if is_marked(raw) || ver != self.version.load(Ordering::SeqCst) {
+            val = Self::node_value(raw);
+        }
+        if val != expected {
+            return false;
+        }
+        if expected == desired {
+            // Never replace a value by an equal one: the backup pointer
+            // would change and spuriously fail a concurrent CAS (§3.1).
+            return true;
+        }
+
+        let new_node = Box::into_raw(Box::new(Node { value: desired }));
+        let new_marked = new_node as usize | MARK; // cache invalid until copied
+        let installed = match self.backup.compare_exchange(
+            raw,
+            new_marked,
+            Ordering::SeqCst,
+            Ordering::SeqCst,
+        ) {
+            Ok(_) => true,
+            Err(actual) => {
+                // The first attempt may have failed only because the old
+                // pointer was validated (marked -> unmarked) in between;
+                // retry expecting the validated form.
+                is_marked(raw)
+                    && actual == unmark(raw)
+                    && self
+                        .backup
+                        .compare_exchange(actual, new_marked, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+            }
+        };
+
+        if !installed {
+            // CAS failed: the value changed (linearize at the competing
+            // update). The node was never published.
+            // SAFETY: unpublished, uniquely owned.
+            drop(unsafe { Box::from_raw(new_node) });
+            return false;
+        }
+
+        // Linearized at the install. Retire the old node (still hazard-
+        // protected by us, so it outlives this call).
+        // SAFETY: unlinked by the successful install.
+        unsafe { retire_box(unmark(raw) as *mut Node<T>) };
+
+        // Try to copy into the cache: seqlock acquire, but additionally
+        // require the version unchanged since *before* our install so we
+        // never overwrite a more recent update's cache (§3.1).
+        if ver % 2 == 0
+            && ver == self.version.load(Ordering::SeqCst)
+            && self
+                .version
+                .compare_exchange(ver, ver + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+        {
+            self.cache.write(desired);
+            self.version.store(ver + 2, Ordering::Release);
+            // Validate: only if our node is still the backup.
+            let _ = self.backup.compare_exchange(
+                new_marked,
+                unmark(new_marked),
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            );
+        }
+        // If validation was skipped/failed the cache stays invalid until
+        // a later uncontended CAS validates — permitted by the invariants.
+        true
+    }
+
+    fn name() -> &'static str {
+        "Cached-WaitFree"
+    }
+
+    fn indirect_bytes(&self) -> usize {
+        std::mem::size_of::<Node<T>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_roundtrip() {
+        let a: CachedWaitFree<Words<3>> = CachedWaitFree::new(Words([1, 2, 3]));
+        assert_eq!(a.load(), Words([1, 2, 3]));
+        assert!(a.cas(Words([1, 2, 3]), Words([4, 5, 6])));
+        assert_eq!(a.load(), Words([4, 5, 6]));
+        assert!(!a.cas(Words([1, 2, 3]), Words([0, 0, 0])));
+    }
+
+    #[test]
+    fn test_store_via_cas_loop() {
+        let a: CachedWaitFree<Words<2>> = CachedWaitFree::new(Words([0, 0]));
+        a.store(Words([3, 4]));
+        assert_eq!(a.load(), Words([3, 4]));
+        a.store(Words([3, 4])); // idempotent same-value store
+        assert_eq!(a.load(), Words([3, 4]));
+    }
+
+    #[test]
+    fn test_cache_validated_after_uncontended_cas() {
+        let a: CachedWaitFree<Words<2>> = CachedWaitFree::new(Words([0, 0]));
+        assert!(a.cas(Words([0, 0]), Words([1, 1])));
+        // Uncontended: pointer must be validated so loads take the fast
+        // path. We can't observe the path directly, but the pointer mark
+        // is visible through a debug read.
+        let raw = a.backup.load(Ordering::SeqCst);
+        assert!(!is_marked(raw), "cache should be validated when uncontended");
+        assert_eq!(a.load(), Words([1, 1]));
+    }
+
+    #[test]
+    fn test_concurrent_cas_exactly_one_winner() {
+        // All threads CAS from the same snapshot; exactly one must win
+        // per round.
+        let a: Arc<CachedWaitFree<Words<4>>> = Arc::new(CachedWaitFree::new(Words([0; 4])));
+        let threads = 4;
+        let rounds = 2_000u64;
+        let wins = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                let wins = Arc::clone(&wins);
+                std::thread::spawn(move || {
+                    for r in 0..rounds {
+                        let cur = a.load();
+                        let next = Words([cur.0[0] + 1, r, t as u64, cur.0[3] ^ r]);
+                        if a.cas(cur, next) {
+                            wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load().0[0], wins.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn test_no_torn_reads_under_update_storm() {
+        let a: Arc<CachedWaitFree<Words<4>>> = Arc::new(CachedWaitFree::new(Words([0; 4])));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = a.load();
+                        assert!(v.0.iter().all(|&w| w == v.0[0]), "torn: {:?}", v.0);
+                    }
+                })
+            })
+            .collect();
+        let writers: Vec<_> = (0..2)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for i in 1..5_000u64 {
+                        let cur = a.load();
+                        let _ = a.cas(cur, Words([i * 2 + t; 4]));
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! `CachedWritable<T>` — **Algorithm 3** (WD-LSC): wait-free big atomic
+//! supporting `load`, `store`, *and* `cas`, built over the Load/CAS big
+//! atomic of Algorithm 1 (§3.3).
+//!
+//! The central variable `Z` is a [`CachedWaitFree`] holding the triple
+//! `(value, seq, mark)`.  Stores buffer their value in the single
+//! write-buffer pointer `W` (whose mark bit, compared with `Z.mark`,
+//! encodes "a write is pending") and are *transferred* into `Z` by
+//! helpers — every store and every cas helps, so a buffered write lands
+//! within two `help_write` attempts and all operations are O(k).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::cached_waitfree::CachedWaitFree;
+use super::{AtomicValue, BigAtomic};
+use crate::smr::hazard::{retire_box, HazardPointer};
+
+/// The triple stored in Z. `seq` defeats ABA on transfers; `mark`
+/// (0 or 1), compared against W's pointer mark, encodes write-pending.
+#[repr(C, align(8))]
+#[derive(Copy, Clone, PartialEq)]
+struct ZVal<T: AtomicValue> {
+    value: T,
+    seq: u64,
+    mark: u64,
+}
+
+impl<T: AtomicValue> Default for ZVal<T> {
+    fn default() -> Self {
+        Self {
+            value: T::default(),
+            seq: 0,
+            mark: 0,
+        }
+    }
+}
+
+// SAFETY: repr(C) of pod fields; size = k+2 words, align 8.
+unsafe impl<T: AtomicValue> AtomicValue for ZVal<T> {}
+
+#[repr(C, align(8))]
+struct WNode<T> {
+    value: T,
+}
+
+const MARK: usize = 1;
+
+pub struct CachedWritable<T: AtomicValue> {
+    z: CachedWaitFree<ZVal<T>>,
+    /// Marked pointer to `WNode<T>` — the write buffer.
+    w: AtomicUsize,
+}
+
+impl<T: AtomicValue> CachedWritable<T> {
+    #[inline]
+    fn w_value(raw: usize) -> T {
+        // SAFETY: caller holds a hazard on the unmarked node.
+        unsafe { (*((raw & !MARK) as *const WNode<T>)).value }
+    }
+
+    #[inline]
+    fn protect_w(&self, h: &HazardPointer) -> usize {
+        h.protect_raw_with(|| self.w.load(Ordering::SeqCst), |r| r & !MARK)
+    }
+
+    /// Transfer a pending buffered write from W into Z (§3.3).
+    /// Returns false only if a concurrent successful CAS changed Z while
+    /// a write was pending — which can happen at most once per pending
+    /// write, hence callers try twice.
+    fn help_write(&self) -> bool {
+        let z = self.z.load();
+        let h = HazardPointer::new();
+        let wr = self.protect_w(&h);
+        let w_mark = (wr & MARK) as u64;
+        if z.mark != w_mark {
+            // Pending: move W's value into Z and re-match the marks.
+            self.z.cas(
+                z,
+                ZVal {
+                    value: Self::w_value(wr),
+                    seq: z.seq + 1,
+                    mark: w_mark,
+                },
+            )
+        } else {
+            true
+        }
+    }
+}
+
+impl<T: AtomicValue> Drop for CachedWritable<T> {
+    fn drop(&mut self) {
+        let raw = self.w.load(Ordering::Relaxed);
+        // SAFETY: exclusive in Drop.
+        drop(unsafe { Box::from_raw((raw & !MARK) as *mut WNode<T>) });
+    }
+}
+
+impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
+    fn new(init: T) -> Self {
+        Self {
+            z: CachedWaitFree::new(ZVal {
+                value: init,
+                seq: 0,
+                mark: 0,
+            }),
+            // Unmarked node matching z.mark = 0: no pending write.
+            w: AtomicUsize::new(Box::into_raw(Box::new(WNode { value: init })) as usize),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        self.z.load().value
+    }
+
+    fn store(&self, desired: T) {
+        let h = HazardPointer::new();
+        let wr = self.protect_w(&h);
+        let z = self.z.load();
+        if z.value == desired {
+            return; // silent linearization at the Z read
+        }
+        if z.mark == (wr & MARK) as u64 {
+            // No pending write: try to buffer ours with mismatched mark.
+            let n = Box::into_raw(Box::new(WNode { value: desired }));
+            let new_w = (n as usize) | ((1 - z.mark) as usize);
+            if self
+                .w
+                .compare_exchange(wr, new_w, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                // SAFETY: old buffer node unlinked (hazard-protected
+                // readers may remain).
+                unsafe { retire_box((wr & !MARK) as *mut WNode<T>) };
+            } else {
+                // Another writer buffered first; we linearize silently
+                // just before their transfer.
+                // SAFETY: never published.
+                drop(unsafe { Box::from_raw(n) });
+            }
+        }
+        // Ensure any pending write (ours or the one that beat us) is
+        // transferred: one retry suffices (§3.3).
+        if !self.help_write() {
+            self.help_write();
+        }
+    }
+
+    fn cas(&self, expected: T, desired: T) -> bool {
+        for _ in 0..2 {
+            let z = self.z.load();
+            if z.value != expected {
+                return false;
+            }
+            if expected == desired {
+                return true;
+            }
+            // Help writers first so we never starve a buffered store.
+            self.help_write();
+            if self.z.cas(
+                z,
+                ZVal {
+                    value: desired,
+                    seq: z.seq + 1,
+                    mark: z.mark,
+                },
+            ) {
+                return true;
+            }
+            // Failure may be a same-value transfer bumping seq; Z.value
+            // can have stayed == expected at most once (§3.3), so retry
+            // exactly once before returning false.
+        }
+        false
+    }
+
+    fn name() -> &'static str {
+        "Cached-WaitFree-Writable"
+    }
+
+    fn indirect_bytes(&self) -> usize {
+        self.z.indirect_bytes() + std::mem::size_of::<WNode<T>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_roundtrip_all_three_ops() {
+        let a: CachedWritable<Words<2>> = CachedWritable::new(Words([1, 2]));
+        assert_eq!(a.load(), Words([1, 2]));
+        a.store(Words([3, 4]));
+        assert_eq!(a.load(), Words([3, 4]));
+        assert!(a.cas(Words([3, 4]), Words([5, 6])));
+        assert!(!a.cas(Words([3, 4]), Words([7, 8])));
+        assert_eq!(a.load(), Words([5, 6]));
+    }
+
+    #[test]
+    fn test_store_same_value_noop() {
+        let a: CachedWritable<Words<1>> = CachedWritable::new(Words([9]));
+        a.store(Words([9]));
+        assert_eq!(a.load(), Words([9]));
+    }
+
+    #[test]
+    fn test_store_visible_despite_competing_cas() {
+        // Writers (stores) must not starve: after every store returns,
+        // some load must have been able to see it or a later value
+        // (here single-threaded: immediate visibility).
+        let a: CachedWritable<Words<2>> = CachedWritable::new(Words([0, 0]));
+        for i in 1..500u64 {
+            a.store(Words([i, i * 2]));
+            assert_eq!(a.load(), Words([i, i * 2]));
+        }
+    }
+
+    #[test]
+    fn test_concurrent_stores_and_cas_consistency() {
+        // CAS counter on word0 while stores rewrite word1; every read
+        // must be a value some operation actually wrote (word1 is either
+        // a store payload or a cas payload, tagged by high bit).
+        let a: Arc<CachedWritable<Words<2>>> = Arc::new(CachedWritable::new(Words([0, 0])));
+        let casers: Vec<_> = (0..2)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    let mut wins = 0u64;
+                    while wins < 2_000 {
+                        let cur = a.load();
+                        if a.cas(cur, Words([cur.0[0] + 1, cur.0[1]])) {
+                            wins += 1;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let storer = {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                for i in 1..2_000u64 {
+                    let cur = a.load();
+                    a.store(Words([cur.0[0], i | (1 << 63)]));
+                }
+            })
+        };
+        for c in casers {
+            c.join().unwrap();
+        }
+        storer.join().unwrap();
+        let v = a.load();
+        assert!(v.0[0] >= 4_000, "cas wins lost: {}", v.0[0]);
+    }
+
+    #[test]
+    fn test_no_torn_reads() {
+        let a: Arc<CachedWritable<Words<4>>> = Arc::new(CachedWritable::new(Words([0; 4])));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = a.load();
+                        assert!(v.0.iter().all(|&w| w == v.0[0]), "torn: {:?}", v.0);
+                    }
+                })
+            })
+            .collect();
+        for i in 1..4_000u64 {
+            a.store(Words([i; 4]));
+        }
+        stop.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

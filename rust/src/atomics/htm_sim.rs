@@ -1,0 +1,228 @@
+//! `HtmSim<T>` — big atomic via (simulated) hardware transactional
+//! memory, the §5.4 comparison point.
+//!
+//! Real Intel RTM has been fused off since 2021 (the paper itself had to
+//! use a legacy four-socket machine), so this is a behavioural software
+//! simulation — see DESIGN.md §Substitutions.  It preserves the dynamics
+//! the paper measures:
+//!
+//! * optimistic execution that commits iff no conflicting writer ran
+//!   (per-atomic version validation — the cache-line-granularity
+//!   conflict detection of RTM at this object's granularity);
+//! * **bounded retries** ([`MAX_TX_RETRIES`], the paper uses 10) with no
+//!   waiting between attempts — aborts are wasted work, which is why HTM
+//!   collapses as contention rises (§5.4);
+//! * a **spinlock fallback** after exhausting retries (RTM is never
+//!   guaranteed to commit), mutually excluded with transactions: a held
+//!   fallback aborts all in-flight transactions, exactly like the
+//!   lock-subscription idiom real RTM code uses.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use super::bytewise::WordBuf;
+use super::spin::SpinLock;
+use super::{AtomicValue, BigAtomic};
+
+/// Transaction attempts before taking the fallback lock (paper: 10).
+pub const MAX_TX_RETRIES: usize = 10;
+
+pub struct HtmSim<T: AtomicValue> {
+    /// Even = no writer committing; odd = commit in progress.
+    version: AtomicU64,
+    fallback: SpinLock,
+    data: WordBuf<T>,
+}
+
+impl<T: AtomicValue> HtmSim<T> {
+    /// "Transaction begin": returns the snapshot version, or None
+    /// (= abort) if a writer or fallback holder is active.
+    #[inline]
+    fn tx_begin(&self) -> Option<u64> {
+        if self.fallback.is_locked() {
+            return None;
+        }
+        let v = self.version.load(Ordering::Acquire);
+        if v % 2 != 0 {
+            return None;
+        }
+        Some(v)
+    }
+
+    /// "Transaction commit" for read-only transactions: validate no
+    /// conflicting commit and no fallback acquisition happened.
+    #[inline]
+    fn tx_validate(&self, v: u64) -> bool {
+        fence(Ordering::Acquire);
+        self.version.load(Ordering::Relaxed) == v && !self.fallback.is_locked()
+    }
+
+    /// Acquire exclusive access on the fallback path: take the lock and
+    /// the version (odd), aborting all concurrent transactions.
+    fn fallback_enter(&self) -> u64 {
+        self.fallback.lock();
+        loop {
+            let v = self.version.load(Ordering::Relaxed);
+            if v % 2 == 0
+                && self
+                    .version
+                    .compare_exchange(v, v + 1, Ordering::Acquire, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return v;
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    fn fallback_exit(&self, v: u64) {
+        self.version.store(v + 2, Ordering::Release);
+        self.fallback.unlock();
+    }
+
+    /// Run `op` transactionally; `op` gets the current value and returns
+    /// the value to write (or None for read-only). Returns the value
+    /// read by the successful attempt.
+    fn transact<F: FnMut(T) -> Option<T>>(&self, mut op: F) -> T {
+        for _ in 0..MAX_TX_RETRIES {
+            let Some(v) = self.tx_begin() else {
+                std::hint::spin_loop();
+                continue;
+            };
+            let cur = self.data.read();
+            match op(cur) {
+                None => {
+                    if self.tx_validate(v) {
+                        return cur; // read-only commit
+                    }
+                }
+                Some(next) => {
+                    // Write transaction: "commit" = CAS the version to
+                    // odd (conflict detection), apply, release.
+                    if self
+                        .version
+                        .compare_exchange(v, v + 1, Ordering::AcqRel, Ordering::Relaxed)
+                        .is_ok()
+                    {
+                        if self.fallback.is_locked() {
+                            // Fallback holder appeared: abort (undo lock).
+                            self.version.store(v, Ordering::Release);
+                            continue;
+                        }
+                        self.data.write(next);
+                        self.version.store(v + 2, Ordering::Release);
+                        return cur;
+                    }
+                }
+            }
+            // Abort: retry immediately (RTM has no intrinsic backoff).
+        }
+        // Fallback path.
+        let v = self.fallback_enter();
+        let cur = self.data.read();
+        if let Some(next) = op(cur) {
+            self.data.write(next);
+        }
+        self.fallback_exit(v);
+        cur
+    }
+}
+
+impl<T: AtomicValue> BigAtomic<T> for HtmSim<T> {
+    fn new(init: T) -> Self {
+        Self {
+            version: AtomicU64::new(0),
+            fallback: SpinLock::new(),
+            data: WordBuf::new(init),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        self.transact(|_| None)
+    }
+
+    #[inline]
+    fn store(&self, val: T) {
+        self.transact(|_| Some(val));
+    }
+
+    #[inline]
+    fn cas(&self, expected: T, desired: T) -> bool {
+        let seen = self.transact(|cur| if cur == expected { Some(desired) } else { None });
+        seen == expected
+    }
+
+    fn name() -> &'static str {
+        "HTM(sim)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_roundtrip_and_cas() {
+        let a: HtmSim<Words<2>> = HtmSim::new(Words([1, 2]));
+        assert_eq!(a.load(), Words([1, 2]));
+        a.store(Words([3, 4]));
+        assert!(a.cas(Words([3, 4]), Words([5, 6])));
+        assert!(!a.cas(Words([3, 4]), Words([7, 8])));
+        assert_eq!(a.load(), Words([5, 6]));
+    }
+
+    #[test]
+    fn test_concurrent_cas_counter() {
+        let a: Arc<HtmSim<Words<3>>> = Arc::new(HtmSim::new(Words([0; 3])));
+        let threads = 4;
+        let per = 4_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..per {
+                        loop {
+                            let cur = a.load();
+                            if a.cas(cur, Words([cur.0[0] + 1, cur.0[1] + 2, cur.0[2] + 3])) {
+                                break;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let v = a.load();
+        assert_eq!(v.0[0], threads as u64 * per);
+        assert_eq!(v.0[1], 2 * threads as u64 * per);
+    }
+
+    #[test]
+    fn test_no_torn_reads() {
+        let a: Arc<HtmSim<Words<4>>> = Arc::new(HtmSim::new(Words([0; 4])));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = a.load();
+                        assert!(v.0.iter().all(|&w| w == v.0[0]), "torn: {:?}", v.0);
+                    }
+                })
+            })
+            .collect();
+        for i in 1..10_000u64 {
+            a.store(Words([i; 4]));
+        }
+        stop.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! `Indirect<T>` — the classic lock-free big atomic (paper §2): an
+//! atomic pointer to a heap-allocated immutable value.
+//!
+//! Loads read through the pointer (two dependent cache misses — the
+//! performance problem the paper's cached algorithms exist to fix);
+//! updates install a fresh node with a single-word CAS.  Hazard pointers
+//! protect readers from reclamation races.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use super::{AtomicValue, BigAtomic};
+use crate::smr::hazard::{retire_box, HazardPointer};
+
+struct Node<T> {
+    value: T,
+}
+
+pub struct Indirect<T: AtomicValue> {
+    ptr: AtomicPtr<Node<T>>,
+}
+
+impl<T: AtomicValue> Drop for Indirect<T> {
+    fn drop(&mut self) {
+        let p = self.ptr.load(Ordering::Relaxed);
+        if !p.is_null() {
+            // SAFETY: exclusive in Drop; no concurrent readers remain.
+            drop(unsafe { Box::from_raw(p) });
+        }
+    }
+}
+
+impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
+    fn new(init: T) -> Self {
+        Self {
+            ptr: AtomicPtr::new(Box::into_raw(Box::new(Node { value: init }))),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        let h = HazardPointer::new();
+        let p = h.protect(&self.ptr);
+        // SAFETY: protected from reclamation by the hazard pointer.
+        unsafe { (*p).value }
+    }
+
+    #[inline]
+    fn store(&self, val: T) {
+        let new = Box::into_raw(Box::new(Node { value: val }));
+        let old = self.ptr.swap(new, Ordering::SeqCst);
+        // SAFETY: old is unlinked and was uniquely owned by this atomic.
+        unsafe { retire_box(old) };
+    }
+
+    #[inline]
+    fn cas(&self, expected: T, desired: T) -> bool {
+        let h = HazardPointer::new();
+        let p = h.protect(&self.ptr);
+        // SAFETY: protected.
+        let cur = unsafe { (*p).value };
+        if cur != expected {
+            return false;
+        }
+        if expected == desired {
+            // Never replace a value with an equal one (AA-freedom; also
+            // avoids disturbing concurrent CASes, §3.1 discussion).
+            return true;
+        }
+        let new = Box::into_raw(Box::new(Node { value: desired }));
+        // The hazard on p prevents its address being recycled, so this
+        // CAS succeeding means the logical value is still `expected`
+        // (no ABA).
+        match self
+            .ptr
+            .compare_exchange(p, new, Ordering::SeqCst, Ordering::SeqCst)
+        {
+            Ok(_) => {
+                // SAFETY: p is now unlinked.
+                unsafe { retire_box(p) };
+                true
+            }
+            Err(_) => {
+                // SAFETY: new was never published.
+                drop(unsafe { Box::from_raw(new) });
+                false
+            }
+        }
+    }
+
+    fn name() -> &'static str {
+        "Indirect"
+    }
+
+    fn indirect_bytes(&self) -> usize {
+        std::mem::size_of::<Node<T>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_roundtrip_and_cas() {
+        let a: Indirect<Words<3>> = Indirect::new(Words([1, 2, 3]));
+        assert_eq!(a.load(), Words([1, 2, 3]));
+        a.store(Words([4, 5, 6]));
+        assert!(!a.cas(Words([1, 2, 3]), Words([0, 0, 0])));
+        assert!(a.cas(Words([4, 5, 6]), Words([7, 8, 9])));
+        assert_eq!(a.load(), Words([7, 8, 9]));
+    }
+
+    #[test]
+    fn test_cas_equal_value_is_noop_true() {
+        let a: Indirect<Words<1>> = Indirect::new(Words([5]));
+        assert!(a.cas(Words([5]), Words([5])));
+        assert_eq!(a.load(), Words([5]));
+    }
+
+    #[test]
+    fn test_concurrent_cas_total() {
+        let a: Arc<Indirect<Words<4>>> = Arc::new(Indirect::new(Words([0; 4])));
+        let threads = 4;
+        let per = 3_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    let mut wins = 0u64;
+                    while wins < per {
+                        let cur = a.load();
+                        let mut next = cur;
+                        next.0[0] += 1;
+                        next.0[1 + (t % 3)] ^= wins + 1;
+                        if a.cas(cur, next) {
+                            wins += 1;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load().0[0], threads as u64 * per);
+    }
+
+    #[test]
+    fn test_no_torn_reads() {
+        let a: Arc<Indirect<Words<4>>> = Arc::new(Indirect::new(Words([0; 4])));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = a.load();
+                        assert!(v.0.iter().all(|&w| w == v.0[0]));
+                    }
+                })
+            })
+            .collect();
+        for i in 1..10_000u64 {
+            a.store(Words([i; 4]));
+        }
+        stop.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

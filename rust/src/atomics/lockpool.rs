@@ -1,0 +1,125 @@
+//! `LockPool<T>` — big atomic guarded by a small *shared* pool of locks
+//! keyed by address, the mechanism GNU libatomic uses for
+//! `std::atomic<T>` beyond two words (paper §5.1: "a very small set of
+//! shared locks causing very high contention").
+//!
+//! Deliberately faithful to the pathology: unrelated atomics that hash to
+//! the same pool entry contend with each other, which is why libatomic
+//! is "dead last" across the paper's benchmarks.
+
+use std::cell::UnsafeCell;
+
+use super::spin::SpinLock;
+use super::{AtomicValue, BigAtomic};
+use crate::util::rng::mix64;
+
+/// Pool size: libatomic uses a page of locks (64 on common builds).
+const POOL: usize = 64;
+
+static LOCKS: [SpinLock; POOL] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const L: SpinLock = SpinLock::new();
+    [L; POOL]
+};
+
+#[inline]
+fn lock_for(addr: usize) -> &'static SpinLock {
+    // libatomic hashes the object address; mix to spread allocations.
+    &LOCKS[(mix64(addr as u64) as usize) % POOL]
+}
+
+pub struct LockPool<T: AtomicValue> {
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: data only touched under the pool lock for self's address.
+unsafe impl<T: AtomicValue> Send for LockPool<T> {}
+unsafe impl<T: AtomicValue> Sync for LockPool<T> {}
+
+impl<T: AtomicValue> LockPool<T> {
+    #[inline]
+    fn lock(&self) -> &'static SpinLock {
+        lock_for(self.data.get() as usize)
+    }
+}
+
+impl<T: AtomicValue> BigAtomic<T> for LockPool<T> {
+    fn new(init: T) -> Self {
+        Self {
+            data: UnsafeCell::new(init),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        // SAFETY: exclusive under the address's pool lock.
+        self.lock().with(|| unsafe { *self.data.get() })
+    }
+
+    #[inline]
+    fn store(&self, val: T) {
+        self.lock().with(|| unsafe { *self.data.get() = val });
+    }
+
+    #[inline]
+    fn cas(&self, expected: T, desired: T) -> bool {
+        self.lock().with(|| {
+            // SAFETY: exclusive under the address's pool lock.
+            let cur = unsafe { *self.data.get() };
+            if cur == expected {
+                unsafe { *self.data.get() = desired };
+                true
+            } else {
+                false
+            }
+        })
+    }
+
+    fn name() -> &'static str {
+        "LockPool(std::atomic)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_roundtrip() {
+        let a: LockPool<Words<4>> = LockPool::new(Words([1, 2, 3, 4]));
+        assert_eq!(a.load(), Words([1, 2, 3, 4]));
+        a.store(Words([5, 6, 7, 8]));
+        assert!(a.cas(Words([5, 6, 7, 8]), Words([0, 0, 0, 1])));
+        assert_eq!(a.load(), Words([0, 0, 0, 1]));
+    }
+
+    #[test]
+    fn test_distinct_atomics_share_pool_correctly() {
+        // Two atomics that may share a pool lock must still be correct.
+        let a: Arc<LockPool<Words<1>>> = Arc::new(LockPool::new(Words([0])));
+        let b: Arc<LockPool<Words<1>>> = Arc::new(LockPool::new(Words([0])));
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let a = Arc::clone(&a);
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let target = if i % 2 == 0 { a } else { b };
+                    for _ in 0..5_000 {
+                        loop {
+                            let cur = target.load();
+                            if target.cas(cur, Words([cur.0[0] + 1])) {
+                                break;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load().0[0] + b.load().0[0], 20_000);
+    }
+}

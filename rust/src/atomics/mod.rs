@@ -1,0 +1,177 @@
+//! Big atomics: `load` / `store` / `cas` over k adjacent 64-bit words.
+//!
+//! The eight implementations the paper evaluates, all behind one
+//! [`BigAtomic`] trait so the §5 harness drives them uniformly:
+//!
+//! * classic baselines — [`SeqLock`], [`SimpLock`], [`LockPool`],
+//!   [`Indirect`], [`HtmSim`];
+//! * the paper's contributions — [`CachedWaitFree`] (Algorithm 1),
+//!   [`CachedMemEff`] (Algorithm 2), [`CachedWritable`] (Algorithm 3).
+//!
+//! Values are plain-old-data types implementing [`AtomicValue`]; the
+//! provided [`Words`] carries `K` raw words and is what the benchmarks
+//! instantiate (`w` sweep of Fig 2).
+
+pub mod bytewise;
+pub mod cached_memeff;
+pub mod cached_waitfree;
+pub mod cached_writable;
+pub mod htm_sim;
+pub mod indirect;
+pub mod lockpool;
+pub mod seqlock;
+pub mod simplock;
+pub mod spin;
+
+pub use cached_memeff::{CachedMemEff, MemEffDomain};
+pub use cached_waitfree::CachedWaitFree;
+pub use cached_writable::CachedWritable;
+pub use htm_sim::HtmSim;
+pub use indirect::Indirect;
+pub use lockpool::LockPool;
+pub use seqlock::SeqLock;
+pub use simplock::SimpLock;
+
+/// A value storable in a big atomic.
+///
+/// # Safety
+/// Implementors guarantee:
+/// * `size_of::<Self>()` is a nonzero multiple of 8 and
+///   `align_of::<Self>() == 8` (the slots are accessed word-wise);
+/// * every bit pattern produced by word-wise copies of a valid value is
+///   itself valid (plain old data, no padding that `PartialEq` inspects);
+/// * `PartialEq` is an equivalence relation on the bit level (the
+///   algorithms' AA-freedom argument compares values).
+pub unsafe trait AtomicValue:
+    Copy + PartialEq + Default + Send + Sync + 'static
+{
+    /// Size in 64-bit words (the paper's `k`).
+    const WORDS: usize = std::mem::size_of::<Self>() / 8;
+}
+
+/// `K` raw 64-bit words — the benchmark value type (flag + payload in §5.1).
+#[repr(C, align(8))]
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub struct Words<const K: usize>(pub [u64; K]);
+
+impl<const K: usize> Default for Words<K> {
+    fn default() -> Self {
+        Words([0; K])
+    }
+}
+
+// SAFETY: repr(C) array of u64 — no padding, align 8, bitwise Eq.
+unsafe impl<const K: usize> AtomicValue for Words<K> {}
+
+/// Implement [`AtomicValue`] for a `#[repr(C)]` pod struct made of
+/// 8-byte fields. The macro adds compile-time layout assertions.
+#[macro_export]
+macro_rules! impl_atomic_value {
+    ($ty:ty) => {
+        // SAFETY: asserted below — size multiple of 8, align exactly 8.
+        unsafe impl $crate::atomics::AtomicValue for $ty {}
+        const _: () = {
+            assert!(std::mem::size_of::<$ty>() % 8 == 0);
+            assert!(std::mem::size_of::<$ty>() > 0);
+            assert!(std::mem::align_of::<$ty>() == 8);
+        };
+    };
+}
+
+/// The common interface of all big-atomic implementations — deliberately
+/// `std::atomic`-shaped (the paper's implementations share the
+/// `std::atomic` interface, §1).
+pub trait BigAtomic<T: AtomicValue>: Send + Sync {
+    /// Construct holding `init`.
+    fn new(init: T) -> Self
+    where
+        Self: Sized;
+
+    /// Linearizable read of the whole k-word value.
+    fn load(&self) -> T;
+
+    /// Linearizable write. On [`CachedWaitFree`] this is a CAS loop
+    /// (lock-free, not wait-free — Table 1's load+cas row).
+    fn store(&self, val: T);
+
+    /// Linearizable compare-and-swap: iff the current value equals
+    /// `expected`, replace with `desired` and return true.
+    fn cas(&self, expected: T, desired: T) -> bool;
+
+    /// Implementation name for reports.
+    fn name() -> &'static str
+    where
+        Self: Sized;
+
+    /// Heap bytes attributable to this atomic beyond its inline struct
+    /// (§5.5 memory census). Shared/per-thread pools report 0 here and
+    /// are accounted globally by `bench::memory`.
+    fn indirect_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// An array of big atomics — the §5.1 microbenchmark object (a map from
+/// `0..n` to values, each slot independently atomic and cache-padded the
+/// way the paper aligns elements to 64-byte boundaries).
+pub struct AtomicArray<T: AtomicValue, A: BigAtomic<T>> {
+    slots: Box<[crossbeam_utils::CachePadded<A>]>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: AtomicValue, A: BigAtomic<T>> AtomicArray<T, A> {
+    pub fn new(n: usize, init: T) -> Self {
+        let slots = (0..n)
+            .map(|_| crossbeam_utils::CachePadded::new(A::new(init)))
+            .collect();
+        Self {
+            slots,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> &A {
+        &self.slots[i]
+    }
+
+    /// §5.5 census: sum of per-slot indirect bytes.
+    pub fn indirect_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.indirect_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_words_default_and_eq() {
+        let z: Words<4> = Words::default();
+        assert_eq!(z, Words([0; 4]));
+        assert_ne!(z, Words([0, 0, 0, 1]));
+        assert_eq!(<Words<4> as AtomicValue>::WORDS, 4);
+    }
+
+    #[test]
+    fn test_impl_atomic_value_macro() {
+        #[repr(C, align(8))]
+        #[derive(Copy, Clone, PartialEq, Default)]
+        struct Pair {
+            a: u64,
+            b: u64,
+        }
+        impl_atomic_value!(Pair);
+        assert_eq!(<Pair as AtomicValue>::WORDS, 2);
+    }
+}

@@ -1,0 +1,162 @@
+//! `SeqLock<T>` — sequence-lock big atomic (paper §2, the strongest
+//! classic baseline in §5).
+//!
+//! A version word guards an inline value: odd = locked.  Loads read
+//! version / value / version and retry on change; updates increment to
+//! odd, write, increment to even.  Loads block only while a writer holds
+//! the lock (which is why oversubscription hurts: a descheduled writer
+//! stalls every reader — the paper's headline failure mode).
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+use super::bytewise::WordBuf;
+use super::{AtomicValue, BigAtomic};
+
+// Spin a whole scheduler quantum before yielding — see spin.rs: faithful
+// to the paper's (spinning) seqlock, whose readers stall behind a
+// descheduled writer under oversubscription.
+const SPINS_BEFORE_YIELD: u32 = 1 << 20;
+
+pub struct SeqLock<T: AtomicValue> {
+    version: AtomicU64,
+    data: WordBuf<T>,
+}
+
+impl<T: AtomicValue> SeqLock<T> {
+    /// Acquire the write lock; returns the (even) version observed.
+    #[inline]
+    fn lock(&self) -> u64 {
+        let mut spins = 0u32;
+        loop {
+            let v = self.version.load(Ordering::Relaxed);
+            if v % 2 == 0
+                && self
+                    .version
+                    .compare_exchange_weak(v, v + 1, Ordering::Acquire, Ordering::Relaxed)
+                    .is_ok()
+            {
+                return v;
+            }
+            spins += 1;
+            if spins >= SPINS_BEFORE_YIELD {
+                std::thread::yield_now();
+                spins = 0;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    #[inline]
+    fn unlock(&self, v: u64) {
+        self.version.store(v + 2, Ordering::Release);
+    }
+}
+
+impl<T: AtomicValue> BigAtomic<T> for SeqLock<T> {
+    fn new(init: T) -> Self {
+        Self {
+            version: AtomicU64::new(0),
+            data: WordBuf::new(init),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        let mut spins = 0u32;
+        loop {
+            let v1 = self.version.load(Ordering::Acquire);
+            if v1 % 2 == 0 {
+                let val = self.data.read();
+                fence(Ordering::Acquire);
+                let v2 = self.version.load(Ordering::Relaxed);
+                if v1 == v2 {
+                    return val;
+                }
+            }
+            spins += 1;
+            if spins >= SPINS_BEFORE_YIELD {
+                std::thread::yield_now();
+                spins = 0;
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    #[inline]
+    fn store(&self, val: T) {
+        let v = self.lock();
+        self.data.write(val);
+        self.unlock(v);
+    }
+
+    #[inline]
+    fn cas(&self, expected: T, desired: T) -> bool {
+        let v = self.lock();
+        let cur = self.data.read();
+        let ok = cur == expected;
+        if ok {
+            self.data.write(desired);
+        }
+        self.unlock(v);
+        ok
+    }
+
+    fn name() -> &'static str {
+        "SeqLock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_load_store_roundtrip() {
+        let a: SeqLock<Words<3>> = SeqLock::new(Words([1, 2, 3]));
+        assert_eq!(a.load(), Words([1, 2, 3]));
+        a.store(Words([4, 5, 6]));
+        assert_eq!(a.load(), Words([4, 5, 6]));
+    }
+
+    #[test]
+    fn test_cas_semantics() {
+        let a: SeqLock<Words<2>> = SeqLock::new(Words([0, 0]));
+        assert!(!a.cas(Words([9, 9]), Words([1, 1])));
+        assert!(a.cas(Words([0, 0]), Words([1, 1])));
+        assert_eq!(a.load(), Words([1, 1]));
+    }
+
+    #[test]
+    fn test_no_torn_reads_under_contention() {
+        // Writers store (i, i, i, i); readers must never see mixed words.
+        let a: Arc<SeqLock<Words<4>>> = Arc::new(SeqLock::new(Words([0; 4])));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let readers: Vec<_> = (0..3)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = a.load();
+                        assert!(
+                            v.0.iter().all(|&w| w == v.0[0]),
+                            "torn read: {:?}",
+                            v.0
+                        );
+                    }
+                })
+            })
+            .collect();
+        for i in 1..20_000u64 {
+            a.store(Words([i; 4]));
+        }
+        stop.store(true, Ordering::SeqCst);
+        for r in readers {
+            r.join().unwrap();
+        }
+    }
+}

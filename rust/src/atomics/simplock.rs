@@ -1,0 +1,103 @@
+//! `SimpLock<T>` — the simplest lock-based big atomic (paper §2):
+//! one spinlock per atomic, acquired by *every* operation, loads
+//! included.  The paper's worst classic baseline at low update rates
+//! (loads contend with each other) and under oversubscription.
+
+use std::cell::UnsafeCell;
+
+use super::spin::SpinLock;
+use super::{AtomicValue, BigAtomic};
+
+pub struct SimpLock<T: AtomicValue> {
+    lock: SpinLock,
+    data: UnsafeCell<T>,
+}
+
+// SAFETY: data is only touched while `lock` is held.
+unsafe impl<T: AtomicValue> Send for SimpLock<T> {}
+unsafe impl<T: AtomicValue> Sync for SimpLock<T> {}
+
+impl<T: AtomicValue> BigAtomic<T> for SimpLock<T> {
+    fn new(init: T) -> Self {
+        Self {
+            lock: SpinLock::new(),
+            data: UnsafeCell::new(init),
+        }
+    }
+
+    #[inline]
+    fn load(&self) -> T {
+        // SAFETY: exclusive under the lock.
+        self.lock.with(|| unsafe { *self.data.get() })
+    }
+
+    #[inline]
+    fn store(&self, val: T) {
+        self.lock.with(|| unsafe { *self.data.get() = val });
+    }
+
+    #[inline]
+    fn cas(&self, expected: T, desired: T) -> bool {
+        self.lock.with(|| {
+            // SAFETY: exclusive under the lock.
+            let cur = unsafe { *self.data.get() };
+            if cur == expected {
+                unsafe { *self.data.get() = desired };
+                true
+            } else {
+                false
+            }
+        })
+    }
+
+    fn name() -> &'static str {
+        "SimpLock"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::atomics::Words;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_roundtrip_and_cas() {
+        let a: SimpLock<Words<2>> = SimpLock::new(Words([7, 8]));
+        assert_eq!(a.load(), Words([7, 8]));
+        a.store(Words([1, 2]));
+        assert!(a.cas(Words([1, 2]), Words([3, 4])));
+        assert!(!a.cas(Words([1, 2]), Words([9, 9])));
+        assert_eq!(a.load(), Words([3, 4]));
+    }
+
+    #[test]
+    fn test_concurrent_cas_counter() {
+        // Each thread increments word0 via cas; total must be exact.
+        let a: Arc<SimpLock<Words<2>>> = Arc::new(SimpLock::new(Words([0, 0])));
+        let threads = 4;
+        let per = 5_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    for _ in 0..per {
+                        loop {
+                            let cur = a.load();
+                            let next = Words([cur.0[0] + 1, cur.0[1] + 3]);
+                            if a.cas(cur, next) {
+                                break;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let v = a.load();
+        assert_eq!(v.0[0], threads as u64 * per);
+        assert_eq!(v.0[1], 3 * threads as u64 * per);
+    }
+}

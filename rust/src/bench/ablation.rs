@@ -1,0 +1,144 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! 1. **Cached fast path** (the paper's core idea, §3): Cached-MemEff
+//!    loads with the inlined cache vs. forced through the indirect
+//!    (hazard-protected) route — isolates what inlining buys.
+//! 2. **Inlined first link** (§4): CacheHash vs Chaining at matched
+//!    parameters — the hash-level version of the same ablation.
+//! 3. **Seqlock read concurrency** (§2): SeqLock (lock-free reads) vs
+//!    SimpLock (locked reads) on a read-only workload — why sequence
+//!    locks beat plain locks for load-heavy mixes.
+//!
+//! Run with `repro ablate`.
+
+use std::time::Duration;
+
+use super::driver::{run_map, MapImpl, OpSource};
+use super::figures::{FigureCfg, Report};
+use super::workload::{WorkloadSpec, ZipfCdf};
+use crate::atomics::{BigAtomic, CachedMemEff, SeqLock, SimpLock, Words};
+use crate::util::rng::Xoshiro256;
+use crate::util::{ns_per_op, time_for};
+
+const MEASURE: Duration = Duration::from_millis(250);
+
+/// Ablation 1: load latency with vs without the cached fast path, at
+/// varying "dirtiness" (fraction of slots with an in-flight update —
+/// approximated here by quiescent slots, the fast path's best case,
+/// which is exactly what the paper's common case is).
+fn ablate_fast_path(rep: &mut Report) {
+    let n = 1 << 12;
+    let arr: Vec<CachedMemEff<Words<4>>> =
+        (0..n).map(|i| CachedMemEff::new(Words([i as u64; 4]))).collect();
+    let cdf = ZipfCdf::new(n, 0.0);
+    let mut rng = Xoshiro256::seeded(123);
+
+    let (iters, el) = time_for(MEASURE, || {
+        let i = cdf.sample(&mut rng);
+        std::hint::black_box(arr[i].load());
+    });
+    let fast_ns = ns_per_op(iters, el);
+
+    let mut rng = Xoshiro256::seeded(123);
+    let (iters, el) = time_for(MEASURE, || {
+        let i = cdf.sample(&mut rng);
+        std::hint::black_box(arr[i].load_no_fast_path());
+    });
+    let slow_ns = ns_per_op(iters, el);
+
+    rep.row(vec![
+        "memeff_load_cached_fast_path".into(),
+        format!("{fast_ns:.1}"),
+        format!("{slow_ns:.1}"),
+        format!("{:.2}x", slow_ns / fast_ns),
+    ]);
+}
+
+/// Ablation 3: read-only throughput, lock-free reads (SeqLock) vs
+/// locked reads (SimpLock).
+fn ablate_read_locking(rep: &mut Report) {
+    let a: SeqLock<Words<4>> = SeqLock::new(Words([7; 4]));
+    let b: SimpLock<Words<4>> = SimpLock::new(Words([7; 4]));
+    let (iters, el) = time_for(MEASURE, || {
+        std::hint::black_box(a.load());
+    });
+    let seq_ns = ns_per_op(iters, el);
+    let (iters, el) = time_for(MEASURE, || {
+        std::hint::black_box(b.load());
+    });
+    let simp_ns = ns_per_op(iters, el);
+    rep.row(vec![
+        "read_without_lock(seqlock_vs_simplock)".into(),
+        format!("{seq_ns:.1}"),
+        format!("{simp_ns:.1}"),
+        format!("{:.2}x", simp_ns / seq_ns),
+    ]);
+}
+
+/// Run all ablations; returns the report (saved by the coordinator).
+pub fn run_ablations(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let mut rep = Report::new(
+        "ablations",
+        &["ablation", "with_ns_or_mops", "without_ns_or_mops", "factor"],
+    );
+    ablate_fast_path(&mut rep);
+    ablate_read_locking(&mut rep);
+
+    // Ablation 2: inline vs no-inline hash at u=50, oversubscribed —
+    // measured as throughput (Mop/s), higher is better.
+    let spec = WorkloadSpec {
+        n: cfg.n,
+        theta: 0.0,
+        update_pct: 50,
+        seed: 0xAB,
+    };
+    let threads = 4 * super::driver::hw_threads();
+    let with = run_map(MapImpl::CacheHashMemEff, &spec, threads, cfg.dur(), source);
+    let without = run_map(MapImpl::Chaining, &spec, threads, cfg.dur(), source);
+    rep.row(vec![
+        "hash_inlined_first_link(oversub,u=50)".into(),
+        format!("{:.3}", with.mops()),
+        format!("{:.3}", without.mops()),
+        format!("{:.2}x", with.mops() / without.mops()),
+    ]);
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_ablations_run() {
+        let cfg = FigureCfg {
+            secs_per_point: 0.02,
+            n: 512,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_ablations(&cfg, &OpSource::Rust);
+        assert_eq!(rep.rows().len(), 3);
+    }
+
+    #[test]
+    fn test_fast_path_is_faster() {
+        // The ablated (indirect-only) load must be measurably slower —
+        // this is the paper's core claim in one assert.
+        let a: CachedMemEff<Words<4>> = CachedMemEff::new(Words([1; 4]));
+        let (it_f, el_f) = time_for(Duration::from_millis(60), || {
+            std::hint::black_box(a.load());
+        });
+        let (it_s, el_s) = time_for(Duration::from_millis(60), || {
+            std::hint::black_box(a.load_no_fast_path());
+        });
+        let fast = ns_per_op(it_f, el_f);
+        let slow = ns_per_op(it_s, el_s);
+        assert!(
+            slow > fast * 1.5,
+            "fast path buys nothing? fast={fast:.1}ns slow={slow:.1}ns"
+        );
+    }
+}

@@ -1,0 +1,504 @@
+//! Benchmark targets and the timed multi-thread driver.
+//!
+//! A [`BenchTarget`] is something that executes one generated operation;
+//! the two families are [`ArrayTarget`] (the §5.1 microbenchmark: a map
+//! from `0..n` to big-atomic elements with a full/empty flag) and
+//! [`MapTarget`] (the §5.2/5.3 hash-table benchmark).  The driver
+//! pre-generates per-thread operation buffers (so stream generation —
+//! Rust or the AOT artifact — is *outside* the timed region), then runs
+//! p threads against the target for a fixed duration and reports Mop/s.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::atomics::{
+    AtomicArray, BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect,
+    LockPool, SeqLock, SimpLock, Words,
+};
+use crate::hash::{CacheHash, Chaining, ConcurrentMap, GlobalLockMap, LinkVal, ShardedLockMap};
+use crate::runtime::workload_gen::WorkloadEngine;
+
+use super::workload::{generate_rust, GenOp, Op, WorkloadSpec};
+
+/// Executes generated operations.
+pub trait BenchTarget: Send + Sync {
+    fn exec(&self, op: &GenOp);
+    fn label(&self) -> String;
+}
+
+// ---------------------------------------------------------------------
+// §5.1 microbenchmark target: array of big atomics with full/empty flag.
+// ---------------------------------------------------------------------
+
+/// Array element layout: word0 = full flag, words 1.. = payload.
+pub struct ArrayTarget<const K: usize, A: BigAtomic<Words<K>>> {
+    arr: AtomicArray<Words<K>, A>,
+}
+
+impl<const K: usize, A: BigAtomic<Words<K>>> ArrayTarget<K, A> {
+    /// Half the slots start full (even ranks) so inserts and deletes both
+    /// have work in steady state.
+    pub fn new(n: usize) -> Self {
+        let arr: AtomicArray<Words<K>, A> = AtomicArray::new(n, Words([0; K]));
+        for i in (0..n).step_by(2) {
+            let mut v = [0u64; K];
+            v[0] = 1;
+            if K > 1 {
+                v[1] = i as u64;
+            }
+            arr.get(i).store(Words(v));
+        }
+        Self { arr }
+    }
+
+    pub fn array(&self) -> &AtomicArray<Words<K>, A> {
+        &self.arr
+    }
+}
+
+impl<const K: usize, A: BigAtomic<Words<K>>> BenchTarget for ArrayTarget<K, A> {
+    #[inline]
+    fn exec(&self, op: &GenOp) {
+        let slot = self.arr.get(op.rank as usize);
+        match op.op {
+            Op::Find => {
+                let v = slot.load();
+                std::hint::black_box(v);
+            }
+            Op::Insert => {
+                let cur = slot.load();
+                if cur.0[0] == 0 {
+                    let mut v = [0u64; K];
+                    v[0] = 1;
+                    if K > 1 {
+                        v[1] = op.key;
+                    }
+                    let _ = slot.cas(cur, Words(v));
+                }
+            }
+            Op::Delete => {
+                let cur = slot.load();
+                if cur.0[0] == 1 {
+                    let _ = slot.cas(cur, Words([0; K]));
+                }
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("{}[k={}]", A::name(), K)
+    }
+}
+
+/// The big-atomic implementations under test (paper Table 1 rows).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum AtomicImpl {
+    SeqLock,
+    SimpLock,
+    LockPool,
+    Indirect,
+    CachedWaitFree,
+    CachedMemEff,
+    CachedWritable,
+    HtmSim,
+}
+
+impl AtomicImpl {
+    /// The §5.1 comparison set, in the paper's legend order.
+    pub const ALL: [AtomicImpl; 8] = [
+        AtomicImpl::SeqLock,
+        AtomicImpl::SimpLock,
+        AtomicImpl::LockPool,
+        AtomicImpl::Indirect,
+        AtomicImpl::CachedWaitFree,
+        AtomicImpl::CachedMemEff,
+        AtomicImpl::CachedWritable,
+        AtomicImpl::HtmSim,
+    ];
+
+    /// The headline subset most figures sweep.
+    pub const CORE: [AtomicImpl; 6] = [
+        AtomicImpl::SeqLock,
+        AtomicImpl::SimpLock,
+        AtomicImpl::LockPool,
+        AtomicImpl::Indirect,
+        AtomicImpl::CachedWaitFree,
+        AtomicImpl::CachedMemEff,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AtomicImpl::SeqLock => "SeqLock",
+            AtomicImpl::SimpLock => "SimpLock",
+            AtomicImpl::LockPool => "LockPool(std::atomic)",
+            AtomicImpl::Indirect => "Indirect",
+            AtomicImpl::CachedWaitFree => "Cached-WaitFree",
+            AtomicImpl::CachedMemEff => "Cached-MemEff",
+            AtomicImpl::CachedWritable => "Cached-WF-Writable",
+            AtomicImpl::HtmSim => "HTM(sim)",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AtomicImpl> {
+        Self::ALL.iter().copied().find(|i| {
+            i.name().eq_ignore_ascii_case(s)
+                || i.name().to_lowercase().starts_with(&s.to_lowercase())
+        })
+    }
+}
+
+/// Build an array target for (implementation, element words k, size n).
+/// k ∈ {1, 2, 3, 4, 8, 16} — the paper's w sweep points (3 = the
+/// hash-link size used by the cross-section figures).
+pub fn make_array_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn BenchTarget> {
+    macro_rules! for_k {
+        ($kk:literal) => {{
+            match imp {
+                AtomicImpl::SeqLock => {
+                    Box::new(ArrayTarget::<$kk, SeqLock<Words<$kk>>>::new(n)) as Box<dyn BenchTarget>
+                }
+                AtomicImpl::SimpLock => Box::new(ArrayTarget::<$kk, SimpLock<Words<$kk>>>::new(n)),
+                AtomicImpl::LockPool => Box::new(ArrayTarget::<$kk, LockPool<Words<$kk>>>::new(n)),
+                AtomicImpl::Indirect => Box::new(ArrayTarget::<$kk, Indirect<Words<$kk>>>::new(n)),
+                AtomicImpl::CachedWaitFree => {
+                    Box::new(ArrayTarget::<$kk, CachedWaitFree<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::CachedMemEff => {
+                    Box::new(ArrayTarget::<$kk, CachedMemEff<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::CachedWritable => {
+                    Box::new(ArrayTarget::<$kk, CachedWritable<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::HtmSim => Box::new(ArrayTarget::<$kk, HtmSim<Words<$kk>>>::new(n)),
+            }
+        }};
+    }
+    match k {
+        1 => for_k!(1),
+        2 => for_k!(2),
+        3 => for_k!(3),
+        4 => for_k!(4),
+        8 => for_k!(8),
+        16 => for_k!(16),
+        other => panic!("unsupported element size k={other} (use 1,2,3,4,8,16)"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// §5.2/5.3 hash-table target.
+// ---------------------------------------------------------------------
+
+pub struct MapTarget {
+    map: Box<dyn ConcurrentMap>,
+}
+
+impl MapTarget {
+    /// Prefill half the key space (load factor ~0.5 steady state so all
+    /// three op kinds do real work; the table is sized for n).
+    pub fn new(map: Box<dyn ConcurrentMap>, spec: &WorkloadSpec) -> Self {
+        for rank in (0..spec.n).step_by(2) {
+            let key = crate::util::rng::mix64(rank as u64);
+            map.insert(key, rank as u64);
+        }
+        Self { map }
+    }
+}
+
+impl BenchTarget for MapTarget {
+    #[inline]
+    fn exec(&self, op: &GenOp) {
+        match op.op {
+            Op::Find => {
+                std::hint::black_box(self.map.find(op.key));
+            }
+            Op::Insert => {
+                let _ = self.map.insert(op.key, op.rank as u64);
+            }
+            Op::Delete => {
+                let _ = self.map.remove(op.key);
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        self.map.map_name().to_string()
+    }
+}
+
+/// The hash-table implementations under comparison.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum MapImpl {
+    CacheHashSeqLock,
+    CacheHashSimpLock,
+    CacheHashIndirect,
+    CacheHashWaitFree,
+    CacheHashMemEff,
+    CacheHashWritable,
+    CacheHashHtm,
+    Chaining,
+    ShardedLock,
+    GlobalLock,
+}
+
+impl MapImpl {
+    /// Fig 3 set: CacheHash over the big-atomic strategies + Chaining.
+    pub const FIG3: [MapImpl; 6] = [
+        MapImpl::CacheHashSeqLock,
+        MapImpl::CacheHashSimpLock,
+        MapImpl::CacheHashIndirect,
+        MapImpl::CacheHashWaitFree,
+        MapImpl::CacheHashMemEff,
+        MapImpl::Chaining,
+    ];
+
+    /// Fig 4 set: our two best vs the open-source stand-ins.
+    pub const FIG4: [MapImpl; 5] = [
+        MapImpl::CacheHashMemEff,
+        MapImpl::CacheHashSeqLock,
+        MapImpl::Chaining,
+        MapImpl::ShardedLock,
+        MapImpl::GlobalLock,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MapImpl::CacheHashSeqLock => "CacheHash(SeqLock)",
+            MapImpl::CacheHashSimpLock => "CacheHash(SimpLock)",
+            MapImpl::CacheHashIndirect => "CacheHash(Indirect)",
+            MapImpl::CacheHashWaitFree => "CacheHash(WaitFree)",
+            MapImpl::CacheHashMemEff => "CacheHash(MemEff)",
+            MapImpl::CacheHashWritable => "CacheHash(Writable)",
+            MapImpl::CacheHashHtm => "CacheHash(HTMsim)",
+            MapImpl::Chaining => "Chaining(no-inline)",
+            MapImpl::ShardedLock => "ShardedLock(os-standin)",
+            MapImpl::GlobalLock => "GlobalLock(floor)",
+        }
+    }
+
+    pub fn build(&self, n: usize, threads: usize) -> Box<dyn ConcurrentMap> {
+        match self {
+            MapImpl::CacheHashSeqLock => Box::new(CacheHash::<SeqLock<LinkVal>>::new(n)),
+            MapImpl::CacheHashSimpLock => Box::new(CacheHash::<SimpLock<LinkVal>>::new(n)),
+            MapImpl::CacheHashIndirect => Box::new(CacheHash::<Indirect<LinkVal>>::new(n)),
+            MapImpl::CacheHashWaitFree => Box::new(CacheHash::<CachedWaitFree<LinkVal>>::new(n)),
+            MapImpl::CacheHashMemEff => Box::new(CacheHash::<CachedMemEff<LinkVal>>::new(n)),
+            MapImpl::CacheHashWritable => Box::new(CacheHash::<CachedWritable<LinkVal>>::new(n)),
+            MapImpl::CacheHashHtm => Box::new(CacheHash::<HtmSim<LinkVal>>::new(n)),
+            MapImpl::Chaining => Box::new(Chaining::new(n)),
+            MapImpl::ShardedLock => Box::new(ShardedLockMap::new(n, threads * 4)),
+            MapImpl::GlobalLock => Box::new(GlobalLockMap::new(n)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The timed driver.
+// ---------------------------------------------------------------------
+
+/// Where operation streams come from.
+pub enum OpSource<'a> {
+    /// Pure-Rust sampler (default).
+    Rust,
+    /// The AOT-compiled workload model via PJRT.
+    Artifact(&'a WorkloadEngine),
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    pub threads: usize,
+    pub total_ops: u64,
+    pub elapsed: Duration,
+}
+
+impl RunResult {
+    /// Throughput in million ops/second (the paper reports Bop/s; at this
+    /// machine's scale Mop/s is the readable unit — shapes are unchanged).
+    pub fn mops(&self) -> f64 {
+        self.total_ops as f64 / self.elapsed.as_secs_f64() / 1e6
+    }
+}
+
+/// Ops pre-generated per thread (looped over during the timed region).
+pub const OPS_PER_THREAD: usize = 1 << 15;
+
+/// Run `target` for `duration` with `threads` threads over streams from
+/// `source`.
+pub fn run_throughput(
+    target: &dyn BenchTarget,
+    spec: &WorkloadSpec,
+    threads: usize,
+    duration: Duration,
+    source: &OpSource,
+) -> RunResult {
+    // Stream generation happens before the clock starts.
+    let buffers: Vec<Vec<GenOp>> = (0..threads)
+        .map(|t| match source {
+            OpSource::Rust => generate_rust(spec, OPS_PER_THREAD, t as u64),
+            OpSource::Artifact(engine) => engine
+                .generate(spec, OPS_PER_THREAD, t as u64)
+                .expect("artifact generation failed"),
+        })
+        .collect();
+
+    let stop = AtomicBool::new(false);
+    let started = std::sync::Barrier::new(threads + 1);
+    let total = AtomicU64::new(0);
+
+    let elapsed = std::thread::scope(|s| {
+        for buf in &buffers {
+            s.spawn(|| {
+                started.wait();
+                let mut ops = 0u64;
+                'outer: loop {
+                    for chunk in buf.chunks(512) {
+                        for op in chunk {
+                            target.exec(op);
+                        }
+                        ops += chunk.len() as u64;
+                        if stop.load(Ordering::Relaxed) {
+                            break 'outer;
+                        }
+                    }
+                }
+                total.fetch_add(ops, Ordering::Relaxed);
+            });
+        }
+        started.wait();
+        let t0 = Instant::now();
+        std::thread::sleep(duration);
+        stop.store(true, Ordering::SeqCst);
+        t0.elapsed()
+        // scope joins all threads here
+    });
+
+    RunResult {
+        label: target.label(),
+        threads,
+        total_ops: total.load(Ordering::SeqCst),
+        elapsed,
+    }
+}
+
+/// Convenience wrapper: array benchmark for one configuration point.
+pub fn run_atomics(
+    imp: AtomicImpl,
+    k: usize,
+    spec: &WorkloadSpec,
+    threads: usize,
+    duration: Duration,
+    source: &OpSource,
+) -> RunResult {
+    let target = make_array_target(imp, k, spec.n);
+    run_throughput(&*target, spec, threads, duration, source)
+}
+
+/// Convenience wrapper: hash-table benchmark for one configuration point.
+pub fn run_map(
+    imp: MapImpl,
+    spec: &WorkloadSpec,
+    threads: usize,
+    duration: Duration,
+    source: &OpSource,
+) -> RunResult {
+    let target = MapTarget::new(imp.build(spec.n, threads), spec);
+    run_throughput(&target, spec, threads, duration, source)
+}
+
+/// This machine's hardware parallelism (the paper's "96 SMT threads"
+/// reference point; 1 on the CI container — see DESIGN.md).
+pub fn hw_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> WorkloadSpec {
+        WorkloadSpec {
+            n: 256,
+            theta: 0.5,
+            update_pct: 50,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn test_array_target_exec_all_ops() {
+        let t = make_array_target(AtomicImpl::CachedMemEff, 4, 64);
+        for (i, opk) in [Op::Find, Op::Insert, Op::Delete].iter().cycle().take(300).enumerate() {
+            t.exec(&GenOp {
+                op: *opk,
+                rank: (i % 64) as u32,
+                key: i as u64,
+            });
+        }
+    }
+
+    #[test]
+    fn test_run_throughput_counts_ops() {
+        let spec = tiny_spec();
+        let r = run_atomics(
+            AtomicImpl::SeqLock,
+            2,
+            &spec,
+            2,
+            Duration::from_millis(50),
+            &OpSource::Rust,
+        );
+        assert!(r.total_ops > 1000, "only {} ops", r.total_ops);
+        assert!(r.mops() > 0.0);
+    }
+
+    #[test]
+    fn test_run_map_all_impls_smoke() {
+        let spec = WorkloadSpec {
+            n: 128,
+            theta: 0.0,
+            update_pct: 50,
+            seed: 2,
+        };
+        for imp in [
+            MapImpl::CacheHashMemEff,
+            MapImpl::Chaining,
+            MapImpl::ShardedLock,
+            MapImpl::GlobalLock,
+        ] {
+            let r = run_map(imp, &spec, 2, Duration::from_millis(20), &OpSource::Rust);
+            assert!(r.total_ops > 100, "{}: {} ops", imp.name(), r.total_ops);
+        }
+    }
+
+    #[test]
+    fn test_all_array_impls_and_sizes_smoke() {
+        let spec = tiny_spec();
+        for imp in AtomicImpl::ALL {
+            let r = run_atomics(imp, 1, &spec, 1, Duration::from_millis(10), &OpSource::Rust);
+            assert!(r.total_ops > 0, "{}", imp.name());
+        }
+        for k in [2usize, 8, 16] {
+            let r = run_atomics(
+                AtomicImpl::CachedMemEff,
+                k,
+                &spec,
+                1,
+                Duration::from_millis(10),
+                &OpSource::Rust,
+            );
+            assert!(r.total_ops > 0, "k={k}");
+        }
+    }
+
+    #[test]
+    fn test_impl_from_name() {
+        assert_eq!(AtomicImpl::from_name("seqlock"), Some(AtomicImpl::SeqLock));
+        assert_eq!(
+            AtomicImpl::from_name("Cached-MemEff"),
+            Some(AtomicImpl::CachedMemEff)
+        );
+        assert_eq!(AtomicImpl::from_name("nope"), None);
+    }
+}

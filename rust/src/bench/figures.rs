@@ -1,0 +1,529 @@
+//! One runner per paper exhibit (§5): Figures 1–5, Table 1, and the
+//! §5.5 memory census.  Each prints the paper's rows/series and writes
+//! `reports/<id>.csv`.
+//!
+//! Scale: the paper ran 10M elements on 96 hardware threads; this
+//! harness auto-scales to the host (`hw_threads()`, default n = 64K,
+//! duration per point configurable) and reports Mop/s.  The *shapes* —
+//! who wins, where oversubscription crossovers fall — are the
+//! reproduction target (EXPERIMENTS.md holds paper-vs-measured notes).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+use std::time::Duration;
+
+use super::driver::{
+    hw_threads, run_atomics, run_map, AtomicImpl, MapImpl, OpSource, RunResult,
+};
+use super::workload::WorkloadSpec;
+
+/// Global knobs for a figure run.
+#[derive(Clone, Debug)]
+pub struct FigureCfg {
+    /// Seconds per measured point.
+    pub secs_per_point: f64,
+    /// Default element count (paper: 10M; scaled for this host).
+    pub n: usize,
+    /// Output directory for CSV rows.
+    pub report_dir: String,
+    /// Use the AOT artifact for stream generation when available.
+    pub use_artifact: bool,
+}
+
+impl Default for FigureCfg {
+    fn default() -> Self {
+        Self {
+            secs_per_point: 0.3,
+            n: 1 << 16,
+            report_dir: "reports".to_string(),
+            use_artifact: false,
+        }
+    }
+}
+
+impl FigureCfg {
+    pub(crate) fn dur(&self) -> Duration {
+        Duration::from_secs_f64(self.secs_per_point)
+    }
+}
+
+/// A collected table of rows, printed and persisted.
+pub struct Report {
+    id: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(id: &str, header: &[&str]) -> Self {
+        println!("\n=== {id} ===");
+        println!("{}", header.join("\t"));
+        Self {
+            id: id.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        println!("{}", cells.join("\t"));
+        self.rows.push(cells);
+    }
+
+    pub fn save(&self, dir: &str) -> std::io::Result<String> {
+        fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join(format!("{}.csv", self.id));
+        let mut out = String::new();
+        writeln!(out, "{}", self.header.join(",")).unwrap();
+        for r in &self.rows {
+            writeln!(out, "{}", r.join(",")).unwrap();
+        }
+        fs::write(&path, out)?;
+        Ok(path.display().to_string())
+    }
+
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+}
+
+fn fmt_mops(r: &RunResult) -> String {
+    format!("{:.3}", r.mops())
+}
+
+/// The thread counts representing "full subscription" and the paper's
+/// 4x oversubscription point on this host.
+pub fn subscription_points() -> (usize, usize) {
+    let p = hw_threads();
+    (p, 4 * p)
+}
+
+// ---------------------------------------------------------------------
+// Figure 1 — headline cross-section: atomics + hash, u=50, z=0,
+// p = {P, 4P}.
+// ---------------------------------------------------------------------
+pub fn fig1(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let (p, p_over) = subscription_points();
+    let mut rep = Report::new(
+        "fig1_headline",
+        &["impl", "atomics_mops_p", "atomics_mops_4p", "hash_mops_p", "hash_mops_4p"],
+    );
+    let spec = WorkloadSpec {
+        n: cfg.n,
+        theta: 0.0,
+        update_pct: 50,
+        seed: 0xF1,
+    };
+    let pairs: [(AtomicImpl, MapImpl); 5] = [
+        (AtomicImpl::SeqLock, MapImpl::CacheHashSeqLock),
+        (AtomicImpl::SimpLock, MapImpl::CacheHashSimpLock),
+        (AtomicImpl::Indirect, MapImpl::CacheHashIndirect),
+        (AtomicImpl::CachedWaitFree, MapImpl::CacheHashWaitFree),
+        (AtomicImpl::CachedMemEff, MapImpl::CacheHashMemEff),
+    ];
+    for (ai, mi) in pairs {
+        let a1 = run_atomics(ai, 3, &spec, p, cfg.dur(), source);
+        let a4 = run_atomics(ai, 3, &spec, p_over, cfg.dur(), source);
+        let h1 = run_map(mi, &spec, p, cfg.dur(), source);
+        let h4 = run_map(mi, &spec, p_over, cfg.dur(), source);
+        rep.row(vec![
+            ai.name().into(),
+            fmt_mops(&a1),
+            fmt_mops(&a4),
+            fmt_mops(&h1),
+            fmt_mops(&h4),
+        ]);
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------
+// Figure 2 — microbenchmark sweeps (8 panels): u, z, n (each at P and
+// 4P), w, p.
+// ---------------------------------------------------------------------
+
+pub fn fig2_u(cfg: &FigureCfg, source: &OpSource, oversub: bool) -> Report {
+    let (p, p_over) = subscription_points();
+    let threads = if oversub { p_over } else { p };
+    let id = if oversub { "fig2_u_oversub" } else { "fig2_u" };
+    let mut rep = Report::new(id, &["u_pct", "impl", "mops"]);
+    for u in [0u32, 10, 25, 50, 75, 100] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: u,
+            seed: 0xF2,
+        };
+        for imp in AtomicImpl::CORE {
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            rep.row(vec![u.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+pub fn fig2_z(cfg: &FigureCfg, source: &OpSource, oversub: bool) -> Report {
+    let (p, p_over) = subscription_points();
+    let threads = if oversub { p_over } else { p };
+    let id = if oversub { "fig2_z_oversub" } else { "fig2_z" };
+    let mut rep = Report::new(id, &["z", "impl", "mops"]);
+    for z in [0.0f64, 0.5, 0.75, 0.9, 0.99] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: z,
+            update_pct: 5,
+            seed: 0xF3,
+        };
+        for imp in AtomicImpl::CORE {
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            rep.row(vec![format!("{z}"), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+pub fn fig2_n(cfg: &FigureCfg, source: &OpSource, oversub: bool) -> Report {
+    let (p, p_over) = subscription_points();
+    let threads = if oversub { p_over } else { p };
+    let id = if oversub { "fig2_n_oversub" } else { "fig2_n" };
+    let mut rep = Report::new(id, &["n", "impl", "mops"]);
+    for n in [1usize << 10, 1 << 13, 1 << 16, 1 << 20] {
+        let spec = WorkloadSpec {
+            n,
+            theta: 0.0,
+            update_pct: 5,
+            seed: 0xF4,
+        };
+        for imp in AtomicImpl::CORE {
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            rep.row(vec![n.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+pub fn fig2_w(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let (p, _) = subscription_points();
+    let mut rep = Report::new("fig2_w", &["k_words", "impl", "mops"]);
+    for k in [1usize, 2, 4, 8, 16] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: 5,
+            seed: 0xF5,
+        };
+        for imp in AtomicImpl::CORE {
+            let r = run_atomics(imp, k, &spec, p, cfg.dur(), source);
+            rep.row(vec![k.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+pub fn fig2_p(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let (p, p_over) = subscription_points();
+    let mut rep = Report::new("fig2_p", &["threads", "impl", "mops"]);
+    let mut points = vec![1usize, 2, 4];
+    for t in [p, 2 * p, p_over, 8 * p] {
+        if !points.contains(&t) {
+            points.push(t);
+        }
+    }
+    points.sort_unstable();
+    points.dedup();
+    for threads in points {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: 5,
+            seed: 0xF6,
+        };
+        for imp in AtomicImpl::CORE {
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            rep.row(vec![threads.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------
+// Figure 3 — CacheHash vs Chaining sweeps: u, z, n (each at P, 4P).
+// ---------------------------------------------------------------------
+pub fn fig3(cfg: &FigureCfg, source: &OpSource, panel: &str, oversub: bool) -> Report {
+    let (p, p_over) = subscription_points();
+    let threads = if oversub { p_over } else { p };
+    let suffix = if oversub { "_oversub" } else { "" };
+    let mut rep = Report::new(
+        &format!("fig3_{panel}{suffix}"),
+        &[panel, "impl", "mops"],
+    );
+    let sweep: Vec<(String, WorkloadSpec)> = match panel {
+        "u" => [0u32, 10, 25, 50, 75, 100]
+            .iter()
+            .map(|&u| {
+                (
+                    u.to_string(),
+                    WorkloadSpec {
+                        n: cfg.n,
+                        theta: 0.0,
+                        update_pct: u,
+                        seed: 0xF7,
+                    },
+                )
+            })
+            .collect(),
+        "z" => [0.0f64, 0.5, 0.75, 0.9, 0.99]
+            .iter()
+            .map(|&z| {
+                (
+                    format!("{z}"),
+                    WorkloadSpec {
+                        n: cfg.n,
+                        theta: z,
+                        update_pct: 5,
+                        seed: 0xF8,
+                    },
+                )
+            })
+            .collect(),
+        "n" => [1usize << 10, 1 << 13, 1 << 16, 1 << 20]
+            .iter()
+            .map(|&n| {
+                (
+                    n.to_string(),
+                    WorkloadSpec {
+                        n,
+                        theta: 0.0,
+                        update_pct: 5,
+                        seed: 0xF9,
+                    },
+                )
+            })
+            .collect(),
+        other => panic!("unknown fig3 panel {other} (use u|z|n)"),
+    };
+    for (x, spec) in sweep {
+        for imp in MapImpl::FIG3 {
+            let r = run_map(imp, &spec, threads, cfg.dur(), source);
+            rep.row(vec![x.clone(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------
+// Figure 4 — vs open-source stand-ins: vary p and z.
+// ---------------------------------------------------------------------
+pub fn fig4(cfg: &FigureCfg, source: &OpSource) -> (Report, Report) {
+    let (p, p_over) = subscription_points();
+    let mut rep_p = Report::new("fig4_p", &["threads", "impl", "mops"]);
+    let mut points = vec![1usize, 2, 4];
+    for t in [p, p_over] {
+        if !points.contains(&t) {
+            points.push(t);
+        }
+    }
+    points.sort_unstable();
+    points.dedup();
+    for threads in points {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: 10,
+            seed: 0xFA,
+        };
+        for imp in MapImpl::FIG4 {
+            let r = run_map(imp, &spec, threads, cfg.dur(), source);
+            rep_p.row(vec![threads.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    let mut rep_z = Report::new("fig4_z", &["z", "impl", "mops"]);
+    for z in [0.0f64, 0.5, 0.75, 0.9, 0.99] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: z,
+            update_pct: 10,
+            seed: 0xFB,
+        };
+        for imp in MapImpl::FIG4 {
+            let r = run_map(imp, &spec, p, cfg.dur(), source);
+            rep_z.row(vec![format!("{z}"), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    (rep_p, rep_z)
+}
+
+// ---------------------------------------------------------------------
+// Figure 5 — HTM comparison: vary p, z, u, n (with HtmSim).
+// ---------------------------------------------------------------------
+pub fn fig5(cfg: &FigureCfg, source: &OpSource) -> Vec<Report> {
+    let (p, p_over) = subscription_points();
+    let impls = [
+        AtomicImpl::HtmSim,
+        AtomicImpl::SeqLock,
+        AtomicImpl::SimpLock,
+        AtomicImpl::CachedMemEff,
+    ];
+    let mut reports = Vec::new();
+
+    let mut rep = Report::new("fig5_p", &["threads", "impl", "mops"]);
+    for threads in [1usize, 2, p.max(2), p_over] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: 5,
+            seed: 0xFC,
+        };
+        for imp in impls {
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            rep.row(vec![threads.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    reports.push(rep);
+
+    let mut rep = Report::new("fig5_z", &["z", "impl", "mops"]);
+    for z in [0.0f64, 0.5, 0.75, 0.9, 0.99] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: z,
+            update_pct: 5,
+            seed: 0xFD,
+        };
+        for imp in impls {
+            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source);
+            rep.row(vec![format!("{z}"), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    reports.push(rep);
+
+    let mut rep = Report::new("fig5_u", &["u_pct", "impl", "mops"]);
+    for u in [0u32, 25, 50, 75, 100] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: u,
+            seed: 0xFE,
+        };
+        for imp in impls {
+            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source);
+            rep.row(vec![u.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    reports.push(rep);
+
+    let mut rep = Report::new("fig5_n", &["n", "impl", "mops"]);
+    for n in [1usize << 10, 1 << 13, 1 << 16, 1 << 20] {
+        let spec = WorkloadSpec {
+            n,
+            theta: 0.0,
+            update_pct: 5,
+            seed: 0xFF,
+        };
+        for imp in impls {
+            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source);
+            rep.row(vec![n.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    reports.push(rep);
+    reports
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — properties (static) + operation-support verification.
+// ---------------------------------------------------------------------
+pub fn table1() -> Report {
+    let mut rep = Report::new(
+        "table1_properties",
+        &["approach", "progress", "space", "indirect", "operations"],
+    );
+    let rows: [[&str; 5]; 6] = [
+        ["Indirect", "lock-free (HP)", "nk + O(n + p(p+k))", "always", "load+store+cas"],
+        ["SimpLock/LockPool", "always block", "nk + O(n)", "never", "load+store+cas"],
+        ["SeqLock", "block on race", "nk + O(n)", "never", "load+store+cas"],
+        ["Cached-WaitFree", "wait-free", "2nk + O(n + p(p+k))", "on prior race", "load+cas"],
+        ["Cached-MemEff", "lock-free", "nk + O(n + p(p+k))", "on race", "load+store+cas"],
+        ["Cached-WF-Writable", "wait-free", "3nk + O(n + p(p+k))", "on prior race", "load+store+cas"],
+    ];
+    for r in rows {
+        rep.row(r.iter().map(|s| s.to_string()).collect());
+    }
+    rep
+}
+
+/// Run every figure (the `repro all` path).
+pub fn run_all(cfg: &FigureCfg, source: &OpSource) -> Vec<String> {
+    let mut saved = Vec::new();
+    let mut save = |r: Report| {
+        if let Ok(p) = r.save(&cfg.report_dir) {
+            saved.push(p);
+        }
+    };
+    save(fig1(cfg, source));
+    for oversub in [false, true] {
+        save(fig2_u(cfg, source, oversub));
+        save(fig2_z(cfg, source, oversub));
+        save(fig2_n(cfg, source, oversub));
+    }
+    save(fig2_w(cfg, source));
+    save(fig2_p(cfg, source));
+    for panel in ["u", "z", "n"] {
+        for oversub in [false, true] {
+            save(fig3(cfg, source, panel, oversub));
+        }
+    }
+    let (a, b) = fig4(cfg, source);
+    save(a);
+    save(b);
+    for r in fig5(cfg, source) {
+        save(r);
+    }
+    save(table1());
+    save(super::memory::memory_census(cfg));
+    saved
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> FigureCfg {
+        FigureCfg {
+            secs_per_point: 0.01,
+            n: 512,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_fig_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        }
+    }
+
+    #[test]
+    fn test_fig1_shape() {
+        let rep = fig1(&quick_cfg(), &OpSource::Rust);
+        assert_eq!(rep.rows().len(), 5);
+        for row in rep.rows() {
+            for cell in &row[1..] {
+                assert!(cell.parse::<f64>().unwrap() > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn test_table1_static() {
+        let rep = table1();
+        assert_eq!(rep.rows().len(), 6);
+    }
+
+    #[test]
+    fn test_report_save() {
+        let cfg = quick_cfg();
+        let mut rep = Report::new("unit_test_report", &["a", "b"]);
+        rep.row(vec!["1".into(), "2".into()]);
+        let path = rep.save(&cfg.report_dir).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("a,b"));
+        assert!(text.contains("1,2"));
+    }
+}

@@ -1,0 +1,128 @@
+//! §5.5 memory census: measured live bytes per implementation vs the
+//! paper's closed forms.
+//!
+//! Paper constants (k = element words, n = atomics, p = threads, c_h =
+//! hazard collector slack): Indirect `n(k+1) + c_h·p(p+k)`, SimpLock
+//! `n(k+1)`, SeqLock `n(k+1)`, Cached-WaitFree `2n(k+2) + c_h·p(p+k)`,
+//! Cached-MemEff `n(k+2) + c_h·p(p+k)`.  We measure the three
+//! components we can observe directly: inline slot bytes, live indirect
+//! node bytes, and pool/retire bytes.
+
+use std::sync::Arc;
+
+use super::figures::{FigureCfg, Report};
+use crate::atomics::{
+    AtomicArray, BigAtomic, CachedMemEff, CachedWaitFree, Indirect, MemEffDomain, SeqLock,
+    SimpLock, Words,
+};
+use crate::smr::hazard;
+
+const K: usize = 4; // census element size (words)
+
+fn census_one<A: BigAtomic<Words<K>>>(n: usize) -> (usize, usize) {
+    let arr: AtomicArray<Words<K>, A> = AtomicArray::new(n, Words([7; K]));
+    // Touch every slot with an update so indirect structures are live.
+    for i in 0..n {
+        let cur = arr.get(i).load();
+        arr.get(i).cas(cur, Words([i as u64 + 1; K]));
+    }
+    let inline = n * std::mem::size_of::<A>();
+    let indirect = arr.indirect_bytes();
+    (inline, indirect)
+}
+
+/// Produce the §5.5 table (also a regression test for the space bounds:
+/// `rust/tests/properties.rs` asserts the measured/formula ratios).
+pub fn memory_census(_cfg: &FigureCfg) -> Report {
+    let n = 1 << 14;
+    let mut rep = Report::new(
+        "memory_census",
+        &["impl", "n", "k", "inline_bytes", "indirect_bytes", "pool_or_retired"],
+    );
+
+    let (inline, ind) = census_one::<SeqLock<Words<K>>>(n);
+    rep.row(vec![
+        "SeqLock".into(),
+        n.to_string(),
+        K.to_string(),
+        inline.to_string(),
+        ind.to_string(),
+        "0".into(),
+    ]);
+
+    let (inline, ind) = census_one::<SimpLock<Words<K>>>(n);
+    rep.row(vec![
+        "SimpLock".into(),
+        n.to_string(),
+        K.to_string(),
+        inline.to_string(),
+        ind.to_string(),
+        "0".into(),
+    ]);
+
+    let (inline, ind) = census_one::<Indirect<Words<K>>>(n);
+    rep.row(vec![
+        "Indirect".into(),
+        n.to_string(),
+        K.to_string(),
+        inline.to_string(),
+        ind.to_string(),
+        hazard::pending_reclaims().to_string(),
+    ]);
+
+    let (inline, ind) = census_one::<CachedWaitFree<Words<K>>>(n);
+    rep.row(vec![
+        "Cached-WaitFree".into(),
+        n.to_string(),
+        K.to_string(),
+        inline.to_string(),
+        ind.to_string(),
+        hazard::pending_reclaims().to_string(),
+    ]);
+
+    // MemEff: use a private domain so the pool is attributable.
+    let domain: Arc<MemEffDomain<Words<K>>> = Arc::new(MemEffDomain::new());
+    let arr: Vec<CachedMemEff<Words<K>>> = (0..n)
+        .map(|_| CachedMemEff::with_domain(Words([7; K]), Arc::clone(&domain)))
+        .collect();
+    for (i, a) in arr.iter().enumerate() {
+        let cur = a.load();
+        a.cas(cur, Words([i as u64 + 1; K]));
+    }
+    let inline = n * std::mem::size_of::<CachedMemEff<Words<K>>>();
+    let pool_nodes = domain.allocated_nodes() as usize;
+    let pool_bytes = pool_nodes * (std::mem::size_of::<Words<K>>() + 32);
+    rep.row(vec![
+        "Cached-MemEff".into(),
+        n.to_string(),
+        K.to_string(),
+        inline.to_string(),
+        "0".into(),
+        pool_bytes.to_string(),
+    ]);
+
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_census_runs_and_memeff_pool_tiny() {
+        let rep = memory_census(&FigureCfg::default());
+        let rows = rep.rows();
+        assert_eq!(rows.len(), 5);
+        // Cached-MemEff's pool bytes must be tiny vs inline (§3.2's
+        // n-independence).
+        let memeff = rows.iter().find(|r| r[0] == "Cached-MemEff").unwrap();
+        let inline: usize = memeff[3].parse().unwrap();
+        let pool: usize = memeff[5].parse().unwrap();
+        assert!(pool * 100 < inline, "pool {pool} vs inline {inline}");
+        // Cached-WaitFree must hold ~2x the value bytes (backup always
+        // populated).
+        let wf = rows.iter().find(|r| r[0] == "Cached-WaitFree").unwrap();
+        let indirect: usize = wf[4].parse().unwrap();
+        assert!(indirect >= (1 << 14) * K * 8);
+    }
+}

@@ -1,0 +1,16 @@
+//! The §5 benchmark harness: workload generation, the multi-threaded
+//! throughput driver, and one runner per paper figure/table.
+//!
+//! * [`workload`] — Zipfian/op-mix streams (pure Rust + the shared
+//!   contract with the AOT artifact).
+//! * [`driver`] — targets (atomic arrays, hash maps) and the timed
+//!   p-thread loop reporting Mop/s.
+//! * [`figures`] — `fig1` … `fig5`, `table1` — prints the paper's rows
+//!   and writes `reports/*.csv`.
+//! * [`memory`] — the §5.5 live-memory census.
+
+pub mod ablation;
+pub mod driver;
+pub mod figures;
+pub mod memory;
+pub mod workload;

@@ -1,0 +1,362 @@
+//! Workload generation — the paper's §5 methodology as data.
+//!
+//! Operations target indices drawn from a Zipfian(θ) distribution over n
+//! items (θ = the paper's contention knob z; 0 = uniform), with an update
+//! fraction u split evenly between inserts and deletes (§5.1).
+//!
+//! Two interchangeable generators produce the streams:
+//! * this module's pure-Rust sampler, and
+//! * the AOT-compiled JAX/Pallas workload model executed via PJRT
+//!   ([`crate::runtime`]).
+//!
+//! They share a **bit-exact contract**: the same quantized CDF table
+//! (`N_CDF` = 4096 f32 entries — Rust builds it, both search it), the
+//! same u32→f32 uniform mapping, the same op encoding
+//! (0 find / 1 insert / 2 delete), and the same mix64 key derivation.
+//! `rust/tests/runtime_artifacts.rs` asserts the two agree bit-for-bit.
+//!
+//! For n > N_CDF the table is *head-exact + stratified tail*: the hot
+//! head ranks (where Zipfian contention lives) get exact per-rank CDF
+//! entries; the cold tail is split into equal-rank strata spread
+//! uniformly at sample time. Head hit-rates — the quantity the paper's
+//! z-sweeps measure — are preserved exactly.
+
+use crate::util::rng::{mix64, Xoshiro256};
+
+/// CDF table resolution — must equal `zipfian.N_CDF` in the L1 kernel.
+pub const N_CDF: usize = 4096;
+
+/// Exact per-rank head entries when n > N_CDF (the rest are strata).
+const HEAD: usize = 3584;
+
+const INV_2_32: f32 = 2.328_306_4e-10;
+
+/// Operation kinds, encoded as in `artifacts/manifest.txt`.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Op {
+    Find = 0,
+    Insert = 1,
+    Delete = 2,
+}
+
+impl Op {
+    #[inline]
+    pub fn from_code(code: i32) -> Op {
+        match code {
+            1 => Op::Insert,
+            2 => Op::Delete,
+            _ => Op::Find,
+        }
+    }
+}
+
+/// A quantized Zipfian sampler over `0..n` with exponent `theta`.
+pub struct ZipfCdf {
+    cdf: Vec<f32>,
+    n: usize,
+    /// Ranks covered exactly (n when n <= N_CDF).
+    head: usize,
+    /// Ranks per tail stratum (0 when no tail).
+    stride: usize,
+}
+
+impl ZipfCdf {
+    /// Build the table. P(rank i) ∝ 1/(i+1)^θ (YCSB-style [13]).
+    pub fn new(n: usize, theta: f64) -> Self {
+        assert!(n >= 1);
+        let (head, stride) = if n <= N_CDF {
+            (n, 0)
+        } else {
+            let tail = n - HEAD;
+            let strata = N_CDF - HEAD;
+            (HEAD, tail.div_ceil(strata))
+        };
+        // Exact head weights + per-stratum tail lumps, in f64.
+        let mut weights: Vec<f64> = Vec::with_capacity(N_CDF);
+        for i in 0..head {
+            weights.push(1.0 / ((i + 1) as f64).powf(theta));
+        }
+        if stride > 0 {
+            let mut rank = head;
+            while rank < n {
+                let hi = (rank + stride).min(n);
+                // Integral approximation of sum_{r=rank..hi} r^-θ — exact
+                // enough for the cold tail (each lump ≪ head mass).
+                let mass: f64 = if theta == 0.0 {
+                    (hi - rank) as f64
+                } else {
+                    (rank..hi).step_by((hi - rank).div_ceil(8).max(1)).map(|r| {
+                        let step = ((hi - rank).div_ceil(8)).max(1) as f64;
+                        step / ((r + 1) as f64).powf(theta)
+                    }).sum()
+                };
+                weights.push(mass);
+                rank = hi;
+            }
+        }
+        let total: f64 = weights.iter().sum();
+        let mut cdf = Vec::with_capacity(N_CDF);
+        let mut acc = 0.0f64;
+        for w in &weights {
+            acc += w / total;
+            cdf.push(acc as f32);
+        }
+        let used = cdf.len();
+        if used > 0 {
+            cdf[used - 1] = 1.0;
+        }
+        cdf.resize(N_CDF, 1.0);
+        Self {
+            cdf,
+            n,
+            head,
+            stride,
+        }
+    }
+
+    /// The f32 table (input to both samplers — Rust and the HLO artifact).
+    pub fn cdf(&self) -> &[f32] {
+        &self.cdf
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Table-slot search: identical semantics to the Pallas kernel
+    /// (`count of entries <= u`, clamped). Bit-exact with the HLO.
+    #[inline]
+    pub fn search(&self, bits: u32) -> u32 {
+        let u = bits as f32 * INV_2_32;
+        // Branch-free unrolled binary search over the fixed-size table —
+        // the same 12 steps the kernel lowers to.
+        let mut lo = 0usize;
+        let mut step = N_CDF / 2;
+        while step >= 1 {
+            let probe = lo + step - 1;
+            if self.cdf[probe] <= u {
+                lo += step;
+            }
+            step /= 2;
+        }
+        lo.min(N_CDF - 1) as u32
+    }
+
+    /// Map a table slot (+ extra randomness for tail strata) to a final
+    /// rank in `0..n`.
+    #[inline]
+    pub fn spread(&self, slot: u32, extra: u64) -> usize {
+        let slot = slot as usize;
+        if slot < self.head {
+            return slot.min(self.n - 1);
+        }
+        let stratum = slot - self.head;
+        let base = self.head + stratum * self.stride;
+        let width = self.stride.min(self.n.saturating_sub(base)).max(1);
+        (base + (extra as usize % width)).min(self.n - 1)
+    }
+
+    /// Draw one rank.
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let slot = self.search(rng.next_u32());
+        let extra = if self.stride > 0 { rng.next_u64() } else { 0 };
+        self.spread(slot, extra)
+    }
+}
+
+/// Full benchmark workload parameters (one §5 configuration point).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Number of items (atomics / keys) — paper's n.
+    pub n: usize,
+    /// Zipfian parameter — paper's z.
+    pub theta: f64,
+    /// Update percentage 0..=100 — paper's u.
+    pub update_pct: u32,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn u_frac(&self) -> f32 {
+        self.update_pct as f32 / 100.0
+    }
+}
+
+/// A pre-generated operation: kind, target rank, derived key.
+#[derive(Copy, Clone, Debug)]
+pub struct GenOp {
+    pub op: Op,
+    pub rank: u32,
+    pub key: u64,
+}
+
+/// Classify op-kind randomness exactly like the L2 model
+/// (`model.workload_model`): update iff `op_bits * 2^-32 < u`, updates
+/// split insert/delete on the low bit.
+#[inline]
+pub fn classify(op_bits: u32, u_frac: f32) -> Op {
+    let r = op_bits as f32 * INV_2_32;
+    if r < u_frac {
+        if op_bits & 1 == 0 {
+            Op::Insert
+        } else {
+            Op::Delete
+        }
+    } else {
+        Op::Find
+    }
+}
+
+/// Generate `count` operations with the pure-Rust sampler.
+pub fn generate_rust(spec: &WorkloadSpec, count: usize, thread_seed: u64) -> Vec<GenOp> {
+    let cdf = ZipfCdf::new(spec.n, spec.theta);
+    let mut rng = Xoshiro256::seeded(spec.seed ^ mix64(thread_seed.wrapping_add(1)));
+    let u = spec.u_frac();
+    (0..count)
+        .map(|_| {
+            let slot = cdf.search(rng.next_u32());
+            let op = classify(rng.next_u32(), u);
+            let extra = if spec.n > N_CDF { rng.next_u64() } else { 0 };
+            let rank = cdf.spread(slot, extra) as u32;
+            GenOp {
+                op,
+                rank,
+                key: mix64(rank as u64),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_cdf_monotone_complete() {
+        for (n, theta) in [(1, 0.5), (16, 0.0), (1000, 0.99), (4096, 0.75), (100_000, 0.9)] {
+            let z = ZipfCdf::new(n, theta);
+            let c = z.cdf();
+            assert_eq!(c.len(), N_CDF);
+            assert!(c.windows(2).all(|w| w[0] <= w[1] + 1e-7));
+            assert!((c[N_CDF - 1] - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn test_samples_in_range() {
+        for n in [1usize, 2, 100, 4096, 50_000] {
+            let z = ZipfCdf::new(n, 0.9);
+            let mut rng = Xoshiro256::seeded(3);
+            for _ in 0..5_000 {
+                assert!(z.sample(&mut rng) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn test_u_one_edge_clamped() {
+        let z = ZipfCdf::new(100, 0.5);
+        // bits that round to u == 1.0 in f32
+        let slot = z.search(u32::MAX);
+        assert_eq!(slot, (N_CDF - 1) as u32);
+        assert!(z.spread(slot, 0) < 100);
+    }
+
+    #[test]
+    fn test_uniform_theta_zero() {
+        let n = 64;
+        let z = ZipfCdf::new(n, 0.0);
+        let mut rng = Xoshiro256::seeded(5);
+        let mut counts = vec![0u32; n];
+        let samples = 1 << 16;
+        for _ in 0..samples {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        let expected = samples as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expected).abs() < 6.0 * expected.sqrt() + 10.0,
+                "bucket {i}: {c} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn test_zipf_head_dominates() {
+        let z = ZipfCdf::new(1000, 0.99);
+        let mut rng = Xoshiro256::seeded(7);
+        let mut head = 0usize;
+        let total = 1 << 15;
+        for _ in 0..total {
+            if z.sample(&mut rng) == 0 {
+                head += 1;
+            }
+        }
+        let share = head as f64 / total as f64;
+        assert!(share > 0.10, "head share {share}");
+    }
+
+    #[test]
+    fn test_large_n_head_exact_tail_covered() {
+        let n = 1_000_000;
+        let z = ZipfCdf::new(n, 0.75);
+        let mut rng = Xoshiro256::seeded(11);
+        let mut saw_tail = false;
+        for _ in 0..20_000 {
+            let s = z.sample(&mut rng);
+            assert!(s < n);
+            if s >= HEAD {
+                saw_tail = true;
+            }
+        }
+        assert!(saw_tail, "tail never sampled at theta=0.75, n=1M");
+    }
+
+    #[test]
+    fn test_classify_fractions() {
+        let mut rng = Xoshiro256::seeded(13);
+        for u_pct in [0u32, 5, 50, 100] {
+            let u = u_pct as f32 / 100.0;
+            let total = 20_000;
+            let mut upd = 0;
+            let (mut ins, mut del) = (0, 0);
+            for _ in 0..total {
+                match classify(rng.next_u32(), u) {
+                    Op::Find => {}
+                    Op::Insert => {
+                        upd += 1;
+                        ins += 1;
+                    }
+                    Op::Delete => {
+                        upd += 1;
+                        del += 1;
+                    }
+                }
+            }
+            let frac = upd as f64 / total as f64;
+            assert!((frac - u as f64).abs() < 0.02, "u={u} frac={frac}");
+            if u_pct >= 50 {
+                assert!((ins as f64 - del as f64).abs() / total as f64 <= 0.02);
+            }
+        }
+    }
+
+    #[test]
+    fn test_generate_rust_deterministic() {
+        let spec = WorkloadSpec {
+            n: 1000,
+            theta: 0.9,
+            update_pct: 30,
+            seed: 42,
+        };
+        let a = generate_rust(&spec, 500, 1);
+        let b = generate_rust(&spec, 500, 1);
+        let c = generate_rust(&spec, 500, 2);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.rank == y.rank && x.op == y.op));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.rank != y.rank));
+        for op in &a {
+            assert_eq!(op.key, mix64(op.rank as u64));
+        }
+    }
+}

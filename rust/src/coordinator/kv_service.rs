@@ -1,0 +1,210 @@
+//! A miniature KV service over CacheHash — the end-to-end driver.
+//!
+//! Shape: a leader thread generates request batches (via the AOT
+//! workload artifact when available), pushes them through a bounded
+//! queue to worker threads that execute them against a shared
+//! `CacheHash<CachedMemEff>` table, and collects per-batch latencies.
+//! The latency summary is computed by the `stats.hlo.txt` artifact
+//! (the L2 stats model) when a runtime is supplied.
+//!
+//! This is deliberately the whole stack in one loop: L1/L2 artifacts →
+//! PJRT runtime → big atomics → CacheHash → throughput/latency report
+//! (recorded in EXPERIMENTS.md §End-to-end).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::atomics::CachedMemEff;
+use crate::bench::workload::{generate_rust, GenOp, Op, WorkloadSpec};
+use crate::hash::{CacheHash, ConcurrentMap, LinkVal};
+use crate::runtime::{LatencySummary, Runtime};
+
+#[derive(Clone, Debug)]
+pub struct KvConfig {
+    /// Key-space / table size.
+    pub n: usize,
+    /// Worker threads serving requests.
+    pub workers: usize,
+    /// Requests per batch (one queue message).
+    pub batch: usize,
+    /// Total run duration.
+    pub duration: Duration,
+    pub update_pct: u32,
+    pub theta: f64,
+    pub seed: u64,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self {
+            n: 1 << 16,
+            workers: 4,
+            batch: 512,
+            duration: Duration::from_secs(2),
+            update_pct: 30,
+            theta: 0.5,
+            seed: 0x4B56, // "KV"
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct KvReport {
+    pub total_requests: u64,
+    pub elapsed: Duration,
+    pub finds: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub latency: Option<LatencySummary>,
+    /// Raw per-request latency samples (ns), for offline analysis.
+    pub sample_count: usize,
+}
+
+impl KvReport {
+    pub fn mops(&self) -> f64 {
+        self.total_requests as f64 / self.elapsed.as_secs_f64() / 1e6
+    }
+}
+
+/// Run the service; `runtime` enables artifact-backed generation and the
+/// HLO stats summary.
+pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
+    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(cfg.n);
+    // Warm the table to ~half occupancy.
+    for rank in (0..cfg.n).step_by(2) {
+        table.insert(crate::util::rng::mix64(rank as u64), rank as u64);
+    }
+
+    let spec = WorkloadSpec {
+        n: cfg.n,
+        theta: cfg.theta,
+        update_pct: cfg.update_pct,
+        seed: cfg.seed,
+    };
+
+    // Pre-generate the request stream (leader-side, pre-clock), via the
+    // AOT artifact when available.
+    let engine = match runtime {
+        Some(rt) => Some(crate::runtime::workload_gen::WorkloadEngine::new(rt)?),
+        None => None,
+    };
+    let stream_len = (cfg.batch * 256).max(1 << 15);
+    let stream: Vec<GenOp> = match &engine {
+        Some(e) => e.generate(&spec, stream_len, 0)?,
+        None => generate_rust(&spec, stream_len, 0),
+    };
+
+    let finds = AtomicU64::new(0);
+    let inserts = AtomicU64::new(0);
+    let deletes = AtomicU64::new(0);
+    let served = AtomicU64::new(0);
+    let latencies: Mutex<Vec<f32>> = Mutex::new(Vec::new());
+
+    let (tx, rx) = sync_channel::<(Instant, Vec<GenOp>)>(cfg.workers * 4);
+    let rx = Mutex::new(rx);
+    let elapsed = std::thread::scope(|s| {
+
+        for _ in 0..cfg.workers {
+            let rx: &Mutex<Receiver<(Instant, Vec<GenOp>)>> = &rx;
+            let table = &table;
+            let finds = &finds;
+            let inserts = &inserts;
+            let deletes = &deletes;
+            let served = &served;
+            let latencies = &latencies;
+            s.spawn(move || {
+                let mut local_lat: Vec<f32> = Vec::new();
+                loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    let Ok((enqueued, batch)) = msg else { break };
+                    for req in &batch {
+                        match req.op {
+                            Op::Find => {
+                                std::hint::black_box(table.find(req.key));
+                                finds.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Op::Insert => {
+                                table.insert(req.key, req.rank as u64);
+                                inserts.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Op::Delete => {
+                                table.remove(req.key);
+                                deletes.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    // Per-request latency ≈ (queueing + service) / batch.
+                    let total_ns = enqueued.elapsed().as_nanos() as f32;
+                    local_lat.push(total_ns / batch.len() as f32);
+                }
+                latencies.lock().unwrap().extend(local_lat);
+            });
+        }
+
+        // Leader: feed batches for the configured duration.
+        let t0 = Instant::now();
+        let mut cursor = 0usize;
+        while t0.elapsed() < cfg.duration {
+            let batch: Vec<GenOp> = stream[cursor..]
+                .iter()
+                .chain(stream.iter())
+                .take(cfg.batch)
+                .copied()
+                .collect();
+            cursor = (cursor + cfg.batch) % stream.len();
+            if tx.send((Instant::now(), batch)).is_err() {
+                break;
+            }
+        }
+        drop(tx); // close the queue; workers drain and exit
+        t0.elapsed()
+    });
+
+    let lat_samples = latencies.into_inner().unwrap();
+    let latency = match runtime {
+        Some(rt) if !lat_samples.is_empty() => Some(rt.stats_engine()?.summarize(&lat_samples)?),
+        _ => None,
+    };
+
+    Ok(KvReport {
+        total_requests: served.load(Ordering::SeqCst),
+        elapsed,
+        finds: finds.load(Ordering::SeqCst),
+        inserts: inserts.load(Ordering::SeqCst),
+        deletes: deletes.load(Ordering::SeqCst),
+        latency,
+        sample_count: lat_samples.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_kv_service_smoke_rust_gen() {
+        let cfg = KvConfig {
+            n: 1024,
+            workers: 2,
+            batch: 64,
+            duration: Duration::from_millis(100),
+            update_pct: 30,
+            theta: 0.5,
+            seed: 7,
+        };
+        let rep = run(&cfg, None).unwrap();
+        assert!(rep.total_requests > 100, "{rep:?}");
+        assert_eq!(
+            rep.total_requests,
+            rep.finds + rep.inserts + rep.deletes
+        );
+        // ~30% updates
+        let upd = (rep.inserts + rep.deletes) as f64 / rep.total_requests as f64;
+        assert!((upd - 0.30).abs() < 0.05, "update frac {upd}");
+    }
+}

@@ -1,0 +1,147 @@
+//! The benchmark coordinator (leader) and the KV service.
+//!
+//! The coordinator owns process lifecycle: it loads the PJRT runtime
+//! once, builds the workload engine from the AOT artifacts, schedules
+//! figure jobs, and writes the report index.  The paper's contribution
+//! is the memory-layer algorithms, so per DESIGN.md L3's coordination
+//! role here is a driver: CLI + job orchestration + the
+//! [`kv_service`] request loop that exercises the full stack end to end.
+
+pub mod kv_service;
+
+use anyhow::Result;
+
+use crate::bench::driver::OpSource;
+use crate::bench::figures::{self, FigureCfg};
+use crate::bench::workload::WorkloadSpec;
+use crate::runtime::workload_gen::WorkloadEngine;
+use crate::runtime::{default_artifact_dir, Runtime};
+
+/// Lazily-initialized runtime + engine (artifacts are optional: every
+/// benchmark falls back to the pure-Rust generator when absent).
+pub struct Coordinator {
+    pub runtime: Option<Runtime>,
+    pub engine: Option<WorkloadEngine>,
+}
+
+impl Coordinator {
+    /// `use_artifact`: require and load the AOT artifacts.
+    pub fn new(use_artifact: bool) -> Result<Self> {
+        if !use_artifact {
+            return Ok(Self {
+                runtime: None,
+                engine: None,
+            });
+        }
+        let rt = Runtime::new(default_artifact_dir())?;
+        let engine = WorkloadEngine::new(&rt)?;
+        eprintln!(
+            "coordinator: PJRT platform={} artifact batch={}",
+            rt.platform(),
+            engine.batch()
+        );
+        Ok(Self {
+            runtime: Some(rt),
+            engine: Some(engine),
+        })
+    }
+
+    pub fn op_source(&self) -> OpSource<'_> {
+        match &self.engine {
+            Some(e) => OpSource::Artifact(e),
+            None => OpSource::Rust,
+        }
+    }
+
+    /// Run one named figure job; returns saved CSV paths.
+    pub fn run_figure(&self, name: &str, cfg: &FigureCfg, panel: &str, oversub: bool) -> Result<Vec<String>> {
+        let source = self.op_source();
+        let mut saved = Vec::new();
+        let mut save = |r: figures::Report| -> Result<()> {
+            saved.push(r.save(&cfg.report_dir)?);
+            Ok(())
+        };
+        match name {
+            "fig1" => save(figures::fig1(cfg, &source))?,
+            "fig2" => match panel {
+                "u" => save(figures::fig2_u(cfg, &source, oversub))?,
+                "z" => save(figures::fig2_z(cfg, &source, oversub))?,
+                "n" => save(figures::fig2_n(cfg, &source, oversub))?,
+                "w" => save(figures::fig2_w(cfg, &source))?,
+                "p" => save(figures::fig2_p(cfg, &source))?,
+                "" | "all" => {
+                    for ov in [false, true] {
+                        save(figures::fig2_u(cfg, &source, ov))?;
+                        save(figures::fig2_z(cfg, &source, ov))?;
+                        save(figures::fig2_n(cfg, &source, ov))?;
+                    }
+                    save(figures::fig2_w(cfg, &source))?;
+                    save(figures::fig2_p(cfg, &source))?;
+                }
+                other => anyhow::bail!("fig2 panel {other}: use u|z|n|w|p"),
+            },
+            "fig3" => match panel {
+                "" | "all" => {
+                    for pn in ["u", "z", "n"] {
+                        for ov in [false, true] {
+                            save(figures::fig3(cfg, &source, pn, ov))?;
+                        }
+                    }
+                }
+                pn => save(figures::fig3(cfg, &source, pn, oversub))?,
+            },
+            "fig4" => {
+                let (a, b) = figures::fig4(cfg, &source);
+                save(a)?;
+                save(b)?;
+            }
+            "fig5" => {
+                for r in figures::fig5(cfg, &source) {
+                    save(r)?;
+                }
+            }
+            "table1" => save(figures::table1())?,
+            "memory" => save(crate::bench::memory::memory_census(cfg))?,
+            "ablate" => save(crate::bench::ablation::run_ablations(cfg, &source))?,
+            "all" => {
+                saved.extend(figures::run_all(cfg, &source));
+                saved.push(
+                    crate::bench::ablation::run_ablations(cfg, &source).save(&cfg.report_dir)?,
+                );
+            }
+            other => anyhow::bail!("unknown figure {other}"),
+        }
+        Ok(saved)
+    }
+
+    /// Cross-validate the AOT workload artifact against the pure-Rust
+    /// generator, bit for bit. Returns the number of ops compared.
+    pub fn validate_workload(&self, count: usize) -> Result<usize> {
+        let engine = self
+            .engine
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("validation requires --artifact (run `make artifacts`)"))?;
+        let specs = [
+            WorkloadSpec { n: 100, theta: 0.0, update_pct: 50, seed: 1 },
+            WorkloadSpec { n: 4096, theta: 0.99, update_pct: 10, seed: 2 },
+            WorkloadSpec { n: 1 << 20, theta: 0.75, update_pct: 100, seed: 3 },
+        ];
+        let mut compared = 0;
+        for spec in &specs {
+            for t in 0..2u64 {
+                let ours = crate::bench::workload::generate_rust(spec, count, t);
+                let theirs = engine.generate(spec, count, t)?;
+                anyhow::ensure!(ours.len() == theirs.len());
+                for (i, (a, b)) in ours.iter().zip(&theirs).enumerate() {
+                    anyhow::ensure!(
+                        a.op == b.op && a.rank == b.rank && a.key == b.key,
+                        "mismatch spec n={} z={} t={t} op#{i}: rust=({:?},{},{:#x}) hlo=({:?},{},{:#x})",
+                        spec.n, spec.theta, a.op, a.rank, a.key, b.op, b.rank, b.key
+                    );
+                }
+                compared += ours.len();
+            }
+        }
+        Ok(compared)
+    }
+}

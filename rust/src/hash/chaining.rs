@@ -1,0 +1,217 @@
+//! Chaining — the paper's no-inlining baseline (§4 first paragraph,
+//! "Chaining" series in Fig 3): identical algorithm to CacheHash but the
+//! bucket is a plain atomic *pointer* to the first link, so every
+//! non-empty find pays at least one extra dependent cache miss.
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use super::{bucket_of, table_capacity, ConcurrentMap};
+use crate::smr::epoch;
+
+struct Node {
+    key: u64,
+    value: u64,
+    next: *mut Node,
+}
+
+pub struct Chaining {
+    buckets: Box<[CachePadded<AtomicPtr<Node>>]>,
+}
+
+// SAFETY: mutations via CAS on bucket heads; nodes immutable + epoch SMR.
+unsafe impl Send for Chaining {}
+unsafe impl Sync for Chaining {}
+
+impl Chaining {
+    pub fn new(n: usize) -> Self {
+        let cap = table_capacity(n);
+        Self {
+            buckets: (0..cap)
+                .map(|_| CachePadded::new(AtomicPtr::new(std::ptr::null_mut())))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, key: u64) -> &AtomicPtr<Node> {
+        &self.buckets[bucket_of(key, self.buckets.len())]
+    }
+
+    #[inline]
+    fn chain_find(mut p: *mut Node, key: u64) -> Option<u64> {
+        while !p.is_null() {
+            // SAFETY: epoch-pinned by caller.
+            let n = unsafe { &*p };
+            if n.key == key {
+                return Some(n.value);
+            }
+            p = n.next;
+        }
+        None
+    }
+}
+
+impl ConcurrentMap for Chaining {
+    fn find(&self, key: u64) -> Option<u64> {
+        let _g = epoch::pin();
+        Self::chain_find(self.bucket(key).load(Ordering::SeqCst), key)
+    }
+
+    fn insert(&self, key: u64, value: u64) -> bool {
+        loop {
+            let _g = epoch::pin();
+            let bucket = self.bucket(key);
+            let head = bucket.load(Ordering::SeqCst);
+            if Self::chain_find(head, key).is_some() {
+                return false;
+            }
+            let node = Box::into_raw(Box::new(Node {
+                key,
+                value,
+                next: head,
+            }));
+            if bucket
+                .compare_exchange(head, node, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                return true;
+            }
+            // SAFETY: never published.
+            drop(unsafe { Box::from_raw(node) });
+        }
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        loop {
+            let _g = epoch::pin();
+            let bucket = self.bucket(key);
+            let head = bucket.load(Ordering::SeqCst);
+            // Find the victim, collecting the prefix to path-copy.
+            let mut prefix: Vec<(u64, u64)> = Vec::new();
+            let mut p = head;
+            let mut suffix: *mut Node = std::ptr::null_mut();
+            let mut found = false;
+            while !p.is_null() {
+                // SAFETY: epoch-pinned.
+                let n = unsafe { &*p };
+                if n.key == key {
+                    found = true;
+                    suffix = n.next;
+                    break;
+                }
+                prefix.push((n.key, n.value));
+                p = n.next;
+            }
+            if !found {
+                return false;
+            }
+            let victim = p;
+            let mut new_head = suffix;
+            for &(k, v) in prefix.iter().rev() {
+                new_head = Box::into_raw(Box::new(Node {
+                    key: k,
+                    value: v,
+                    next: new_head,
+                }));
+            }
+            if bucket
+                .compare_exchange(head, new_head, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                // SAFETY: victim + original prefix unlinked by the CAS.
+                unsafe {
+                    epoch::retire_box(victim);
+                    let mut q = head;
+                    while q != victim {
+                        let nx = (*q).next;
+                        epoch::retire_box(q);
+                        q = nx;
+                    }
+                }
+                return true;
+            }
+            let mut q = new_head;
+            while q != suffix {
+                // SAFETY: never published.
+                let b = unsafe { Box::from_raw(q) };
+                q = b.next;
+            }
+        }
+    }
+
+    fn map_name(&self) -> &'static str {
+        "Chaining(no-inline)"
+    }
+}
+
+impl Drop for Chaining {
+    fn drop(&mut self) {
+        for b in self.buckets.iter() {
+            let mut p = b.load(Ordering::Relaxed);
+            while !p.is_null() {
+                // SAFETY: exclusive in Drop.
+                let n = unsafe { Box::from_raw(p) };
+                p = n.next;
+            }
+        }
+        epoch::flush_thread_bag();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_basic() {
+        let t = Chaining::new(64);
+        assert!(t.insert(5, 50));
+        assert!(!t.insert(5, 51));
+        assert_eq!(t.find(5), Some(50));
+        assert!(t.remove(5));
+        assert_eq!(t.find(5), None);
+    }
+
+    #[test]
+    fn test_collisions_and_interior_delete() {
+        let t = Chaining::new(2);
+        for k in 0..50u64 {
+            assert!(t.insert(k, k + 100));
+        }
+        for k in (0..25u64).map(|i| 48 - 2 * i) {
+            assert!(t.remove(k));
+        }
+        for k in 0..50u64 {
+            let want = if k % 2 == 0 { None } else { Some(k + 100) };
+            assert_eq!(t.find(k), want);
+        }
+    }
+
+    #[test]
+    fn test_concurrent_mixed() {
+        let t = Arc::new(Chaining::new(256));
+        let handles: Vec<_> = (0..4)
+            .map(|tix| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    let base = tix as u64 * 1_000_000;
+                    for i in 0..2_000u64 {
+                        assert!(t.insert(base + i, i));
+                        if i % 2 == 0 {
+                            assert!(t.remove(base + i));
+                        }
+                    }
+                    for i in 0..2_000u64 {
+                        let want = if i % 2 == 0 { None } else { Some(i) };
+                        assert_eq!(t.find(base + i), want);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

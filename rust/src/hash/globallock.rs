@@ -1,0 +1,57 @@
+//! `GlobalLockMap` — single-mutex map: the §5.3 comparison's floor
+//! (what a non-concurrent library wrapped in a lock looks like).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::ConcurrentMap;
+
+pub struct GlobalLockMap {
+    inner: Mutex<HashMap<u64, u64>>,
+}
+
+impl GlobalLockMap {
+    pub fn new(n: usize) -> Self {
+        Self {
+            inner: Mutex::new(HashMap::with_capacity(n * 2)),
+        }
+    }
+}
+
+impl ConcurrentMap for GlobalLockMap {
+    fn find(&self, key: u64) -> Option<u64> {
+        self.inner.lock().unwrap().get(&key).copied()
+    }
+
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let mut m = self.inner.lock().unwrap();
+        if m.contains_key(&key) {
+            return false;
+        }
+        m.insert(key, value);
+        true
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        self.inner.lock().unwrap().remove(&key).is_some()
+    }
+
+    fn map_name(&self) -> &'static str {
+        "GlobalLock(floor)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_basic() {
+        let m = GlobalLockMap::new(16);
+        assert!(m.insert(9, 90));
+        assert!(!m.insert(9, 91));
+        assert_eq!(m.find(9), Some(90));
+        assert!(m.remove(9));
+        assert!(!m.remove(9));
+    }
+}

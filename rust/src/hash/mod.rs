@@ -1,0 +1,76 @@
+//! Concurrent hash tables (paper §4/§5.2/§5.3).
+//!
+//! * [`CacheHash`] — the paper's table: separate chaining with the first
+//!   link **inlined into the bucket as a big atomic**, generic over the
+//!   big-atomic strategy (the §5.2 sweep).
+//! * [`Chaining`] — identical algorithm without inlining (bucket is a
+//!   pointer): the paper's baseline.
+//! * [`ShardedLockMap`], [`GlobalLockMap`] — comparator stand-ins for the
+//!   §5.3 open-source tables (DESIGN.md §Substitutions).
+//!
+//! All expose [`ConcurrentMap`] over 8-byte keys/values (what §5.2/§5.3
+//! measure).
+
+pub mod cachehash;
+pub mod chaining;
+pub mod globallock;
+pub mod shardlock;
+
+pub use cachehash::{CacheHash, LinkVal};
+pub use chaining::Chaining;
+pub use globallock::GlobalLockMap;
+pub use shardlock::ShardedLockMap;
+
+use crate::util::rng::mix64;
+
+/// The uniform map interface the benchmarks drive.
+///
+/// `insert` is insert-if-absent (returns false when the key is present);
+/// `remove` returns whether the key was present — the semantics of the
+/// paper's benchmark loop ("randomly performs a find, insert, or delete").
+pub trait ConcurrentMap: Send + Sync {
+    fn find(&self, key: u64) -> Option<u64>;
+    fn insert(&self, key: u64, value: u64) -> bool;
+    fn remove(&self, key: u64) -> bool;
+    /// Implementation label for report rows.
+    fn map_name(&self) -> &'static str;
+}
+
+/// Bucket index for `key` in a power-of-two table of size `n`.
+#[inline]
+pub fn bucket_of(key: u64, n: usize) -> usize {
+    debug_assert!(n.is_power_of_two());
+    (mix64(key) as usize) & (n - 1)
+}
+
+/// Round a requested capacity up to a power of two (load factor one,
+/// "size rounded to the next power of two" — §5.2).
+pub fn table_capacity(n: usize) -> usize {
+    n.next_power_of_two().max(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_bucket_of_in_range_and_spread() {
+        let n = 1024;
+        let mut counts = vec![0usize; n];
+        for k in 0..(n as u64 * 8) {
+            let b = bucket_of(k, n);
+            assert!(b < n);
+            counts[b] += 1;
+        }
+        // mix64 spreads sequential keys: no bucket more than 4x the mean.
+        assert!(counts.iter().all(|&c| c <= 32));
+    }
+
+    #[test]
+    fn test_table_capacity() {
+        assert_eq!(table_capacity(1), 2);
+        assert_eq!(table_capacity(1000), 1024);
+        assert_eq!(table_capacity(1024), 1024);
+        assert_eq!(table_capacity(1025), 2048);
+    }
+}

@@ -1,0 +1,94 @@
+//! `ShardedLockMap` — stand-in for the §5.3 open-source comparators
+//! (TBB / Folly / Boost / libcuckoo families): the canonical generic
+//! design of a growable concurrent map, per-shard reader-writer locks
+//! over a conventional hash map.  See DESIGN.md §Substitutions.
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use super::ConcurrentMap;
+use crate::util::rng::mix64;
+
+pub struct ShardedLockMap {
+    shards: Vec<RwLock<HashMap<u64, u64>>>,
+    mask: usize,
+}
+
+impl ShardedLockMap {
+    /// `n` expected entries spread over `shards` (rounded to a power of
+    /// two; the comparators typically use ~4x the thread count).
+    pub fn new(n: usize, shards: usize) -> Self {
+        let count = shards.next_power_of_two().max(2);
+        let per = (n / count).max(8);
+        Self {
+            shards: (0..count)
+                .map(|_| RwLock::new(HashMap::with_capacity(per * 2)))
+                .collect(),
+            mask: count - 1,
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, u64>> {
+        &self.shards[(mix64(key) as usize >> 32) & self.mask]
+    }
+}
+
+impl ConcurrentMap for ShardedLockMap {
+    fn find(&self, key: u64) -> Option<u64> {
+        self.shard(key).read().unwrap().get(&key).copied()
+    }
+
+    fn insert(&self, key: u64, value: u64) -> bool {
+        let mut s = self.shard(key).write().unwrap();
+        if s.contains_key(&key) {
+            return false;
+        }
+        s.insert(key, value);
+        true
+    }
+
+    fn remove(&self, key: u64) -> bool {
+        self.shard(key).write().unwrap().remove(&key).is_some()
+    }
+
+    fn map_name(&self) -> &'static str {
+        "ShardedLock(os-standin)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn test_basic() {
+        let m = ShardedLockMap::new(1024, 16);
+        assert!(m.insert(1, 2));
+        assert!(!m.insert(1, 3));
+        assert_eq!(m.find(1), Some(2));
+        assert!(m.remove(1));
+        assert_eq!(m.find(1), None);
+    }
+
+    #[test]
+    fn test_concurrent() {
+        let m = Arc::new(ShardedLockMap::new(4096, 8));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    let base = t as u64 * 1_000_000;
+                    for i in 0..2_000u64 {
+                        assert!(m.insert(base + i, i));
+                        assert_eq!(m.find(base + i), Some(i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # big_atomics — a reproduction of *Big Atomics* (Anderson, Blelloch, Jayanti; 2025)
+//!
+//! Software multi-word ("big") atomics supporting `load`, `store`, and
+//! `cas` over `k` adjacent 64-bit words, the full design-space the paper
+//! evaluates, and the CacheHash concurrent hash table built on them.
+//!
+//! ## Implementations (paper Table 1)
+//!
+//! | Type | Progress | Operations | Paper § |
+//! |---|---|---|---|
+//! | [`atomics::SeqLock`] | blocks on race | load+store+cas | §2 |
+//! | [`atomics::SimpLock`] | always blocks | load+store+cas | §2 |
+//! | [`atomics::LockPool`] | always blocks (shared locks — the GNU libatomic / `std::atomic` analog) | load+store+cas | §5.1 |
+//! | [`atomics::Indirect`] | lock-free | load+store+cas | §2 |
+//! | [`atomics::CachedWaitFree`] | wait-free | load+cas (store = cas loop) | §3.1, Alg 1 |
+//! | [`atomics::CachedMemEff`] | lock-free | load+store+cas | §3.2, Alg 2 |
+//! | [`atomics::CachedWritable`] | wait-free | load+store+cas | §3.3, Alg 3 |
+//! | [`atomics::HtmSim`] | blocks on fallback | load+store+cas | §5.4 (simulated RTM — see DESIGN.md §Substitutions) |
+//!
+//! ## Quick start
+//!
+//! ```
+//! use big_atomics::atomics::{BigAtomic, CachedMemEff, Words};
+//!
+//! // A 4-word (32-byte) lock-free atomic value.
+//! let a: CachedMemEff<Words<4>> = CachedMemEff::new(Words([1, 2, 3, 4]));
+//! let v = a.load();
+//! assert!(a.cas(v, Words([5, 6, 7, 8])));
+//! assert_eq!(a.load(), Words([5, 6, 7, 8]));
+//! ```
+//!
+//! ## Layout of this crate (three-layer architecture)
+//!
+//! * [`atomics`], [`smr`], [`hash`] — the paper's systems (L3).
+//! * [`bench`] — workload generators + the harness regenerating every
+//!   figure/table of the paper's §5.
+//! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
+//!   workload model (`artifacts/*.hlo.txt`); build once via `make artifacts`.
+//! * [`coordinator`] — benchmark leader + a mini KV service exercising the
+//!   whole stack end to end.
+
+pub mod apps;
+pub mod atomics;
+pub mod bench;
+pub mod coordinator;
+pub mod hash;
+pub mod runtime;
+pub mod smr;
+pub mod util;
+
+/// Maximum number of registered threads (hazard slots, memeff pools, epochs).
+pub const MAX_THREADS: usize = 256;

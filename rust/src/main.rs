@@ -1,0 +1,166 @@
+//! `repro` — the Big Atomics reproduction CLI (leader entrypoint).
+//!
+//! ```text
+//! repro fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all   regenerate paper exhibits + ablations
+//!       [--panel u|z|n|w|p] [--oversub] [--secs S] [--n N]
+//!       [--artifact] [--reports DIR]
+//! repro kv [--workers W] [--secs S] [--n N] [--u PCT] [--z Z] [--artifact]
+//! repro validate [--count C]        cross-check AOT artifact vs Rust generator
+//! repro smoke                       PJRT + artifact load check
+//! ```
+//!
+//! (Hand-rolled argument parsing: clap is not in the offline crate set —
+//! DESIGN.md §Substitutions.)
+
+use anyhow::{bail, Result};
+use big_atomics::bench::figures::FigureCfg;
+use big_atomics::coordinator::{kv_service, Coordinator};
+use big_atomics::runtime::{default_artifact_dir, Runtime};
+
+#[derive(Debug)]
+struct Args {
+    command: String,
+    panel: String,
+    oversub: bool,
+    secs: f64,
+    n: usize,
+    artifact: bool,
+    reports: String,
+    workers: usize,
+    update_pct: u32,
+    theta: f64,
+    count: usize,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        command: String::new(),
+        panel: String::new(),
+        oversub: false,
+        secs: 0.3,
+        n: 1 << 16,
+        artifact: false,
+        reports: "reports".into(),
+        workers: 4,
+        update_pct: 30,
+        theta: 0.5,
+        count: 1 << 14,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut next = |flag: &str| -> Result<String> {
+            it.next()
+                .ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+        };
+        match a.as_str() {
+            "--panel" => args.panel = next("--panel")?,
+            "--oversub" => args.oversub = true,
+            "--secs" => args.secs = next("--secs")?.parse()?,
+            "--n" => args.n = next("--n")?.parse()?,
+            "--artifact" => args.artifact = true,
+            "--reports" => args.reports = next("--reports")?,
+            "--workers" => args.workers = next("--workers")?.parse()?,
+            "--u" => args.update_pct = next("--u")?.parse()?,
+            "--z" => args.theta = next("--z")?.parse()?,
+            "--count" => args.count = next("--count")?.parse()?,
+            "--help" | "-h" => {
+                args.command = "help".into();
+                return Ok(args);
+            }
+            cmd if !cmd.starts_with('-') && args.command.is_empty() => {
+                args.command = cmd.to_string();
+            }
+            other => bail!("unknown argument {other} (try --help)"),
+        }
+    }
+    if args.command.is_empty() {
+        args.command = "help".into();
+    }
+    Ok(args)
+}
+
+const HELP: &str = "\
+repro — Big Atomics (Anderson, Blelloch, Jayanti 2025) reproduction
+
+USAGE:
+  repro <fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all> [options]
+  repro kv [--workers W] [--secs S] [--n N] [--u PCT] [--z Z] [--artifact]
+  repro validate [--count C]
+  repro smoke
+
+OPTIONS:
+  --panel u|z|n|w|p   figure panel (fig2/fig3; default: all panels)
+  --oversub           run the 4x-oversubscribed variant of the panel
+  --secs S            seconds per measured point      [0.3]
+  --n N               elements / key-space size       [65536]
+  --artifact          generate op streams via the AOT HLO artifact
+  --reports DIR       CSV output directory            [reports]
+";
+
+fn main() -> Result<()> {
+    let args = parse_args()?;
+    match args.command.as_str() {
+        "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "smoke" => {
+            let rt = Runtime::new(default_artifact_dir())?;
+            println!("PJRT platform: {}", rt.platform());
+            let engine = big_atomics::runtime::workload_gen::WorkloadEngine::new(&rt)?;
+            println!("workload artifact loaded: batch={}", engine.batch());
+            rt.stats_engine()?;
+            println!("stats artifact loaded");
+            println!("smoke OK");
+            Ok(())
+        }
+        "validate" => {
+            let coord = Coordinator::new(true)?;
+            let compared = coord.validate_workload(args.count)?;
+            println!("workload cross-validation OK: {compared} ops bit-exact (HLO == Rust)");
+            Ok(())
+        }
+        "kv" => {
+            let rt = if args.artifact {
+                Some(Runtime::new(default_artifact_dir())?)
+            } else {
+                None
+            };
+            let cfg = kv_service::KvConfig {
+                n: args.n,
+                workers: args.workers,
+                batch: 512,
+                duration: std::time::Duration::from_secs_f64(args.secs.max(1.0)),
+                update_pct: args.update_pct,
+                theta: args.theta,
+                seed: 0x4B56,
+            };
+            let rep = kv_service::run(&cfg, rt.as_ref())?;
+            println!(
+                "kv: {} requests in {:.2}s = {:.3} Mop/s (find={} insert={} delete={})",
+                rep.total_requests,
+                rep.elapsed.as_secs_f64(),
+                rep.mops(),
+                rep.finds,
+                rep.inserts,
+                rep.deletes
+            );
+            if let Some(lat) = rep.latency {
+                println!("kv latency ({} batch samples): {}", rep.sample_count, lat);
+            }
+            Ok(())
+        }
+        fig => {
+            let coord = Coordinator::new(args.artifact)?;
+            let cfg = FigureCfg {
+                secs_per_point: args.secs,
+                n: args.n,
+                report_dir: args.reports.clone(),
+                use_artifact: args.artifact,
+            };
+            let saved = coord.run_figure(fig, &cfg, &args.panel, args.oversub)?;
+            eprintln!("\nsaved: {}", saved.join(" "));
+            Ok(())
+        }
+    }
+}

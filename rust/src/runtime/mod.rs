@@ -1,0 +1,171 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` **once** (build time) to
+//! lower the L2 workload/stats models — which call the L1 Pallas kernels
+//! — to HLO text.  This module loads that text, compiles it on the PJRT
+//! CPU client, and executes it from Rust.  Python never runs on any
+//! benchmark or request path.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod workload_gen;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed `artifacts/manifest.txt` — the shape contract with aot.py.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub n_cdf: usize,
+    raw: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let mut raw = HashMap::new();
+        for line in text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                raw.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get_usize = |k: &str| -> Result<usize> {
+            raw.get(k)
+                .ok_or_else(|| anyhow!("manifest missing key {k}"))?
+                .split_whitespace()
+                .next()
+                .unwrap_or_default()
+                .parse()
+                .with_context(|| format!("manifest key {k}"))
+        };
+        Ok(Self {
+            batch: get_usize("batch")?,
+            n_cdf: get_usize("n_cdf")?,
+            raw,
+        })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.raw.get(key).map(|s| s.as_str())
+    }
+}
+
+/// A compiled HLO artifact on the PJRT CPU client.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let results = self.exe.execute::<xla::Literal>(args)?;
+        Ok(results[0][0].to_literal_sync()?)
+    }
+}
+
+/// The process-wide PJRT client plus the compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+/// Default artifact directory: `$REPRO_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("REPRO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one `<name>.hlo.txt` artifact.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+
+    /// The stats model: f32[batch] latencies → [mean, p50, p90, p99, max].
+    pub fn stats_engine(&self) -> Result<StatsEngine> {
+        Ok(StatsEngine {
+            exe: self.load("stats")?,
+            batch: self.manifest.batch,
+        })
+    }
+}
+
+/// Latency summarizer backed by `stats.hlo.txt` (L2 `stats_model`).
+pub struct StatsEngine {
+    exe: Executable,
+    batch: usize,
+}
+
+impl StatsEngine {
+    /// Summarize latencies (ns). Input is padded/truncated to the
+    /// artifact's fixed batch by cycling samples (benchmarks collect
+    /// ≥ batch samples anyway, so padding rarely triggers).
+    pub fn summarize(&self, latencies_ns: &[f32]) -> Result<LatencySummary> {
+        if latencies_ns.is_empty() {
+            return Err(anyhow!("no latency samples"));
+        }
+        let mut buf: Vec<f32> = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            buf.push(latencies_ns[i % latencies_ns.len()]);
+        }
+        let lit = xla::Literal::vec1(&buf);
+        let out = self.exe.execute(&[lit])?.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        Ok(LatencySummary {
+            mean: v[0],
+            p50: v[1],
+            p90: v[2],
+            p99: v[3],
+            max: v[4],
+        })
+    }
+}
+
+#[derive(Copy, Clone, Debug)]
+pub struct LatencySummary {
+    pub mean: f32,
+    pub p50: f32,
+    pub p90: f32,
+    pub p99: f32,
+    pub max: f32,
+}
+
+impl std::fmt::Display for LatencySummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean={:.0}ns p50={:.0}ns p90={:.0}ns p99={:.0}ns max={:.0}ns",
+            self.mean, self.p50, self.p90, self.p99, self.max
+        )
+    }
+}

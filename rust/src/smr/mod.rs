@@ -1,0 +1,16 @@
+//! Safe memory reclamation (SMR).
+//!
+//! The paper's indirect big-atomic nodes are heap values read through
+//! pointers that concurrent updaters unlink; reclamation must wait until
+//! no reader can still hold the pointer (§2).  Two schemes, matching the
+//! paper's usage:
+//!
+//! * [`hazard`] — hazard pointers [Michael '04], used by `Indirect`,
+//!   `CachedWaitFree` (Alg 1), `CachedWritable` (Alg 3), and for the
+//!   announcement array of Alg 2's custom slab recycler.
+//! * [`epoch`] — epoch-based reclamation, used by the hash tables'
+//!   chain links (§4: "We use epoch-based memory management to protect
+//!   the links that are being read").
+
+pub mod epoch;
+pub mod hazard;

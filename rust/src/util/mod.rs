@@ -1,0 +1,33 @@
+//! Shared utilities: RNG, thread registry, timing, and a mini
+//! property-testing harness (stand-in for proptest, which is not in the
+//! offline crate set — see DESIGN.md §Substitutions).
+
+pub mod props;
+pub mod registry;
+pub mod rng;
+
+use std::time::{Duration, Instant};
+
+/// Run `f` repeatedly for at least `dur`, returning (iterations, elapsed).
+///
+/// The workhorse of the custom bench harness (`rust/benches/*`).
+pub fn time_for<F: FnMut()>(dur: Duration, mut f: F) -> (u64, Duration) {
+    let start = Instant::now();
+    let mut iters = 0u64;
+    loop {
+        // Batch checks of the clock to avoid timing overhead dominating.
+        for _ in 0..64 {
+            f();
+        }
+        iters += 64;
+        let el = start.elapsed();
+        if el >= dur {
+            return (iters, el);
+        }
+    }
+}
+
+/// Nanoseconds helper for report rows.
+pub fn ns_per_op(iters: u64, elapsed: Duration) -> f64 {
+    elapsed.as_nanos() as f64 / iters.max(1) as f64
+}

@@ -1,0 +1,141 @@
+//! Mini property-testing harness (offline stand-in for proptest).
+//!
+//! `forall` runs a property over `cases` pseudo-random inputs from a
+//! deterministic seed; on failure it re-runs a crude shrink loop (halving
+//! integer magnitudes) and reports the smallest failing input it found
+//! plus the seed to reproduce.
+
+use crate::util::rng::Xoshiro256;
+
+/// A generated value plus a shrink iterator (smaller candidates).
+pub trait Arbitrary: Sized + Clone + std::fmt::Debug {
+    fn generate(rng: &mut Xoshiro256) -> Self;
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Arbitrary for u64 {
+    fn generate(rng: &mut Xoshiro256) -> Self {
+        // Bias towards small values and bit patterns near powers of two —
+        // the interesting cases for tagged pointers / version arithmetic.
+        match rng.next_below(4) {
+            0 => rng.next_below(16) as u64,
+            1 => 1u64 << rng.next_below(64),
+            2 => (1u64 << rng.next_below(64)).wrapping_sub(1),
+            _ => rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out
+    }
+}
+
+impl Arbitrary for usize {
+    fn generate(rng: &mut Xoshiro256) -> Self {
+        u64::generate(rng) as usize
+    }
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|v| v as usize).collect()
+    }
+}
+
+impl<const K: usize> Arbitrary for [u64; K] {
+    fn generate(rng: &mut Xoshiro256) -> Self {
+        std::array::from_fn(|_| u64::generate(rng))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for i in 0..K {
+            for smaller in self[i].shrink() {
+                let mut c = *self;
+                c[i] = smaller;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn generate(rng: &mut Xoshiro256) -> Self {
+        (A::generate(rng), B::generate(rng))
+    }
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Check `prop` over `cases` generated inputs; panic with the minimal
+/// found counterexample on failure.
+pub fn forall<T: Arbitrary, F: Fn(&T) -> bool>(seed: u64, cases: usize, prop: F) {
+    let mut rng = Xoshiro256::seeded(seed);
+    for case in 0..cases {
+        let input = T::generate(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!(
+                "property failed (seed={seed}, case={case}); minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Arbitrary, F: Fn(&T) -> bool>(mut failing: T, prop: &F) -> T {
+    'outer: for _ in 0..64 {
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_forall_passes_trivial() {
+        forall::<u64, _>(1, 200, |_| true);
+        forall::<(u64, u64), _>(2, 200, |(a, b)| a.wrapping_add(*b) == b.wrapping_add(*a));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn test_forall_finds_counterexample() {
+        forall::<u64, _>(3, 1000, |x| *x < 1 << 20);
+    }
+
+    #[test]
+    fn test_shrink_minimizes() {
+        // Failing property: x >= 10. Shrinker should land near 10.
+        let min = shrink_loop(1_000_000u64, &|x: &u64| *x < 10);
+        assert_eq!(min, 10);
+    }
+
+    #[test]
+    fn test_array_arbitrary_roundtrip() {
+        let mut rng = Xoshiro256::seeded(9);
+        for _ in 0..50 {
+            let v = <[u64; 4]>::generate(&mut rng);
+            for s in v.shrink() {
+                assert_ne!(s, v);
+            }
+        }
+    }
+}

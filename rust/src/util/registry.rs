@@ -1,0 +1,130 @@
+//! Global thread registry: dense small thread ids.
+//!
+//! All SMR machinery (hazard slots, epoch slots, Algorithm 2's
+//! thread-private node slabs) indexes per-thread state by a dense id in
+//! `0..MAX_THREADS`.  Ids are leased on first use and returned when the
+//! thread exits, so long-running processes that churn threads (the
+//! oversubscription benchmarks spawn hundreds) do not exhaust the space.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::MAX_THREADS;
+
+static CLAIMED: [AtomicBool; MAX_THREADS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const F: AtomicBool = AtomicBool::new(false);
+    [F; MAX_THREADS]
+};
+
+/// One past the largest id ever claimed: SMR scans (hazard snapshots,
+/// epoch advances) only need to look at `0..high_water()` instead of all
+/// MAX_THREADS slots — a large constant factor on small machines.
+static HIGH_WATER: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Upper bound (exclusive) on ids that have ever been claimed.
+#[inline]
+pub fn high_water() -> usize {
+    HIGH_WATER.load(Ordering::Acquire)
+}
+
+thread_local! {
+    static TID: Cell<usize> = const { Cell::new(usize::MAX) };
+    // Dropped at thread exit; releases the leased id.
+    static LEASE: Lease = Lease::acquire();
+}
+
+struct Lease {
+    id: usize,
+}
+
+impl Lease {
+    fn acquire() -> Self {
+        for (i, slot) in CLAIMED.iter().enumerate() {
+            if !slot.load(Ordering::Relaxed)
+                && slot
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+            {
+                HIGH_WATER.fetch_max(i + 1, Ordering::AcqRel);
+                return Lease { id: i };
+            }
+        }
+        panic!("thread registry exhausted ({MAX_THREADS} threads)");
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        crate::smr::hazard::on_thread_exit(self.id);
+        CLAIMED[self.id].store(false, Ordering::Release);
+    }
+}
+
+/// This thread's dense id in `0..MAX_THREADS` (leased on first call).
+#[inline]
+pub fn tid() -> usize {
+    TID.with(|t| {
+        let v = t.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let id = LEASE.with(|l| l.id);
+        t.set(id);
+        id
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_tid_stable_within_thread() {
+        let a = tid();
+        let b = tid();
+        assert_eq!(a, b);
+        assert!(a < MAX_THREADS);
+    }
+
+    #[test]
+    fn test_tids_distinct_across_live_threads() {
+        use std::sync::{Arc, Barrier, Mutex};
+        let n = 8;
+        let barrier = Arc::new(Barrier::new(n));
+        let ids = Arc::new(Mutex::new(Vec::new()));
+        let handles: Vec<_> = (0..n)
+            .map(|_| {
+                let barrier = Arc::clone(&barrier);
+                let ids = Arc::clone(&ids);
+                std::thread::spawn(move || {
+                    let id = tid();
+                    ids.lock().unwrap().push(id);
+                    // Hold the thread alive until everyone registered so
+                    // ids cannot be reused mid-test.
+                    barrier.wait();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut ids = ids.lock().unwrap().clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate tids among concurrent threads");
+    }
+
+    #[test]
+    fn test_ids_reused_after_exit() {
+        // Serially spawned threads may reuse ids; the registry must not
+        // leak them (we spawn far more threads than MAX_THREADS).
+        for _ in 0..(MAX_THREADS * 2) {
+            std::thread::spawn(|| {
+                let _ = tid();
+            })
+            .join()
+            .unwrap();
+        }
+    }
+}

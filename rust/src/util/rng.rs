@@ -1,0 +1,160 @@
+//! Deterministic pseudo-random number generation for workloads and tests.
+//!
+//! SplitMix64 for seeding / mixing (also the key-mix function shared with
+//! the L1 `hashmix` Pallas kernel) and xoshiro256** as the stream
+//! generator — both tiny, allocation-free, and reproducible across runs,
+//! which the figure harness relies on.
+
+/// murmur3 fmix64 / SplitMix64 finalizer-style 64-bit mixer.
+///
+/// Bit-for-bit identical to `python/compile/kernels/hashmix.py`; the
+/// cross-language agreement is asserted by `rust/tests/runtime_artifacts.rs`
+/// and by `test_mix64_known_vectors` below.
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^= x >> 33;
+    x
+}
+
+/// SplitMix64: stateful seeder (Vigna). Used to derive per-thread seeds.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** 1.0 (Blackman & Vigna) — the workload stream generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 per the reference implementation's guidance.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next(), sm.next(), sm.next(), sm.next()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform usize in [0, bound) via Lemire's multiply-shift.
+    #[inline]
+    pub fn next_below(&mut self, bound: usize) -> usize {
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_mix64_known_vectors() {
+        // Shared with python/tests/test_hashmix.py::test_known_vectors.
+        assert_eq!(mix64(0), 0);
+        assert_eq!(mix64(1), 0xB456_BCFC_34C2_CB2C);
+        assert_eq!(mix64(0xDEAD_BEEF), 0xD24B_D59F_862A_1DAC);
+    }
+
+    #[test]
+    fn test_mix64_injective_sample() {
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..100_000u64 {
+            assert!(seen.insert(mix64(x)));
+        }
+    }
+
+    #[test]
+    fn test_splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn test_xoshiro_deterministic_and_distinct_streams() {
+        let mut a = Xoshiro256::seeded(1);
+        let mut b = Xoshiro256::seeded(1);
+        let mut c = Xoshiro256::seeded(2);
+        let mut same = 0;
+        for _ in 0..64 {
+            let (x, y, z) = (a.next_u64(), b.next_u64(), c.next_u64());
+            assert_eq!(x, y);
+            if x == z {
+                same += 1;
+            }
+        }
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn test_next_below_bounds() {
+        let mut r = Xoshiro256::seeded(7);
+        for bound in [1usize, 2, 3, 10, 1000] {
+            for _ in 0..1000 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn test_next_f64_range_and_mean() {
+        let mut r = Xoshiro256::seeded(11);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+}

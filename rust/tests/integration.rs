@@ -1,0 +1,195 @@
+//! Cross-module integration tests: hash tables over every big-atomic
+//! strategy, the bench driver end to end, the coordinator's figure jobs,
+//! and the KV service.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use big_atomics::atomics::{
+    CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock, SimpLock,
+};
+use big_atomics::bench::driver::{
+    run_atomics, run_map, AtomicImpl, MapImpl, OpSource,
+};
+use big_atomics::bench::figures::{fig2_z, FigureCfg};
+use big_atomics::bench::workload::WorkloadSpec;
+use big_atomics::coordinator::kv_service::{self, KvConfig};
+use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
+use big_atomics::util::rng::Xoshiro256;
+
+/// Exhaustive hash-table semantics check against std::HashMap, with a
+/// mixed random op sequence — run over every big-atomic strategy.
+fn model_check_table<M: ConcurrentMap>(table: M, seed: u64, ops: usize) {
+    use std::collections::HashMap;
+    let mut model: HashMap<u64, u64> = HashMap::new();
+    let mut rng = Xoshiro256::seeded(seed);
+    for i in 0..ops {
+        let key = rng.next_below(200) as u64;
+        match rng.next_below(3) {
+            0 => {
+                assert_eq!(
+                    table.find(key),
+                    model.get(&key).copied(),
+                    "find({key}) mismatch at op {i} on {}",
+                    table.map_name()
+                );
+            }
+            1 => {
+                let v = i as u64;
+                let want = !model.contains_key(&key);
+                assert_eq!(
+                    table.insert(key, v),
+                    want,
+                    "insert({key}) mismatch at op {i} on {}",
+                    table.map_name()
+                );
+                model.entry(key).or_insert(v);
+            }
+            _ => {
+                let want = model.remove(&key).is_some();
+                assert_eq!(
+                    table.remove(key),
+                    want,
+                    "remove({key}) mismatch at op {i} on {}",
+                    table.map_name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn test_cachehash_model_check_all_strategies() {
+    model_check_table(CacheHash::<SeqLock<LinkVal>>::new(64), 1, 20_000);
+    model_check_table(CacheHash::<SimpLock<LinkVal>>::new(64), 2, 20_000);
+    model_check_table(CacheHash::<LockPool<LinkVal>>::new(64), 3, 20_000);
+    model_check_table(CacheHash::<Indirect<LinkVal>>::new(64), 4, 20_000);
+    model_check_table(CacheHash::<CachedWaitFree<LinkVal>>::new(64), 5, 20_000);
+    model_check_table(CacheHash::<CachedMemEff<LinkVal>>::new(64), 6, 20_000);
+    model_check_table(CacheHash::<CachedWritable<LinkVal>>::new(64), 7, 20_000);
+    model_check_table(CacheHash::<HtmSim<LinkVal>>::new(64), 8, 20_000);
+}
+
+#[test]
+fn test_chaining_and_comparators_model_check() {
+    model_check_table(big_atomics::hash::Chaining::new(64), 9, 20_000);
+    model_check_table(big_atomics::hash::ShardedLockMap::new(64, 8), 10, 20_000);
+    model_check_table(big_atomics::hash::GlobalLockMap::new(64), 11, 20_000);
+}
+
+/// Concurrent per-key counters: each thread owns a disjoint key range on
+/// one shared CacheHash; final contents must be exact.
+#[test]
+fn test_cachehash_concurrent_ownership() {
+    let t: Arc<CacheHash<CachedMemEff<LinkVal>>> = Arc::new(CacheHash::new(4096));
+    let threads = 8; // oversubscribed on this host
+    let per = 1_500u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = tix as u64 * 10_000_000;
+                for i in 0..per {
+                    assert!(t.insert(base + i, i * 2));
+                }
+                for i in 0..per {
+                    assert_eq!(t.find(base + i), Some(i * 2));
+                }
+                for i in 0..per {
+                    if i % 3 == 0 {
+                        assert!(t.remove(base + i));
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    for tix in 0..threads {
+        let base = tix as u64 * 10_000_000;
+        for i in 0..per {
+            let want = if i % 3 == 0 { None } else { Some(i * 2) };
+            assert_eq!(t.find(base + i), want);
+        }
+    }
+}
+
+#[test]
+fn test_driver_all_impls_under_oversubscription() {
+    // 8 threads on a small array: every impl must stay correct and make
+    // progress (the lock-based ones are slow here — that's the paper).
+    let spec = WorkloadSpec {
+        n: 512,
+        theta: 0.9,
+        update_pct: 50,
+        seed: 77,
+    };
+    for imp in AtomicImpl::ALL {
+        let r = run_atomics(imp, 3, &spec, 8, Duration::from_millis(60), &OpSource::Rust);
+        assert!(
+            r.total_ops > 500,
+            "{} made no progress oversubscribed: {} ops",
+            imp.name(),
+            r.total_ops
+        );
+    }
+}
+
+#[test]
+fn test_driver_all_maps_smoke() {
+    let spec = WorkloadSpec {
+        n: 1024,
+        theta: 0.5,
+        update_pct: 30,
+        seed: 78,
+    };
+    for imp in [
+        MapImpl::CacheHashSeqLock,
+        MapImpl::CacheHashSimpLock,
+        MapImpl::CacheHashIndirect,
+        MapImpl::CacheHashWaitFree,
+        MapImpl::CacheHashMemEff,
+        MapImpl::CacheHashWritable,
+        MapImpl::CacheHashHtm,
+        MapImpl::Chaining,
+        MapImpl::ShardedLock,
+        MapImpl::GlobalLock,
+    ] {
+        let r = run_map(imp, &spec, 3, Duration::from_millis(40), &OpSource::Rust);
+        assert!(r.total_ops > 100, "{}: {} ops", imp.name(), r.total_ops);
+    }
+}
+
+#[test]
+fn test_figure_runner_writes_csv() {
+    let dir = std::env::temp_dir().join("big_atomics_itest_reports");
+    let cfg = FigureCfg {
+        secs_per_point: 0.01,
+        n: 256,
+        report_dir: dir.display().to_string(),
+        use_artifact: false,
+    };
+    let rep = fig2_z(&cfg, &OpSource::Rust, false);
+    let path = rep.save(&cfg.report_dir).unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    assert!(text.lines().count() > 10);
+    assert!(text.starts_with("z,impl,mops"));
+}
+
+#[test]
+fn test_kv_service_end_to_end_no_artifacts() {
+    let cfg = KvConfig {
+        n: 2048,
+        workers: 3,
+        batch: 128,
+        duration: Duration::from_millis(150),
+        update_pct: 40,
+        theta: 0.7,
+        seed: 99,
+    };
+    let rep = kv_service::run(&cfg, None).unwrap();
+    assert!(rep.total_requests > 500);
+    assert_eq!(rep.total_requests, rep.finds + rep.inserts + rep.deletes);
+    assert!(rep.sample_count > 0);
+}

@@ -1,0 +1,197 @@
+//! Property-based tests (via the in-crate mini harness,
+//! `util::props::forall`) over the crate's core invariants.
+
+use std::sync::Arc;
+
+use big_atomics::atomics::{
+    BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool,
+    MemEffDomain, SeqLock, SimpLock, Words,
+};
+use big_atomics::bench::workload::{classify, Op, ZipfCdf, N_CDF};
+use big_atomics::util::props::forall;
+use big_atomics::util::rng::{mix64, Xoshiro256};
+
+/// Sequential ops on any big atomic must behave exactly like a plain
+/// register with CAS semantics.
+fn register_model_check<A: BigAtomic<Words<2>>>(ops: &[u64]) -> bool {
+    let a = A::new(Words([0, 0]));
+    let mut model = Words([0, 0]);
+    for (i, &op) in ops.iter().enumerate() {
+        match op % 3 {
+            0 => {
+                if a.load() != model {
+                    return false;
+                }
+            }
+            1 => {
+                let v = Words([op, i as u64]);
+                a.store(v);
+                model = v;
+            }
+            _ => {
+                // Mix of expected-correct and expected-stale CASes.
+                let expected = if op % 2 == 0 { model } else { Words([op, op]) };
+                let desired = Words([op ^ 0xABCD, i as u64 + 1]);
+                let ok = a.cas(expected, desired);
+                let model_ok = expected == model;
+                if ok != model_ok && expected != desired {
+                    return false;
+                }
+                if ok && expected != desired {
+                    model = desired;
+                }
+            }
+        }
+    }
+    a.load() == model
+}
+
+#[test]
+fn prop_register_semantics_all_impls() {
+    forall::<[u64; 24], _>(101, 200, |ops| register_model_check::<SeqLock<Words<2>>>(ops));
+    forall::<[u64; 24], _>(102, 200, |ops| register_model_check::<SimpLock<Words<2>>>(ops));
+    forall::<[u64; 24], _>(103, 200, |ops| register_model_check::<LockPool<Words<2>>>(ops));
+    forall::<[u64; 24], _>(104, 200, |ops| register_model_check::<Indirect<Words<2>>>(ops));
+    forall::<[u64; 24], _>(105, 200, |ops| {
+        register_model_check::<CachedWaitFree<Words<2>>>(ops)
+    });
+    forall::<[u64; 24], _>(106, 200, |ops| {
+        register_model_check::<CachedMemEff<Words<2>>>(ops)
+    });
+    forall::<[u64; 24], _>(107, 200, |ops| {
+        register_model_check::<CachedWritable<Words<2>>>(ops)
+    });
+    forall::<[u64; 24], _>(108, 200, |ops| register_model_check::<HtmSim<Words<2>>>(ops));
+}
+
+#[test]
+fn prop_zipf_search_equals_linear_scan() {
+    // The branch-free binary search must agree with the obvious linear
+    // definition: first index with cdf[i] > u.
+    forall::<(u64, u64), _>(201, 300, |(n_raw, bits_raw)| {
+        let n = (*n_raw as usize % N_CDF) + 1;
+        let bits = *bits_raw as u32;
+        let z = ZipfCdf::new(n, 0.77);
+        let got = z.search(bits);
+        let u = bits as f32 * 2.328_306_4e-10;
+        let linear = z
+            .cdf()
+            .iter()
+            .position(|&c| c > u)
+            .unwrap_or(N_CDF - 1)
+            .min(N_CDF - 1) as u32;
+        got == linear
+    });
+}
+
+#[test]
+fn prop_zipf_spread_in_range() {
+    forall::<(u64, u64), _>(202, 300, |(n_raw, extra)| {
+        let n = (*n_raw as usize % 10_000_000) + 1;
+        let z = ZipfCdf::new(n, 0.9);
+        (0..N_CDF as u32)
+            .step_by(37)
+            .all(|slot| z.spread(slot, *extra) < n)
+    });
+}
+
+#[test]
+fn prop_classify_consistent_with_threshold() {
+    forall::<u64, _>(203, 500, |&bits_raw| {
+        let bits = bits_raw as u32;
+        let r = bits as f32 * 2.328_306_4e-10;
+        for u in [0.0f32, 0.3, 1.0] {
+            let op = classify(bits, u);
+            let is_update = r < u;
+            match op {
+                Op::Find => {
+                    if is_update {
+                        return false;
+                    }
+                }
+                Op::Insert => {
+                    if !is_update || bits & 1 != 0 {
+                        return false;
+                    }
+                }
+                Op::Delete => {
+                    if !is_update || bits & 1 != 1 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_mix64_bijective_on_sample() {
+    // mix64 must be injective (it is a bijection; spot-check inverses
+    // don't collide on arbitrary inputs).
+    forall::<(u64, u64), _>(204, 2000, |(a, b)| a == b || mix64(*a) != mix64(*b));
+}
+
+#[test]
+fn prop_memeff_node_bound_under_concurrency() {
+    // §3.2's headline bound: nodes allocated stay O(p), independent of
+    // the op count and the number of atomics, even under contention.
+    let domain: Arc<MemEffDomain<Words<2>>> = Arc::new(MemEffDomain::new());
+    let atomics: Arc<Vec<CachedMemEff<Words<2>>>> = Arc::new(
+        (0..256)
+            .map(|i| CachedMemEff::with_domain(Words([i, 0]), Arc::clone(&domain)))
+            .collect(),
+    );
+    let threads = 4;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let atomics = Arc::clone(&atomics);
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256::seeded(900 + t as u64);
+                for i in 0..30_000u64 {
+                    let a = &atomics[rng.next_below(atomics.len())];
+                    let cur = a.load();
+                    let _ = a.cas(cur, Words([cur.0[0].wrapping_add(1), i]));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let nodes = domain.allocated_nodes();
+    // Bound: 3p per thread is the slab cap; in practice a handful per
+    // thread. Assert well under the theoretical cap and far under
+    // anything op- or n-proportional.
+    assert!(
+        nodes <= (3 * big_atomics::MAX_THREADS) as u64,
+        "node pool exploded: {nodes}"
+    );
+    assert!(nodes <= 1024, "nodes {nodes} not O(p)-ish for p=4");
+}
+
+#[test]
+fn prop_words_any_bits_roundtrip() {
+    forall::<[u64; 8], _>(205, 300, |bits| {
+        let a: SeqLock<Words<8>> = SeqLock::new(Words(*bits));
+        a.load() == Words(*bits)
+    });
+}
+
+#[test]
+fn prop_cas_same_value_always_true_when_current() {
+    // AA rule: cas(v, v) with v current returns true and changes nothing
+    // (and must not disturb concurrent state) on every implementation.
+    forall::<[u64; 3], _>(206, 200, |bits| {
+        fn check<A: BigAtomic<Words<3>>>(v: Words<3>) -> bool {
+            let a = A::new(v);
+            a.cas(v, v) && a.load() == v
+        }
+        let v = Words(*bits);
+        check::<SeqLock<Words<3>>>(v)
+            && check::<Indirect<Words<3>>>(v)
+            && check::<CachedWaitFree<Words<3>>>(v)
+            && check::<CachedMemEff<Words<3>>>(v)
+            && check::<CachedWritable<Words<3>>>(v)
+    });
+}

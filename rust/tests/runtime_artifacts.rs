@@ -1,0 +1,125 @@
+//! Tests over the AOT artifacts: HLO load, bit-exact workload
+//! cross-validation (Pallas kernel == Rust sampler), stats-model
+//! agreement, and the artifact-driven benchmark path.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a
+//! loud message) when the artifacts are absent so plain `cargo test`
+//! stays green in a fresh checkout.
+
+use big_atomics::bench::driver::{run_atomics, AtomicImpl, OpSource};
+use big_atomics::bench::workload::{generate_rust, WorkloadSpec};
+use big_atomics::coordinator::Coordinator;
+use big_atomics::runtime::workload_gen::WorkloadEngine;
+use big_atomics::runtime::{default_artifact_dir, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new(default_artifact_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIPPING artifact test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn test_artifacts_load_and_compile() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert_eq!(rt.platform(), "cpu");
+    assert_eq!(rt.manifest.n_cdf, big_atomics::bench::workload::N_CDF);
+    let engine = WorkloadEngine::new(&rt).unwrap();
+    assert_eq!(engine.batch(), rt.manifest.batch);
+    rt.stats_engine().unwrap();
+}
+
+#[test]
+fn test_workload_bit_exact_cross_validation() {
+    let Some(_rt) = runtime_or_skip() else { return };
+    let coord = Coordinator::new(true).unwrap();
+    // Covers n < N_CDF, n == N_CDF with extreme contention, and the
+    // stratified-tail path (n = 1M), two thread streams each.
+    let compared = coord.validate_workload(2048).unwrap();
+    assert_eq!(compared, 3 * 2 * 2048);
+}
+
+#[test]
+fn test_stats_engine_matches_rust_percentiles() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let stats = rt.stats_engine().unwrap();
+    let n = rt.manifest.batch;
+    // A known distribution: latencies = 0..n shuffled.
+    let mut lat: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    // Deterministic shuffle.
+    let mut rng = big_atomics::util::rng::Xoshiro256::seeded(5);
+    for i in (1..lat.len()).rev() {
+        lat.swap(i, rng.next_below(i + 1));
+    }
+    let s = stats.summarize(&lat).unwrap();
+    let nf = (n - 1) as f32;
+    assert!((s.mean - nf / 2.0).abs() < 1.0, "mean {}", s.mean);
+    assert!((s.p50 - 0.50 * nf).abs() <= 2.0, "p50 {}", s.p50);
+    assert!((s.p90 - 0.90 * nf).abs() <= 2.0, "p90 {}", s.p90);
+    assert!((s.p99 - 0.99 * nf).abs() <= 2.0, "p99 {}", s.p99);
+    assert_eq!(s.max, nf);
+}
+
+#[test]
+fn test_artifact_driven_benchmark_runs() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let engine = WorkloadEngine::new(&rt).unwrap();
+    let spec = WorkloadSpec {
+        n: 1000,
+        theta: 0.9,
+        update_pct: 50,
+        seed: 11,
+    };
+    let r = run_atomics(
+        AtomicImpl::CachedMemEff,
+        3,
+        &spec,
+        2,
+        std::time::Duration::from_millis(50),
+        &OpSource::Artifact(&engine),
+    );
+    assert!(r.total_ops > 1000, "{} ops", r.total_ops);
+}
+
+#[test]
+fn test_engine_generate_matches_rust_generate_multi_batch() {
+    // > one artifact batch, to exercise the batching loop.
+    let Some(rt) = runtime_or_skip() else { return };
+    let engine = WorkloadEngine::new(&rt).unwrap();
+    let spec = WorkloadSpec {
+        n: 4096,
+        theta: 0.99,
+        update_pct: 20,
+        seed: 33,
+    };
+    let count = rt.manifest.batch + 1000;
+    let ours = generate_rust(&spec, count, 9);
+    let theirs = engine.generate(&spec, count, 9).unwrap();
+    assert_eq!(ours.len(), theirs.len());
+    for (a, b) in ours.iter().zip(&theirs) {
+        assert_eq!(a.op, b.op);
+        assert_eq!(a.rank, b.rank);
+        assert_eq!(a.key, b.key);
+    }
+}
+
+#[test]
+fn test_kv_service_with_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let cfg = big_atomics::coordinator::kv_service::KvConfig {
+        n: 4096,
+        workers: 2,
+        batch: 256,
+        duration: std::time::Duration::from_millis(200),
+        update_pct: 30,
+        theta: 0.5,
+        seed: 44,
+    };
+    let rep = big_atomics::coordinator::kv_service::run(&cfg, Some(&rt)).unwrap();
+    assert!(rep.total_requests > 200);
+    let lat = rep.latency.expect("stats artifact should produce a summary");
+    assert!(lat.p50 > 0.0 && lat.p99 >= lat.p50 && lat.max >= lat.p99);
+}
