@@ -7,10 +7,10 @@
 
 use std::time::Duration;
 
-use big_atomics::bench::driver::{run_map, MapImpl, OpSource};
+use big_atomics::atomics::{CachedMemEff, SeqLock, Words};
+use big_atomics::bench::driver::{run_map, run_map_wide, AtomicImpl, MapImpl, OpSource};
 use big_atomics::bench::workload::WorkloadSpec;
-use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
-use big_atomics::atomics::{CachedMemEff, SeqLock};
+use big_atomics::hash::{CacheHash, ConcurrentMap, Link, LinkVal};
 
 fn api_tour<M: ConcurrentMap>(table: M) {
     // Insert-if-absent semantics, 8-byte keys and values.
@@ -28,6 +28,17 @@ fn main() {
     println!("CacheHash API (generic over the big-atomic strategy):");
     api_tour(CacheHash::<SeqLock<LinkVal>>::new(1024));
     api_tour(CacheHash::<CachedMemEff<LinkVal>>::new(1024));
+
+    // The same table with arbitrary-length keys AND values (§5.3):
+    // 4-word keys map to 4-word values through a 9-word inlined link.
+    println!("\ngeneric-value table (Words<4> -> Words<4>):");
+    type WK = Words<4>;
+    let wide: CacheHash<CachedMemEff<Link<WK, WK>>, WK, WK> = CacheHash::new(1024);
+    assert!(wide.insert(Words([1, 2, 3, 4]), Words([40; 4])));
+    assert!(!wide.insert(Words([1, 2, 3, 4]), Words([41; 4])));
+    assert_eq!(wide.find(Words([1, 2, 3, 4])), Some(Words([40; 4])));
+    assert!(wide.remove(Words([1, 2, 3, 4])));
+    println!("  {:<24} wide api OK", wide.map_name());
 
     // Collision behaviour: tiny table, long chains, still correct.
     println!("\nchain stress (capacity 4, 1000 keys):");
@@ -62,6 +73,13 @@ fn main() {
     ] {
         let r = run_map(imp, &spec, 2, Duration::from_millis(200), &OpSource::Rust);
         println!("  {:<28} {:>8.3} Mop/s", imp.name(), r.mops());
+    }
+
+    // And the wide-value workload on the two leading strategies.
+    println!("\nwide (4-word key/value) workload:");
+    for imp in [AtomicImpl::CachedMemEff, AtomicImpl::SeqLock] {
+        let r = run_map_wide(imp, &spec, 2, Duration::from_millis(200), &OpSource::Rust);
+        println!("  {:<28} {:>8.3} Mop/s", r.label, r.mops());
     }
     println!("\nhashtable tour OK");
 }

@@ -19,12 +19,15 @@ use std::time::Duration;
 use big_atomics::coordinator::kv_service::{run, KvConfig};
 use big_atomics::runtime::{default_artifact_dir, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> big_atomics::util::error::Result<()> {
     // Artifacts are required for this example — it's the end-to-end
     // proof that L1 (Pallas kernels) → L2 (JAX model) → HLO → PJRT →
     // L3 (Rust service) compose.
     let rt = Runtime::new(default_artifact_dir()).map_err(|e| {
-        anyhow::anyhow!("{e}\n\nthis example needs the AOT artifacts: run `make artifacts` first")
+        big_atomics::anyhow!(
+            "{e}\n\nthis example needs the AOT artifacts: run `make artifacts` first \
+             (and build with `--features pjrt`)"
+        )
     })?;
     println!("PJRT platform: {}", rt.platform());
 
@@ -55,6 +58,12 @@ fn main() -> anyhow::Result<()> {
         );
         if let Some(lat) = rep.latency {
             println!("  request latency ({} batches): {}", rep.sample_count, lat);
+        }
+        if let Some(mean) = rep.latency_stats.mean() {
+            println!(
+                "  fetch_update stats cell: count={} mean={:.0}ns min={} max={}",
+                rep.latency_stats.count, mean, rep.latency_stats.min, rep.latency_stats.max
+            );
         }
     }
     println!("\nkv_server end-to-end OK");

@@ -96,7 +96,7 @@ impl MvRegister {
                 ts,
                 older: old as u64,
             };
-            if self.head.cas(cur, next) {
+            if self.head.compare_exchange(cur, next).is_ok() {
                 return true;
             }
             // SAFETY: never published.

@@ -4,9 +4,10 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Shows single-threaded usage of every implementation, then a
-//! multi-threaded CAS-counter demonstrating lock-freedom under
-//! contention.
+//! Shows single-threaded usage of every implementation in the
+//! witnessing style — `compare_exchange` / `swap` / `fetch_update` —
+//! then a multi-threaded counter demonstrating lock-freedom under
+//! contention with zero retry re-loads.
 
 use std::sync::Arc;
 
@@ -21,14 +22,31 @@ fn demo_one<A: BigAtomic<Words<4>>>(tag: &str) {
     let v = a.load();
     assert_eq!(v, Words([1, 2, 3, 4]));
 
-    // CAS: succeeds iff the whole 32-byte value matches.
-    assert!(a.cas(v, Words([10, 20, 30, 40])));
-    assert!(!a.cas(v, Words([0, 0, 0, 0]))); // stale expected
+    // compare_exchange: Ok(previous) iff the whole 32-byte value
+    // matched; Err carries the *witnessed* current value, so a failed
+    // attempt never needs a separate re-load.
+    assert_eq!(a.compare_exchange(v, Words([10, 20, 30, 40])), Ok(v));
+    let witness = a
+        .compare_exchange(v, Words([0, 0, 0, 0]))
+        .expect_err("stale expected must fail");
+    assert_eq!(witness, Words([10, 20, 30, 40]));
+
+    // swap: atomic exchange returning the previous value.
+    assert_eq!(a.swap(Words([7, 7, 7, 7])), Words([10, 20, 30, 40]));
+
+    // fetch_update: the whole load/modify/CAS retry loop in one call.
+    let prev = a
+        .fetch_update(|mut cur| {
+            cur.0[0] += 1;
+            Some(cur)
+        })
+        .expect("unconditional update");
+    assert_eq!(prev, Words([7, 7, 7, 7]));
 
     // Store (on Cached-WaitFree this is a CAS loop — see Table 1).
-    a.store(Words([7, 7, 7, 7]));
-    assert_eq!(a.load(), Words([7, 7, 7, 7]));
-    println!("  {tag:<24} load/store/cas OK");
+    a.store(Words([9, 9, 9, 9]));
+    assert_eq!(a.load(), Words([9, 9, 9, 9]));
+    println!("  {tag:<24} load/store/compare_exchange/swap/fetch_update OK");
 }
 
 fn main() {
@@ -42,9 +60,11 @@ fn main() {
     demo_one::<CachedWritable<Words<4>>>("Cached-Writable (Alg 3)");
     demo_one::<HtmSim<Words<4>>>("HTM (simulated)");
 
-    // Multi-threaded: a 4-word CAS counter. Word 0 counts successful
-    // CASes; the other words carry per-thread tags that must never tear.
-    println!("\nconcurrent CAS counter on Cached-MemEff (4 threads):");
+    // Multi-threaded: a 4-word fetch_update counter. Word 0 counts
+    // updates; the other words carry per-thread tags that must never
+    // tear. Every update lands exactly once — the witness-fed retry
+    // loop is doing the work a load+cas loop used to.
+    println!("\nconcurrent fetch_update counter on Cached-MemEff (4 threads):");
     let a: Arc<CachedMemEff<Words<4>>> = Arc::new(CachedMemEff::new(Words([0; 4])));
     let threads = 4;
     let per = 10_000u64;
@@ -52,13 +72,12 @@ fn main() {
         .map(|t| {
             let a = Arc::clone(&a);
             std::thread::spawn(move || {
-                let mut wins = 0u64;
-                while wins < per {
-                    let cur = a.load();
-                    let next = Words([cur.0[0] + 1, t, wins, cur.0[3].wrapping_add(t + 1)]);
-                    if a.cas(cur, next) {
-                        wins += 1;
-                    }
+                for i in 0..per {
+                    let _ = a
+                        .fetch_update(|cur| {
+                            Some(Words([cur.0[0] + 1, t, i, cur.0[3].wrapping_add(t + 1)]))
+                        })
+                        .expect("unconditional update");
                 }
             })
         })
@@ -68,6 +87,6 @@ fn main() {
     }
     let v = a.load();
     assert_eq!(v.0[0], threads * per);
-    println!("  {} successful CASes, final value {:?}", v.0[0], v.0);
+    println!("  {} successful updates, final value {:?}", v.0[0], v.0);
     println!("\nquickstart OK");
 }

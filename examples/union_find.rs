@@ -58,8 +58,9 @@ impl UnionFind {
             }
             let np = self.nodes[nx.parent as usize].load();
             if np.parent != nx.parent {
-                // Halve: point x at its grandparent (single 3-word CAS).
-                let _ = self.nodes[x as usize].cas(
+                // Halve: point x at its grandparent (single 3-word CAS;
+                // best-effort, so the witness is discarded).
+                let _ = self.nodes[x as usize].compare_exchange(
                     nx,
                     Node {
                         parent: np.parent,
@@ -91,18 +92,20 @@ impl UnionFind {
             } else {
                 (rb, nb, ra, na)
             };
-            // Attach child root under parent root: one CAS.
-            if self.nodes[child as usize].cas(
+            // Attach child root under parent root: one witnessing CAS.
+            let attached = self.nodes[child as usize].compare_exchange(
                 child_val,
                 Node {
                     parent,
                     rank: child_val.rank,
                     collapsed: 1,
                 },
-            ) {
-                // Possibly bump the parent's rank (best effort, one CAS).
+            );
+            if attached.is_ok() {
+                // Possibly bump the parent's rank (best effort: a lost
+                // race means someone else restructured — fine).
                 if child_val.rank == parent_val.rank {
-                    let _ = self.nodes[parent as usize].cas(
+                    let _ = self.nodes[parent as usize].compare_exchange(
                         parent_val,
                         Node {
                             rank: parent_val.rank + 1,

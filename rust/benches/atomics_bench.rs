@@ -15,7 +15,9 @@ use big_atomics::atomics::{
     SimpLock, Words,
 };
 use big_atomics::bench::driver::OpSource;
-use big_atomics::bench::figures::{fig1, fig2_p, fig2_u, fig2_w, fig2_z, fig5, FigureCfg};
+use big_atomics::bench::figures::{
+    fig1, fig2_fetch_update, fig2_p, fig2_u, fig2_w, fig2_z, fig5, FigureCfg,
+};
 use big_atomics::util::{ns_per_op, time_for};
 
 const WARMUP: Duration = Duration::from_millis(30);
@@ -33,29 +35,38 @@ fn bench_ops<A: BigAtomic<Words<4>>>(name: &str) {
     });
     let load_ns = ns_per_op(iters, el);
 
-    // successful cas (value changes every time)
+    // successful compare_exchange (value changes every time)
     let mut i = 0u64;
     time_for(WARMUP, || {
         let cur = a.load();
         i += 1;
-        let _ = a.cas(cur, Words([i, i ^ 1, i ^ 2, i ^ 3]));
+        let _ = a.compare_exchange(cur, Words([i, i ^ 1, i ^ 2, i ^ 3]));
     });
     let (iters, el) = time_for(MEASURE, || {
         let cur = a.load();
         i += 1;
-        let _ = a.cas(cur, Words([i, i ^ 1, i ^ 2, i ^ 3]));
+        let _ = a.compare_exchange(cur, Words([i, i ^ 1, i ^ 2, i ^ 3]));
     });
     let cas_ns = ns_per_op(iters, el);
 
-    // failing cas (stale expected)
+    // failing compare_exchange (stale expected; returns the witness)
     let stale = Words([u64::MAX, 0, 0, 0]);
     let (iters, el) = time_for(MEASURE, || {
-        let _ = a.cas(stale, Words([0, 0, 0, 0]));
+        let _ = a.compare_exchange(stale, Words([0, 0, 0, 0]));
     });
     let fail_ns = ns_per_op(iters, el);
 
+    // fetch_update (closure increment; the packaged retry loop)
+    let (iters, el) = time_for(MEASURE, || {
+        let _ = a.fetch_update(|mut v| {
+            v.0[0] = v.0[0].wrapping_add(1);
+            Some(v)
+        });
+    });
+    let fu_ns = ns_per_op(iters, el);
+
     println!(
-        "{name:<26} load {load_ns:>8.1} ns   cas(ok) {cas_ns:>8.1} ns   cas(fail) {fail_ns:>8.1} ns"
+        "{name:<26} load {load_ns:>7.1} ns   cx(ok) {cas_ns:>7.1} ns   cx(fail) {fail_ns:>7.1} ns   fetch_update {fu_ns:>7.1} ns"
     );
 }
 
@@ -84,6 +95,7 @@ fn main() {
     let _ = fig2_z(&cfg, &src, true).save(&cfg.report_dir);
     let _ = fig2_w(&cfg, &src).save(&cfg.report_dir);
     let _ = fig2_p(&cfg, &src).save(&cfg.report_dir);
+    let _ = fig2_fetch_update(&cfg, &src).save(&cfg.report_dir);
     for r in fig5(&cfg, &src) {
         let _ = r.save(&cfg.report_dir);
     }

@@ -6,13 +6,13 @@
 
 use std::time::Duration;
 
-use big_atomics::bench::driver::OpSource;
-use big_atomics::bench::figures::{fig3, fig4, FigureCfg};
+use big_atomics::bench::driver::{widen_key, OpSource};
+use big_atomics::bench::figures::{fig3, fig3_wide, fig4, FigureCfg};
 use big_atomics::bench::memory::memory_census;
+use big_atomics::atomics::{CachedMemEff, CachedWaitFree, Indirect, SeqLock, Words};
 use big_atomics::hash::{
-    CacheHash, Chaining, ConcurrentMap, GlobalLockMap, LinkVal, ShardedLockMap,
+    CacheHash, Chaining, ConcurrentMap, GlobalLockMap, Link, LinkVal, ShardedLockMap,
 };
-use big_atomics::atomics::{CachedMemEff, CachedWaitFree, Indirect, SeqLock};
 use big_atomics::util::{ns_per_op, time_for};
 use big_atomics::util::rng::mix64;
 
@@ -58,6 +58,42 @@ fn bench_map<M: ConcurrentMap>(map: M) {
     );
 }
 
+type W4 = Words<4>;
+type WideLink = Link<W4, W4>;
+
+fn bench_wide_map<M: ConcurrentMap<W4, W4>>(map: M) {
+    for r in (0..N).step_by(2) {
+        map.insert(widen_key(mix64(r as u64)), Words([r as u64; 4]));
+    }
+    let mut i = 0u64;
+    let (iters, el) = time_for(MEASURE, || {
+        i = i.wrapping_add(0x9E3779B97F4A7C15);
+        std::hint::black_box(map.find(widen_key(mix64((i as usize % N) as u64))));
+    });
+    let find_ns = ns_per_op(iters, el);
+    let mut toggle = false;
+    let mut j = 0u64;
+    let (iters, el) = time_for(MEASURE, || {
+        let key = widen_key(mix64(1_000_000 + (j % 4096)));
+        if toggle {
+            map.remove(key);
+        } else {
+            map.insert(key, Words([j; 4]));
+        }
+        if j % 4096 == 4095 {
+            toggle = !toggle;
+        }
+        j += 1;
+    });
+    let upd_ns = ns_per_op(iters, el);
+    println!(
+        "{:<28} find {:>8.1} ns   insert/remove {:>8.1} ns",
+        format!("{}[wide]", map.map_name()),
+        find_ns,
+        upd_ns
+    );
+}
+
 fn main() {
     println!("== hash table per-op latency, n=16K, single thread ==");
     bench_map(CacheHash::<SeqLock<LinkVal>>::new(N));
@@ -67,6 +103,11 @@ fn main() {
     bench_map(Chaining::new(N));
     bench_map(ShardedLockMap::new(N, 16));
     bench_map(GlobalLockMap::new(N));
+
+    println!("\n== wide (4-word key/value) table per-op latency ==");
+    bench_wide_map(CacheHash::<CachedMemEff<WideLink>, W4, W4>::new(N));
+    bench_wide_map(CacheHash::<SeqLock<WideLink>, W4, W4>::new(N));
+    bench_wide_map(Chaining::<W4, W4>::new(N));
 
     let cfg = FigureCfg {
         secs_per_point: 0.08,
@@ -78,6 +119,7 @@ fn main() {
     let _ = fig3(&cfg, &src, "u", false).save(&cfg.report_dir);
     let _ = fig3(&cfg, &src, "u", true).save(&cfg.report_dir);
     let _ = fig3(&cfg, &src, "z", true).save(&cfg.report_dir);
+    let _ = fig3_wide(&cfg, &src).save(&cfg.report_dir);
     let (a, b) = fig4(&cfg, &src);
     let _ = a.save(&cfg.report_dir);
     let _ = b.save(&cfg.report_dir);

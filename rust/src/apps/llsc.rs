@@ -1,11 +1,12 @@
 //! Load-linked / store-conditional over a big atomic (paper §2).
 //!
-//! LL returns the value plus a *link tag*; SC(link, new) succeeds iff no
-//! successful SC intervened since the link was taken.  With a (value,
-//! tag) big atomic the implementation is a one-line CAS — the
-//! monotonically increasing tag rules out ABA entirely, which is the
-//! whole difficulty of LL/SC-from-CAS constructions on single words
-//! ([36], [10]).
+//! LL returns the value plus a *link tag*; SC(link, new) is exactly one
+//! [`BigAtomic::compare_exchange`] — the monotonically increasing tag
+//! rules out ABA entirely, which is the whole difficulty of
+//! LL/SC-from-CAS constructions on single words ([36], [10], and the
+//! Blelloch–Wei LL/SC-from-CAS construction).  A failed SC returns the
+//! *witnessed* current cell, so [`LlSc::fetch_update`] — the canonical
+//! LL/SC retry loop — never re-loads between attempts.
 //!
 //! Generic over the big-atomic implementation, so the paper's claim
 //! ("LL/SC trivially from big atomics") is testable against every
@@ -60,15 +61,37 @@ impl<A: BigAtomic<Tagged>> LlSc<A> {
     }
 
     /// Store-conditional: succeeds iff no successful SC happened since
-    /// `link` was taken.
+    /// `link` was taken — one witnessing `compare_exchange`.
     pub fn store_conditional(&self, link: Link, new: u64) -> bool {
-        self.cell.cas(
+        self.try_store_conditional(link, new).is_ok()
+    }
+
+    /// Store-conditional returning the witnessed current cell as a fresh
+    /// [`Link`] on failure, so retry loops skip the re-LL.
+    pub fn try_store_conditional(&self, link: Link, new: u64) -> Result<(), Link> {
+        match self.cell.compare_exchange(
             link.snapshot,
             Tagged {
                 value: new,
                 tag: link.snapshot.tag + 1,
             },
-        )
+        ) {
+            Ok(_) => Ok(()),
+            Err(snapshot) => Err(Link { snapshot }),
+        }
+    }
+
+    /// The canonical LL/SC loop, packaged: apply `f` to the current
+    /// value until an SC lands; returns the previous value. Failed SCs
+    /// feed their witness straight into the next attempt.
+    pub fn fetch_update<F: FnMut(u64) -> u64>(&self, mut f: F) -> u64 {
+        let mut link = self.load_linked();
+        loop {
+            match self.try_store_conditional(link, f(link.value())) {
+                Ok(()) => return link.value(),
+                Err(fresh) => link = fresh,
+            }
+        }
     }
 
     /// Validate: is the link still current?
@@ -117,7 +140,8 @@ mod tests {
 
     #[test]
     fn test_llsc_fetch_increment_exact() {
-        // The canonical LL/SC use: a contended fetch-and-increment.
+        // The canonical LL/SC use: a contended fetch-and-increment,
+        // driven by the packaged witness-fed loop.
         let c: Arc<LlSc<CachedMemEff<Tagged>>> = Arc::new(LlSc::new(0));
         let threads = 4;
         let per = 5_000u64;
@@ -126,12 +150,7 @@ mod tests {
                 let c = Arc::clone(&c);
                 std::thread::spawn(move || {
                     for _ in 0..per {
-                        loop {
-                            let l = c.load_linked();
-                            if c.store_conditional(l, l.value() + 1) {
-                                break;
-                            }
-                        }
+                        let _ = c.fetch_update(|v| v + 1);
                     }
                 })
             })
@@ -140,5 +159,18 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(c.load(), threads * per);
+    }
+
+    #[test]
+    fn test_try_store_conditional_witness_is_fresh() {
+        let c: LlSc<SeqLock<Tagged>> = LlSc::new(10);
+        let stale = c.load_linked();
+        assert!(c.store_conditional(stale, 11));
+        // A stale SC fails but hands back a usable fresh link.
+        let fresh = c.try_store_conditional(stale, 99).unwrap_err();
+        assert_eq!(fresh.value(), 11);
+        assert!(c.validate(fresh));
+        assert!(c.store_conditional(fresh, 12));
+        assert_eq!(c.load(), 12);
     }
 }

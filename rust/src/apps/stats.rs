@@ -56,20 +56,22 @@ impl<A: BigAtomic<Snapshot>> StatsCell<A> {
         }
     }
 
-    /// Record one sample (lock-free if the backend is).
+    /// Record one sample (lock-free if the backend is): one
+    /// `fetch_update` — the whole load/modify/CAS retry loop, with
+    /// failed attempts continuing from the witness instead of
+    /// re-loading.
     pub fn record(&self, sample: u64) {
-        loop {
-            let cur = self.cell.load();
-            let next = Snapshot {
-                count: cur.count + 1,
-                sum: cur.sum.wrapping_add(sample),
-                min: cur.min.min(sample),
-                max: cur.max.max(sample),
-            };
-            if self.cell.cas(cur, next) {
-                return;
-            }
-        }
+        let _ = self
+            .cell
+            .fetch_update(|cur| {
+                Some(Snapshot {
+                    count: cur.count + 1,
+                    sum: cur.sum.wrapping_add(sample),
+                    min: cur.min.min(sample),
+                    max: cur.max.max(sample),
+                })
+            })
+            .expect("unconditional update always lands");
     }
 
     /// A consistent snapshot of all four fields.

@@ -1,6 +1,9 @@
 //! `CachedMemEff<T>` — **Algorithm 2**: the paper's lock-free,
-//! memory-efficient big atomic supporting `load`, `store`, and `cas`
-//! (§3.2) — the implementation that wins the paper's evaluation.
+//! memory-efficient big atomic supporting `load`, `store`, and a
+//! witnessing `compare_exchange` (§3.2) — the implementation that wins
+//! the paper's evaluation. Its `Err` witness is exact (never equal to
+//! `expected`): the install loop retries internally until it either
+//! wins or reads a definitely different value.
 //!
 //! Differences from Algorithm 1:
 //! * the backup pointer is *usually null*: after an update's value is
@@ -22,12 +25,11 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crossbeam_utils::CachePadded;
-
 use super::bytewise::WordBuf;
 use super::{AtomicValue, BigAtomic};
 use crate::smr::hazard::{protected_snapshot, HazardPointer};
 use crate::util::registry::tid;
+use crate::util::CachePadded;
 use crate::MAX_THREADS;
 
 /// Slab capacity per thread: 3p (paper §3.2 — at most p installed +
@@ -514,75 +516,74 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
     #[inline]
     fn store(&self, val: T) {
         // Paper line 60: lock-free store as a CAS loop (linearizes at the
-        // first successful CAS; same-value fast-out is the AA rule).
+        // first successful CAS; same-value fast-out is the AA rule). The
+        // witness feeds the retry instead of a fresh load.
+        let mut cur = self.load();
         loop {
-            let cur = self.load();
-            if cur == val || self.cas(cur, val) {
+            if cur == val {
                 return;
+            }
+            match self.compare_exchange(cur, val) {
+                Ok(_) => return,
+                Err(w) => cur = w,
             }
         }
     }
 
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let h = HazardPointer::new();
-        let mut ver = self.version.load(Ordering::SeqCst);
-        let (raw, val) = match self.try_load_indirect(&h) {
-            Tli::Indirect { raw, val } => (raw, val),
-            Tli::Cached { ver: v, raw, val } => {
-                ver = v;
-                (raw, val)
-            }
-            // The value was changing during the read: some value in the
-            // window differed from `expected` (values never repeat
-            // back-to-back) — linearize there (§3.2 proof, case 1).
-            Tli::Fail => return false,
-        };
-        if val != expected {
-            return false;
-        }
-        if expected == desired {
-            return true;
-        }
-
-        let new_node = self.domain.get_free_node(desired);
-        let new_raw = new_node as usize;
-        debug_assert!(!is_null(new_raw));
-
-        match self
-            .backup
-            .compare_exchange(raw, new_raw, Ordering::SeqCst, Ordering::SeqCst)
-        {
-            Ok(_) => {
-                if !is_null(raw) {
-                    // SAFETY: protected node; uninstall signal.
-                    unsafe { (*(raw as *const Node<T>)).is_installed.store(false, Ordering::Release) };
+        loop {
+            let mut ver = self.version.load(Ordering::SeqCst);
+            let (raw, val) = match self.try_load_indirect(&h) {
+                Tli::Indirect { raw, val } => (raw, val),
+                Tli::Cached { ver: v, raw, val } => {
+                    ver = v;
+                    (raw, val)
                 }
-                self.try_seqlock(ver, desired, new_raw, &h);
-                true
+                // The value was changing during the read — another
+                // update is mid-flight (global progress); retry for a
+                // definite witness.
+                Tli::Fail => {
+                    std::hint::spin_loop();
+                    continue;
+                }
+            };
+            if val != expected {
+                return Err(val); // exact witness: a linearizable read
             }
-            Err(actual) => {
-                // If we read through a node that has since been cached
-                // and uninstalled (backup now null), the value may still
-                // equal `expected` in the cache: re-validate and retry
-                // against the exact tagged null (its version tag defeats
-                // null-ABA).
-                if !is_null(raw) && is_null(actual) {
-                    let ver2 = self.version.load(Ordering::SeqCst);
-                    let val2 = self.cache.read();
-                    if ver2 % 2 == 0
-                        && ver2 == self.version.load(Ordering::SeqCst)
-                        && val2 == expected
-                        && self
-                            .backup
-                            .compare_exchange(actual, new_raw, Ordering::SeqCst, Ordering::SeqCst)
-                            .is_ok()
-                    {
-                        self.try_seqlock(ver2, desired, new_raw, &h);
-                        return true;
+            if expected == desired {
+                return Ok(val);
+            }
+
+            let new_node = self.domain.get_free_node(desired);
+            let new_raw = new_node as usize;
+            debug_assert!(!is_null(new_raw));
+
+            match self
+                .backup
+                .compare_exchange(raw, new_raw, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => {
+                    if !is_null(raw) {
+                        // SAFETY: protected node; uninstall signal.
+                        unsafe {
+                            (*(raw as *const Node<T>)).is_installed.store(false, Ordering::Release)
+                        };
                     }
+                    self.try_seqlock(ver, desired, new_raw, &h);
+                    return Ok(val);
                 }
-                self.domain.free_node(new_node);
-                false
+                Err(_) => {
+                    // A competing update won the install (or cached our
+                    // node's predecessor and nulled the backup). Return
+                    // the node and re-read: the next iteration either
+                    // witnesses a different value (Err) or sees
+                    // `expected` restored and retries the install —
+                    // against the *exact* tagged null it just read, so
+                    // its version tag defeats null-ABA. Lock-free: every
+                    // iteration implies a completed competing update.
+                    self.domain.free_node(new_node);
+                }
             }
         }
     }
@@ -608,8 +609,14 @@ mod tests {
     fn test_roundtrip_and_cas() {
         let a: CachedMemEff<Words<3>> = CachedMemEff::new(Words([1, 2, 3]));
         assert_eq!(a.load(), Words([1, 2, 3]));
-        assert!(a.cas(Words([1, 2, 3]), Words([4, 5, 6])));
-        assert!(!a.cas(Words([1, 2, 3]), Words([9, 9, 9])));
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([4, 5, 6])),
+            Ok(Words([1, 2, 3]))
+        );
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([9, 9, 9])),
+            Err(Words([4, 5, 6]))
+        );
         a.store(Words([7, 7, 7]));
         assert_eq!(a.load(), Words([7, 7, 7]));
     }
@@ -618,7 +625,7 @@ mod tests {
     fn test_backup_null_in_steady_state() {
         let a: CachedMemEff<Words<2>> = CachedMemEff::new(Words([0, 0]));
         for i in 1..100u64 {
-            assert!(a.cas(a.load(), Words([i, i])));
+            assert!(a.compare_exchange(a.load(), Words([i, i])).is_ok());
         }
         // Quiescent: the backup must be a tagged null (memory-efficient
         // steady state — this is the algorithm's defining property).
@@ -635,7 +642,7 @@ mod tests {
         for round in 1..200u64 {
             for a in &atomics {
                 let cur = a.load();
-                assert!(a.cas(cur, Words([cur.0[0] + round, round])));
+                assert!(a.compare_exchange(cur, Words([cur.0[0] + round, round])).is_ok());
             }
         }
         // Single-threaded: nodes must be recycled — bounded by the slab
@@ -661,7 +668,7 @@ mod tests {
                     for r in 0..rounds {
                         let cur = a.load();
                         let next = Words([cur.0[0] + 1, r + 1, t as u64, cur.0[3] ^ (r + 7)]);
-                        if a.cas(cur, next) {
+                        if a.compare_exchange(cur, next).is_ok() {
                             wins.fetch_add(1, Ordering::Relaxed);
                         }
                     }
@@ -719,7 +726,7 @@ mod tests {
         for round in 1..500u64 {
             for a in &atomics {
                 let cur = a.load();
-                assert!(a.cas(cur, Words([cur.0[0] + 1, round])));
+                assert!(a.compare_exchange(cur, Words([cur.0[0] + 1, round])).is_ok());
             }
         }
         for (i, a) in atomics.iter().enumerate() {
@@ -749,7 +756,7 @@ mod tests {
                     for r in 0..rounds {
                         let cur = a.load();
                         let next = Words([cur.0[0] + 1, r + 1, t, cur.0[3] ^ (r + 3)]);
-                        if a.cas(cur, next) {
+                        if a.compare_exchange(cur, next).is_ok() {
                             wins.fetch_add(1, Ordering::Relaxed);
                         }
                     }
@@ -771,7 +778,7 @@ mod tests {
             .map(|_| CachedMemEff::with_domain(Words([0; 8]), Arc::clone(&domain)))
             .collect();
         for (i, a) in arr.iter().enumerate() {
-            assert!(a.cas(Words([0; 8]), Words([i as u64 + 1; 8])));
+            assert!(a.compare_exchange(Words([0; 8]), Words([i as u64 + 1; 8])).is_ok());
         }
         // 10_000 atomics, but the node pool stays at the per-thread slab
         // batch (≤ 132): memory independent of n — the §3.2 property.

@@ -98,16 +98,21 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
     #[inline]
     fn store(&self, val: T) {
         // Table 1: the load+cas variant has no native store; this CAS
-        // loop is lock-free (each failure implies another update won).
+        // loop is lock-free (each failure implies another update won)
+        // and feeds the witness back instead of re-loading.
+        let mut cur = self.load();
         loop {
-            let cur = self.load();
-            if cur == val || self.cas(cur, val) {
+            if cur == val {
                 return;
+            }
+            match self.compare_exchange(cur, val) {
+                Ok(_) => return,
+                Err(w) => cur = w,
             }
         }
     }
 
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let h = HazardPointer::new();
         let ver = self.version.load(Ordering::SeqCst);
         let mut val = self.cache.read();
@@ -119,12 +124,12 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
             val = Self::node_value(raw);
         }
         if val != expected {
-            return false;
+            return Err(val);
         }
         if expected == desired {
             // Never replace a value by an equal one: the backup pointer
             // would change and spuriously fail a concurrent CAS (§3.1).
-            return true;
+            return Ok(val);
         }
 
         let new_node = Box::into_raw(Box::new(Node { value: desired }));
@@ -154,7 +159,12 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
             // update). The node was never published.
             // SAFETY: unpublished, uniquely owned.
             drop(unsafe { Box::from_raw(new_node) });
-            return false;
+            // Witness: one protected read of the node the winner
+            // installed. Wait-free (no loop); may rarely equal
+            // `expected` again if later updates restored it — see the
+            // module docs' witness contract.
+            let raw2 = self.protect_backup(&h);
+            return Err(Self::node_value(raw2));
         }
 
         // Linearized at the install. Retire the old node (still hazard-
@@ -184,7 +194,7 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
         }
         // If validation was skipped/failed the cache stays invalid until
         // a later uncontended CAS validates — permitted by the invariants.
-        true
+        Ok(expected)
     }
 
     fn name() -> &'static str {
@@ -206,9 +216,15 @@ mod tests {
     fn test_roundtrip() {
         let a: CachedWaitFree<Words<3>> = CachedWaitFree::new(Words([1, 2, 3]));
         assert_eq!(a.load(), Words([1, 2, 3]));
-        assert!(a.cas(Words([1, 2, 3]), Words([4, 5, 6])));
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([4, 5, 6])),
+            Ok(Words([1, 2, 3]))
+        );
         assert_eq!(a.load(), Words([4, 5, 6]));
-        assert!(!a.cas(Words([1, 2, 3]), Words([0, 0, 0])));
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([0, 0, 0])),
+            Err(Words([4, 5, 6]))
+        );
     }
 
     #[test]
@@ -223,7 +239,7 @@ mod tests {
     #[test]
     fn test_cache_validated_after_uncontended_cas() {
         let a: CachedWaitFree<Words<2>> = CachedWaitFree::new(Words([0, 0]));
-        assert!(a.cas(Words([0, 0]), Words([1, 1])));
+        assert!(a.compare_exchange(Words([0, 0]), Words([1, 1])).is_ok());
         // Uncontended: pointer must be validated so loads take the fast
         // path. We can't observe the path directly, but the pointer mark
         // is visible through a debug read.
@@ -248,7 +264,7 @@ mod tests {
                     for r in 0..rounds {
                         let cur = a.load();
                         let next = Words([cur.0[0] + 1, r, t as u64, cur.0[3] ^ r]);
-                        if a.cas(cur, next) {
+                        if a.compare_exchange(cur, next).is_ok() {
                             wins.fetch_add(1, Ordering::Relaxed);
                         }
                     }
@@ -283,7 +299,7 @@ mod tests {
                 std::thread::spawn(move || {
                     for i in 1..5_000u64 {
                         let cur = a.load();
-                        let _ = a.cas(cur, Words([i * 2 + t; 4]));
+                        let _ = a.compare_exchange(cur, Words([i * 2 + t; 4]));
                     }
                 })
             })

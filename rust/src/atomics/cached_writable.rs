@@ -74,14 +74,16 @@ impl<T: AtomicValue> CachedWritable<T> {
         let w_mark = (wr & MARK) as u64;
         if z.mark != w_mark {
             // Pending: move W's value into Z and re-match the marks.
-            self.z.cas(
-                z,
-                ZVal {
-                    value: Self::w_value(wr),
-                    seq: z.seq + 1,
-                    mark: w_mark,
-                },
-            )
+            self.z
+                .compare_exchange(
+                    z,
+                    ZVal {
+                        value: Self::w_value(wr),
+                        seq: z.seq + 1,
+                        mark: w_mark,
+                    },
+                )
+                .is_ok()
         } else {
             true
         }
@@ -147,18 +149,20 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
         }
     }
 
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
+        // The inner CAS's witness feeds each retry — Z is loaded exactly
+        // once, never re-loaded.
+        let mut z = self.z.load();
         for _ in 0..2 {
-            let z = self.z.load();
             if z.value != expected {
-                return false;
+                return Err(z.value); // witness from the Z read
             }
             if expected == desired {
-                return true;
+                return Ok(z.value);
             }
             // Help writers first so we never starve a buffered store.
             self.help_write();
-            if self.z.cas(
+            match self.z.compare_exchange(
                 z,
                 ZVal {
                     value: desired,
@@ -166,13 +170,17 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
                     mark: z.mark,
                 },
             ) {
-                return true;
+                Ok(_) => return Ok(expected),
+                Err(w) => z = w,
             }
             // Failure may be a same-value transfer bumping seq; Z.value
             // can have stayed == expected at most once (§3.3), so retry
-            // exactly once before returning false.
+            // exactly once before giving up (wait-freedom).
         }
-        false
+        // Both bounded attempts lost; the last witness may, rarely,
+        // equal `expected` again (see the module docs' witness
+        // contract) — callers treat Err as "retry from here".
+        Err(z.value)
     }
 
     fn name() -> &'static str {
@@ -196,8 +204,8 @@ mod tests {
         assert_eq!(a.load(), Words([1, 2]));
         a.store(Words([3, 4]));
         assert_eq!(a.load(), Words([3, 4]));
-        assert!(a.cas(Words([3, 4]), Words([5, 6])));
-        assert!(!a.cas(Words([3, 4]), Words([7, 8])));
+        assert_eq!(a.compare_exchange(Words([3, 4]), Words([5, 6])), Ok(Words([3, 4])));
+        assert_eq!(a.compare_exchange(Words([3, 4]), Words([7, 8])), Err(Words([5, 6])));
         assert_eq!(a.load(), Words([5, 6]));
     }
 
@@ -231,10 +239,14 @@ mod tests {
                 let a = Arc::clone(&a);
                 std::thread::spawn(move || {
                     let mut wins = 0u64;
+                    let mut cur = a.load();
                     while wins < 2_000 {
-                        let cur = a.load();
-                        if a.cas(cur, Words([cur.0[0] + 1, cur.0[1]])) {
-                            wins += 1;
+                        match a.compare_exchange(cur, Words([cur.0[0] + 1, cur.0[1]])) {
+                            Ok(prev) => {
+                                wins += 1;
+                                cur = Words([prev.0[0] + 1, prev.0[1]]);
+                            }
+                            Err(w) => cur = w,
                         }
                     }
                 })

@@ -147,10 +147,37 @@ impl<T: AtomicValue> BigAtomic<T> for HtmSim<T> {
     }
 
     #[inline]
-    fn cas(&self, expected: T, desired: T) -> bool {
-        let seen = self.transact(|cur| if cur == expected { Some(desired) } else { None });
-        seen == expected
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
+        // AA rule: an equal desired commits read-only — a physical
+        // rewrite of identical bytes would bump the version and
+        // spuriously abort every concurrent transaction for nothing.
+        let seen = self.transact(|cur| {
+            if cur == expected && expected != desired {
+                Some(desired)
+            } else {
+                None
+            }
+        });
+        if seen == expected {
+            Ok(seen)
+        } else {
+            Err(seen) // the value the committed transaction read — exact
+        }
     }
+
+    /// Native exchange: one write transaction, previous value from the
+    /// committed read.
+    #[inline]
+    fn swap(&self, new: T) -> T {
+        self.transact(|_| Some(new))
+    }
+
+    // `fetch_update` keeps the default (load + CAS loop): a native
+    // override would run the user closure inside `transact`, whose
+    // fallback path holds the non-panic-safe fallback lock — a
+    // panicking `f` would wedge the atomic. The internal closures used
+    // by load/store/compare_exchange/swap never panic, so those stay
+    // transactional.
 
     fn name() -> &'static str {
         "HTM(sim)"
@@ -168,8 +195,8 @@ mod tests {
         let a: HtmSim<Words<2>> = HtmSim::new(Words([1, 2]));
         assert_eq!(a.load(), Words([1, 2]));
         a.store(Words([3, 4]));
-        assert!(a.cas(Words([3, 4]), Words([5, 6])));
-        assert!(!a.cas(Words([3, 4]), Words([7, 8])));
+        assert_eq!(a.compare_exchange(Words([3, 4]), Words([5, 6])), Ok(Words([3, 4])));
+        assert_eq!(a.compare_exchange(Words([3, 4]), Words([7, 8])), Err(Words([5, 6])));
         assert_eq!(a.load(), Words([5, 6]));
     }
 
@@ -183,12 +210,11 @@ mod tests {
                 let a = Arc::clone(&a);
                 std::thread::spawn(move || {
                     for _ in 0..per {
-                        loop {
-                            let cur = a.load();
-                            if a.cas(cur, Words([cur.0[0] + 1, cur.0[1] + 2, cur.0[2] + 3])) {
-                                break;
-                            }
-                        }
+                        let _ = a
+                            .fetch_update(|cur| {
+                                Some(Words([cur.0[0] + 1, cur.0[1] + 2, cur.0[2] + 3]))
+                            })
+                            .expect("unconditional update");
                     }
                 })
             })

@@ -46,45 +46,66 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
 
     #[inline]
     fn store(&self, val: T) {
+        // Not `swap`: the previous value is unwanted, and reading it
+        // would add a dependent dereference of the cold old node.
         let new = Box::into_raw(Box::new(Node { value: val }));
         let old = self.ptr.swap(new, Ordering::SeqCst);
         // SAFETY: old is unlinked and was uniquely owned by this atomic.
         unsafe { retire_box(old) };
     }
 
-    #[inline]
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let h = HazardPointer::new();
-        let p = h.protect(&self.ptr);
-        // SAFETY: protected.
-        let cur = unsafe { (*p).value };
-        if cur != expected {
-            return false;
-        }
-        if expected == desired {
-            // Never replace a value with an equal one (AA-freedom; also
-            // avoids disturbing concurrent CASes, §3.1 discussion).
-            return true;
-        }
-        let new = Box::into_raw(Box::new(Node { value: desired }));
-        // The hazard on p prevents its address being recycled, so this
-        // CAS succeeding means the logical value is still `expected`
-        // (no ABA).
-        match self
-            .ptr
-            .compare_exchange(p, new, Ordering::SeqCst, Ordering::SeqCst)
-        {
-            Ok(_) => {
-                // SAFETY: p is now unlinked.
-                unsafe { retire_box(p) };
-                true
+        let mut p = h.protect(&self.ptr);
+        loop {
+            // SAFETY: protected.
+            let cur = unsafe { (*p).value };
+            if cur != expected {
+                return Err(cur); // exact witness: atomically read just now
             }
-            Err(_) => {
-                // SAFETY: new was never published.
-                drop(unsafe { Box::from_raw(new) });
-                false
+            if expected == desired {
+                // Never replace a value with an equal one (AA-freedom;
+                // also avoids disturbing concurrent CASes, §3.1).
+                return Ok(cur);
+            }
+            let new = Box::into_raw(Box::new(Node { value: desired }));
+            // The hazard on p prevents its address being recycled, so
+            // this CAS succeeding means the logical value is still
+            // `expected` (no ABA).
+            match self
+                .ptr
+                .compare_exchange(p, new, Ordering::SeqCst, Ordering::SeqCst)
+            {
+                Ok(_) => {
+                    // SAFETY: p is now unlinked.
+                    unsafe { retire_box(p) };
+                    return Ok(cur);
+                }
+                Err(_) => {
+                    // SAFETY: new was never published.
+                    drop(unsafe { Box::from_raw(new) });
+                    // Re-protect the new current node and re-compare:
+                    // either the witness now differs (Err) or a value-
+                    // level ABA restored `expected` and we retry the
+                    // install. Lock-free: every iteration implies a
+                    // competing update succeeded.
+                    p = h.protect(&self.ptr);
+                }
             }
         }
+    }
+
+    /// Native exchange: one pointer swap, previous value read from the
+    /// node this thread just unlinked (safe: only the unlinker retires).
+    fn swap(&self, val: T) -> T {
+        let new = Box::into_raw(Box::new(Node { value: val }));
+        let old = self.ptr.swap(new, Ordering::SeqCst);
+        // SAFETY: old is unlinked by us and not yet retired; nodes are
+        // immutable after publish.
+        let prev = unsafe { (*old).value };
+        // SAFETY: old is unlinked and was uniquely owned by this atomic.
+        unsafe { retire_box(old) };
+        prev
     }
 
     fn name() -> &'static str {
@@ -103,24 +124,34 @@ mod tests {
     use std::sync::Arc;
 
     #[test]
-    fn test_roundtrip_and_cas() {
+    fn test_roundtrip_and_compare_exchange() {
         let a: Indirect<Words<3>> = Indirect::new(Words([1, 2, 3]));
         assert_eq!(a.load(), Words([1, 2, 3]));
         a.store(Words([4, 5, 6]));
-        assert!(!a.cas(Words([1, 2, 3]), Words([0, 0, 0])));
-        assert!(a.cas(Words([4, 5, 6]), Words([7, 8, 9])));
+        // Failed CAS witnesses the exact current value.
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([0, 0, 0])),
+            Err(Words([4, 5, 6]))
+        );
+        assert_eq!(
+            a.compare_exchange(Words([4, 5, 6]), Words([7, 8, 9])),
+            Ok(Words([4, 5, 6]))
+        );
         assert_eq!(a.load(), Words([7, 8, 9]));
+        assert_eq!(a.swap(Words([1, 1, 1])), Words([7, 8, 9]));
     }
 
     #[test]
-    fn test_cas_equal_value_is_noop_true() {
+    fn test_cas_equal_value_is_noop_ok() {
         let a: Indirect<Words<1>> = Indirect::new(Words([5]));
-        assert!(a.cas(Words([5]), Words([5])));
+        assert_eq!(a.compare_exchange(Words([5]), Words([5])), Ok(Words([5])));
         assert_eq!(a.load(), Words([5]));
     }
 
     #[test]
-    fn test_concurrent_cas_total() {
+    fn test_concurrent_witness_fed_cas_total() {
+        // The retry loop consumes the Err witness instead of re-loading;
+        // the counter still must be exact.
         let a: Arc<Indirect<Words<4>>> = Arc::new(Indirect::new(Words([0; 4])));
         let threads = 4;
         let per = 3_000u64;
@@ -129,13 +160,17 @@ mod tests {
                 let a = Arc::clone(&a);
                 std::thread::spawn(move || {
                     let mut wins = 0u64;
+                    let mut cur = a.load();
                     while wins < per {
-                        let cur = a.load();
                         let mut next = cur;
                         next.0[0] += 1;
                         next.0[1 + (t % 3)] ^= wins + 1;
-                        if a.cas(cur, next) {
-                            wins += 1;
+                        match a.compare_exchange(cur, next) {
+                            Ok(_) => {
+                                wins += 1;
+                                cur = next;
+                            }
+                            Err(w) => cur = w,
                         }
                     }
                 })

@@ -62,16 +62,32 @@ impl<T: AtomicValue> BigAtomic<T> for LockPool<T> {
     }
 
     #[inline]
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         self.lock().with(|| {
             // SAFETY: exclusive under the address's pool lock.
             let cur = unsafe { *self.data.get() };
             if cur == expected {
                 unsafe { *self.data.get() = desired };
-                true
+                Ok(cur)
             } else {
-                false
+                Err(cur)
             }
+        })
+    }
+
+    /// Native exchange under the pool lock.
+    ///
+    /// `fetch_update` deliberately keeps the default (load + CAS loop):
+    /// the locks here are *shared* across unrelated atomics, so running
+    /// a user closure under one invites cross-object deadlock — the
+    /// same reason libatomic exposes no closure primitive.
+    #[inline]
+    fn swap(&self, new: T) -> T {
+        self.lock().with(|| {
+            // SAFETY: exclusive under the address's pool lock.
+            let cur = unsafe { *self.data.get() };
+            unsafe { *self.data.get() = new };
+            cur
         })
     }
 
@@ -91,7 +107,14 @@ mod tests {
         let a: LockPool<Words<4>> = LockPool::new(Words([1, 2, 3, 4]));
         assert_eq!(a.load(), Words([1, 2, 3, 4]));
         a.store(Words([5, 6, 7, 8]));
-        assert!(a.cas(Words([5, 6, 7, 8]), Words([0, 0, 0, 1])));
+        assert_eq!(
+            a.compare_exchange(Words([5, 6, 7, 8]), Words([0, 0, 0, 1])),
+            Ok(Words([5, 6, 7, 8]))
+        );
+        assert_eq!(
+            a.compare_exchange(Words([5, 6, 7, 8]), Words([9; 4])),
+            Err(Words([0, 0, 0, 1]))
+        );
         assert_eq!(a.load(), Words([0, 0, 0, 1]));
     }
 
@@ -107,12 +130,9 @@ mod tests {
                 std::thread::spawn(move || {
                     let target = if i % 2 == 0 { a } else { b };
                     for _ in 0..5_000 {
-                        loop {
-                            let cur = target.load();
-                            if target.cas(cur, Words([cur.0[0] + 1])) {
-                                break;
-                            }
-                        }
+                        let _ = target
+                            .fetch_update(|v| Some(Words([v.0[0] + 1])))
+                            .expect("unconditional update");
                     }
                 })
             })

@@ -1,4 +1,6 @@
-//! Big atomics: `load` / `store` / `cas` over k adjacent 64-bit words.
+//! Big atomics: `std::atomic`-shaped operations — `load` / `store` /
+//! `compare_exchange` / `swap` / `fetch_update` — over k adjacent
+//! 64-bit words.
 //!
 //! The eight implementations the paper evaluates, all behind one
 //! [`BigAtomic`] trait so the §5 harness drives them uniformly:
@@ -10,7 +12,52 @@
 //!
 //! Values are plain-old-data types implementing [`AtomicValue`]; the
 //! provided [`Words`] carries `K` raw words and is what the benchmarks
-//! instantiate (`w` sweep of Fig 2).
+//! instantiate (`w` sweep of Fig 2). `u64` also implements
+//! [`AtomicValue`], so single-word keys/values compose with the generic
+//! [`crate::hash`] tables.
+//!
+//! ## The witnessing CAS
+//!
+//! The primitive update operation is
+//! [`compare_exchange`](BigAtomic::compare_exchange):
+//!
+//! ```
+//! use big_atomics::atomics::{BigAtomic, CachedMemEff, Words};
+//!
+//! let a: CachedMemEff<Words<4>> = CachedMemEff::new(Words([1, 2, 3, 4]));
+//! let v = a.load();
+//! // Success returns the consumed value...
+//! assert_eq!(a.compare_exchange(v, Words([5, 6, 7, 8])), Ok(v));
+//! // ...failure returns the *witnessed* current value, so retry loops
+//! // never re-load (the dominant cost under contention).
+//! assert_eq!(a.compare_exchange(v, Words([0; 4])), Err(Words([5, 6, 7, 8])));
+//! // The closure form packages the whole retry loop:
+//! let prev = a
+//!     .fetch_update(|mut cur| {
+//!         cur.0[0] += 1;
+//!         Some(cur)
+//!     })
+//!     .unwrap();
+//! assert_eq!(prev, Words([5, 6, 7, 8]));
+//! assert_eq!(a.swap(Words([9; 4])), Words([6, 6, 7, 8]));
+//! ```
+//!
+//! **Witness contract.** `Err(w)` means the CAS failed and `w` is a
+//! linearizable read of the value taken *during the call*. On the exact
+//! (lock-based) backends `w != expected` always holds. On the wait-free
+//! cached backends ([`CachedWaitFree`], [`CachedWritable`]) a competing
+//! update can change the value away from `expected` (failing the CAS)
+//! and a later one can restore it before the witness read — so `w` may,
+//! rarely, equal `expected` again. Treat `Err(w)` as "retry from `w`"
+//! (what [`fetch_update`](BigAtomic::fetch_update) does), never as a
+//! proof that `w != expected`. [`CachedMemEff`] and [`Indirect`] retry
+//! internally (they are lock-free regardless) and guarantee
+//! `w != expected`.
+//!
+//! **AA rule.** `compare_exchange(v, v)` with `v` current returns
+//! `Ok(v)` *without* performing a physical update: the cached algorithms
+//! must never replace a value by an equal one (§3.1 — it would disturb
+//! concurrent CASes for no observable effect).
 
 pub mod bytewise;
 pub mod cached_memeff;
@@ -41,7 +88,8 @@ pub use simplock::SimpLock;
 /// * every bit pattern produced by word-wise copies of a valid value is
 ///   itself valid (plain old data, no padding that `PartialEq` inspects);
 /// * `PartialEq` is an equivalence relation on the bit level (the
-///   algorithms' AA-freedom argument compares values).
+///   algorithms' AA-freedom argument compares values, and the hash
+///   tables hash values word-wise).
 pub unsafe trait AtomicValue:
     Copy + PartialEq + Default + Send + Sync + 'static
 {
@@ -63,6 +111,11 @@ impl<const K: usize> Default for Words<K> {
 // SAFETY: repr(C) array of u64 — no padding, align 8, bitwise Eq.
 unsafe impl<const K: usize> AtomicValue for Words<K> {}
 
+// SAFETY: one word, bitwise Eq; the align assertion below guards exotic
+// 32-bit targets where u64 is only 4-byte aligned.
+unsafe impl AtomicValue for u64 {}
+const _: () = assert!(std::mem::align_of::<u64>() == 8);
+
 /// Implement [`AtomicValue`] for a `#[repr(C)]` pod struct made of
 /// 8-byte fields. The macro adds compile-time layout assertions.
 #[macro_export]
@@ -80,7 +133,8 @@ macro_rules! impl_atomic_value {
 
 /// The common interface of all big-atomic implementations — deliberately
 /// `std::atomic`-shaped (the paper's implementations share the
-/// `std::atomic` interface, §1).
+/// `std::atomic` interface, §1). See the [module docs](self) for the
+/// witness contract and the AA rule.
 pub trait BigAtomic<T: AtomicValue>: Send + Sync {
     /// Construct holding `init`.
     fn new(init: T) -> Self
@@ -94,9 +148,69 @@ pub trait BigAtomic<T: AtomicValue>: Send + Sync {
     /// (lock-free, not wait-free — Table 1's load+cas row).
     fn store(&self, val: T);
 
-    /// Linearizable compare-and-swap: iff the current value equals
-    /// `expected`, replace with `desired` and return true.
-    fn cas(&self, expected: T, desired: T) -> bool;
+    /// Linearizable compare-and-swap with a witness: iff the current
+    /// value equals `expected`, replace it with `desired` and return
+    /// `Ok(expected)`; otherwise return `Err(w)` where `w` is the
+    /// current value read during the call (see the module docs for the
+    /// exactness caveat on the wait-free backends). The witness is what
+    /// retry loops continue from — no separate re-load.
+    #[must_use = "the Err witness is the re-load a retry loop would otherwise pay for; use \
+                  `.is_ok()` if only success matters"]
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T>;
+
+    /// Atomically replace the value with `new`, returning the previous
+    /// value. Storing a value equal to the current one returns it
+    /// unchanged (the AA rule). The default is a witness-fed CAS loop;
+    /// backends with a cheap native exchange override it.
+    #[must_use = "swap returns the previous value; use `store` to discard it"]
+    fn swap(&self, new: T) -> T {
+        let mut cur = self.load();
+        loop {
+            if cur == new {
+                return cur;
+            }
+            match self.compare_exchange(cur, new) {
+                Ok(prev) => return prev,
+                Err(w) => cur = w,
+            }
+        }
+    }
+
+    /// Atomic try-update: feed the current value to `f`; if `f` returns
+    /// `Some(next)`, CAS it in, retrying from the witness on failure.
+    /// Returns `Ok(prev)` with the value `f` mapped to the installed
+    /// result, or `Err(cur)` once `f` returns `None`.
+    ///
+    /// This is the atomic-try-update idiom (and the building block of
+    /// LL/SC-from-CAS constructions — see `apps::llsc`); `f` may run
+    /// several times and must be side-effect free.
+    #[must_use = "fetch_update reports whether the update was applied and the value it acted on"]
+    fn fetch_update<F>(&self, mut f: F) -> Result<T, T>
+    where
+        Self: Sized,
+        F: FnMut(T) -> Option<T>,
+    {
+        let mut prev = self.load();
+        loop {
+            match f(prev) {
+                Some(next) => match self.compare_exchange(prev, next) {
+                    Ok(witnessed) => return Ok(witnessed),
+                    Err(w) => prev = w,
+                },
+                None => return Err(prev),
+            }
+        }
+    }
+
+    /// Boolean compare-and-swap (legacy shim).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `compare_exchange(expected, desired)`: it returns the witnessed current \
+                value on failure so retry loops skip the re-load; `.is_ok()` recovers this bool"
+    )]
+    fn cas(&self, expected: T, desired: T) -> bool {
+        self.compare_exchange(expected, desired).is_ok()
+    }
 
     /// Implementation name for reports.
     fn name() -> &'static str
@@ -115,14 +229,14 @@ pub trait BigAtomic<T: AtomicValue>: Send + Sync {
 /// `0..n` to values, each slot independently atomic and cache-padded the
 /// way the paper aligns elements to 64-byte boundaries).
 pub struct AtomicArray<T: AtomicValue, A: BigAtomic<T>> {
-    slots: Box<[crossbeam_utils::CachePadded<A>]>,
+    slots: Box<[crate::util::CachePadded<A>]>,
     _marker: std::marker::PhantomData<T>,
 }
 
 impl<T: AtomicValue, A: BigAtomic<T>> AtomicArray<T, A> {
     pub fn new(n: usize, init: T) -> Self {
         let slots = (0..n)
-            .map(|_| crossbeam_utils::CachePadded::new(A::new(init)))
+            .map(|_| crate::util::CachePadded::new(A::new(init)))
             .collect();
         Self {
             slots,
@@ -140,9 +254,17 @@ impl<T: AtomicValue, A: BigAtomic<T>> AtomicArray<T, A> {
         self.slots.is_empty()
     }
 
+    /// The slot at `i`; panics when `i >= len()` (bounds-checked like a
+    /// slice — use [`try_get`](Self::try_get) for fallible access).
     #[inline]
     pub fn get(&self, i: usize) -> &A {
         &self.slots[i]
+    }
+
+    /// The slot at `i`, or `None` out of bounds.
+    #[inline]
+    pub fn try_get(&self, i: usize) -> Option<&A> {
+        self.slots.get(i).map(|s| &**s)
     }
 
     /// §5.5 census: sum of per-slot indirect bytes.
@@ -164,6 +286,15 @@ mod tests {
     }
 
     #[test]
+    fn test_u64_is_atomic_value() {
+        assert_eq!(<u64 as AtomicValue>::WORDS, 1);
+        let a: SeqLock<u64> = SeqLock::new(7);
+        assert_eq!(a.load(), 7);
+        assert_eq!(a.compare_exchange(7, 9), Ok(7));
+        assert_eq!(a.load(), 9);
+    }
+
+    #[test]
     fn test_impl_atomic_value_macro() {
         #[repr(C, align(8))]
         #[derive(Copy, Clone, PartialEq, Default)]
@@ -173,5 +304,51 @@ mod tests {
         }
         impl_atomic_value!(Pair);
         assert_eq!(<Pair as AtomicValue>::WORDS, 2);
+    }
+
+    #[test]
+    fn test_cas_shim_matches_compare_exchange() {
+        let a: SeqLock<Words<2>> = SeqLock::new(Words([1, 2]));
+        #[allow(deprecated)]
+        {
+            assert!(!a.cas(Words([0, 0]), Words([3, 4])));
+            assert!(a.cas(Words([1, 2]), Words([3, 4])));
+        }
+        assert_eq!(a.load(), Words([3, 4]));
+    }
+
+    #[test]
+    fn test_atomic_array_try_get_in_and_out_of_bounds() {
+        let arr: AtomicArray<Words<2>, SeqLock<Words<2>>> = AtomicArray::new(4, Words([1, 1]));
+        assert_eq!(arr.len(), 4);
+        assert!(arr.try_get(3).is_some());
+        assert!(arr.try_get(4).is_none());
+        assert!(arr.try_get(usize::MAX).is_none());
+        assert_eq!(arr.try_get(2).unwrap().load(), Words([1, 1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn test_atomic_array_get_out_of_bounds_panics() {
+        let arr: AtomicArray<Words<1>, SeqLock<Words<1>>> = AtomicArray::new(2, Words([0]));
+        let _ = arr.get(2);
+    }
+
+    #[test]
+    fn test_default_swap_and_fetch_update() {
+        // Exercised through a backend that does NOT override the
+        // provided combinators (CachedWaitFree), so the defaults
+        // themselves are under test.
+        let a: CachedWaitFree<Words<2>> = CachedWaitFree::new(Words([1, 0]));
+        assert_eq!(a.swap(Words([2, 0])), Words([1, 0]));
+        assert_eq!(a.swap(Words([2, 0])), Words([2, 0])); // AA: no-op
+        let r = a.fetch_update(|mut v| {
+            v.0[1] = v.0[0] * 10;
+            Some(v)
+        });
+        assert_eq!(r, Ok(Words([2, 0])));
+        assert_eq!(a.load(), Words([2, 20]));
+        let r = a.fetch_update(|_| None);
+        assert_eq!(r, Err(Words([2, 20])));
     }
 }

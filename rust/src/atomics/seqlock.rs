@@ -92,7 +92,7 @@ impl<T: AtomicValue> BigAtomic<T> for SeqLock<T> {
     }
 
     #[inline]
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let v = self.lock();
         let cur = self.data.read();
         let ok = cur == expected;
@@ -100,8 +100,27 @@ impl<T: AtomicValue> BigAtomic<T> for SeqLock<T> {
             self.data.write(desired);
         }
         self.unlock(v);
-        ok
+        if ok {
+            Ok(cur)
+        } else {
+            Err(cur)
+        }
     }
+
+    /// Native exchange: one lock round-trip, exact previous value.
+    #[inline]
+    fn swap(&self, new: T) -> T {
+        let v = self.lock();
+        let cur = self.data.read();
+        self.data.write(new);
+        self.unlock(v);
+        cur
+    }
+
+    // `fetch_update` deliberately keeps the default (load + CAS loop):
+    // a native override would run the user closure while holding the
+    // version lock, and the lock is not panic-safe — a panicking `f`
+    // would wedge every other operation on this atomic forever.
 
     fn name() -> &'static str {
         "SeqLock"
@@ -123,11 +142,21 @@ mod tests {
     }
 
     #[test]
-    fn test_cas_semantics() {
+    fn test_compare_exchange_witness() {
         let a: SeqLock<Words<2>> = SeqLock::new(Words([0, 0]));
-        assert!(!a.cas(Words([9, 9]), Words([1, 1])));
-        assert!(a.cas(Words([0, 0]), Words([1, 1])));
+        // Failure witnesses the exact current value.
+        assert_eq!(a.compare_exchange(Words([9, 9]), Words([1, 1])), Err(Words([0, 0])));
+        assert_eq!(a.compare_exchange(Words([0, 0]), Words([1, 1])), Ok(Words([0, 0])));
         assert_eq!(a.load(), Words([1, 1]));
+    }
+
+    #[test]
+    fn test_swap_and_fetch_update() {
+        let a: SeqLock<Words<2>> = SeqLock::new(Words([3, 4]));
+        assert_eq!(a.swap(Words([5, 6])), Words([3, 4]));
+        assert_eq!(a.fetch_update(|v| Some(Words([v.0[0] + 1, v.0[1]]))), Ok(Words([5, 6])));
+        assert_eq!(a.fetch_update(|_| None), Err(Words([6, 6])));
+        assert_eq!(a.load(), Words([6, 6]));
     }
 
     #[test]

@@ -37,18 +37,33 @@ impl<T: AtomicValue> BigAtomic<T> for SimpLock<T> {
     }
 
     #[inline]
-    fn cas(&self, expected: T, desired: T) -> bool {
+    fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         self.lock.with(|| {
             // SAFETY: exclusive under the lock.
             let cur = unsafe { *self.data.get() };
             if cur == expected {
                 unsafe { *self.data.get() = desired };
-                true
+                Ok(cur)
             } else {
-                false
+                Err(cur)
             }
         })
     }
+
+    /// Native exchange under the per-object lock.
+    #[inline]
+    fn swap(&self, new: T) -> T {
+        self.lock.with(|| {
+            // SAFETY: exclusive under the lock.
+            let cur = unsafe { *self.data.get() };
+            unsafe { *self.data.get() = new };
+            cur
+        })
+    }
+
+    // `fetch_update` keeps the default (load + CAS loop): running the
+    // user closure under the non-panic-safe spinlock would wedge the
+    // atomic if `f` panics.
 
     fn name() -> &'static str {
         "SimpLock"
@@ -62,18 +77,20 @@ mod tests {
     use std::sync::Arc;
 
     #[test]
-    fn test_roundtrip_and_cas() {
+    fn test_roundtrip_and_compare_exchange() {
         let a: SimpLock<Words<2>> = SimpLock::new(Words([7, 8]));
         assert_eq!(a.load(), Words([7, 8]));
         a.store(Words([1, 2]));
-        assert!(a.cas(Words([1, 2]), Words([3, 4])));
-        assert!(!a.cas(Words([1, 2]), Words([9, 9])));
+        assert_eq!(a.compare_exchange(Words([1, 2]), Words([3, 4])), Ok(Words([1, 2])));
+        assert_eq!(a.compare_exchange(Words([1, 2]), Words([9, 9])), Err(Words([3, 4])));
         assert_eq!(a.load(), Words([3, 4]));
+        assert_eq!(a.swap(Words([5, 5])), Words([3, 4]));
     }
 
     #[test]
     fn test_concurrent_cas_counter() {
-        // Each thread increments word0 via cas; total must be exact.
+        // Each thread increments word0 via a witness-fed CAS loop; the
+        // total must be exact.
         let a: Arc<SimpLock<Words<2>>> = Arc::new(SimpLock::new(Words([0, 0])));
         let threads = 4;
         let per = 5_000u64;
@@ -82,11 +99,12 @@ mod tests {
                 let a = Arc::clone(&a);
                 std::thread::spawn(move || {
                     for _ in 0..per {
+                        let mut cur = a.load();
                         loop {
-                            let cur = a.load();
                             let next = Words([cur.0[0] + 1, cur.0[1] + 3]);
-                            if a.cas(cur, next) {
-                                break;
+                            match a.compare_exchange(cur, next) {
+                                Ok(_) => break,
+                                Err(w) => cur = w,
                             }
                         }
                     }

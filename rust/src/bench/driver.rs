@@ -15,8 +15,11 @@ use crate::atomics::{
     AtomicArray, BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect,
     LockPool, SeqLock, SimpLock, Words,
 };
-use crate::hash::{CacheHash, Chaining, ConcurrentMap, GlobalLockMap, LinkVal, ShardedLockMap};
+use crate::hash::{
+    CacheHash, Chaining, ConcurrentMap, GlobalLockMap, Link, LinkVal, ShardedLockMap,
+};
 use crate::runtime::workload_gen::WorkloadEngine;
+use crate::util::rng::mix64;
 
 use super::workload::{generate_rust, GenOp, Op, WorkloadSpec};
 
@@ -73,13 +76,16 @@ impl<const K: usize, A: BigAtomic<Words<K>>> BenchTarget for ArrayTarget<K, A> {
                     if K > 1 {
                         v[1] = op.key;
                     }
-                    let _ = slot.cas(cur, Words(v));
+                    // Single attempt, paper semantics: a lost race means
+                    // the slot is no longer empty. The witness is
+                    // discarded (no retry) by design.
+                    let _ = slot.compare_exchange(cur, Words(v));
                 }
             }
             Op::Delete => {
                 let cur = slot.load();
                 if cur.0[0] == 1 {
-                    let _ = slot.cas(cur, Words([0; K]));
+                    let _ = slot.compare_exchange(cur, Words([0; K]));
                 }
             }
         }
@@ -87,6 +93,54 @@ impl<const K: usize, A: BigAtomic<Words<K>>> BenchTarget for ArrayTarget<K, A> {
 
     fn label(&self) -> String {
         format!("{}[k={}]", A::name(), K)
+    }
+}
+
+/// The `fetch_update` op mix: updates are read-modify-write increments
+/// (the paper's §2 "handful of fields updated together" shape) instead
+/// of blind flag CASes — every update *must* land, so contention cost is
+/// the witness-fed retry loop itself. Finds stay plain loads.
+pub struct FetchUpdateTarget<const K: usize, A: BigAtomic<Words<K>>> {
+    arr: AtomicArray<Words<K>, A>,
+}
+
+impl<const K: usize, A: BigAtomic<Words<K>>> FetchUpdateTarget<K, A> {
+    pub fn new(n: usize) -> Self {
+        Self {
+            arr: AtomicArray::new(n, Words([0; K])),
+        }
+    }
+
+    /// Sum of word-0 counters (equals the number of update ops executed
+    /// — the driver test's exactness check).
+    pub fn counter_sum(&self) -> u64 {
+        (0..self.arr.len())
+            .map(|i| self.arr.get(i).load().0[0])
+            .sum()
+    }
+}
+
+impl<const K: usize, A: BigAtomic<Words<K>>> BenchTarget for FetchUpdateTarget<K, A> {
+    #[inline]
+    fn exec(&self, op: &GenOp) {
+        let slot = self.arr.get(op.rank as usize);
+        if op.op.is_update() {
+            let _ = slot
+                .fetch_update(|mut v| {
+                    v.0[0] = v.0[0].wrapping_add(1);
+                    if K > 1 {
+                        v.0[K - 1] = op.key;
+                    }
+                    Some(v)
+                })
+                .expect("unconditional update");
+        } else {
+            std::hint::black_box(slot.load());
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("{}[k={},fetch_update]", A::name(), K)
     }
 }
 
@@ -184,6 +238,51 @@ pub fn make_array_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn BenchTa
     }
 }
 
+/// Build a `fetch_update`-mix target for (implementation, element words
+/// k, size n) — the read-modify-write companion of [`make_array_target`].
+pub fn make_fetch_update_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn BenchTarget> {
+    macro_rules! for_k {
+        ($kk:literal) => {{
+            match imp {
+                AtomicImpl::SeqLock => {
+                    Box::new(FetchUpdateTarget::<$kk, SeqLock<Words<$kk>>>::new(n))
+                        as Box<dyn BenchTarget>
+                }
+                AtomicImpl::SimpLock => {
+                    Box::new(FetchUpdateTarget::<$kk, SimpLock<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::LockPool => {
+                    Box::new(FetchUpdateTarget::<$kk, LockPool<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::Indirect => {
+                    Box::new(FetchUpdateTarget::<$kk, Indirect<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::CachedWaitFree => {
+                    Box::new(FetchUpdateTarget::<$kk, CachedWaitFree<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::CachedMemEff => {
+                    Box::new(FetchUpdateTarget::<$kk, CachedMemEff<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::CachedWritable => {
+                    Box::new(FetchUpdateTarget::<$kk, CachedWritable<Words<$kk>>>::new(n))
+                }
+                AtomicImpl::HtmSim => {
+                    Box::new(FetchUpdateTarget::<$kk, HtmSim<Words<$kk>>>::new(n))
+                }
+            }
+        }};
+    }
+    match k {
+        1 => for_k!(1),
+        2 => for_k!(2),
+        3 => for_k!(3),
+        4 => for_k!(4),
+        8 => for_k!(8),
+        16 => for_k!(16),
+        other => panic!("unsupported element size k={other} (use 1,2,3,4,8,16)"),
+    }
+}
+
 // ---------------------------------------------------------------------
 // §5.2/5.3 hash-table target.
 // ---------------------------------------------------------------------
@@ -222,6 +321,76 @@ impl BenchTarget for MapTarget {
 
     fn label(&self) -> String {
         self.map.map_name().to_string()
+    }
+}
+
+// ---------------------------------------------------------------------
+// §5.3 arbitrary-length-key/value hash-table target.
+// ---------------------------------------------------------------------
+
+/// Key/value width (words) of the wide map workload.
+pub const WIDE_WORDS: usize = 4;
+
+/// Expand a benchmark key into the 4-word key the §5.3 comparison feeds
+/// the generic tables (deterministic, collision-free in word 0).
+#[inline]
+pub fn widen_key(key: u64) -> Words<WIDE_WORDS> {
+    Words([key, mix64(key), key.rotate_left(17), !key])
+}
+
+/// The §5.3 arbitrary-length workload: a `CacheHash` with 4-word keys
+/// *and* 4-word values (a 9-word inlined link), driven by the same
+/// generated op stream as [`MapTarget`].
+pub struct WideMapTarget<A: BigAtomic<Link<Words<WIDE_WORDS>, Words<WIDE_WORDS>>>> {
+    map: CacheHash<A, Words<WIDE_WORDS>, Words<WIDE_WORDS>>,
+}
+
+impl<A: BigAtomic<Link<Words<WIDE_WORDS>, Words<WIDE_WORDS>>>> WideMapTarget<A> {
+    /// Prefill half the key space, like [`MapTarget::new`].
+    pub fn new(spec: &WorkloadSpec) -> Self {
+        let map: CacheHash<A, Words<WIDE_WORDS>, Words<WIDE_WORDS>> = CacheHash::new(spec.n);
+        for rank in (0..spec.n).step_by(2) {
+            let key = widen_key(mix64(rank as u64));
+            map.insert(key, Words([rank as u64; WIDE_WORDS]));
+        }
+        Self { map }
+    }
+}
+
+impl<A: BigAtomic<Link<Words<WIDE_WORDS>, Words<WIDE_WORDS>>>> BenchTarget for WideMapTarget<A> {
+    #[inline]
+    fn exec(&self, op: &GenOp) {
+        let key = widen_key(op.key);
+        match op.op {
+            Op::Find => {
+                std::hint::black_box(self.map.find(key));
+            }
+            Op::Insert => {
+                let _ = self.map.insert(key, Words([op.rank as u64; WIDE_WORDS]));
+            }
+            Op::Delete => {
+                let _ = self.map.remove(key);
+            }
+        }
+    }
+
+    fn label(&self) -> String {
+        format!("{}[wide k/v={}w]", self.map.map_name(), WIDE_WORDS)
+    }
+}
+
+/// Build a wide-map target over any big-atomic strategy.
+pub fn make_wide_map_target(imp: AtomicImpl, spec: &WorkloadSpec) -> Box<dyn BenchTarget> {
+    type L = Link<Words<WIDE_WORDS>, Words<WIDE_WORDS>>;
+    match imp {
+        AtomicImpl::SeqLock => Box::new(WideMapTarget::<SeqLock<L>>::new(spec)),
+        AtomicImpl::SimpLock => Box::new(WideMapTarget::<SimpLock<L>>::new(spec)),
+        AtomicImpl::LockPool => Box::new(WideMapTarget::<LockPool<L>>::new(spec)),
+        AtomicImpl::Indirect => Box::new(WideMapTarget::<Indirect<L>>::new(spec)),
+        AtomicImpl::CachedWaitFree => Box::new(WideMapTarget::<CachedWaitFree<L>>::new(spec)),
+        AtomicImpl::CachedMemEff => Box::new(WideMapTarget::<CachedMemEff<L>>::new(spec)),
+        AtomicImpl::CachedWritable => Box::new(WideMapTarget::<CachedWritable<L>>::new(spec)),
+        AtomicImpl::HtmSim => Box::new(WideMapTarget::<HtmSim<L>>::new(spec)),
     }
 }
 
@@ -405,6 +574,32 @@ pub fn run_map(
     run_throughput(&target, spec, threads, duration, source)
 }
 
+/// Convenience wrapper: the `fetch_update` op-mix benchmark.
+pub fn run_fetch_update(
+    imp: AtomicImpl,
+    k: usize,
+    spec: &WorkloadSpec,
+    threads: usize,
+    duration: Duration,
+    source: &OpSource,
+) -> RunResult {
+    let target = make_fetch_update_target(imp, k, spec.n);
+    run_throughput(&*target, spec, threads, duration, source)
+}
+
+/// Convenience wrapper: the §5.3 wide (4-word key/value) hash-table
+/// benchmark.
+pub fn run_map_wide(
+    imp: AtomicImpl,
+    spec: &WorkloadSpec,
+    threads: usize,
+    duration: Duration,
+    source: &OpSource,
+) -> RunResult {
+    let target = make_wide_map_target(imp, spec);
+    run_throughput(&*target, spec, threads, duration, source)
+}
+
 /// This machine's hardware parallelism (the paper's "96 SMT threads"
 /// reference point; 1 on the CI container — see DESIGN.md).
 pub fn hw_threads() -> usize {
@@ -490,6 +685,63 @@ mod tests {
             );
             assert!(r.total_ops > 0, "k={k}");
         }
+    }
+
+    #[test]
+    fn test_fetch_update_target_counts_exactly() {
+        // Every update op must land exactly once, even under contention:
+        // the witness-fed retry loop is the thing under test.
+        let t: FetchUpdateTarget<2, CachedMemEff<Words<2>>> = FetchUpdateTarget::new(64);
+        let spec = tiny_spec();
+        let ops = generate_rust(&spec, 4_000, 3);
+        let updates = ops.iter().filter(|o| o.op.is_update()).count() as u64;
+        std::thread::scope(|s| {
+            for chunk in ops.chunks(1_000) {
+                let t = &t;
+                s.spawn(move || {
+                    for op in chunk {
+                        // Clamp rank into the 64-slot array.
+                        let mut op = *op;
+                        op.rank %= 64;
+                        t.exec(&op);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.counter_sum(), updates);
+    }
+
+    #[test]
+    fn test_run_fetch_update_all_impls_smoke() {
+        let spec = tiny_spec();
+        for imp in AtomicImpl::ALL {
+            let r = run_fetch_update(imp, 4, &spec, 2, Duration::from_millis(15), &OpSource::Rust);
+            assert!(r.total_ops > 100, "{}: {} ops", imp.name(), r.total_ops);
+            assert!(r.label.contains("fetch_update"));
+        }
+    }
+
+    #[test]
+    fn test_run_map_wide_smoke() {
+        let spec = WorkloadSpec {
+            n: 256,
+            theta: 0.5,
+            update_pct: 50,
+            seed: 5,
+        };
+        for imp in [AtomicImpl::CachedMemEff, AtomicImpl::SeqLock] {
+            let r = run_map_wide(imp, &spec, 2, Duration::from_millis(25), &OpSource::Rust);
+            assert!(r.total_ops > 100, "{}: {} ops", imp.name(), r.total_ops);
+            assert!(r.label.contains("wide"));
+        }
+    }
+
+    #[test]
+    fn test_widen_key_injective_word0() {
+        for k in [0u64, 1, 99, u64::MAX] {
+            assert_eq!(widen_key(k).0[0], k);
+        }
+        assert_ne!(widen_key(1), widen_key(2));
     }
 
     #[test]

@@ -14,7 +14,8 @@ use std::path::Path;
 use std::time::Duration;
 
 use super::driver::{
-    hw_threads, run_atomics, run_map, AtomicImpl, MapImpl, OpSource, RunResult,
+    hw_threads, run_atomics, run_fetch_update, run_map, run_map_wide, AtomicImpl, MapImpl,
+    OpSource, RunResult,
 };
 use super::workload::WorkloadSpec;
 
@@ -313,6 +314,58 @@ pub fn fig3(cfg: &FigureCfg, source: &OpSource, panel: &str, oversub: bool) -> R
 }
 
 // ---------------------------------------------------------------------
+// Figure 3w — the §5.3 arbitrary-length rows: CacheHash with 4-word
+// keys AND 4-word values (9-word inlined links) across the big-atomic
+// strategies, with the u64 table as the narrow reference.
+// ---------------------------------------------------------------------
+pub fn fig3_wide(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let (p, _) = subscription_points();
+    let mut rep = Report::new("fig3_wide", &["u_pct", "impl", "mops"]);
+    for u in [0u32, 25, 50, 100] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: u,
+            seed: 0x3A,
+        };
+        for imp in [
+            AtomicImpl::SeqLock,
+            AtomicImpl::CachedWaitFree,
+            AtomicImpl::CachedMemEff,
+        ] {
+            let r = run_map_wide(imp, &spec, p, cfg.dur(), source);
+            rep.row(vec![u.to_string(), r.label.clone(), fmt_mops(&r)]);
+        }
+        // Narrow (u64 → u64) reference at matched parameters.
+        let r = run_map(MapImpl::CacheHashMemEff, &spec, p, cfg.dur(), source);
+        rep.row(vec![u.to_string(), format!("{}[u64]", r.label), fmt_mops(&r)]);
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------
+// Figure 2fu — the fetch_update op mix (read-modify-write updates that
+// must land) across the update-fraction sweep.
+// ---------------------------------------------------------------------
+pub fn fig2_fetch_update(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let (p, _) = subscription_points();
+    let mut rep = Report::new("fig2_fetch_update", &["u_pct", "impl", "mops"]);
+    for u in [5u32, 25, 50, 100] {
+        let spec = WorkloadSpec {
+            n: cfg.n,
+            theta: 0.0,
+            update_pct: u,
+            seed: 0x2F,
+        };
+        for imp in AtomicImpl::CORE {
+            let r = run_fetch_update(imp, 3, &spec, p, cfg.dur(), source);
+            rep.row(vec![u.to_string(), imp.name().into(), fmt_mops(&r)]);
+        }
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------
 // Figure 4 — vs open-source stand-ins: vary p and z.
 // ---------------------------------------------------------------------
 pub fn fig4(cfg: &FigureCfg, source: &OpSource) -> (Report, Report) {
@@ -467,11 +520,13 @@ pub fn run_all(cfg: &FigureCfg, source: &OpSource) -> Vec<String> {
     }
     save(fig2_w(cfg, source));
     save(fig2_p(cfg, source));
+    save(fig2_fetch_update(cfg, source));
     for panel in ["u", "z", "n"] {
         for oversub in [false, true] {
             save(fig3(cfg, source, panel, oversub));
         }
     }
+    save(fig3_wide(cfg, source));
     let (a, b) = fig4(cfg, source);
     save(a);
     save(b);
@@ -514,6 +569,17 @@ mod tests {
     fn test_table1_static() {
         let rep = table1();
         assert_eq!(rep.rows().len(), 6);
+    }
+
+    #[test]
+    fn test_fig3_wide_shape() {
+        let rep = fig3_wide(&quick_cfg(), &OpSource::Rust);
+        // 4 u-points x (3 wide series + 1 narrow reference).
+        assert_eq!(rep.rows().len(), 16);
+        assert!(rep.rows().iter().any(|r| r[1].contains("wide")));
+        for row in rep.rows() {
+            assert!(row[2].parse::<f64>().unwrap() > 0.0);
+        }
     }
 
     #[test]

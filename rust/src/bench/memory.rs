@@ -24,7 +24,7 @@ fn census_one<A: BigAtomic<Words<K>>>(n: usize) -> (usize, usize) {
     // Touch every slot with an update so indirect structures are live.
     for i in 0..n {
         let cur = arr.get(i).load();
-        arr.get(i).cas(cur, Words([i as u64 + 1; K]));
+        let _ = arr.get(i).compare_exchange(cur, Words([i as u64 + 1; K]));
     }
     let inline = n * std::mem::size_of::<A>();
     let indirect = arr.indirect_bytes();
@@ -87,7 +87,7 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
         .collect();
     for (i, a) in arr.iter().enumerate() {
         let cur = a.load();
-        a.cas(cur, Words([i as u64 + 1; K]));
+        let _ = a.compare_exchange(cur, Words([i as u64 + 1; K]));
     }
     let inline = n * std::mem::size_of::<CachedMemEff<Words<K>>>();
     let pool_nodes = domain.allocated_nodes() as usize;

@@ -48,6 +48,14 @@ impl Op {
             _ => Op::Find,
         }
     }
+
+    /// Whether this op mutates (insert/delete — the paper's update
+    /// fraction `u`; the `fetch_update` mix maps these to
+    /// read-modify-write increments).
+    #[inline]
+    pub fn is_update(self) -> bool {
+        !matches!(self, Op::Find)
+    }
 }
 
 /// A quantized Zipfian sampler over `0..n` with exponent `theta`.
@@ -340,6 +348,13 @@ mod tests {
                 assert!((ins as f64 - del as f64).abs() / total as f64 <= 0.02);
             }
         }
+    }
+
+    #[test]
+    fn test_op_is_update() {
+        assert!(!Op::Find.is_update());
+        assert!(Op::Insert.is_update());
+        assert!(Op::Delete.is_update());
     }
 
     #[test]

@@ -16,12 +16,12 @@ use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use crate::apps::stats::{Snapshot, StatsCell};
 use crate::atomics::CachedMemEff;
 use crate::bench::workload::{generate_rust, GenOp, Op, WorkloadSpec};
 use crate::hash::{CacheHash, ConcurrentMap, LinkVal};
 use crate::runtime::{LatencySummary, Runtime};
+use crate::util::error::Result;
 
 #[derive(Clone, Debug)]
 pub struct KvConfig {
@@ -62,6 +62,11 @@ pub struct KvReport {
     pub latency: Option<LatencySummary>,
     /// Raw per-request latency samples (ns), for offline analysis.
     pub sample_count: usize,
+    /// Always-consistent (count, sum, min, max) of the per-request
+    /// latency (ns), accumulated by every worker through one big-atomic
+    /// `fetch_update` cell — no lock, no torn snapshot, no artifacts
+    /// needed.
+    pub latency_stats: Snapshot,
 }
 
 impl KvReport {
@@ -99,6 +104,7 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
     };
 
     let finds = AtomicU64::new(0);
+    let lat_stats: StatsCell<CachedMemEff<Snapshot>> = StatsCell::new();
     let inserts = AtomicU64::new(0);
     let deletes = AtomicU64::new(0);
     let served = AtomicU64::new(0);
@@ -116,6 +122,7 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
             let deletes = &deletes;
             let served = &served;
             let latencies = &latencies;
+            let lat_stats = &lat_stats;
             s.spawn(move || {
                 let mut local_lat: Vec<f32> = Vec::new();
                 loop {
@@ -140,7 +147,9 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
                     served.fetch_add(batch.len() as u64, Ordering::Relaxed);
                     // Per-request latency ≈ (queueing + service) / batch.
                     let total_ns = enqueued.elapsed().as_nanos() as f32;
-                    local_lat.push(total_ns / batch.len() as f32);
+                    let per_req = total_ns / batch.len() as f32;
+                    local_lat.push(per_req);
+                    lat_stats.record(per_req as u64);
                 }
                 latencies.lock().unwrap().extend(local_lat);
             });
@@ -179,6 +188,7 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
         deletes: deletes.load(Ordering::SeqCst),
         latency,
         sample_count: lat_samples.len(),
+        latency_stats: lat_stats.snapshot(),
     })
 }
 
@@ -206,5 +216,11 @@ mod tests {
         // ~30% updates
         let upd = (rep.inserts + rep.deletes) as f64 / rep.total_requests as f64;
         assert!((upd - 0.30).abs() < 0.05, "update frac {upd}");
+        // The fetch_update stats cell saw every batch, consistently.
+        assert_eq!(rep.latency_stats.count as usize, rep.sample_count);
+        if rep.latency_stats.count > 0 {
+            let mean = rep.latency_stats.mean().unwrap();
+            assert!(rep.latency_stats.min as f64 <= mean && mean <= rep.latency_stats.max as f64);
+        }
     }
 }

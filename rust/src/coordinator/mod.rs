@@ -9,7 +9,7 @@
 
 pub mod kv_service;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::bench::driver::OpSource;
 use crate::bench::figures::{self, FigureCfg};
@@ -69,6 +69,7 @@ impl Coordinator {
                 "n" => save(figures::fig2_n(cfg, &source, oversub))?,
                 "w" => save(figures::fig2_w(cfg, &source))?,
                 "p" => save(figures::fig2_p(cfg, &source))?,
+                "fu" => save(figures::fig2_fetch_update(cfg, &source))?,
                 "" | "all" => {
                     for ov in [false, true] {
                         save(figures::fig2_u(cfg, &source, ov))?;
@@ -77,8 +78,9 @@ impl Coordinator {
                     }
                     save(figures::fig2_w(cfg, &source))?;
                     save(figures::fig2_p(cfg, &source))?;
+                    save(figures::fig2_fetch_update(cfg, &source))?;
                 }
-                other => anyhow::bail!("fig2 panel {other}: use u|z|n|w|p"),
+                other => crate::bail!("fig2 panel {other}: use u|z|n|w|p|fu"),
             },
             "fig3" => match panel {
                 "" | "all" => {
@@ -87,7 +89,9 @@ impl Coordinator {
                             save(figures::fig3(cfg, &source, pn, ov))?;
                         }
                     }
+                    save(figures::fig3_wide(cfg, &source))?;
                 }
+                "wide" => save(figures::fig3_wide(cfg, &source))?,
                 pn => save(figures::fig3(cfg, &source, pn, oversub))?,
             },
             "fig4" => {
@@ -109,7 +113,7 @@ impl Coordinator {
                     crate::bench::ablation::run_ablations(cfg, &source).save(&cfg.report_dir)?,
                 );
             }
-            other => anyhow::bail!("unknown figure {other}"),
+            other => crate::bail!("unknown figure {other}"),
         }
         Ok(saved)
     }
@@ -120,7 +124,7 @@ impl Coordinator {
         let engine = self
             .engine
             .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("validation requires --artifact (run `make artifacts`)"))?;
+            .ok_or_else(|| crate::anyhow!("validation requires --artifact (run `make artifacts`)"))?;
         let specs = [
             WorkloadSpec { n: 100, theta: 0.0, update_pct: 50, seed: 1 },
             WorkloadSpec { n: 4096, theta: 0.99, update_pct: 10, seed: 2 },
@@ -131,9 +135,9 @@ impl Coordinator {
             for t in 0..2u64 {
                 let ours = crate::bench::workload::generate_rust(spec, count, t);
                 let theirs = engine.generate(spec, count, t)?;
-                anyhow::ensure!(ours.len() == theirs.len());
+                crate::ensure!(ours.len() == theirs.len());
                 for (i, (a, b)) in ours.iter().zip(&theirs).enumerate() {
-                    anyhow::ensure!(
+                    crate::ensure!(
                         a.op == b.op && a.rank == b.rank && a.key == b.key,
                         "mismatch spec n={} z={} t={t} op#{i}: rust=({:?},{},{:#x}) hlo=({:?},{},{:#x})",
                         spec.n, spec.theta, a.op, a.rank, a.key, b.op, b.rank, b.key

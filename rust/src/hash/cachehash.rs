@@ -1,45 +1,58 @@
 //! CacheHash (paper §4): separate chaining with the first link inlined
-//! into the bucket as a big atomic.
+//! into the bucket as a big atomic — generic over key and value types.
 //!
-//! Each bucket is a big atomic `LinkVal` = (key, value, next+flag): the
-//! common case (load factor one, most chains of length ≤ 1) touches a
-//! single cache line and zero pointers — the paper's motivating win.
+//! Each bucket is a big atomic [`Link<K, V>`] = (key, value, next+flag):
+//! the common case (load factor one, most chains of length ≤ 1) touches
+//! a single cache line and zero pointers — the paper's motivating win.
 //! Chain nodes beyond the first are immutable heap links; every mutation
-//! happens by a single CAS on the bucket head (inserts push the old head
-//! out to the heap; deletes path-copy the prefix), so linearizability
-//! reduces to the big atomic's.
+//! happens by a single `compare_exchange` on the bucket head (inserts
+//! push the old head out to the heap; deletes path-copy the prefix), so
+//! linearizability reduces to the big atomic's. Failed head CASes feed
+//! their *witness* back into the retry — the bucket is re-read zero
+//! extra times no matter how contended.
 //!
 //! Epoch-based reclamation protects chain traversals (§4).
 
-use crossbeam_utils::CachePadded;
-
-use super::{bucket_of, table_capacity, ConcurrentMap};
-use crate::atomics::BigAtomic;
-use crate::impl_atomic_value;
+use super::{bucket_for, table_capacity, ConcurrentMap};
+use crate::atomics::{AtomicValue, BigAtomic};
 use crate::smr::epoch;
+use crate::util::CachePadded;
 
 /// The inlined first link: key, value, and a tagged next pointer.
 /// Bit 0 of `next` is the occupied flag — `0x0` = empty bucket,
 /// `0x1` = single inline entry (null next), `ptr|1` = inline entry with
 /// a chain. "Null and empty have distinct meanings" (§4).
 #[repr(C, align(8))]
-#[derive(Copy, Clone, PartialEq, Eq, Debug, Default)]
-pub struct LinkVal {
-    pub key: u64,
-    pub value: u64,
+#[derive(Copy, Clone, PartialEq, Debug, Default)]
+pub struct Link<K: AtomicValue, V: AtomicValue> {
+    pub key: K,
+    pub value: V,
     pub next: u64,
 }
 
-impl_atomic_value!(LinkVal);
+// SAFETY: repr(C) of AtomicValue fields and a u64 — all 8-byte aligned,
+// sizes multiples of 8, no padding, bitwise PartialEq.
+unsafe impl<K: AtomicValue, V: AtomicValue> AtomicValue for Link<K, V> {}
 
-const OCCUPIED: u64 = 1;
+/// The classic single-word instantiation (§5.2's 8-byte keys/values).
+pub type LinkVal = Link<u64, u64>;
 
-impl LinkVal {
+impl Link<u64, u64> {
     pub const EMPTY: LinkVal = LinkVal {
         key: 0,
         value: 0,
         next: 0,
     };
+}
+
+const OCCUPIED: u64 = 1;
+
+impl<K: AtomicValue, V: AtomicValue> Link<K, V> {
+    /// An unoccupied bucket value.
+    #[inline]
+    pub fn empty() -> Self {
+        Self::default()
+    }
 
     #[inline]
     fn occupied(&self) -> bool {
@@ -47,13 +60,13 @@ impl LinkVal {
     }
 
     #[inline]
-    fn next_ptr(&self) -> *mut ChainNode {
-        (self.next & !OCCUPIED) as *mut ChainNode
+    fn next_ptr(&self) -> *mut ChainNode<K, V> {
+        (self.next & !OCCUPIED) as *mut ChainNode<K, V>
     }
 
     #[inline]
-    fn with_chain(key: u64, value: u64, chain: *mut ChainNode) -> Self {
-        LinkVal {
+    fn with_chain(key: K, value: V, chain: *mut ChainNode<K, V>) -> Self {
+        Link {
             key,
             value,
             next: (chain as u64) | OCCUPIED,
@@ -62,48 +75,72 @@ impl LinkVal {
 }
 
 /// Immutable-after-publish chain link.
-struct ChainNode {
-    key: u64,
-    value: u64,
-    next: *mut ChainNode,
+struct ChainNode<K, V> {
+    key: K,
+    value: V,
+    next: *mut ChainNode<K, V>,
 }
 
-pub struct CacheHash<A: BigAtomic<LinkVal>> {
+pub struct CacheHash<A, K = u64, V = u64>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
     buckets: Box<[CachePadded<A>]>,
     name: &'static str,
+    _kv: std::marker::PhantomData<Link<K, V>>,
 }
 
 // SAFETY: buckets are Sync big atomics; chain nodes are immutable and
 // epoch-protected.
-unsafe impl<A: BigAtomic<LinkVal>> Send for CacheHash<A> {}
-unsafe impl<A: BigAtomic<LinkVal>> Sync for CacheHash<A> {}
+unsafe impl<A, K, V> Send for CacheHash<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
+}
+unsafe impl<A, K, V> Sync for CacheHash<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
+}
 
-impl<A: BigAtomic<LinkVal>> CacheHash<A> {
+impl<A, K, V> CacheHash<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
     /// A table with capacity for ~`n` entries at load factor one.
     pub fn new(n: usize) -> Self {
         let cap = table_capacity(n);
         Self {
             buckets: (0..cap)
-                .map(|_| CachePadded::new(A::new(LinkVal::EMPTY)))
+                .map(|_| CachePadded::new(A::new(Link::empty())))
                 .collect(),
             name: A::name(),
+            _kv: std::marker::PhantomData,
         }
     }
 
     #[inline]
-    fn bucket(&self, key: u64) -> &A {
-        &self.buckets[bucket_of(key, self.buckets.len())]
+    fn bucket(&self, key: &K) -> &A {
+        &self.buckets[bucket_for(key, self.buckets.len())]
     }
 
     /// Walk the (immutable) chain for `key`.
     #[inline]
-    fn chain_find(mut p: *mut ChainNode, key: u64) -> Option<u64> {
+    fn chain_find(mut p: *mut ChainNode<K, V>, key: &K) -> Option<V> {
         while !p.is_null() {
             // SAFETY: epoch-pinned by caller; nodes retired only after
             // being unlinked by a bucket CAS that happened-after our
             // head load.
             let n = unsafe { &*p };
-            if n.key == key {
+            if n.key == *key {
                 return Some(n.value);
             }
             p = n.next;
@@ -116,32 +153,44 @@ impl<A: BigAtomic<LinkVal>> CacheHash<A> {
     }
 }
 
-impl<A: BigAtomic<LinkVal>> ConcurrentMap for CacheHash<A> {
-    fn find(&self, key: u64) -> Option<u64> {
+impl<A, K, V> ConcurrentMap<K, V> for CacheHash<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
+    fn find(&self, key: K) -> Option<V> {
         let _g = epoch::pin();
-        let head = self.bucket(key).load();
+        let head = self.bucket(&key).load();
         if !head.occupied() {
             return None;
         }
         if head.key == key {
             return Some(head.value); // the inlined fast path
         }
-        Self::chain_find(head.next_ptr(), key)
+        Self::chain_find(head.next_ptr(), &key)
     }
 
-    fn insert(&self, key: u64, value: u64) -> bool {
+    fn insert(&self, key: K, value: V) -> bool {
+        let _g = epoch::pin();
+        let bucket = self.bucket(&key);
+        let mut head = bucket.load();
         loop {
-            let _g = epoch::pin();
-            let bucket = self.bucket(key);
-            let head = bucket.load();
             if !head.occupied() {
-                // Empty bucket: install inline.
-                if bucket.cas(head, LinkVal::with_chain(key, value, std::ptr::null_mut())) {
-                    return true;
+                // Empty bucket: install inline. On failure the witness
+                // is the new head — no re-load.
+                match bucket.compare_exchange(
+                    head,
+                    Link::with_chain(key, value, std::ptr::null_mut()),
+                ) {
+                    Ok(_) => return true,
+                    Err(w) => {
+                        head = w;
+                        continue;
+                    }
                 }
-                continue;
             }
-            if head.key == key || Self::chain_find(head.next_ptr(), key).is_some() {
+            if head.key == key || Self::chain_find(head.next_ptr(), &key).is_some() {
                 return false;
             }
             // Push-front: the new pair goes inline; the old inline pair
@@ -151,19 +200,22 @@ impl<A: BigAtomic<LinkVal>> ConcurrentMap for CacheHash<A> {
                 value: head.value,
                 next: head.next_ptr(),
             }));
-            if bucket.cas(head, LinkVal::with_chain(key, value, spill)) {
-                return true;
+            match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
+                Ok(_) => return true,
+                Err(w) => {
+                    // SAFETY: never published.
+                    drop(unsafe { Box::from_raw(spill) });
+                    head = w;
+                }
             }
-            // SAFETY: never published.
-            drop(unsafe { Box::from_raw(spill) });
         }
     }
 
-    fn remove(&self, key: u64) -> bool {
+    fn remove(&self, key: K) -> bool {
+        let _g = epoch::pin();
+        let bucket = self.bucket(&key);
+        let mut head = bucket.load();
         loop {
-            let _g = epoch::pin();
-            let bucket = self.bucket(key);
-            let head = bucket.load();
             if !head.occupied() {
                 return false;
             }
@@ -171,27 +223,35 @@ impl<A: BigAtomic<LinkVal>> ConcurrentMap for CacheHash<A> {
                 let p = head.next_ptr();
                 if p.is_null() {
                     // Single inline entry -> empty.
-                    if bucket.cas(head, LinkVal::EMPTY) {
-                        return true;
+                    match bucket.compare_exchange(head, Link::empty()) {
+                        Ok(_) => return true,
+                        Err(w) => {
+                            head = w;
+                            continue;
+                        }
                     }
-                } else {
-                    // Promote the first chain node inline.
-                    // SAFETY: epoch-pinned, reachable.
-                    let n = unsafe { &*p };
-                    let promoted = LinkVal::with_chain(n.key, n.value, n.next);
-                    if bucket.cas(head, promoted) {
+                }
+                // Promote the first chain node inline.
+                // SAFETY: epoch-pinned, reachable.
+                let n = unsafe { &*p };
+                let promoted = Link::with_chain(n.key, n.value, n.next);
+                match bucket.compare_exchange(head, promoted) {
+                    Ok(_) => {
                         // SAFETY: p unlinked by the successful CAS.
                         unsafe { epoch::retire_box(p) };
                         return true;
                     }
+                    Err(w) => {
+                        head = w;
+                        continue;
+                    }
                 }
-                continue;
             }
             // Delete inside the chain: path-copy the prefix (§4).
-            let mut prefix: Vec<(u64, u64)> = Vec::new();
+            let mut prefix: Vec<(K, V)> = Vec::new();
             let mut p = head.next_ptr();
             let mut found = false;
-            let mut suffix: *mut ChainNode = std::ptr::null_mut();
+            let mut suffix: *mut ChainNode<K, V> = std::ptr::null_mut();
             while !p.is_null() {
                 // SAFETY: epoch-pinned traversal.
                 let n = unsafe { &*p };
@@ -216,27 +276,33 @@ impl<A: BigAtomic<LinkVal>> ConcurrentMap for CacheHash<A> {
                     next: new_chain,
                 }));
             }
-            let new_head = LinkVal::with_chain(head.key, head.value, new_chain);
-            if bucket.cas(head, new_head) {
-                // Retire the victim and the replaced original prefix.
-                // SAFETY: all unlinked by the successful CAS.
-                unsafe {
-                    epoch::retire_box(victim);
-                    let mut q = head.next_ptr();
-                    while q != victim {
-                        let nx = (*q).next;
-                        epoch::retire_box(q);
-                        q = nx;
+            let new_head = Link::with_chain(head.key, head.value, new_chain);
+            match bucket.compare_exchange(head, new_head) {
+                Ok(_) => {
+                    // Retire the victim and the replaced original prefix.
+                    // SAFETY: all unlinked by the successful CAS.
+                    unsafe {
+                        epoch::retire_box(victim);
+                        let mut q = head.next_ptr();
+                        while q != victim {
+                            let nx = (*q).next;
+                            epoch::retire_box(q);
+                            q = nx;
+                        }
                     }
+                    return true;
                 }
-                return true;
-            }
-            // CAS failed: free the unpublished copies and retry.
-            let mut q = new_chain;
-            while q != suffix {
-                // SAFETY: never published.
-                let b = unsafe { Box::from_raw(q) };
-                q = b.next;
+                Err(w) => {
+                    // CAS failed: free the unpublished copies, continue
+                    // from the witnessed head.
+                    let mut q = new_chain;
+                    while q != suffix {
+                        // SAFETY: never published.
+                        let b = unsafe { Box::from_raw(q) };
+                        q = b.next;
+                    }
+                    head = w;
+                }
             }
         }
     }
@@ -246,7 +312,12 @@ impl<A: BigAtomic<LinkVal>> ConcurrentMap for CacheHash<A> {
     }
 }
 
-impl<A: BigAtomic<LinkVal>> Drop for CacheHash<A> {
+impl<A, K, V> Drop for CacheHash<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
     fn drop(&mut self) {
         // Exclusive: free all chains directly.
         for b in self.buckets.iter() {
@@ -267,7 +338,7 @@ impl<A: BigAtomic<LinkVal>> Drop for CacheHash<A> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::atomics::{CachedMemEff, SeqLock};
+    use crate::atomics::{CachedMemEff, SeqLock, Words};
     use std::sync::Arc;
 
     fn basic<A: BigAtomic<LinkVal>>() {
@@ -289,6 +360,40 @@ mod tests {
     #[test]
     fn test_basic_memeff() {
         basic::<CachedMemEff<LinkVal>>();
+    }
+
+    #[test]
+    fn test_generic_multiword_keys_and_values() {
+        // The §5.3 arbitrary-length instantiation: 4-word keys, 4-word
+        // values, including forced collisions in a tiny table.
+        type K = Words<4>;
+        type V = Words<4>;
+        let t: CacheHash<CachedMemEff<Link<K, V>>, K, V> = CacheHash::new(4);
+        for i in 0..200u64 {
+            assert!(t.insert(Words([i, i ^ 7, 0, i]), Words([i; 4])));
+        }
+        for i in 0..200u64 {
+            assert_eq!(t.find(Words([i, i ^ 7, 0, i])), Some(Words([i; 4])));
+        }
+        assert_eq!(t.find(Words([1, 1, 1, 1])), None);
+        for i in (0..200u64).step_by(3) {
+            assert!(t.remove(Words([i, i ^ 7, 0, i])));
+        }
+        for i in 0..200u64 {
+            let want = if i % 3 == 0 { None } else { Some(Words([i; 4])) };
+            assert_eq!(t.find(Words([i, i ^ 7, 0, i])), want);
+        }
+    }
+
+    #[test]
+    fn test_mixed_width_key_value() {
+        // Asymmetric instantiation: wide key, single-word value.
+        type K = Words<2>;
+        let t: CacheHash<SeqLock<Link<K, u64>>, K, u64> = CacheHash::new(16);
+        assert!(t.insert(Words([7, 8]), 99));
+        assert_eq!(t.find(Words([7, 8])), Some(99));
+        assert_eq!(t.find(Words([8, 7])), None);
+        assert!(t.remove(Words([7, 8])));
     }
 
     #[test]

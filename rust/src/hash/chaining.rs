@@ -2,28 +2,30 @@
 //! "Chaining" series in Fig 3): identical algorithm to CacheHash but the
 //! bucket is a plain atomic *pointer* to the first link, so every
 //! non-empty find pays at least one extra dependent cache miss.
+//! Generic over the same key/value types as [`CacheHash`](super::CacheHash).
 
-use crossbeam_utils::CachePadded;
 use std::sync::atomic::{AtomicPtr, Ordering};
 
-use super::{bucket_of, table_capacity, ConcurrentMap};
+use super::{bucket_for, table_capacity, ConcurrentMap};
+use crate::atomics::AtomicValue;
 use crate::smr::epoch;
+use crate::util::CachePadded;
 
-struct Node {
-    key: u64,
-    value: u64,
-    next: *mut Node,
+struct Node<K, V> {
+    key: K,
+    value: V,
+    next: *mut Node<K, V>,
 }
 
-pub struct Chaining {
-    buckets: Box<[CachePadded<AtomicPtr<Node>>]>,
+pub struct Chaining<K: AtomicValue = u64, V: AtomicValue = u64> {
+    buckets: Box<[CachePadded<AtomicPtr<Node<K, V>>>]>,
 }
 
 // SAFETY: mutations via CAS on bucket heads; nodes immutable + epoch SMR.
-unsafe impl Send for Chaining {}
-unsafe impl Sync for Chaining {}
+unsafe impl<K: AtomicValue, V: AtomicValue> Send for Chaining<K, V> {}
+unsafe impl<K: AtomicValue, V: AtomicValue> Sync for Chaining<K, V> {}
 
-impl Chaining {
+impl<K: AtomicValue, V: AtomicValue> Chaining<K, V> {
     pub fn new(n: usize) -> Self {
         let cap = table_capacity(n);
         Self {
@@ -34,16 +36,16 @@ impl Chaining {
     }
 
     #[inline]
-    fn bucket(&self, key: u64) -> &AtomicPtr<Node> {
-        &self.buckets[bucket_of(key, self.buckets.len())]
+    fn bucket(&self, key: &K) -> &AtomicPtr<Node<K, V>> {
+        &self.buckets[bucket_for(key, self.buckets.len())]
     }
 
     #[inline]
-    fn chain_find(mut p: *mut Node, key: u64) -> Option<u64> {
+    fn chain_find(mut p: *mut Node<K, V>, key: &K) -> Option<V> {
         while !p.is_null() {
             // SAFETY: epoch-pinned by caller.
             let n = unsafe { &*p };
-            if n.key == key {
+            if n.key == *key {
                 return Some(n.value);
             }
             p = n.next;
@@ -52,18 +54,18 @@ impl Chaining {
     }
 }
 
-impl ConcurrentMap for Chaining {
-    fn find(&self, key: u64) -> Option<u64> {
+impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for Chaining<K, V> {
+    fn find(&self, key: K) -> Option<V> {
         let _g = epoch::pin();
-        Self::chain_find(self.bucket(key).load(Ordering::SeqCst), key)
+        Self::chain_find(self.bucket(&key).load(Ordering::SeqCst), &key)
     }
 
-    fn insert(&self, key: u64, value: u64) -> bool {
+    fn insert(&self, key: K, value: V) -> bool {
         loop {
             let _g = epoch::pin();
-            let bucket = self.bucket(key);
+            let bucket = self.bucket(&key);
             let head = bucket.load(Ordering::SeqCst);
-            if Self::chain_find(head, key).is_some() {
+            if Self::chain_find(head, &key).is_some() {
                 return false;
             }
             let node = Box::into_raw(Box::new(Node {
@@ -82,15 +84,15 @@ impl ConcurrentMap for Chaining {
         }
     }
 
-    fn remove(&self, key: u64) -> bool {
+    fn remove(&self, key: K) -> bool {
         loop {
             let _g = epoch::pin();
-            let bucket = self.bucket(key);
+            let bucket = self.bucket(&key);
             let head = bucket.load(Ordering::SeqCst);
             // Find the victim, collecting the prefix to path-copy.
-            let mut prefix: Vec<(u64, u64)> = Vec::new();
+            let mut prefix: Vec<(K, V)> = Vec::new();
             let mut p = head;
-            let mut suffix: *mut Node = std::ptr::null_mut();
+            let mut suffix: *mut Node<K, V> = std::ptr::null_mut();
             let mut found = false;
             while !p.is_null() {
                 // SAFETY: epoch-pinned.
@@ -145,7 +147,7 @@ impl ConcurrentMap for Chaining {
     }
 }
 
-impl Drop for Chaining {
+impl<K: AtomicValue, V: AtomicValue> Drop for Chaining<K, V> {
     fn drop(&mut self) {
         for b in self.buckets.iter() {
             let mut p = b.load(Ordering::Relaxed);
@@ -162,11 +164,12 @@ impl Drop for Chaining {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::atomics::Words;
     use std::sync::Arc;
 
     #[test]
     fn test_basic() {
-        let t = Chaining::new(64);
+        let t: Chaining = Chaining::new(64);
         assert!(t.insert(5, 50));
         assert!(!t.insert(5, 51));
         assert_eq!(t.find(5), Some(50));
@@ -175,8 +178,19 @@ mod tests {
     }
 
     #[test]
+    fn test_generic_multiword() {
+        let t: Chaining<Words<3>, Words<2>> = Chaining::new(8);
+        assert!(t.insert(Words([1, 2, 3]), Words([4, 5])));
+        assert!(!t.insert(Words([1, 2, 3]), Words([0, 0])));
+        assert_eq!(t.find(Words([1, 2, 3])), Some(Words([4, 5])));
+        assert_eq!(t.find(Words([3, 2, 1])), None);
+        assert!(t.remove(Words([1, 2, 3])));
+        assert_eq!(t.find(Words([1, 2, 3])), None);
+    }
+
+    #[test]
     fn test_collisions_and_interior_delete() {
-        let t = Chaining::new(2);
+        let t: Chaining = Chaining::new(2);
         for k in 0..50u64 {
             assert!(t.insert(k, k + 100));
         }
@@ -191,7 +205,7 @@ mod tests {
 
     #[test]
     fn test_concurrent_mixed() {
-        let t = Arc::new(Chaining::new(256));
+        let t: Arc<Chaining> = Arc::new(Chaining::new(256));
         let handles: Vec<_> = (0..4)
             .map(|tix| {
                 let t = Arc::clone(&t);

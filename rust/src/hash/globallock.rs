@@ -1,16 +1,18 @@
 //! `GlobalLockMap` — single-mutex map: the §5.3 comparison's floor
 //! (what a non-concurrent library wrapped in a lock looks like).
+//! Generic over the same key/value types as the big-atomic tables.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use super::ConcurrentMap;
+use super::{BitsKey, ConcurrentMap};
+use crate::atomics::AtomicValue;
 
-pub struct GlobalLockMap {
-    inner: Mutex<HashMap<u64, u64>>,
+pub struct GlobalLockMap<K: AtomicValue = u64, V: AtomicValue = u64> {
+    inner: Mutex<HashMap<BitsKey<K>, V>>,
 }
 
-impl GlobalLockMap {
+impl<K: AtomicValue, V: AtomicValue> GlobalLockMap<K, V> {
     pub fn new(n: usize) -> Self {
         Self {
             inner: Mutex::new(HashMap::with_capacity(n * 2)),
@@ -18,22 +20,22 @@ impl GlobalLockMap {
     }
 }
 
-impl ConcurrentMap for GlobalLockMap {
-    fn find(&self, key: u64) -> Option<u64> {
-        self.inner.lock().unwrap().get(&key).copied()
+impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for GlobalLockMap<K, V> {
+    fn find(&self, key: K) -> Option<V> {
+        self.inner.lock().unwrap().get(&BitsKey(key)).copied()
     }
 
-    fn insert(&self, key: u64, value: u64) -> bool {
+    fn insert(&self, key: K, value: V) -> bool {
         let mut m = self.inner.lock().unwrap();
-        if m.contains_key(&key) {
+        if m.contains_key(&BitsKey(key)) {
             return false;
         }
-        m.insert(key, value);
+        m.insert(BitsKey(key), value);
         true
     }
 
-    fn remove(&self, key: u64) -> bool {
-        self.inner.lock().unwrap().remove(&key).is_some()
+    fn remove(&self, key: K) -> bool {
+        self.inner.lock().unwrap().remove(&BitsKey(key)).is_some()
     }
 
     fn map_name(&self) -> &'static str {
@@ -44,14 +46,24 @@ impl ConcurrentMap for GlobalLockMap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::atomics::Words;
 
     #[test]
     fn test_basic() {
-        let m = GlobalLockMap::new(16);
+        let m: GlobalLockMap = GlobalLockMap::new(16);
         assert!(m.insert(9, 90));
         assert!(!m.insert(9, 91));
         assert_eq!(m.find(9), Some(90));
         assert!(m.remove(9));
         assert!(!m.remove(9));
+    }
+
+    #[test]
+    fn test_generic_multiword() {
+        let m: GlobalLockMap<Words<2>, u64> = GlobalLockMap::new(16);
+        assert!(m.insert(Words([7, 8]), 1));
+        assert_eq!(m.find(Words([7, 8])), Some(1));
+        assert_eq!(m.find(Words([8, 7])), None);
+        assert!(m.remove(Words([7, 8])));
     }
 }

@@ -1,46 +1,86 @@
-//! Concurrent hash tables (paper §4/§5.2/§5.3).
+//! Concurrent hash tables (paper §4/§5.2/§5.3), generic over
+//! arbitrary-length keys and values.
 //!
 //! * [`CacheHash`] — the paper's table: separate chaining with the first
 //!   link **inlined into the bucket as a big atomic**, generic over the
-//!   big-atomic strategy (the §5.2 sweep).
+//!   big-atomic strategy (the §5.2 sweep) *and* over the key/value
+//!   types (the §5.3 arbitrary-length comparison).
 //! * [`Chaining`] — identical algorithm without inlining (bucket is a
 //!   pointer): the paper's baseline.
 //! * [`ShardedLockMap`], [`GlobalLockMap`] — comparator stand-ins for the
 //!   §5.3 open-source tables (DESIGN.md §Substitutions).
 //!
-//! All expose [`ConcurrentMap`] over 8-byte keys/values (what §5.2/§5.3
-//! measure).
+//! All expose [`ConcurrentMap<K, V>`] for any
+//! [`AtomicValue`](crate::atomics::AtomicValue) key/value — `u64 → u64`
+//! (what §5.2 measures) is the default instantiation, and
+//! `Words<4> → Words<4>` style tables reproduce §5.3's multi-word rows:
+//!
+//! ```
+//! use big_atomics::atomics::{CachedMemEff, Words};
+//! use big_atomics::hash::{CacheHash, ConcurrentMap, Link};
+//!
+//! type K = Words<4>;
+//! type V = Words<4>;
+//! let t: CacheHash<CachedMemEff<Link<K, V>>, K, V> = CacheHash::new(64);
+//! assert!(t.insert(Words([1; 4]), Words([9; 4])));
+//! assert_eq!(t.find(Words([1; 4])), Some(Words([9; 4])));
+//! assert!(t.remove(Words([1; 4])));
+//! ```
 
 pub mod cachehash;
 pub mod chaining;
 pub mod globallock;
 pub mod shardlock;
 
-pub use cachehash::{CacheHash, LinkVal};
+pub use cachehash::{CacheHash, Link, LinkVal};
 pub use chaining::Chaining;
 pub use globallock::GlobalLockMap;
 pub use shardlock::ShardedLockMap;
 
+use crate::atomics::AtomicValue;
 use crate::util::rng::mix64;
 
-/// The uniform map interface the benchmarks drive.
+/// The uniform map interface the benchmarks drive, generic over key and
+/// value types (`u64 → u64` by default, matching the §5.2 benchmarks).
 ///
 /// `insert` is insert-if-absent (returns false when the key is present);
 /// `remove` returns whether the key was present — the semantics of the
 /// paper's benchmark loop ("randomly performs a find, insert, or delete").
-pub trait ConcurrentMap: Send + Sync {
-    fn find(&self, key: u64) -> Option<u64>;
-    fn insert(&self, key: u64, value: u64) -> bool;
-    fn remove(&self, key: u64) -> bool;
+pub trait ConcurrentMap<K: AtomicValue = u64, V: AtomicValue = u64>: Send + Sync {
+    fn find(&self, key: K) -> Option<V>;
+    fn insert(&self, key: K, value: V) -> bool;
+    fn remove(&self, key: K) -> bool;
     /// Implementation label for report rows.
     fn map_name(&self) -> &'static str;
 }
 
+/// Word-fold hash of any [`AtomicValue`]: mixes each 64-bit word of the
+/// representation. Bitwise-equal values (the `AtomicValue` equality
+/// contract) hash equal; for a single word this is exactly
+/// [`mix64`]`(word)`.
+#[inline]
+pub fn hash_value<K: AtomicValue>(key: &K) -> u64 {
+    let p = key as *const K as *const u64;
+    let mut h = 0u64;
+    for i in 0..K::WORDS {
+        // SAFETY: AtomicValue guarantees K is K::WORDS initialized
+        // 8-byte-aligned words of plain old data.
+        h = mix64(h ^ unsafe { p.add(i).read() });
+    }
+    h
+}
+
 /// Bucket index for `key` in a power-of-two table of size `n`.
 #[inline]
-pub fn bucket_of(key: u64, n: usize) -> usize {
+pub fn bucket_for<K: AtomicValue>(key: &K, n: usize) -> usize {
     debug_assert!(n.is_power_of_two());
-    (mix64(key) as usize) & (n - 1)
+    (hash_value(key) as usize) & (n - 1)
+}
+
+/// Single-word convenience form of [`bucket_for`].
+#[inline]
+pub fn bucket_of(key: u64, n: usize) -> usize {
+    bucket_for(&key, n)
 }
 
 /// Round a requested capacity up to a power of two (load factor one,
@@ -49,9 +89,29 @@ pub fn table_capacity(n: usize) -> usize {
     n.next_power_of_two().max(2)
 }
 
+/// Hash-map key adapter for the lock-based comparators: `Hash`/`Eq` over
+/// an [`AtomicValue`]'s bits (the contract makes `PartialEq` a bitwise
+/// equivalence, so the manual `Eq` and the word hash agree).
+pub(crate) struct BitsKey<K: AtomicValue>(pub K);
+
+impl<K: AtomicValue> PartialEq for BitsKey<K> {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}
+
+impl<K: AtomicValue> Eq for BitsKey<K> {}
+
+impl<K: AtomicValue> std::hash::Hash for BitsKey<K> {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        state.write_u64(hash_value(&self.0));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::atomics::Words;
 
     #[test]
     fn test_bucket_of_in_range_and_spread() {
@@ -64,6 +124,35 @@ mod tests {
         }
         // mix64 spreads sequential keys: no bucket more than 4x the mean.
         assert!(counts.iter().all(|&c| c <= 32));
+    }
+
+    #[test]
+    fn test_hash_value_single_word_matches_mix64() {
+        for k in [0u64, 1, 42, u64::MAX] {
+            assert_eq!(hash_value(&k), mix64(k));
+        }
+    }
+
+    #[test]
+    fn test_multiword_keys_spread_and_agree_with_eq() {
+        let n = 1024;
+        let mut counts = vec![0usize; n];
+        for k in 0..(n as u64 * 8) {
+            // Low-entropy multi-word keys (only word 2 varies).
+            let key = Words([0, 0, k, 0]);
+            let b = bucket_for(&key, n);
+            assert!(b < n);
+            counts[b] += 1;
+        }
+        assert!(counts.iter().all(|&c| c <= 32));
+        assert_eq!(
+            hash_value(&Words([1, 2, 3])),
+            hash_value(&Words([1, 2, 3]))
+        );
+        assert_ne!(
+            hash_value(&Words([1, 2, 3])),
+            hash_value(&Words([3, 2, 1]))
+        );
     }
 
     #[test]

@@ -2,19 +2,20 @@
 //! (TBB / Folly / Boost / libcuckoo families): the canonical generic
 //! design of a growable concurrent map, per-shard reader-writer locks
 //! over a conventional hash map.  See DESIGN.md §Substitutions.
+//! Generic over the same key/value types as the big-atomic tables.
 
 use std::collections::HashMap;
 use std::sync::RwLock;
 
-use super::ConcurrentMap;
-use crate::util::rng::mix64;
+use super::{hash_value, BitsKey, ConcurrentMap};
+use crate::atomics::AtomicValue;
 
-pub struct ShardedLockMap {
-    shards: Vec<RwLock<HashMap<u64, u64>>>,
+pub struct ShardedLockMap<K: AtomicValue = u64, V: AtomicValue = u64> {
+    shards: Vec<RwLock<HashMap<BitsKey<K>, V>>>,
     mask: usize,
 }
 
-impl ShardedLockMap {
+impl<K: AtomicValue, V: AtomicValue> ShardedLockMap<K, V> {
     /// `n` expected entries spread over `shards` (rounded to a power of
     /// two; the comparators typically use ~4x the thread count).
     pub fn new(n: usize, shards: usize) -> Self {
@@ -29,27 +30,28 @@ impl ShardedLockMap {
     }
 
     #[inline]
-    fn shard(&self, key: u64) -> &RwLock<HashMap<u64, u64>> {
-        &self.shards[(mix64(key) as usize >> 32) & self.mask]
+    fn shard(&self, key: &K) -> &RwLock<HashMap<BitsKey<K>, V>> {
+        // High hash bits pick the shard; low bits pick the HashMap slot.
+        &self.shards[(hash_value(key) >> 32) as usize & self.mask]
     }
 }
 
-impl ConcurrentMap for ShardedLockMap {
-    fn find(&self, key: u64) -> Option<u64> {
-        self.shard(key).read().unwrap().get(&key).copied()
+impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for ShardedLockMap<K, V> {
+    fn find(&self, key: K) -> Option<V> {
+        self.shard(&key).read().unwrap().get(&BitsKey(key)).copied()
     }
 
-    fn insert(&self, key: u64, value: u64) -> bool {
-        let mut s = self.shard(key).write().unwrap();
-        if s.contains_key(&key) {
+    fn insert(&self, key: K, value: V) -> bool {
+        let mut s = self.shard(&key).write().unwrap();
+        if s.contains_key(&BitsKey(key)) {
             return false;
         }
-        s.insert(key, value);
+        s.insert(BitsKey(key), value);
         true
     }
 
-    fn remove(&self, key: u64) -> bool {
-        self.shard(key).write().unwrap().remove(&key).is_some()
+    fn remove(&self, key: K) -> bool {
+        self.shard(&key).write().unwrap().remove(&BitsKey(key)).is_some()
     }
 
     fn map_name(&self) -> &'static str {
@@ -60,11 +62,12 @@ impl ConcurrentMap for ShardedLockMap {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::atomics::Words;
     use std::sync::Arc;
 
     #[test]
     fn test_basic() {
-        let m = ShardedLockMap::new(1024, 16);
+        let m: ShardedLockMap = ShardedLockMap::new(1024, 16);
         assert!(m.insert(1, 2));
         assert!(!m.insert(1, 3));
         assert_eq!(m.find(1), Some(2));
@@ -73,8 +76,18 @@ mod tests {
     }
 
     #[test]
+    fn test_generic_multiword() {
+        let m: ShardedLockMap<Words<4>, Words<4>> = ShardedLockMap::new(64, 4);
+        assert!(m.insert(Words([1, 2, 3, 4]), Words([5; 4])));
+        assert!(!m.insert(Words([1, 2, 3, 4]), Words([6; 4])));
+        assert_eq!(m.find(Words([1, 2, 3, 4])), Some(Words([5; 4])));
+        assert!(m.remove(Words([1, 2, 3, 4])));
+        assert_eq!(m.find(Words([1, 2, 3, 4])), None);
+    }
+
+    #[test]
     fn test_concurrent() {
-        let m = Arc::new(ShardedLockMap::new(4096, 8));
+        let m: Arc<ShardedLockMap> = Arc::new(ShardedLockMap::new(4096, 8));
         let handles: Vec<_> = (0..4)
             .map(|t| {
                 let m = Arc::clone(&m);

@@ -25,8 +25,12 @@
 //! // A 4-word (32-byte) lock-free atomic value.
 //! let a: CachedMemEff<Words<4>> = CachedMemEff::new(Words([1, 2, 3, 4]));
 //! let v = a.load();
-//! assert!(a.cas(v, Words([5, 6, 7, 8])));
+//! // The witnessing CAS: Ok(previous) on success, Err(current) on failure.
+//! assert_eq!(a.compare_exchange(v, Words([5, 6, 7, 8])), Ok(v));
 //! assert_eq!(a.load(), Words([5, 6, 7, 8]));
+//! // Closure-shaped atomic updates (retries feed the witness back):
+//! let prev = a.fetch_update(|mut w| { w.0[0] += 1; Some(w) }).unwrap();
+//! assert_eq!(prev, Words([5, 6, 7, 8]));
 //! ```
 //!
 //! ## Layout of this crate (three-layer architecture)

@@ -12,7 +12,8 @@
 //! (Hand-rolled argument parsing: clap is not in the offline crate set —
 //! DESIGN.md §Substitutions.)
 
-use anyhow::{bail, Result};
+use big_atomics::bail;
+use big_atomics::util::error::Result;
 use big_atomics::bench::figures::FigureCfg;
 use big_atomics::coordinator::{kv_service, Coordinator};
 use big_atomics::runtime::{default_artifact_dir, Runtime};
@@ -50,7 +51,7 @@ fn parse_args() -> Result<Args> {
     while let Some(a) = it.next() {
         let mut next = |flag: &str| -> Result<String> {
             it.next()
-                .ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+                .ok_or_else(|| big_atomics::anyhow!("{flag} needs a value"))
         };
         match a.as_str() {
             "--panel" => args.panel = next("--panel")?,
@@ -89,7 +90,8 @@ USAGE:
   repro smoke
 
 OPTIONS:
-  --panel u|z|n|w|p   figure panel (fig2/fig3; default: all panels)
+  --panel PANEL       figure panel (fig2: u|z|n|w|p|fu; fig3: u|z|n|wide;
+                      default: all panels)
   --oversub           run the 4x-oversubscribed variant of the panel
   --secs S            seconds per measured point      [0.3]
   --n N               elements / key-space size       [65536]

@@ -6,99 +6,149 @@
 //! and random bits, then applies the tail spread for n > N_CDF (see
 //! `bench::workload`).  Bit-exact with `bench::workload::generate_rust`
 //! (asserted by `rust/tests/runtime_artifacts.rs`).
+//!
+//! Like the rest of [`crate::runtime`], the executing engine needs the
+//! `pjrt` feature; the default build gets a stub whose constructor
+//! errors (and is unreachable anyway, since the stub `Runtime` cannot
+//! be built).
 
-use anyhow::Result;
+#[cfg(feature = "pjrt")]
+pub use real::WorkloadEngine;
 
-use super::{Executable, Runtime};
-use crate::bench::workload::{GenOp, Op, WorkloadSpec, ZipfCdf, N_CDF};
-use crate::util::rng::{mix64, Xoshiro256};
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::bench::workload::{GenOp, Op, WorkloadSpec, ZipfCdf, N_CDF};
+    use crate::runtime::{Executable, Runtime};
+    use crate::util::error::Result;
+    use crate::util::rng::{mix64, Xoshiro256};
 
-/// Workload generator backed by the compiled L2 model.
-pub struct WorkloadEngine {
-    exe: Executable,
-    batch: usize,
-}
-
-impl WorkloadEngine {
-    pub fn new(rt: &Runtime) -> Result<Self> {
-        anyhow::ensure!(
-            rt.manifest.n_cdf == N_CDF,
-            "artifact CDF resolution {} != crate N_CDF {}",
-            rt.manifest.n_cdf,
-            N_CDF
-        );
-        Ok(Self {
-            exe: rt.load("workload")?,
-            batch: rt.manifest.batch,
-        })
+    /// Workload generator backed by the compiled L2 model.
+    pub struct WorkloadEngine {
+        exe: Executable,
+        batch: usize,
     }
 
-    /// Artifact batch size (ops per execution).
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
+    impl WorkloadEngine {
+        pub fn new(rt: &Runtime) -> Result<Self> {
+            crate::ensure!(
+                rt.manifest.n_cdf == N_CDF,
+                "artifact CDF resolution {} != crate N_CDF {}",
+                rt.manifest.n_cdf,
+                N_CDF
+            );
+            Ok(Self {
+                exe: rt.load("workload")?,
+                batch: rt.manifest.batch,
+            })
+        }
 
-    /// Execute the model over explicit random words (the cross-validation
-    /// entry point). Returns (slots, op codes, keys) of length `batch`.
-    pub fn run_raw(
-        &self,
-        bits: &[u32],
-        op_bits: &[u32],
-        cdf: &[f32],
-        u_frac: f32,
-    ) -> Result<(Vec<i32>, Vec<i32>, Vec<u64>)> {
-        anyhow::ensure!(bits.len() == self.batch && op_bits.len() == self.batch);
-        anyhow::ensure!(cdf.len() == N_CDF);
-        let out = self
-            .exe
-            .execute(&[
+        /// Artifact batch size (ops per execution).
+        pub fn batch(&self) -> usize {
+            self.batch
+        }
+
+        /// Execute the model over explicit random words (the cross-validation
+        /// entry point). Returns (slots, op codes, keys) of length `batch`.
+        pub fn run_raw(
+            &self,
+            bits: &[u32],
+            op_bits: &[u32],
+            cdf: &[f32],
+            u_frac: f32,
+        ) -> Result<(Vec<i32>, Vec<i32>, Vec<u64>)> {
+            crate::ensure!(bits.len() == self.batch && op_bits.len() == self.batch);
+            crate::ensure!(cdf.len() == N_CDF);
+            let out = self.exe.execute(&[
                 xla::Literal::vec1(bits),
                 xla::Literal::vec1(op_bits),
                 xla::Literal::vec1(cdf),
                 xla::Literal::scalar(u_frac),
             ])?;
-        let (idx, op, key) = out.to_tuple3()?;
-        Ok((idx.to_vec()?, op.to_vec()?, key.to_vec()?))
-    }
+            let (idx, op, key) = out.to_tuple3()?;
+            Ok((idx.to_vec()?, op.to_vec()?, key.to_vec()?))
+        }
 
-    /// Generate `count` ops for `spec`, drawing randomness exactly like
-    /// `generate_rust` (same rng stream), batched through the artifact.
-    pub fn generate(&self, spec: &WorkloadSpec, count: usize, thread_seed: u64) -> Result<Vec<GenOp>> {
-        let cdf_table = ZipfCdf::new(spec.n, spec.theta);
-        let mut rng = Xoshiro256::seeded(spec.seed ^ mix64(thread_seed.wrapping_add(1)));
-        let mut out = Vec::with_capacity(count);
-        let mut bits = vec![0u32; self.batch];
-        let mut op_bits = vec![0u32; self.batch];
-        let mut extras: Vec<u64> = vec![0; self.batch];
-        while out.len() < count {
-            // Interleaved draws matching generate_rust's per-op order:
-            // (index bits, op bits[, tail extra]).
-            for i in 0..self.batch {
-                bits[i] = rng.next_u32();
-                op_bits[i] = rng.next_u32();
-                if spec.n > N_CDF {
-                    extras[i] = rng.next_u64();
+        /// Generate `count` ops for `spec`, drawing randomness exactly like
+        /// `generate_rust` (same rng stream), batched through the artifact.
+        pub fn generate(
+            &self,
+            spec: &WorkloadSpec,
+            count: usize,
+            thread_seed: u64,
+        ) -> Result<Vec<GenOp>> {
+            let cdf_table = ZipfCdf::new(spec.n, spec.theta);
+            let mut rng = Xoshiro256::seeded(spec.seed ^ mix64(thread_seed.wrapping_add(1)));
+            let mut out = Vec::with_capacity(count);
+            let mut bits = vec![0u32; self.batch];
+            let mut op_bits = vec![0u32; self.batch];
+            let mut extras: Vec<u64> = vec![0; self.batch];
+            while out.len() < count {
+                // Interleaved draws matching generate_rust's per-op order:
+                // (index bits, op bits[, tail extra]).
+                for i in 0..self.batch {
+                    bits[i] = rng.next_u32();
+                    op_bits[i] = rng.next_u32();
+                    if spec.n > N_CDF {
+                        extras[i] = rng.next_u64();
+                    }
+                }
+                let (slots, ops, keys) =
+                    self.run_raw(&bits, &op_bits, cdf_table.cdf(), spec.u_frac())?;
+                let take = (count - out.len()).min(self.batch);
+                for i in 0..take {
+                    let rank = cdf_table.spread(slots[i] as u32, extras[i]) as u32;
+                    // The artifact's key is mix64(slot); after tail spreading
+                    // the key must track the final rank.
+                    let key = if spec.n > N_CDF {
+                        mix64(rank as u64)
+                    } else {
+                        keys[i]
+                    };
+                    out.push(GenOp {
+                        op: Op::from_code(ops[i]),
+                        rank,
+                        key,
+                    });
                 }
             }
-            let (slots, ops, keys) =
-                self.run_raw(&bits, &op_bits, cdf_table.cdf(), spec.u_frac())?;
-            let take = (count - out.len()).min(self.batch);
-            for i in 0..take {
-                let rank = cdf_table.spread(slots[i] as u32, extras[i]) as u32;
-                // The artifact's key is mix64(slot); after tail spreading
-                // the key must track the final rank.
-                let key = if spec.n > N_CDF {
-                    mix64(rank as u64)
-                } else {
-                    keys[i]
-                };
-                out.push(GenOp {
-                    op: Op::from_code(ops[i]),
-                    rank,
-                    key,
-                });
-            }
+            Ok(out)
         }
-        Ok(out)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::WorkloadEngine;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::bench::workload::{GenOp, WorkloadSpec};
+    use crate::runtime::Runtime;
+    use crate::util::error::Result;
+
+    /// Stub engine — unconstructible in practice (the stub [`Runtime`]
+    /// cannot be built), present so `OpSource::Artifact` type-checks.
+    pub struct WorkloadEngine;
+
+    impl WorkloadEngine {
+        pub fn new(_rt: &Runtime) -> Result<Self> {
+            Err(crate::anyhow!(
+                "PJRT workload engine not compiled in: rebuild with `--features pjrt`"
+            ))
+        }
+
+        pub fn batch(&self) -> usize {
+            0
+        }
+
+        pub fn generate(
+            &self,
+            _spec: &WorkloadSpec,
+            _count: usize,
+            _thread_seed: u64,
+        ) -> Result<Vec<GenOp>> {
+            Err(crate::anyhow!(
+                "PJRT workload engine not compiled in: rebuild with `--features pjrt`"
+            ))
+        }
     }
 }

@@ -1,0 +1,70 @@
+//! `CachePadded<T>` — pad-and-align a value to its own cache-line pair.
+//!
+//! Stand-in for `crossbeam_utils::CachePadded` (the crate set is offline
+//! — DESIGN.md §Substitutions). 128-byte alignment covers the adjacent-
+//! line ("spatial") prefetcher on modern x86, which otherwise couples
+//! logically independent atomics two lines apart — the false-sharing
+//! pathology the paper's §5.1 layout ("elements aligned to cache-line
+//! boundaries") exists to avoid.
+
+/// Pads and aligns `T` so distinct values never share a cache-line pair.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap `value` in its own aligned slot.
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    /// Unwrap, consuming the padding.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> std::ops::Deref for CachePadded<T> {
+    type Target = T;
+
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> std::ops::DerefMut for CachePadded<T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        Self::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_alignment_and_size() {
+        assert_eq!(std::mem::align_of::<CachePadded<u64>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<u64>>() >= 128);
+        // Large values keep their own size (rounded to the alignment).
+        assert_eq!(std::mem::size_of::<CachePadded<[u64; 32]>>(), 256);
+    }
+
+    #[test]
+    fn test_deref_roundtrip() {
+        let mut p = CachePadded::new(41u64);
+        *p += 1;
+        assert_eq!(*p, 42);
+        assert_eq!(p.into_inner(), 42);
+    }
+}

@@ -1,10 +1,15 @@
-//! Shared utilities: RNG, thread registry, timing, and a mini
-//! property-testing harness (stand-in for proptest, which is not in the
-//! offline crate set — see DESIGN.md §Substitutions).
+//! Shared utilities: RNG, thread registry, timing, cache padding, error
+//! plumbing, and a mini property-testing harness (stand-ins for
+//! proptest / crossbeam-utils / anyhow, which are not in the offline
+//! crate set — see DESIGN.md §Substitutions).
 
+pub mod cache_padded;
+pub mod error;
 pub mod props;
 pub mod registry;
 pub mod rng;
+
+pub use cache_padded::CachePadded;
 
 use std::time::{Duration, Instant};
 

@@ -7,14 +7,16 @@ use std::time::Duration;
 
 use big_atomics::atomics::{
     CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock, SimpLock,
+    Words,
 };
 use big_atomics::bench::driver::{
-    run_atomics, run_map, AtomicImpl, MapImpl, OpSource,
+    run_atomics, run_fetch_update, run_map, run_map_wide, widen_key, AtomicImpl, MapImpl,
+    OpSource,
 };
 use big_atomics::bench::figures::{fig2_z, FigureCfg};
 use big_atomics::bench::workload::WorkloadSpec;
 use big_atomics::coordinator::kv_service::{self, KvConfig};
-use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
+use big_atomics::hash::{CacheHash, ConcurrentMap, Link, LinkVal};
 use big_atomics::util::rng::Xoshiro256;
 
 /// Exhaustive hash-table semantics check against std::HashMap, with a
@@ -75,6 +77,100 @@ fn test_chaining_and_comparators_model_check() {
     model_check_table(big_atomics::hash::Chaining::new(64), 9, 20_000);
     model_check_table(big_atomics::hash::ShardedLockMap::new(64, 8), 10, 20_000);
     model_check_table(big_atomics::hash::GlobalLockMap::new(64), 11, 20_000);
+}
+
+/// The same exhaustive semantics check against std::HashMap, but with
+/// 4-word keys and 4-word values — the §5.3 arbitrary-length
+/// instantiation of every table family, run over every big-atomic
+/// strategy (the acceptance bar for the generic-value API).
+fn model_check_wide<M: ConcurrentMap<Words<4>, Words<4>>>(table: M, seed: u64, ops: usize) {
+    use std::collections::HashMap;
+    let mut model: HashMap<u64, Words<4>> = HashMap::new();
+    let mut rng = Xoshiro256::seeded(seed);
+    for i in 0..ops {
+        let kid = rng.next_below(200) as u64;
+        let key = widen_key(kid);
+        match rng.next_below(3) {
+            0 => {
+                assert_eq!(
+                    table.find(key),
+                    model.get(&kid).copied(),
+                    "find({kid}) mismatch at op {i} on {}",
+                    table.map_name()
+                );
+            }
+            1 => {
+                let v = Words([i as u64; 4]);
+                let want = !model.contains_key(&kid);
+                assert_eq!(
+                    table.insert(key, v),
+                    want,
+                    "insert({kid}) mismatch at op {i} on {}",
+                    table.map_name()
+                );
+                model.entry(kid).or_insert(v);
+            }
+            _ => {
+                let want = model.remove(&kid).is_some();
+                assert_eq!(
+                    table.remove(key),
+                    want,
+                    "remove({kid}) mismatch at op {i} on {}",
+                    table.map_name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn test_cachehash_wide_model_check_all_strategies() {
+    type L = Link<Words<4>, Words<4>>;
+    type W = Words<4>;
+    model_check_wide(CacheHash::<SeqLock<L>, W, W>::new(64), 21, 10_000);
+    model_check_wide(CacheHash::<SimpLock<L>, W, W>::new(64), 22, 10_000);
+    model_check_wide(CacheHash::<LockPool<L>, W, W>::new(64), 23, 10_000);
+    model_check_wide(CacheHash::<Indirect<L>, W, W>::new(64), 24, 10_000);
+    model_check_wide(CacheHash::<CachedWaitFree<L>, W, W>::new(64), 25, 10_000);
+    model_check_wide(CacheHash::<CachedMemEff<L>, W, W>::new(64), 26, 10_000);
+    model_check_wide(CacheHash::<CachedWritable<L>, W, W>::new(64), 27, 10_000);
+    model_check_wide(CacheHash::<HtmSim<L>, W, W>::new(64), 28, 10_000);
+}
+
+#[test]
+fn test_comparators_wide_model_check() {
+    type W = Words<4>;
+    model_check_wide(big_atomics::hash::Chaining::<W, W>::new(64), 29, 10_000);
+    model_check_wide(big_atomics::hash::ShardedLockMap::<W, W>::new(64, 8), 30, 10_000);
+    model_check_wide(big_atomics::hash::GlobalLockMap::<W, W>::new(64), 31, 10_000);
+}
+
+/// Concurrent wide-table exactness: disjoint key ranges, 4-word values.
+#[test]
+fn test_cachehash_wide_concurrent_ownership() {
+    type L = Link<Words<4>, Words<4>>;
+    let t: Arc<CacheHash<CachedMemEff<L>, Words<4>, Words<4>>> = Arc::new(CacheHash::new(1024));
+    let threads = 4;
+    let per = 1_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = tix as u64 * 10_000_000;
+                for i in 0..per {
+                    let k = Words([base + i, i, tix as u64, 1]);
+                    assert!(t.insert(k, Words([i; 4])));
+                }
+                for i in 0..per {
+                    let k = Words([base + i, i, tix as u64, 1]);
+                    assert_eq!(t.find(k), Some(Words([i; 4])));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
 }
 
 /// Concurrent per-key counters: each thread owns a disjoint key range on
@@ -159,6 +255,35 @@ fn test_driver_all_maps_smoke() {
         let r = run_map(imp, &spec, 3, Duration::from_millis(40), &OpSource::Rust);
         assert!(r.total_ops > 100, "{}: {} ops", imp.name(), r.total_ops);
     }
+}
+
+#[test]
+fn test_driver_wide_map_and_fetch_update_workloads() {
+    // The §5.3 wide workload and the fetch_update mix both run through
+    // the same timed driver as every other figure series.
+    let spec = WorkloadSpec {
+        n: 512,
+        theta: 0.5,
+        update_pct: 50,
+        seed: 80,
+    };
+    let r = run_map_wide(
+        AtomicImpl::CachedMemEff,
+        &spec,
+        3,
+        Duration::from_millis(40),
+        &OpSource::Rust,
+    );
+    assert!(r.total_ops > 100, "wide map: {} ops", r.total_ops);
+    let r = run_fetch_update(
+        AtomicImpl::CachedMemEff,
+        3,
+        &spec,
+        3,
+        Duration::from_millis(40),
+        &OpSource::Rust,
+    );
+    assert!(r.total_ops > 100, "fetch_update: {} ops", r.total_ops);
 }
 
 #[test]

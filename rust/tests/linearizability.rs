@@ -75,17 +75,22 @@ fn run_history<A: BigAtomic<V> + 'static>(threads: usize, ops_per_thread: usize)
                             installed: None,
                         });
                     } else {
-                        // cas from a freshly loaded snapshot
+                        // cas from a freshly loaded snapshot; a failure's
+                        // witness is itself a linearizable read and is
+                        // recorded as this op's observation.
                         let cur = atomic.load();
                         let desired = unique_val(t as u64, seq_gen.fetch_add(1, Ordering::Relaxed));
-                        let ok = atomic.cas(cur, desired);
+                        let res = atomic.compare_exchange(cur, desired);
                         let end_ns = epoch.elapsed().as_nanos() as u64;
                         local.push(Rec {
                             thread: t,
                             start_ns,
                             end_ns,
-                            observed: if ok { desired } else { cur },
-                            installed: if ok { Some((cur, desired)) } else { None },
+                            observed: match res {
+                                Ok(_) => desired,
+                                Err(w) => w,
+                            },
+                            installed: res.ok().map(|prev| (prev, desired)),
                         });
                     }
                 }

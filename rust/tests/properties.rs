@@ -32,13 +32,27 @@ fn register_model_check<A: BigAtomic<Words<2>>>(ops: &[u64]) -> bool {
                 // Mix of expected-correct and expected-stale CASes.
                 let expected = if op % 2 == 0 { model } else { Words([op, op]) };
                 let desired = Words([op ^ 0xABCD, i as u64 + 1]);
-                let ok = a.cas(expected, desired);
+                let r = a.compare_exchange(expected, desired);
                 let model_ok = expected == model;
-                if ok != model_ok && expected != desired {
+                if r.is_ok() != model_ok && expected != desired {
                     return false;
                 }
-                if ok && expected != desired {
-                    model = desired;
+                // Single-threaded, so the witness must be exact: the
+                // current (model) value on failure, `expected` on success.
+                match r {
+                    Ok(prev) => {
+                        if prev != expected {
+                            return false;
+                        }
+                        if expected != desired {
+                            model = desired;
+                        }
+                    }
+                    Err(w) => {
+                        if w != model {
+                            return false;
+                        }
+                    }
                 }
             }
         }
@@ -151,7 +165,7 @@ fn prop_memeff_node_bound_under_concurrency() {
                 for i in 0..30_000u64 {
                     let a = &atomics[rng.next_below(atomics.len())];
                     let cur = a.load();
-                    let _ = a.cas(cur, Words([cur.0[0].wrapping_add(1), i]));
+                    let _ = a.compare_exchange(cur, Words([cur.0[0].wrapping_add(1), i]));
                 }
             })
         })
@@ -180,12 +194,13 @@ fn prop_words_any_bits_roundtrip() {
 
 #[test]
 fn prop_cas_same_value_always_true_when_current() {
-    // AA rule: cas(v, v) with v current returns true and changes nothing
-    // (and must not disturb concurrent state) on every implementation.
+    // AA rule: compare_exchange(v, v) with v current returns Ok and
+    // changes nothing (and must not disturb concurrent state) on every
+    // implementation.
     forall::<[u64; 3], _>(206, 200, |bits| {
         fn check<A: BigAtomic<Words<3>>>(v: Words<3>) -> bool {
             let a = A::new(v);
-            a.cas(v, v) && a.load() == v
+            a.compare_exchange(v, v) == Ok(v) && a.load() == v
         }
         let v = Words(*bits);
         check::<SeqLock<Words<3>>>(v)

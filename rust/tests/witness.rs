@@ -1,0 +1,200 @@
+//! Cross-backend witness-consistency suite.
+//!
+//! The witnessing `compare_exchange` contract says `Err(w)` hands back a
+//! value that was *actually observable* — a linearizable read, never a
+//! torn or fabricated one. These tests enforce that on every backend:
+//!
+//! 1. **Checksummed witnesses**: every value any writer installs carries
+//!    a 4-word internal checksum; every `Err(w)` must satisfy it. A torn
+//!    witness (words from two different values) or an invented one fails
+//!    with overwhelming probability.
+//! 2. **`fetch_update` exactness**: a contended counter where every
+//!    retry is fed by the witness — the sum must equal the op count
+//!    exactly on all eight backends.
+//! 3. **`swap` chain**: concurrent exchanges must hand each installed
+//!    value to exactly one observer (the returned previous values plus
+//!    the final value form a permutation of everything installed).
+//! 4. **`Words<K>` round-trips** across widths and backends, for
+//!    arbitrary bit patterns.
+
+use std::sync::Arc;
+
+use big_atomics::atomics::{
+    BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
+    SimpLock, Words,
+};
+use big_atomics::util::props::forall;
+
+const MAGIC: u64 = 0xD1CE_BA5E_0DD5_EED5;
+
+/// Encode a (thread, seq) pair into a self-checking 4-word value.
+fn encode(t: u64, s: u64) -> Words<4> {
+    let x = (t << 48) | s;
+    let w1 = x.wrapping_mul(3);
+    let w2 = x ^ MAGIC;
+    Words([x, w1, w2, x ^ w1 ^ w2])
+}
+
+/// A value is "observable" iff some writer actually installed it.
+fn check(label: &str, w: Words<4>) {
+    assert_eq!(w.0[1], w.0[0].wrapping_mul(3), "{label}: fabricated witness {:?}", w.0);
+    assert_eq!(w.0[2], w.0[0] ^ MAGIC, "{label}: torn witness {:?}", w.0);
+    assert_eq!(w.0[3], w.0[0] ^ w.0[1] ^ w.0[2], "{label}: bad checksum {:?}", w.0);
+}
+
+fn witness_observable<A: BigAtomic<Words<4>> + 'static>(label: &'static str) {
+    let a: Arc<A> = Arc::new(A::new(encode(0, 0)));
+    let threads = 4u64;
+    let per = 2_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                let mut cur = a.load();
+                for s in 1..=per {
+                    let desired = encode(t + 1, s);
+                    loop {
+                        check(label, cur);
+                        match a.compare_exchange(cur, desired) {
+                            Ok(prev) => {
+                                check(label, prev);
+                                cur = desired;
+                                break;
+                            }
+                            Err(w) => {
+                                // The witness must be a real, untorn,
+                                // installed value.
+                                check(label, w);
+                                cur = w;
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    check(label, a.load());
+}
+
+#[test]
+fn test_witness_observable_all_backends() {
+    witness_observable::<SeqLock<Words<4>>>("SeqLock");
+    witness_observable::<SimpLock<Words<4>>>("SimpLock");
+    witness_observable::<LockPool<Words<4>>>("LockPool");
+    witness_observable::<Indirect<Words<4>>>("Indirect");
+    witness_observable::<CachedWaitFree<Words<4>>>("Cached-WaitFree");
+    witness_observable::<CachedMemEff<Words<4>>>("Cached-MemEff");
+    witness_observable::<CachedWritable<Words<4>>>("Cached-Writable");
+    witness_observable::<HtmSim<Words<4>>>("HTM(sim)");
+}
+
+fn counter_exact<A: BigAtomic<Words<2>> + 'static>(label: &'static str) {
+    let a: Arc<A> = Arc::new(A::new(Words([0, 0])));
+    let threads = 4u64;
+    let per = 2_500u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    let r = a.fetch_update(|v| {
+                        Some(Words([v.0[0] + 1, v.0[1].wrapping_add(t * per + i)]))
+                    });
+                    assert!(r.is_ok(), "{label}: unconditional update failed");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        a.load().0[0],
+        threads * per,
+        "{label}: fetch_update lost or duplicated increments"
+    );
+}
+
+#[test]
+fn test_fetch_update_counter_exact_all_backends() {
+    counter_exact::<SeqLock<Words<2>>>("SeqLock");
+    counter_exact::<SimpLock<Words<2>>>("SimpLock");
+    counter_exact::<LockPool<Words<2>>>("LockPool");
+    counter_exact::<Indirect<Words<2>>>("Indirect");
+    counter_exact::<CachedWaitFree<Words<2>>>("Cached-WaitFree");
+    counter_exact::<CachedMemEff<Words<2>>>("Cached-MemEff");
+    counter_exact::<CachedWritable<Words<2>>>("Cached-Writable");
+    counter_exact::<HtmSim<Words<2>>>("HTM(sim)");
+}
+
+fn swap_chain<A: BigAtomic<Words<2>> + 'static>(label: &'static str) {
+    // Every thread swaps in unique values and keeps what it got back;
+    // (returned values) + (final value) must be a permutation of
+    // (initial value) + (all installed values). The initial value must
+    // satisfy the same word1 == !word0 invariant as installed ones.
+    let a: Arc<A> = Arc::new(A::new(Words([0, !0])));
+    let threads = 4u64;
+    let per = 2_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                let mut got: Vec<u64> = Vec::with_capacity(per as usize);
+                for s in 0..per {
+                    let unique = ((t + 1) << 48) | (s + 1);
+                    let prev = a.swap(Words([unique, !unique]));
+                    assert_eq!(prev.0[1], !prev.0[0], "{label}: torn swap result");
+                    got.push(prev.0[0]);
+                }
+                got
+            })
+        })
+        .collect();
+    let mut seen: Vec<u64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    seen.push(a.load().0[0]);
+    seen.sort_unstable();
+    let mut expect: Vec<u64> = vec![0]; // the initial value
+    for t in 0..threads {
+        for s in 0..per {
+            expect.push(((t + 1) << 48) | (s + 1));
+        }
+    }
+    expect.sort_unstable();
+    assert_eq!(seen, expect, "{label}: swap dropped or duplicated a value");
+}
+
+#[test]
+fn test_swap_chain_all_backends() {
+    swap_chain::<SeqLock<Words<2>>>("SeqLock");
+    swap_chain::<SimpLock<Words<2>>>("SimpLock");
+    swap_chain::<LockPool<Words<2>>>("LockPool");
+    swap_chain::<Indirect<Words<2>>>("Indirect");
+    swap_chain::<CachedWaitFree<Words<2>>>("Cached-WaitFree");
+    swap_chain::<CachedMemEff<Words<2>>>("Cached-MemEff");
+    swap_chain::<CachedWritable<Words<2>>>("Cached-Writable");
+    swap_chain::<HtmSim<Words<2>>>("HTM(sim)");
+}
+
+#[test]
+fn test_words_roundtrip_arbitrary_bits_across_widths() {
+    fn roundtrip<const K: usize, A: BigAtomic<Words<K>>>(bits: [u64; K]) -> bool {
+        let a = A::new(Words(bits));
+        if a.load() != Words(bits) {
+            return false;
+        }
+        let flipped = Words(bits.map(|w| !w));
+        a.store(flipped);
+        a.load() == flipped
+    }
+    forall::<[u64; 1], _>(301, 200, |b| roundtrip::<1, SeqLock<Words<1>>>(*b));
+    forall::<[u64; 3], _>(302, 200, |b| roundtrip::<3, CachedWaitFree<Words<3>>>(*b));
+    forall::<[u64; 5], _>(303, 200, |b| roundtrip::<5, CachedMemEff<Words<5>>>(*b));
+    forall::<[u64; 8], _>(304, 100, |b| roundtrip::<8, CachedWritable<Words<8>>>(*b));
+    forall::<[u64; 16], _>(305, 50, |b| roundtrip::<16, HtmSim<Words<16>>>(*b));
+}
