@@ -10,12 +10,26 @@
 //! `WordBuf<T>` is the inline storage: an `UnsafeCell<T>` whose words are
 //! accessed as `AtomicU64`s. It adds zero indirection — the whole point
 //! of the paper's cached fast path.
+//!
+//! ## Ordering contract
+//!
+//! Word accesses are `P::RELAXED` (plain `Relaxed` on the default
+//! [`Fenced`](crate::util::ordering::Fenced) policy, `SeqCst` under the
+//! `seqcst_audit` feature).  Relaxed is sound **only** inside a seqlock
+//! bracket: the caller must order these accesses with the version word —
+//! readers via `version(Acquire) … read … fence(Acquire) …
+//! version(Relaxed)`, writers via `lock-CAS(Acquire) … fence(Release) …
+//! write … unlock-store(Release)`.  The fences are the load-load and
+//! store-store edges per-word `Relaxed` cannot provide; without them a
+//! reader can assemble a torn value *and* miss the version bump that
+//! would discard it.
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::AtomicU64;
 
 use super::AtomicValue;
+use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
 
 /// Inline k-word storage with word-wise atomic access.
 #[repr(C)]
@@ -43,31 +57,51 @@ impl<T: AtomicValue> WordBuf<T> {
         self.data.get() as *const AtomicU64
     }
 
-    /// Word-wise relaxed read of the whole value. The caller's version
-    /// protocol decides whether the (possibly torn) result is used.
+    /// Word-wise read under the crate default policy. See [`read_p`](Self::read_p).
     #[inline]
     pub fn read(&self) -> T {
+        self.read_p::<DefaultPolicy>()
+    }
+
+    /// Word-wise `P::RELAXED` read of the whole value. The caller's
+    /// version protocol decides whether the (possibly torn) result is
+    /// used — see the module-level ordering contract.
+    #[inline]
+    pub fn read_p<P: OrderingPolicy>(&self) -> T {
         let mut out = MaybeUninit::<T>::uninit();
         let src = self.words();
         let dst = out.as_mut_ptr() as *mut u64;
         for i in 0..T::WORDS {
+            // Ordering: RELAXED — atomicity per word only; the seqlock
+            // bracket (Acquire version read before, Acquire fence +
+            // version re-check after) discards torn assemblies.
             // SAFETY: i < WORDS words of valid storage on both sides.
-            unsafe { *dst.add(i) = (*src.add(i)).load(Ordering::Relaxed) };
+            unsafe { *dst.add(i) = (*src.add(i)).load(P::RELAXED) };
         }
         // SAFETY: T is pod (AtomicValue) — any word combination is a
         // valid bit pattern; torn values are discarded by the caller.
         unsafe { out.assume_init() }
     }
 
-    /// Word-wise relaxed write. Caller must hold the write side of the
-    /// version protocol (seqlock lock bit etc.).
+    /// Word-wise write under the crate default policy. See [`write_p`](Self::write_p).
     #[inline]
     pub fn write(&self, val: T) {
+        self.write_p::<DefaultPolicy>(val)
+    }
+
+    /// Word-wise `P::RELAXED` write. Caller must hold the write side of
+    /// the version protocol (seqlock lock bit etc.) and must have issued
+    /// a Release fence after taking it — see the module-level contract.
+    #[inline]
+    pub fn write_p<P: OrderingPolicy>(&self, val: T) {
         let dst = self.words();
         let src = &val as *const T as *const u64;
         for i in 0..T::WORDS {
-            // SAFETY: as in read().
-            unsafe { (*dst.add(i)).store(*src.add(i), Ordering::Relaxed) };
+            // Ordering: RELAXED — the writer's post-lock Release fence
+            // orders the odd version before these stores, and the
+            // Release unlock orders them before the even version.
+            // SAFETY: as in read_p().
+            unsafe { (*dst.add(i)).store(*src.add(i), P::RELAXED) };
         }
     }
 }
@@ -76,6 +110,7 @@ impl<T: AtomicValue> WordBuf<T> {
 mod tests {
     use super::*;
     use crate::atomics::Words;
+    use crate::util::ordering::SeqCstEverywhere;
 
     #[test]
     fn test_read_write_roundtrip() {
@@ -91,6 +126,15 @@ mod tests {
         assert_eq!(buf.read(), Words([42]));
         buf.write(Words([7]));
         assert_eq!(buf.read(), Words([7]));
+    }
+
+    #[test]
+    fn test_explicit_policy_roundtrip() {
+        // The audit policy must be usable explicitly regardless of the
+        // build's default (the ordering ablation instantiates it).
+        let buf: WordBuf<Words<2>> = WordBuf::new(Words([1, 2]));
+        buf.write_p::<SeqCstEverywhere>(Words([3, 4]));
+        assert_eq!(buf.read_p::<SeqCstEverywhere>(), Words([3, 4]));
     }
 
     #[test]

@@ -19,15 +19,33 @@
 //!   (`was_installed` / `is_protected`) — the paper's §3.2 recycler,
 //!   including the subtle two-phase rule (snapshot `is_installed`
 //!   *before* scanning announcements).
+//!
+//! ## Ordering contract
+//!
+//! Every demoted site names its edge inline; the shape is:
+//! * **seqlock** over `version`+`cache` (reader `ACQUIRE` /
+//!   `FENCE_ACQUIRE` / `RELAXED` re-check; writer `ACQUIRE` lock-CAS,
+//!   `FENCE_RELEASE`, `RELEASE` unlock) — `load`'s fast path,
+//!   `try_load_indirect`'s cached branch, and `try_seqlock`;
+//! * **node publication**: the install CAS and the null-restoring CAS
+//!   are `RELEASE`, paired with the `ACQUIRE` validating load in
+//!   `protect_backup`;
+//! * **recycler flags**: `is_installed` is `RELEASE`-stored /
+//!   `ACQUIRE`-snapshotted; `was_installed` / `is_protected` / `in_free`
+//!   are owner-private `RELAXED`. The snapshot-before-scan edge of the
+//!   two-phase rule is the mandatory `SeqCst` fence inside
+//!   `protected_snapshot` (see `smr::hazard`), sequenced after phase 1.
 
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bytewise::WordBuf;
 use super::{AtomicValue, BigAtomic};
 use crate::smr::hazard::{protected_snapshot, HazardPointer};
+use crate::util::backoff::{snooze_lazy, Backoff};
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::util::CachePadded;
 use crate::MAX_THREADS;
@@ -224,14 +242,21 @@ impl<T: AtomicValue> MemEffDomain<T> {
         // SAFETY: node is owned (in free list => not installed, not
         // readable by anyone — see reclaim()'s two-phase rule).
         unsafe {
-            (*node).in_free.store(false, Ordering::Relaxed);
+            // Ordering: RELAXED — owner-private flags; only this thread
+            // writes them and only this thread's recycler reads them
+            // (program order suffices).
+            (*node).in_free.store(false, P::RELAXED);
             // Deamortized interleaving rule: a node allocated while a
             // pass is active must not be swept by that pass.
             if self.deamortized && pool.pass_phase != 0 {
-                (*node).was_installed.store(true, Ordering::Relaxed);
+                (*node).was_installed.store(true, P::RELAXED);
             }
             (*node).value.write(val);
-            (*node).is_installed.store(true, Ordering::Release);
+            // Ordering: RELEASE — the value words above happen-before
+            // anyone who ACQUIREs is_installed (the recycler's phase-1
+            // snapshot); the node itself is published to readers by the
+            // backup install CAS, which is also RELEASE.
+            (*node).is_installed.store(true, P::RELEASE);
         }
         node
     }
@@ -240,8 +265,11 @@ impl<T: AtomicValue> MemEffDomain<T> {
     fn free_node(&self, node: *mut Node<T>) {
         // SAFETY: never published; owner thread only.
         unsafe {
-            (*node).is_installed.store(false, Ordering::Release);
-            (*node).in_free.store(true, Ordering::Relaxed);
+            // Ordering: RELEASE uninstall signal (pairs with the
+            // recycler's ACQUIRE snapshot); RELAXED for the owner-
+            // private free flag.
+            (*node).is_installed.store(false, P::RELEASE);
+            (*node).in_free.store(true, P::RELAXED);
         }
         self.my_pool().free.push(node);
     }
@@ -270,8 +298,13 @@ impl<T: AtomicValue> MemEffDomain<T> {
                     // Phase 1: snapshot is_installed, a few nodes per step.
                     let end = (pool.pass_cursor + 1).min(pool.slab.len());
                     for node in &pool.slab[pool.pass_cursor..end] {
+                        // Ordering: ACQUIRE — pairs with the RELEASE
+                        // (un)install stores; the snapshot→scan ordering
+                        // that makes the two-phase rule sound comes from
+                        // the SeqCst fence inside protected_snapshot
+                        // (phase 2), sequenced after this read.
                         node.was_installed
-                            .store(node.is_installed.load(Ordering::SeqCst), Ordering::Relaxed);
+                            .store(node.is_installed.load(P::ACQUIRE), P::RELAXED);
                     }
                     pool.pass_cursor = end;
                     steps -= 1;
@@ -332,8 +365,12 @@ impl<T: AtomicValue> MemEffDomain<T> {
     fn reclaim(pool: &mut Pool<T>) {
         // Phase 1: snapshot installed flags.
         for node in pool.slab.iter() {
+            // Ordering: ACQUIRE/RELAXED — as in reclaim_step phase 1:
+            // the uninstall signal is RELEASE'd by writers, and the
+            // snapshot-before-scan edge is the SeqCst fence inside
+            // protected_snapshot below.
             node.was_installed
-                .store(node.is_installed.load(Ordering::SeqCst), Ordering::Relaxed);
+                .store(node.is_installed.load(P::ACQUIRE), P::RELAXED);
         }
         // Phase 2: scan the global announcement array; mark our nodes.
         let mut buf = std::mem::take(&mut pool.scan_buf);
@@ -397,10 +434,11 @@ impl<T: AtomicValue> CachedMemEff<T> {
     /// paper's central design claim: the value of the inlined cache.
     pub fn load_no_fast_path(&self) -> T {
         let h = HazardPointer::new();
+        let mut bo = Backoff::new();
         loop {
             match self.try_load_indirect(&h) {
                 Tli::Indirect { val, .. } | Tli::Cached { val, .. } => return val,
-                Tli::Fail => std::hint::spin_loop(),
+                Tli::Fail => bo.snooze(),
             }
         }
     }
@@ -409,8 +447,12 @@ impl<T: AtomicValue> CachedMemEff<T> {
     /// announce 0 = nothing).
     #[inline]
     fn protect_backup(&self, h: &HazardPointer) -> usize {
+        // Ordering: ACQUIRE — the validating call pairs with the
+        // installer's RELEASE CAS so node contents are visible before
+        // node_value dereferences them; the announce→revalidate SeqCst
+        // fence is inside protect_raw_with.
         h.protect_raw_with(
-            || self.backup.load(Ordering::SeqCst),
+            || self.backup.load(P::ACQUIRE),
             |r| if is_null(r) { 0 } else { r },
         )
     }
@@ -431,10 +473,13 @@ impl<T: AtomicValue> CachedMemEff<T> {
                 val: Self::node_value(raw),
             };
         }
-        let ver = self.version.load(Ordering::SeqCst);
-        let val = self.cache.read();
-        let p2 = self.backup.load(Ordering::SeqCst);
-        if is_null(p2) && ver == self.version.load(Ordering::SeqCst) {
+        // Seqlock-shaped re-check under a null backup — same edges as
+        // the fast path in `load` (see the Ordering comments there).
+        let ver = self.version.load(P::ACQUIRE);
+        let val = self.cache.read_p::<P>();
+        let p2 = self.backup.load(P::RELAXED);
+        fence(P::FENCE_ACQUIRE);
+        if is_null(p2) && ver == self.version.load(P::RELAXED) {
             Tli::Cached { ver, raw: p2, val }
         } else {
             Tli::Fail
@@ -447,29 +492,49 @@ impl<T: AtomicValue> CachedMemEff<T> {
     /// until the backup is null or someone else holds the lock.
     fn try_seqlock(&self, mut ver: u64, mut desired: T, mut raw_p: usize, h: &HazardPointer) {
         loop {
+            // Ordering: RELAXED pre-check — advisory only; the lock CAS
+            // below re-validates against the same version.
             if ver % 2 != 0
-                || ver != self.version.load(Ordering::SeqCst)
+                || ver != self.version.load(P::RELAXED)
                 || self
                     .version
-                    .compare_exchange(ver, ver + 1, Ordering::SeqCst, Ordering::SeqCst)
+                    // Ordering: ACQUIRE on success — seqlock writer lock
+                    // (pairs with the previous RELEASE unlock); RELAXED
+                    // on failure — the loser returns without touching
+                    // the cache.
+                    .compare_exchange(ver, ver + 1, P::ACQUIRE, P::RELAXED)
                     .is_err()
             {
                 // Someone else took the lock; they are responsible for
                 // restoring cache/backup consistency.
                 return;
             }
-            self.cache.write(desired);
+            // Ordering: FENCE_RELEASE — odd version visible before the
+            // cache words (pairs with readers' FENCE_ACQUIRE: a torn
+            // cache read implies the version re-check fails).
+            fence(P::FENCE_RELEASE);
+            self.cache.write_p::<P>(desired);
             ver += 2;
-            self.version.store(ver, Ordering::Release);
+            // Ordering: RELEASE — cache writes happen-before the even
+            // version.
+            self.version.store(ver, P::RELEASE);
             let new_null = tagged_null(ver);
             match self
                 .backup
-                .compare_exchange(raw_p, new_null, Ordering::SeqCst, Ordering::SeqCst)
+                // Ordering: RELEASE on success — the fresh cache and
+                // even version happen-before the null a fast-path
+                // reader pairs with them; RELAXED on failure — `actual`
+                // is inspected for nullness only, and the help path
+                // re-synchronizes through protect_backup.
+                .compare_exchange(raw_p, new_null, P::RELEASE, P::RELAXED)
             {
                 Ok(_) => {
                     // SAFETY: raw_p is a node we (or a helper chain)
                     // protected; uninstall signal for its owner.
-                    unsafe { (*(raw_p as *const Node<T>)).is_installed.store(false, Ordering::Release) };
+                    // Ordering: RELEASE — pairs with the recycler's
+                    // ACQUIRE snapshot (free only after uninstall is
+                    // visible).
+                    unsafe { (*(raw_p as *const Node<T>)).is_installed.store(false, P::RELEASE) };
                     return;
                 }
                 Err(actual) => {
@@ -497,18 +562,32 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
 
     #[inline]
     fn load(&self) -> T {
-        let ver = self.version.load(Ordering::SeqCst);
-        let val = self.cache.read();
-        let raw = self.backup.load(Ordering::SeqCst);
-        if is_null(raw) && ver == self.version.load(Ordering::SeqCst) {
+        // The fast-path version / cache / backup / version re-check —
+        // seqlock reader edges:
+        // Ordering: ACQUIRE — pairs with the re-cacher's RELEASE unlock,
+        // making the cache words for version `ver` visible below.
+        let ver = self.version.load(P::ACQUIRE);
+        let val = self.cache.read_p::<P>();
+        // Ordering: RELAXED — validated by the fence + re-check: if this
+        // observed a RELEASE'd null whose cache we missed, the version
+        // re-check fails.
+        let raw = self.backup.load(P::RELAXED);
+        // Ordering: FENCE_ACQUIRE — load-load edge: cache and backup
+        // reads complete before the version re-check; pairs with the
+        // writer-side FENCE_RELEASE in try_seqlock and the RELEASE
+        // null-CAS.
+        fence(P::FENCE_ACQUIRE);
+        // Ordering: RELAXED — ordered by the fence above.
+        if is_null(raw) && ver == self.version.load(P::RELAXED) {
             return val; // fast path: no indirection, no hazard
         }
         // Lock-free slow path: each retry implies an update completed.
         let h = HazardPointer::new();
+        let mut bo = Backoff::new();
         loop {
             match self.try_load_indirect(&h) {
                 Tli::Indirect { val, .. } | Tli::Cached { val, .. } => return val,
-                Tli::Fail => std::hint::spin_loop(),
+                Tli::Fail => bo.snooze(),
             }
         }
     }
@@ -517,23 +596,33 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
     fn store(&self, val: T) {
         // Paper line 60: lock-free store as a CAS loop (linearizes at the
         // first successful CAS; same-value fast-out is the AA rule). The
-        // witness feeds the retry instead of a fresh load.
+        // witness feeds the retry instead of a fresh load, and failures
+        // back off adaptively before touching the hot line again.
         let mut cur = self.load();
+        let mut bo = None;
         loop {
             if cur == val {
                 return;
             }
             match self.compare_exchange(cur, val) {
                 Ok(_) => return,
-                Err(w) => cur = w,
+                Err(w) => {
+                    cur = w;
+                    snooze_lazy(&mut bo);
+                }
             }
         }
     }
 
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let h = HazardPointer::new();
+        // Lazy: the uncontended install pays no backoff/TLS cost.
+        let mut bo = None;
         loop {
-            let mut ver = self.version.load(Ordering::SeqCst);
+            // Ordering: ACQUIRE — this pre-read version is only trusted
+            // when try_load_indirect returns Indirect (the install path
+            // hands it to try_seqlock, whose lock CAS re-validates it).
+            let mut ver = self.version.load(P::ACQUIRE);
             let (raw, val) = match self.try_load_indirect(&h) {
                 Tli::Indirect { raw, val } => (raw, val),
                 Tli::Cached { ver: v, raw, val } => {
@@ -541,10 +630,10 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
                     (raw, val)
                 }
                 // The value was changing during the read — another
-                // update is mid-flight (global progress); retry for a
-                // definite witness.
+                // update is mid-flight (global progress); back off and
+                // retry for a definite witness.
                 Tli::Fail => {
-                    std::hint::spin_loop();
+                    snooze_lazy(&mut bo);
                     continue;
                 }
             };
@@ -561,13 +650,21 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
 
             match self
                 .backup
-                .compare_exchange(raw, new_raw, Ordering::SeqCst, Ordering::SeqCst)
+                // Ordering: RELEASE on success — the install is the
+                // linearization point and publishes the node's value
+                // words (written in get_free_node) before its address;
+                // readers pair via protect_backup's ACQUIRE validating
+                // load. RELAXED on failure — the loser re-reads through
+                // try_load_indirect, which re-synchronizes.
+                .compare_exchange(raw, new_raw, P::RELEASE, P::RELAXED)
             {
                 Ok(_) => {
                     if !is_null(raw) {
                         // SAFETY: protected node; uninstall signal.
+                        // Ordering: RELEASE — pairs with the recycler's
+                        // ACQUIRE snapshot.
                         unsafe {
-                            (*(raw as *const Node<T>)).is_installed.store(false, Ordering::Release)
+                            (*(raw as *const Node<T>)).is_installed.store(false, P::RELEASE)
                         };
                     }
                     self.try_seqlock(ver, desired, new_raw, &h);
@@ -576,13 +673,15 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
                 Err(_) => {
                     // A competing update won the install (or cached our
                     // node's predecessor and nulled the backup). Return
-                    // the node and re-read: the next iteration either
-                    // witnesses a different value (Err) or sees
-                    // `expected` restored and retries the install —
-                    // against the *exact* tagged null it just read, so
-                    // its version tag defeats null-ABA. Lock-free: every
-                    // iteration implies a completed competing update.
+                    // the node, back off (the line is hot — Dice et al.)
+                    // and re-read: the next iteration either witnesses a
+                    // different value (Err) or sees `expected` restored
+                    // and retries the install — against the *exact*
+                    // tagged null it just read, so its version tag
+                    // defeats null-ABA. Lock-free: every iteration
+                    // implies a completed competing update.
                     self.domain.free_node(new_node);
+                    snooze_lazy(&mut bo);
                 }
             }
         }

@@ -14,12 +14,34 @@
 //! Key invariants (proof sketch of Theorem 3.1):
 //! 1. the current backup node always holds the current value;
 //! 2. whenever the backup pointer is unmarked, cache == backup value.
+//!
+//! ## Ordering contract
+//!
+//! Three protocols compose here, each with its edges named inline:
+//!
+//! * the **seqlock** over `version`+`cache` (reader: `ACQUIRE` /
+//!   `FENCE_ACQUIRE` / `RELAXED` re-check; writer: `ACQUIRE` lock-CAS,
+//!   `FENCE_RELEASE`, `RELEASE` unlock) — exactly as in
+//!   [`super::SeqLock`];
+//! * **node publication**: the install CAS and the validate CAS are
+//!   `RELEASE` so node contents (and, for validation, the fresh cache)
+//!   happen-before the pointer value that reveals them; readers pair via
+//!   the `ACQUIRE` validating load in `HazardPointer::protect_raw_with`
+//!   or the pre-`FENCE_ACQUIRE` backup load of the fast path;
+//! * **hazard announce→revalidate** — the mandatory `SeqCst` fence lives
+//!   in `smr::hazard`, not here.
+//!
+//! The policy parameter `P` (default [`DefaultPolicy`]) lets the
+//! ordering ablation instantiate a blanket-`SeqCst` variant in a fenced
+//! binary.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::marker::PhantomData;
+use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
 
 use super::bytewise::WordBuf;
 use super::{AtomicValue, BigAtomic};
 use crate::smr::hazard::{retire_box, HazardPointer};
+use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
 
 #[repr(C, align(8))]
 struct Node<T> {
@@ -38,14 +60,15 @@ fn is_marked(raw: usize) -> bool {
     raw & MARK == MARK
 }
 
-pub struct CachedWaitFree<T: AtomicValue> {
+pub struct CachedWaitFree<T: AtomicValue, P: OrderingPolicy = DefaultPolicy> {
     version: AtomicU64,
     /// Marked pointer to `Node<T>`; mark set ⇒ cache invalid.
     backup: AtomicUsize,
     cache: WordBuf<T>,
+    _policy: PhantomData<P>,
 }
 
-impl<T: AtomicValue> CachedWaitFree<T> {
+impl<T: AtomicValue, P: OrderingPolicy> CachedWaitFree<T, P> {
     #[inline]
     fn node_value(raw: usize) -> T {
         // SAFETY: caller protected `unmark(raw)` with a hazard pointer
@@ -57,11 +80,16 @@ impl<T: AtomicValue> CachedWaitFree<T> {
     /// (the address reclaimers compare against).
     #[inline]
     fn protect_backup(&self, h: &HazardPointer) -> usize {
-        h.protect_raw_with(|| self.backup.load(Ordering::SeqCst), unmark)
+        // Ordering: ACQUIRE — the validating (second) call of this load
+        // inside protect_raw_with pairs with the installer's RELEASE
+        // CAS, so the node's contents are visible before node_value
+        // dereferences it. The announce→revalidate SeqCst fence is
+        // inside protect_raw_with.
+        h.protect_raw_with(|| self.backup.load(P::ACQUIRE), unmark)
     }
 }
 
-impl<T: AtomicValue> Drop for CachedWaitFree<T> {
+impl<T: AtomicValue, P: OrderingPolicy> Drop for CachedWaitFree<T, P> {
     fn drop(&mut self) {
         let raw = self.backup.load(Ordering::Relaxed);
         // SAFETY: exclusive in Drop; backup is always a live node.
@@ -69,22 +97,35 @@ impl<T: AtomicValue> Drop for CachedWaitFree<T> {
     }
 }
 
-impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
+impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for CachedWaitFree<T, P> {
     fn new(init: T) -> Self {
         Self {
             version: AtomicU64::new(0),
             // Unmarked: cache starts valid and equal to the backup.
             backup: AtomicUsize::new(Box::into_raw(Box::new(Node { value: init })) as usize),
             cache: WordBuf::new(init),
+            _policy: PhantomData,
         }
     }
 
     #[inline]
     fn load(&self) -> T {
-        let ver = self.version.load(Ordering::SeqCst);
-        let val = self.cache.read();
-        let raw = self.backup.load(Ordering::SeqCst);
-        if !is_marked(raw) && ver == self.version.load(Ordering::SeqCst) {
+        // Ordering: ACQUIRE — pairs with the RELEASE version unlock of
+        // the writer that published v1's cache.
+        let ver = self.version.load(P::ACQUIRE);
+        let val = self.cache.read_p::<P>();
+        // Ordering: RELAXED — validated through the fence + version
+        // re-check below: if this read observed a validate-CAS'd
+        // (unmarked) pointer whose cache we missed, the fence makes the
+        // version bump visible and the re-check fails.
+        let raw = self.backup.load(P::RELAXED);
+        // Ordering: FENCE_ACQUIRE — load-load edge: cache and backup
+        // reads complete before the version re-check; pairs with the
+        // writer-side FENCE_RELEASE (cache copy) and the RELEASE
+        // validate CAS.
+        fence(P::FENCE_ACQUIRE);
+        // Ordering: RELAXED — ordered by the fence above.
+        if !is_marked(raw) && ver == self.version.load(P::RELAXED) {
             // Fast path: cache was valid and untouched through the window.
             return val;
         }
@@ -99,28 +140,37 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
     fn store(&self, val: T) {
         // Table 1: the load+cas variant has no native store; this CAS
         // loop is lock-free (each failure implies another update won)
-        // and feeds the witness back instead of re-loading.
+        // and feeds the witness back instead of re-loading, backing off
+        // adaptively between attempts.
         let mut cur = self.load();
+        let mut bo = None;
         loop {
             if cur == val {
                 return;
             }
             match self.compare_exchange(cur, val) {
                 Ok(_) => return,
-                Err(w) => cur = w,
+                Err(w) => {
+                    cur = w;
+                    crate::util::backoff::snooze_lazy(&mut bo);
+                }
             }
         }
     }
 
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let h = HazardPointer::new();
-        let ver = self.version.load(Ordering::SeqCst);
-        let mut val = self.cache.read();
+        // Ordering: ACQUIRE — as in load's fast path.
+        let ver = self.version.load(P::ACQUIRE);
+        let mut val = self.cache.read_p::<P>();
         // Protect early: the install CAS below must only succeed if the
         // backup hasn't changed since this read (hazard prevents the
         // address being recycled — no ABA).
         let raw = self.protect_backup(&h);
-        if is_marked(raw) || ver != self.version.load(Ordering::SeqCst) {
+        // Ordering: ACQUIRE — the SeqCst fence inside protect_backup
+        // already orders this after the reads above; ACQUIRE keeps the
+        // cache-validity decision paired with the version unlock.
+        if is_marked(raw) || ver != self.version.load(P::ACQUIRE) {
             val = Self::node_value(raw);
         }
         if val != expected {
@@ -134,12 +184,14 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
 
         let new_node = Box::into_raw(Box::new(Node { value: desired }));
         let new_marked = new_node as usize | MARK; // cache invalid until copied
-        let installed = match self.backup.compare_exchange(
-            raw,
-            new_marked,
-            Ordering::SeqCst,
-            Ordering::SeqCst,
-        ) {
+        // Ordering: RELEASE on success — the new node's contents must
+        // happen-before its address is observable (readers ACQUIRE it);
+        // RELAXED on failure — `actual` is only compared, and the retry
+        // path re-synchronizes through protect/node_value.
+        let installed = match self
+            .backup
+            .compare_exchange(raw, new_marked, P::RELEASE, P::RELAXED)
+        {
             Ok(_) => true,
             Err(actual) => {
                 // The first attempt may have failed only because the old
@@ -149,7 +201,8 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
                     && actual == unmark(raw)
                     && self
                         .backup
-                        .compare_exchange(actual, new_marked, Ordering::SeqCst, Ordering::SeqCst)
+                        // Ordering: as the first install attempt.
+                        .compare_exchange(actual, new_marked, P::RELEASE, P::RELAXED)
                         .is_ok()
             }
         };
@@ -175,21 +228,34 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
         // Try to copy into the cache: seqlock acquire, but additionally
         // require the version unchanged since *before* our install so we
         // never overwrite a more recent update's cache (§3.1).
+        // Ordering: ACQUIRE re-check + ACQUIRE lock-CAS (RELAXED on
+        // failure: we simply skip the copy) — the seqlock writer
+        // protocol, as in SeqLock::lock.
         if ver % 2 == 0
-            && ver == self.version.load(Ordering::SeqCst)
+            && ver == self.version.load(P::ACQUIRE)
             && self
                 .version
-                .compare_exchange(ver, ver + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .compare_exchange(ver, ver + 1, P::ACQUIRE, P::RELAXED)
                 .is_ok()
         {
-            self.cache.write(desired);
-            self.version.store(ver + 2, Ordering::Release);
+            // Ordering: FENCE_RELEASE — odd version visible before the
+            // cache words (pairs with the fast-path reader's
+            // FENCE_ACQUIRE: a torn cache read implies a version change).
+            fence(P::FENCE_RELEASE);
+            self.cache.write_p::<P>(desired);
+            // Ordering: RELEASE — cache writes happen-before the even
+            // version.
+            self.version.store(ver + 2, P::RELEASE);
             // Validate: only if our node is still the backup.
+            // Ordering: RELEASE on success — the fresh cache and even
+            // version happen-before the unmarked pointer a fast-path
+            // reader pairs with them; RELAXED on failure (a newer
+            // update owns the cache now).
             let _ = self.backup.compare_exchange(
                 new_marked,
                 unmark(new_marked),
-                Ordering::SeqCst,
-                Ordering::SeqCst,
+                P::RELEASE,
+                P::RELAXED,
             );
         }
         // If validation was skipped/failed the cache stays invalid until
@@ -210,6 +276,7 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWaitFree<T> {
 mod tests {
     use super::*;
     use crate::atomics::Words;
+    use crate::util::ordering::SeqCstEverywhere;
     use std::sync::Arc;
 
     #[test]
@@ -233,6 +300,17 @@ mod tests {
         a.store(Words([3, 4]));
         assert_eq!(a.load(), Words([3, 4]));
         a.store(Words([3, 4])); // idempotent same-value store
+        assert_eq!(a.load(), Words([3, 4]));
+    }
+
+    #[test]
+    fn test_explicit_seqcst_policy_variant() {
+        // The ablation's blanket-SeqCst instantiation must behave
+        // identically.
+        let a: CachedWaitFree<Words<2>, SeqCstEverywhere> = CachedWaitFree::new(Words([0, 0]));
+        assert_eq!(a.compare_exchange(Words([0, 0]), Words([1, 2])), Ok(Words([0, 0])));
+        assert_eq!(a.load(), Words([1, 2]));
+        a.store(Words([3, 4]));
         assert_eq!(a.load(), Words([3, 4]));
     }
 

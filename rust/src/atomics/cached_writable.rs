@@ -8,12 +8,22 @@
 //! encodes "a write is pending") and are *transferred* into `Z` by
 //! helpers — every store and every cas helps, so a buffered write lands
 //! within two `help_write` attempts and all operations are O(k).
+//!
+//! ## Ordering contract
+//!
+//! All heavy lifting is inside the inner [`CachedWaitFree`] (whose own
+//! contract applies to `Z`); the only orderings owned here govern the
+//! write-buffer pointer `W`: `RELEASE` on the buffering CAS (the new
+//! `WNode`'s contents happen-before its address) pairing with the
+//! `ACQUIRE` validating load inside `protect_w`, plus the hazard
+//! announce→revalidate fence in `smr::hazard`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::cached_waitfree::CachedWaitFree;
 use super::{AtomicValue, BigAtomic};
 use crate::smr::hazard::{retire_box, HazardPointer};
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 
 /// The triple stored in Z. `seq` defeats ABA on transfers; `mark`
 /// (0 or 1), compared against W's pointer mark, encodes write-pending.
@@ -60,7 +70,11 @@ impl<T: AtomicValue> CachedWritable<T> {
 
     #[inline]
     fn protect_w(&self, h: &HazardPointer) -> usize {
-        h.protect_raw_with(|| self.w.load(Ordering::SeqCst), |r| r & !MARK)
+        // Ordering: ACQUIRE — the validating call pairs with the
+        // buffering CAS's RELEASE so the WNode contents are visible
+        // before w_value dereferences them; the announce→revalidate
+        // SeqCst fence is inside protect_raw_with.
+        h.protect_raw_with(|| self.w.load(P::ACQUIRE), |r| r & !MARK)
     }
 
     /// Transfer a pending buffered write from W into Z (§3.3).
@@ -129,7 +143,11 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
             let new_w = (n as usize) | ((1 - z.mark) as usize);
             if self
                 .w
-                .compare_exchange(wr, new_w, Ordering::SeqCst, Ordering::SeqCst)
+                // Ordering: RELEASE on success — the buffered WNode's
+                // contents happen-before its address (helpers ACQUIRE it
+                // through protect_w); RELAXED on failure — the loser
+                // only frees its unpublished node and helps.
+                .compare_exchange(wr, new_w, P::RELEASE, P::RELAXED)
                 .is_ok()
             {
                 // SAFETY: old buffer node unlinked (hazard-protected

@@ -5,11 +5,21 @@
 //! performance problem the paper's cached algorithms exist to fix);
 //! updates install a fresh node with a single-word CAS.  Hazard pointers
 //! protect readers from reclamation races.
+//!
+//! ## Ordering contract
+//!
+//! Nodes are immutable after publish, so one edge does all the work:
+//! `RELEASE` on every installing CAS/swap (node contents happen-before
+//! the pointer is observable) pairing with the `ACQUIRE` validating load
+//! inside [`HazardPointer::protect`].  The announce→revalidate
+//! store-load fence lives in `smr::hazard`, not here.
 
 use std::sync::atomic::{AtomicPtr, Ordering};
 
 use super::{AtomicValue, BigAtomic};
 use crate::smr::hazard::{retire_box, HazardPointer};
+use crate::util::backoff::snooze_lazy;
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 
 struct Node<T> {
     value: T,
@@ -49,7 +59,13 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
         // Not `swap`: the previous value is unwanted, and reading it
         // would add a dependent dereference of the cold old node.
         let new = Box::into_raw(Box::new(Node { value: val }));
-        let old = self.ptr.swap(new, Ordering::SeqCst);
+        // Ordering: ACQREL — RELEASE publishes the new node's contents
+        // before its address; ACQUIRE pairs with the previous
+        // installer's RELEASE even though the old *value* is not read:
+        // retiring leads to deallocation, and freeing (then reusing)
+        // the old node's memory must happen-after its initializing
+        // writes.
+        let old = self.ptr.swap(new, P::ACQREL);
         // SAFETY: old is unlinked and was uniquely owned by this atomic.
         unsafe { retire_box(old) };
     }
@@ -57,6 +73,8 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let h = HazardPointer::new();
         let mut p = h.protect(&self.ptr);
+        // Lazy: the uncontended install pays no backoff/TLS cost.
+        let mut bo = None;
         loop {
             // SAFETY: protected.
             let cur = unsafe { (*p).value };
@@ -72,10 +90,12 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
             // The hazard on p prevents its address being recycled, so
             // this CAS succeeding means the logical value is still
             // `expected` (no ABA).
-            match self
-                .ptr
-                .compare_exchange(p, new, Ordering::SeqCst, Ordering::SeqCst)
-            {
+            // Ordering: RELEASE on success — publish the new node before
+            // its address (no Acquire half: p's contents were already
+            // acquired by protect's validating load). RELAXED on failure
+            // — the retry goes back through protect, whose ACQUIRE load
+            // re-synchronizes.
+            match self.ptr.compare_exchange(p, new, P::RELEASE, P::RELAXED) {
                 Ok(_) => {
                     // SAFETY: p is now unlinked.
                     unsafe { retire_box(p) };
@@ -84,6 +104,9 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
                 Err(_) => {
                     // SAFETY: new was never published.
                     drop(unsafe { Box::from_raw(new) });
+                    // A competing update owns the line; back off before
+                    // re-protecting (Dice et al. contention management).
+                    snooze_lazy(&mut bo);
                     // Re-protect the new current node and re-compare:
                     // either the witness now differs (Err) or a value-
                     // level ABA restored `expected` and we retry the
@@ -99,7 +122,10 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
     /// node this thread just unlinked (safe: only the unlinker retires).
     fn swap(&self, val: T) -> T {
         let new = Box::into_raw(Box::new(Node { value: val }));
-        let old = self.ptr.swap(new, Ordering::SeqCst);
+        // Ordering: ACQREL — RELEASE publishes the new node's contents;
+        // ACQUIRE pairs with the previous installer's RELEASE so the old
+        // node's value read below is sound.
+        let old = self.ptr.swap(new, P::ACQREL);
         // SAFETY: old is unlinked by us and not yet retired; nodes are
         // immutable after publish.
         let prev = unsafe { (*old).value };

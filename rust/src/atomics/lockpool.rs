@@ -6,6 +6,14 @@
 //! Deliberately faithful to the pathology: unrelated atomics that hash to
 //! the same pool entry contend with each other, which is why libatomic
 //! is "dead last" across the paper's benchmarks.
+//!
+//! ## Ordering contract
+//!
+//! As in `SimpLock`: plain data guarded entirely by the pool
+//! [`SpinLock`]'s `ACQUIRE`/`RELEASE` pair — the lock is shared across
+//! unrelated atomics, but the happens-before edge per critical section
+//! is the same. Waiting uses the adaptive `util::backoff::Backoff`
+//! inside `SpinLock::lock`.
 
 use std::cell::UnsafeCell;
 

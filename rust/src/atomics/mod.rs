@@ -58,6 +58,43 @@
 //! `Ok(v)` *without* performing a physical update: the cached algorithms
 //! must never replace a value by an equal one (§3.1 — it would disturb
 //! concurrent CASes for no observable effect).
+//!
+//! ## Ordering contract
+//!
+//! The backends are on a **memory-ordering diet** (see
+//! [`crate::util::ordering`]): no operation issues `SeqCst` accesses.
+//! The entire core is built from three reusable edge patterns, and every
+//! demoted site carries an `// Ordering:` comment naming its edge:
+//!
+//! 1. **Seqlock bracket** — readers: `ACQUIRE` version read →
+//!    `RELAXED` data words → `FENCE_ACQUIRE` → `RELAXED` version
+//!    re-check; writers: `ACQUIRE` lock-CAS → `FENCE_RELEASE` →
+//!    `RELAXED` data words → `RELEASE` unlock. The two fences are the
+//!    load-load and store-store edges per-word relaxed accesses cannot
+//!    provide.
+//! 2. **Pointer publication** — installing CAS/swap is `RELEASE`
+//!    (node contents happen-before the address), readers `ACQUIRE` the
+//!    pointer before dereferencing.
+//! 3. **Hazard store-load** — the only `fence(SeqCst)` pair in the
+//!    crate lives in [`crate::smr::hazard`] (announce→revalidate and
+//!    retire→scan); it is mandatory under *both* policies.
+//!
+//! `cargo build --features seqcst_audit` restores the seed's blanket
+//! `SeqCst` at every demoted site (the fences widen to `SeqCst` too), so
+//! the full suite can be run against sequential consistency when
+//! auditing a suspected ordering bug.
+//!
+//! ## Contention management
+//!
+//! Every retry loop (the default [`swap`](BigAtomic::swap) /
+//! [`fetch_update`](BigAtomic::fetch_update) combinators, each backend's
+//! internal install/store loops, and the consumers' witness-fed loops)
+//! backs off through the contention-adaptive
+//! [`Backoff`](crate::util::backoff::Backoff) instead of hammering the
+//! contended line — per Dice, Hendler & Mirsky, failed-CAS retries that
+//! re-acquire the line immediately collapse into coherence traffic.
+//! `util::backoff::set_enabled(false)` restores the seed's bare-retry
+//! behavior; `repro ablate --panel ordering` reports all variants.
 
 pub mod bytewise;
 pub mod cached_memeff;
@@ -165,13 +202,19 @@ pub trait BigAtomic<T: AtomicValue>: Send + Sync {
     #[must_use = "swap returns the previous value; use `store` to discard it"]
     fn swap(&self, new: T) -> T {
         let mut cur = self.load();
+        let mut bo = None;
         loop {
             if cur == new {
                 return cur;
             }
             match self.compare_exchange(cur, new) {
                 Ok(prev) => return prev,
-                Err(w) => cur = w,
+                Err(w) => {
+                    // Witness-fed retry: no re-load, and back off before
+                    // re-touching the contended line (Dice et al.).
+                    cur = w;
+                    crate::util::backoff::snooze_lazy(&mut bo);
+                }
             }
         }
     }
@@ -191,11 +234,17 @@ pub trait BigAtomic<T: AtomicValue>: Send + Sync {
         F: FnMut(T) -> Option<T>,
     {
         let mut prev = self.load();
+        let mut bo = None;
         loop {
             match f(prev) {
                 Some(next) => match self.compare_exchange(prev, next) {
                     Ok(witnessed) => return Ok(witnessed),
-                    Err(w) => prev = w,
+                    Err(w) => {
+                        // Witness-fed retry with adaptive backoff — the
+                        // canonical Dice-et-al. CAS retry loop.
+                        prev = w;
+                        crate::util::backoff::snooze_lazy(&mut bo);
+                    }
                 },
                 None => return Err(prev),
             }

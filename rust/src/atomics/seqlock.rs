@@ -6,98 +6,135 @@
 //! odd, write, increment to even.  Loads block only while a writer holds
 //! the lock (which is why oversubscription hurts: a descheduled writer
 //! stalls every reader — the paper's headline failure mode).
+//!
+//! ## Ordering contract
+//!
+//! The seqlock needs exactly four edges, all named inline below:
+//! reader `ACQUIRE` on the first version read, a reader-side
+//! `FENCE_ACQUIRE` between the data reads and the version re-check,
+//! writer `ACQUIRE` on the lock CAS plus a writer-side `FENCE_RELEASE`
+//! before the data writes, and a `RELEASE` unlock.  The writer-side
+//! fence deserves a note: the seed relied on the lock CAS alone, but a
+//! CAS's release half orders *prior* accesses, not the data stores that
+//! follow it — without the explicit fence a reader on a weakly-ordered
+//! machine can observe new data words with a stale (even) version and
+//! return a torn value.  The policy parameter `P` (default
+//! [`DefaultPolicy`]) exists for the ordering ablation: instantiate
+//! `SeqLock<T, SeqCstEverywhere>` to measure the blanket-`SeqCst` seed
+//! behavior against the diet in one binary.
+//!
+//! Waiting (lock acquisition, reader retry) goes through the adaptive
+//! [`crate::util::backoff::Backoff`]; with backoff disabled
+//! (`util::backoff::set_enabled`) it degrades to the seed's
+//! spin-a-quantum-then-yield pathology that the oversubscription
+//! figures measure.
 
-use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::marker::PhantomData;
+use std::sync::atomic::{fence, AtomicU64};
 
 use super::bytewise::WordBuf;
 use super::{AtomicValue, BigAtomic};
+use crate::util::backoff::snooze_lazy;
+use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
 
-// Spin a whole scheduler quantum before yielding — see spin.rs: faithful
-// to the paper's (spinning) seqlock, whose readers stall behind a
-// descheduled writer under oversubscription.
-const SPINS_BEFORE_YIELD: u32 = 1 << 20;
-
-pub struct SeqLock<T: AtomicValue> {
+pub struct SeqLock<T: AtomicValue, P: OrderingPolicy = DefaultPolicy> {
     version: AtomicU64,
     data: WordBuf<T>,
+    _policy: PhantomData<P>,
 }
 
-impl<T: AtomicValue> SeqLock<T> {
+impl<T: AtomicValue, P: OrderingPolicy> SeqLock<T, P> {
     /// Acquire the write lock; returns the (even) version observed.
+    /// On return, the odd version is fenced before any subsequent data
+    /// write (the writer-side store-store edge).
     #[inline]
     fn lock(&self) -> u64 {
-        let mut spins = 0u32;
+        // Lazy: the uncontended acquire pays no backoff/TLS cost.
+        let mut bo = None;
         loop {
-            let v = self.version.load(Ordering::Relaxed);
+            // Ordering: RELAXED — a stale read only wastes one CAS
+            // attempt; the CAS itself (re)validates.
+            let v = self.version.load(P::RELAXED);
             if v % 2 == 0
                 && self
                     .version
-                    .compare_exchange_weak(v, v + 1, Ordering::Acquire, Ordering::Relaxed)
+                    // Ordering: ACQUIRE on success — pairs with the
+                    // previous holder's RELEASE unlock so their data
+                    // writes happen-before ours; RELAXED on failure
+                    // (retry re-reads).
+                    .compare_exchange_weak(v, v + 1, P::ACQUIRE, P::RELAXED)
                     .is_ok()
             {
+                // Ordering: FENCE_RELEASE — store-store edge: the odd
+                // version must be visible before any data word, else a
+                // reader pairs new data with a stale even version and
+                // returns a torn value (pairs with the reader's
+                // FENCE_ACQUIRE).
+                fence(P::FENCE_RELEASE);
                 return v;
             }
-            spins += 1;
-            if spins >= SPINS_BEFORE_YIELD {
-                std::thread::yield_now();
-                spins = 0;
-            } else {
-                std::hint::spin_loop();
-            }
+            snooze_lazy(&mut bo);
         }
     }
 
     #[inline]
     fn unlock(&self, v: u64) {
-        self.version.store(v + 2, Ordering::Release);
+        // Ordering: RELEASE — all data writes happen-before the even
+        // version a reader ACQUIREs.
+        self.version.store(v + 2, P::RELEASE);
     }
 }
 
-impl<T: AtomicValue> BigAtomic<T> for SeqLock<T> {
+impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for SeqLock<T, P> {
     fn new(init: T) -> Self {
         Self {
             version: AtomicU64::new(0),
             data: WordBuf::new(init),
+            _policy: PhantomData,
         }
     }
 
     #[inline]
     fn load(&self) -> T {
-        let mut spins = 0u32;
+        // Lazy: the common single-iteration read pays no backoff cost.
+        let mut bo = None;
         loop {
-            let v1 = self.version.load(Ordering::Acquire);
+            // Ordering: ACQUIRE — pairs with the RELEASE unlock of the
+            // writer that published version v1, making its data writes
+            // visible to the reads below.
+            let v1 = self.version.load(P::ACQUIRE);
             if v1 % 2 == 0 {
-                let val = self.data.read();
-                fence(Ordering::Acquire);
-                let v2 = self.version.load(Ordering::Relaxed);
+                let val = self.data.read_p::<P>();
+                // Ordering: FENCE_ACQUIRE — load-load edge: the data
+                // reads must complete before the version re-check;
+                // pairs with the writer's post-lock FENCE_RELEASE so a
+                // torn read implies v2 != v1.
+                fence(P::FENCE_ACQUIRE);
+                // Ordering: RELAXED — ordered after the data reads by
+                // the fence above.
+                let v2 = self.version.load(P::RELAXED);
                 if v1 == v2 {
                     return val;
                 }
             }
-            spins += 1;
-            if spins >= SPINS_BEFORE_YIELD {
-                std::thread::yield_now();
-                spins = 0;
-            } else {
-                std::hint::spin_loop();
-            }
+            snooze_lazy(&mut bo);
         }
     }
 
     #[inline]
     fn store(&self, val: T) {
         let v = self.lock();
-        self.data.write(val);
+        self.data.write_p::<P>(val);
         self.unlock(v);
     }
 
     #[inline]
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
         let v = self.lock();
-        let cur = self.data.read();
+        let cur = self.data.read_p::<P>();
         let ok = cur == expected;
         if ok {
-            self.data.write(desired);
+            self.data.write_p::<P>(desired);
         }
         self.unlock(v);
         if ok {
@@ -111,8 +148,8 @@ impl<T: AtomicValue> BigAtomic<T> for SeqLock<T> {
     #[inline]
     fn swap(&self, new: T) -> T {
         let v = self.lock();
-        let cur = self.data.read();
-        self.data.write(new);
+        let cur = self.data.read_p::<P>();
+        self.data.write_p::<P>(new);
         self.unlock(v);
         cur
     }
@@ -131,7 +168,8 @@ impl<T: AtomicValue> BigAtomic<T> for SeqLock<T> {
 mod tests {
     use super::*;
     use crate::atomics::Words;
-    use std::sync::Arc;
+    use crate::util::ordering::SeqCstEverywhere;
+    use std::sync::{atomic::Ordering, Arc};
 
     #[test]
     fn test_load_store_roundtrip() {
@@ -157,6 +195,17 @@ mod tests {
         assert_eq!(a.fetch_update(|v| Some(Words([v.0[0] + 1, v.0[1]]))), Ok(Words([5, 6])));
         assert_eq!(a.fetch_update(|_| None), Err(Words([6, 6])));
         assert_eq!(a.load(), Words([6, 6]));
+    }
+
+    #[test]
+    fn test_explicit_seqcst_policy_variant() {
+        // The audit-policy instantiation (used by the ordering ablation)
+        // must behave identically.
+        let a: SeqLock<Words<2>, SeqCstEverywhere> = SeqLock::new(Words([1, 2]));
+        assert_eq!(a.load(), Words([1, 2]));
+        assert_eq!(a.compare_exchange(Words([1, 2]), Words([3, 4])), Ok(Words([1, 2])));
+        assert_eq!(a.swap(Words([5, 6])), Words([3, 4]));
+        assert_eq!(a.load(), Words([5, 6]));
     }
 
     #[test]

@@ -2,6 +2,15 @@
 //! one spinlock per atomic, acquired by *every* operation, loads
 //! included.  The paper's worst classic baseline at low update rates
 //! (loads contend with each other) and under oversubscription.
+//!
+//! ## Ordering contract
+//!
+//! The data is a plain (non-atomic) `UnsafeCell`, so the lock word is
+//! the *only* synchronization: `ACQUIRE` acquisition / `RELEASE` unlock
+//! in [`SpinLock`] make each critical section happen-before the next —
+//! nothing here can be demoted further (and nothing needs `SeqCst`).
+//! Lock waiting goes through the adaptive `util::backoff::Backoff`
+//! inside `SpinLock::lock`.
 
 use std::cell::UnsafeCell;
 

@@ -1,20 +1,28 @@
-//! Test-and-test-and-set spinlock with bounded exponential backoff and
+//! Test-and-test-and-set spinlock with contention-adaptive backoff and
 //! yield-after-spin — the lock under `SimpLock`, `LockPool`, and the
 //! `HtmSim` fallback path.
 //!
-//! The yield matters for the paper's oversubscription experiments: a
-//! descheduled lock holder must eventually run again, and spinning waiters
-//! burning whole quanta is exactly the pathology §5.1 measures. Spinning
-//! briefly first keeps the uncontended/undersubscribed fast path fast.
+//! Waiters go through [`crate::util::backoff::Backoff`]
+//! (truncated-exponential spin, then yield): the yield matters for the
+//! paper's oversubscription
+//! experiments — a descheduled lock holder must eventually run again —
+//! and the Dice-et-al. adaptive spin keeps the uncontended fast path at
+//! a single CAS.  Disabling backoff (`util::backoff::set_enabled(false)`)
+//! restores the seed's spin-a-full-quantum-then-yield behavior, the
+//! §5.1 pathology the ablation quantifies.
+//!
+//! ## Ordering contract
+//!
+//! The lock word is the only synchronization: `ACQUIRE` on a successful
+//! acquisition pairs with the `RELEASE` unlock of the previous holder,
+//! so everything done inside the previous critical section
+//! happens-before this one.  All waiting-side reads are `RELAXED` — they
+//! decide nothing; the CAS re-validates.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::AtomicBool;
 
-// Spin ~1M iterations (≈1-2ms, a scheduler quantum) before yielding.
-// Faithful to the paper's lock implementations, which spin: a waiter
-// whose lock holder was descheduled burns its quantum — exactly the
-// oversubscription pathology §5.1 measures.  The eventual yield is a
-// livelock safety valve only.
-const SPINS_BEFORE_YIELD: u32 = 1 << 20;
+use crate::util::backoff::snooze_lazy;
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 
 /// A one-word spinlock.
 pub struct SpinLock {
@@ -31,29 +39,31 @@ impl SpinLock {
     /// Try once (test-and-set only if observed free).
     #[inline]
     pub fn try_lock(&self) -> bool {
-        !self.locked.load(Ordering::Relaxed)
+        // Ordering: RELAXED test — a stale `false` costs one failed CAS;
+        // the CAS decides.
+        !self.locked.load(P::RELAXED)
             && self
                 .locked
-                .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+                // Ordering: ACQUIRE on success — pairs with the RELEASE
+                // unlock of the previous holder (critical-section
+                // happens-before); RELAXED on failure (nothing learned).
+                .compare_exchange(false, true, P::ACQUIRE, P::RELAXED)
                 .is_ok()
     }
 
-    /// Acquire, spinning with backoff then yielding.
+    /// Acquire, spinning with adaptive backoff then yielding.
     #[inline]
     pub fn lock(&self) {
-        let mut spins = 0u32;
+        // Lazy: the uncontended acquire pays no backoff/TLS cost.
+        let mut bo = None;
         loop {
             if self.try_lock() {
                 return;
             }
-            while self.locked.load(Ordering::Relaxed) {
-                spins += 1;
-                if spins >= SPINS_BEFORE_YIELD {
-                    std::thread::yield_now();
-                    spins = 0;
-                } else {
-                    std::hint::spin_loop();
-                }
+            // Ordering: RELAXED wait-test — purely advisory; the
+            // acquiring CAS in try_lock re-validates.
+            while self.locked.load(P::RELAXED) {
+                snooze_lazy(&mut bo);
             }
         }
     }
@@ -62,12 +72,17 @@ impl SpinLock {
     /// lock-subscription emulation).
     #[inline]
     pub fn is_locked(&self) -> bool {
-        self.locked.load(Ordering::Relaxed)
+        // Ordering: RELAXED — advisory only: HtmSim's transactions use
+        // this to abort early/fairly; mutual exclusion is enforced by
+        // the version word, not this read.
+        self.locked.load(P::RELAXED)
     }
 
     #[inline]
     pub fn unlock(&self) {
-        self.locked.store(false, Ordering::Release);
+        // Ordering: RELEASE — the critical section happens-before the
+        // next ACQUIRE acquisition.
+        self.locked.store(false, P::RELEASE);
     }
 
     /// Scoped acquisition.

@@ -8,15 +8,24 @@
 //! 3. **Seqlock read concurrency** (§2): SeqLock (lock-free reads) vs
 //!    SimpLock (locked reads) on a read-only workload — why sequence
 //!    locks beat plain locks for load-heavy mixes.
+//! 4. **Memory-ordering diet + contention management**
+//!    (`--panel ordering`): blanket-`SeqCst` (the seed) vs the fenced
+//!    diet vs fenced+adaptive-backoff, measured in one binary via the
+//!    explicit `OrderingPolicy` instantiations of `SeqLock` and
+//!    `CachedWaitFree` and the runtime backoff switch — the win of the
+//!    diet is a number in the report, not a claim.
 //!
-//! Run with `repro ablate`.
+//! Run with `repro ablate [--panel ordering]`.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
-use super::driver::{run_map, MapImpl, OpSource};
+use super::driver::{hw_threads, run_map, MapImpl, OpSource};
 use super::figures::{FigureCfg, Report};
 use super::workload::{WorkloadSpec, ZipfCdf};
-use crate::atomics::{BigAtomic, CachedMemEff, SeqLock, SimpLock, Words};
+use crate::atomics::{BigAtomic, CachedMemEff, CachedWaitFree, SeqLock, SimpLock, Words};
+use crate::util::backoff;
+use crate::util::ordering::{Fenced, SeqCstEverywhere};
 use crate::util::rng::Xoshiro256;
 use crate::util::{ns_per_op, time_for};
 
@@ -75,6 +84,96 @@ fn ablate_read_locking(rep: &mut Report) {
     ]);
 }
 
+/// One measurement point of ablation 4: p threads hammer one shared
+/// atomic with witness-fed CAS-loop increments (contended Mop/s), then a
+/// single thread measures quiescent load latency (uncontended ns/op).
+fn ordering_point<A: BigAtomic<Words<4>>>(threads: usize, dur: Duration) -> (f64, f64) {
+    let a = A::new(Words([0; 4]));
+    let stop = AtomicBool::new(false);
+    let total = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                let mut ops = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = a.fetch_update(|mut v| {
+                        v.0[0] = v.0[0].wrapping_add(1);
+                        Some(v)
+                    });
+                    ops += 1;
+                }
+                total.fetch_add(ops, Ordering::Relaxed);
+            });
+        }
+        std::thread::sleep(dur);
+        stop.store(true, Ordering::SeqCst);
+    });
+    let mops = total.load(Ordering::SeqCst) as f64 / dur.as_secs_f64().max(1e-9) / 1e6;
+    let (it, el) = time_for(dur.min(Duration::from_millis(100)), || {
+        std::hint::black_box(a.load());
+    });
+    (mops, ns_per_op(it, el))
+}
+
+/// Ablation 4 (`repro ablate --panel ordering`): the three-variant
+/// comparison — seqcst-everywhere vs fenced vs fenced+backoff — on the
+/// two policy-parametric backends. The seqcst and fenced rows run with
+/// backoff disabled so the ordering effect is isolated; the third row
+/// re-enables the adaptive backoff on the fenced variant.
+pub fn run_ordering_ablation(cfg: &FigureCfg) -> Report {
+    let threads = hw_threads().max(2);
+    let dur = cfg.dur();
+    let mut rep = Report::new(
+        "ablation_ordering",
+        &["variant", "impl", "contended_casloop_mops", "uncontended_load_ns"],
+    );
+    let prev = backoff::enabled();
+    {
+        let mut row = |variant: &str, imp: &str, (mops, ns): (f64, f64)| {
+            rep.row(vec![
+                variant.into(),
+                imp.into(),
+                format!("{mops:.3}"),
+                format!("{ns:.1}"),
+            ]);
+        };
+        backoff::set_enabled(false);
+        row(
+            "seqcst",
+            "SeqLock",
+            ordering_point::<SeqLock<Words<4>, SeqCstEverywhere>>(threads, dur),
+        );
+        row(
+            "seqcst",
+            "Cached-WaitFree",
+            ordering_point::<CachedWaitFree<Words<4>, SeqCstEverywhere>>(threads, dur),
+        );
+        row(
+            "fenced",
+            "SeqLock",
+            ordering_point::<SeqLock<Words<4>, Fenced>>(threads, dur),
+        );
+        row(
+            "fenced",
+            "Cached-WaitFree",
+            ordering_point::<CachedWaitFree<Words<4>, Fenced>>(threads, dur),
+        );
+        backoff::set_enabled(true);
+        row(
+            "fenced+backoff",
+            "SeqLock",
+            ordering_point::<SeqLock<Words<4>, Fenced>>(threads, dur),
+        );
+        row(
+            "fenced+backoff",
+            "Cached-WaitFree",
+            ordering_point::<CachedWaitFree<Words<4>, Fenced>>(threads, dur),
+        );
+    }
+    backoff::set_enabled(prev);
+    rep
+}
+
 /// Run all ablations; returns the report (saved by the coordinator).
 pub fn run_ablations(cfg: &FigureCfg, source: &OpSource) -> Report {
     let mut rep = Report::new(
@@ -121,6 +220,32 @@ mod tests {
         };
         let rep = run_ablations(&cfg, &OpSource::Rust);
         assert_eq!(rep.rows().len(), 3);
+    }
+
+    #[test]
+    fn test_ordering_ablation_shape() {
+        let cfg = FigureCfg {
+            secs_per_point: 0.02,
+            n: 256,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_ordering_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_ordering_ablation(&cfg);
+        // 3 variants x 2 impls.
+        assert_eq!(rep.rows().len(), 6);
+        let variants: Vec<&str> = rep.rows().iter().map(|r| r[0].as_str()).collect();
+        for v in ["seqcst", "fenced", "fenced+backoff"] {
+            assert_eq!(variants.iter().filter(|x| **x == v).count(), 2, "{v}");
+        }
+        for row in rep.rows() {
+            assert!(row[2].parse::<f64>().unwrap() > 0.0, "{row:?}");
+            assert!(row[3].parse::<f64>().unwrap() > 0.0, "{row:?}");
+        }
+        // The toggle must be restored for the rest of the suite.
+        assert!(backoff::enabled());
     }
 
     #[test]

@@ -106,11 +106,21 @@ impl Coordinator {
             }
             "table1" => save(figures::table1())?,
             "memory" => save(crate::bench::memory::memory_census(cfg))?,
-            "ablate" => save(crate::bench::ablation::run_ablations(cfg, &source))?,
+            "ablate" => match panel {
+                "ordering" => save(crate::bench::ablation::run_ordering_ablation(cfg))?,
+                "" | "all" => {
+                    save(crate::bench::ablation::run_ablations(cfg, &source))?;
+                    save(crate::bench::ablation::run_ordering_ablation(cfg))?;
+                }
+                other => crate::bail!("ablate panel {other}: use ordering (or omit for all)"),
+            },
             "all" => {
                 saved.extend(figures::run_all(cfg, &source));
                 saved.push(
                     crate::bench::ablation::run_ablations(cfg, &source).save(&cfg.report_dir)?,
+                );
+                saved.push(
+                    crate::bench::ablation::run_ordering_ablation(cfg).save(&cfg.report_dir)?,
                 );
             }
             other => crate::bail!("unknown figure {other}"),

@@ -9,13 +9,18 @@
 //! push the old head out to the heap; deletes path-copy the prefix), so
 //! linearizability reduces to the big atomic's. Failed head CASes feed
 //! their *witness* back into the retry — the bucket is re-read zero
-//! extra times no matter how contended.
+//! extra times no matter how contended — and `insert` additionally
+//! remembers which (immutable) chain it already proved duplicate-free,
+//! so a retry whose witnessed chain pointer is unchanged skips the
+//! second chain walk entirely. Retries back off through the adaptive
+//! `util::backoff::Backoff`.
 //!
 //! Epoch-based reclamation protects chain traversals (§4).
 
 use super::{bucket_for, table_capacity, ConcurrentMap};
 use crate::atomics::{AtomicValue, BigAtomic};
 use crate::smr::epoch;
+use crate::util::backoff::snooze_lazy;
 use crate::util::CachePadded;
 
 /// The inlined first link: key, value, and a tagged next pointer.
@@ -175,6 +180,17 @@ where
         let _g = epoch::pin();
         let bucket = self.bucket(&key);
         let mut head = bucket.load();
+        // The chain pointer we last walked and proved free of `key`.
+        // Chain nodes are immutable after publish and we hold the epoch
+        // pin for the whole operation, so no node reachable from a head
+        // we read can be freed (or its address reused) before we return
+        // — pointer equality therefore implies the entire chain is
+        // unchanged, and a witness-fed retry whose chain pointer matches
+        // skips the second walk (the duplicate check cost under
+        // contention).
+        let mut searched: Option<*mut ChainNode<K, V>> = None;
+        // Lazy: an uncontended insert pays no backoff/TLS cost.
+        let mut bo = None;
         loop {
             if !head.occupied() {
                 // Empty bucket: install inline. On failure the witness
@@ -186,19 +202,27 @@ where
                     Ok(_) => return true,
                     Err(w) => {
                         head = w;
+                        snooze_lazy(&mut bo);
                         continue;
                     }
                 }
             }
-            if head.key == key || Self::chain_find(head.next_ptr(), &key).is_some() {
+            if head.key == key {
                 return false;
+            }
+            let chain = head.next_ptr();
+            if searched != Some(chain) {
+                if Self::chain_find(chain, &key).is_some() {
+                    return false;
+                }
+                searched = Some(chain);
             }
             // Push-front: the new pair goes inline; the old inline pair
             // moves out to a heap link pointing at the existing chain.
             let spill = Box::into_raw(Box::new(ChainNode {
                 key: head.key,
                 value: head.value,
-                next: head.next_ptr(),
+                next: chain,
             }));
             match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
                 Ok(_) => return true,
@@ -206,6 +230,7 @@ where
                     // SAFETY: never published.
                     drop(unsafe { Box::from_raw(spill) });
                     head = w;
+                    snooze_lazy(&mut bo);
                 }
             }
         }
@@ -215,6 +240,8 @@ where
         let _g = epoch::pin();
         let bucket = self.bucket(&key);
         let mut head = bucket.load();
+        // Lazy: an uncontended remove pays no backoff/TLS cost.
+        let mut bo = None;
         loop {
             if !head.occupied() {
                 return false;
@@ -227,6 +254,7 @@ where
                         Ok(_) => return true,
                         Err(w) => {
                             head = w;
+                            snooze_lazy(&mut bo);
                             continue;
                         }
                     }
@@ -243,6 +271,7 @@ where
                     }
                     Err(w) => {
                         head = w;
+                        snooze_lazy(&mut bo);
                         continue;
                     }
                 }
@@ -302,6 +331,7 @@ where
                         q = b.next;
                     }
                     head = w;
+                    snooze_lazy(&mut bo);
                 }
             }
         }
@@ -444,6 +474,36 @@ mod tests {
             .collect();
         for h in handles {
             h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn test_concurrent_duplicate_inserts_exactly_one_winner() {
+        // Both threads race to insert the same keys into a 2-bucket
+        // table (long chains force the duplicate check through the
+        // witness-fed retry with the searched-chain skip): every key
+        // must be inserted exactly once.
+        let t: Arc<CacheHash<CachedMemEff<LinkVal>>> = Arc::new(CacheHash::new(2));
+        let wins = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                let wins = Arc::clone(&wins);
+                std::thread::spawn(move || {
+                    for k in 0..500u64 {
+                        if t.insert(k, k + 1) {
+                            wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(wins.load(std::sync::atomic::Ordering::SeqCst), 500);
+        for k in 0..500u64 {
+            assert_eq!(t.find(k), Some(k + 1), "key {k}");
         }
     }
 

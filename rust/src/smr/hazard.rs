@@ -12,11 +12,50 @@
 //! The announcement array is also what Algorithm 2's thread-private slab
 //! recycler scans ("get_protected_ptrs", §3.2) — see
 //! [`protected_snapshot`].
+//!
+//! ## Slot acquisition is cached, not claimed
+//!
+//! Acquiring a [`HazardPointer`] costs **one** thread-local access: each
+//! thread caches its slot-array base (computed from the registry tid
+//! once) together with the in-use bitmap in a single TLS struct, and
+//! claims the lowest free slot with a `trailing_zeros`. Re-protecting
+//! through a held guard ("re-arming") is just the announce store + fence
+//! — no TLS at all. The seed instead walked two TLS variables and a
+//! bitmap scan loop on *every* slow-path operation, which dominated the
+//! announce cost.
+//!
+//! ## Ordering contract
+//!
+//! Hazard pointers are the textbook case of a required store-load
+//! barrier, and this module owns **both** of the crate's mandatory
+//! `fence(SeqCst)` points (everything else in the synchronization core
+//! is Acquire/Release/Relaxed — see [`crate::util::ordering`]):
+//!
+//! 1. **announce → revalidate** ([`HazardPointer::protect`] /
+//!    [`protect_raw_with`](HazardPointer::protect_raw_with)): the slot
+//!    store must be globally visible *before* the source pointer is
+//!    re-read. Without the fence the CPU may order the revalidating load
+//!    before the announcement store, and a concurrent
+//!    retire→scan→free can miss the announcement while the revalidation
+//!    still sees the old pointer — a use-after-free.
+//! 2. **retire → scan** ([`scan`] / [`protected_snapshot`]): the
+//!    reclaimer's fence pairs with (1). If the scanner's fence orders
+//!    before an announcer's fence in the global SeqCst order, the
+//!    announcer's revalidation is guaranteed to observe the unlink and
+//!    retry; otherwise the scan observes the announcement. Either way no
+//!    protected node is freed.
+//!
+//! Around those two fences, the individual accesses are demoted: slot
+//! announce stores are `RELAXED` (the fence publishes them), slot scans
+//! are `ACQUIRE` (pair with the publisher's `RELEASE` so node contents
+//! are visible before any free), and slot clears are `RELEASE` (the
+//! protected reads happen-before the slot release).
 
-use std::cell::RefCell;
-use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{fence, AtomicPtr, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::MAX_THREADS;
 
@@ -50,39 +89,56 @@ unsafe impl Send for Retired {}
 
 static ORPHANS: Mutex<Vec<Retired>> = Mutex::new(Vec::new());
 
-thread_local! {
-    static RETIRED: RefCell<Vec<Retired>> = const { RefCell::new(Vec::new()) };
-    // Cell, not RefCell: slot claim/release is on the cas hot path.
-    static SLOT_BITMAP: std::cell::Cell<u8> = const { std::cell::Cell::new(0) };
+/// The per-thread slot cache: base index into [`SLOTS`] plus the in-use
+/// bitmap, resolved through a *single* TLS access per guard acquisition.
+struct SlotCache {
+    base: usize,
+    bitmap: Cell<u8>,
 }
 
+thread_local! {
+    static RETIRED: RefCell<Vec<Retired>> = const { RefCell::new(Vec::new()) };
+    // One TLS struct for the whole claim path (tid is resolved once, at
+    // first use, not per operation).
+    static SLOT_CACHE: SlotCache = SlotCache {
+        base: tid() * SLOTS_PER_THREAD,
+        bitmap: Cell::new(0),
+    };
+}
+
+const SLOT_MASK: u8 = (1 << SLOTS_PER_THREAD) - 1;
+
 /// RAII hazard slot. Acquire with [`HazardPointer::new`]; the protected
-/// pointer is cleared when dropped.
+/// pointer is cleared when dropped. The slot itself is leased from the
+/// thread's cached slot set — see the module docs.
 pub struct HazardPointer {
     slot: &'static AtomicUsize,
     bit: u8,
 }
 
+/// Alias emphasizing the cached-slot acquisition path.
+pub type HazardGuard = HazardPointer;
+
 impl HazardPointer {
-    /// Claim one of this thread's hazard slots.
+    /// Claim one of this thread's hazard slots (one TLS access + a
+    /// trailing-zeros pick — no bitmap walk).
     ///
     /// Panics if all [`SLOTS_PER_THREAD`] slots are in use (a structural
     /// bug — operations hold at most a constant number).
+    #[inline]
     pub fn new() -> Self {
-        let t = tid();
-        SLOT_BITMAP.with(|bm| {
-            let cur = bm.get();
-            for j in 0..SLOTS_PER_THREAD {
-                let bit = 1u8 << j;
-                if cur & bit == 0 {
-                    bm.set(cur | bit);
-                    return HazardPointer {
-                        slot: &SLOTS[t * SLOTS_PER_THREAD + j],
-                        bit,
-                    };
-                }
+        SLOT_CACHE.with(|c| {
+            let bm = c.bitmap.get();
+            let free = !bm & SLOT_MASK;
+            if free == 0 {
+                panic!("all {SLOTS_PER_THREAD} hazard slots of this thread in use");
             }
-            panic!("all {SLOTS_PER_THREAD} hazard slots of thread {t} in use");
+            let j = free.trailing_zeros() as usize;
+            c.bitmap.set(bm | (1 << j));
+            HazardPointer {
+                slot: &SLOTS[c.base + j],
+                bit: 1 << j,
+            }
         })
     }
 
@@ -92,9 +148,20 @@ impl HazardPointer {
     #[inline]
     pub fn protect<T>(&self, src: &AtomicPtr<T>) -> *mut T {
         loop {
-            let p = src.load(Ordering::SeqCst);
-            self.slot.store(p as usize, Ordering::SeqCst);
-            if src.load(Ordering::SeqCst) == p {
+            // Ordering: RELAXED — this speculative read is confirmed (or
+            // retried) by the post-fence revalidation below.
+            let p = src.load(P::RELAXED);
+            // Ordering: RELAXED store — the SeqCst fence below is what
+            // publishes the announcement before the revalidating load.
+            self.slot.store(p as usize, P::RELAXED);
+            // Ordering: mandatory store-load fence (module docs, point 1):
+            // announce must be visible before `src` is re-read, pairing
+            // with the reclaimer's fence in `scan`.
+            fence(Ordering::SeqCst);
+            // Ordering: ACQUIRE — on success this load pairs with the
+            // Release publication of `p`, so the node's contents are
+            // visible before the caller dereferences it.
+            if src.load(P::ACQUIRE) == p {
                 return p;
             }
         }
@@ -103,7 +170,10 @@ impl HazardPointer {
     /// Protect a raw word (used for tagged/marked pointers where the
     /// caller strips tags itself). The *announced* value is the address
     /// the reclaimers compare against, so callers must announce the
-    /// unmarked node address.
+    /// unmarked node address. `load` should be a `RELAXED`/`ACQUIRE`
+    /// read of the source word — the fence here provides the store-load
+    /// edge, and the final validating call of `load` is what the caller
+    /// may rely on for Acquire publication (pass an `ACQUIRE` load).
     #[inline]
     pub fn protect_raw_with<F: Fn() -> usize, G: Fn(usize) -> usize>(
         &self,
@@ -112,7 +182,10 @@ impl HazardPointer {
     ) -> usize {
         loop {
             let raw = load();
-            self.slot.store(to_node(raw), Ordering::SeqCst);
+            // Ordering: RELAXED store + mandatory SeqCst fence — same
+            // announce→revalidate edge as `protect`.
+            self.slot.store(to_node(raw), P::RELAXED);
+            fence(Ordering::SeqCst);
             if load() == raw {
                 return raw;
             }
@@ -123,13 +196,19 @@ impl HazardPointer {
     /// the node is still reachable afterwards, i.e. re-validate).
     #[inline]
     pub fn announce(&self, addr: usize) {
-        self.slot.store(addr, Ordering::SeqCst);
+        // Ordering: RELAXED store + mandatory SeqCst fence — callers of
+        // the raw announce still need the announce→revalidate edge
+        // before any re-validation they perform.
+        self.slot.store(addr, P::RELAXED);
+        fence(Ordering::SeqCst);
     }
 
     /// Clear the announcement without releasing the slot.
     #[inline]
     pub fn clear(&self) {
-        self.slot.store(0, Ordering::Release);
+        // Ordering: RELEASE — all reads through the protected pointer
+        // happen-before the slot is observed empty by a scanner.
+        self.slot.store(0, P::RELEASE);
     }
 }
 
@@ -141,8 +220,10 @@ impl Default for HazardPointer {
 
 impl Drop for HazardPointer {
     fn drop(&mut self) {
-        self.slot.store(0, Ordering::Release);
-        SLOT_BITMAP.with(|bm| bm.set(bm.get() & !self.bit));
+        // Ordering: RELEASE — as in `clear`: protected reads
+        // happen-before a scanner observes the slot free.
+        self.slot.store(0, P::RELEASE);
+        let _ = SLOT_CACHE.try_with(|c| c.bitmap.set(c.bitmap.get() & !self.bit));
     }
 }
 
@@ -174,12 +255,20 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
 /// Scan announcements and free every retired node not protected.
 /// Also opportunistically drains the orphan list of exited threads.
 pub fn scan() {
+    // Ordering: mandatory store-load fence (module docs, point 2) —
+    // pairs with the announcers' fences: every unlink that
+    // happened-before this scan is ordered before the slot reads, so an
+    // announcement made against the pre-unlink pointer either shows up
+    // here or its owner's revalidation fails.
+    fence(Ordering::SeqCst);
     // Snapshot all announcements (only slots of threads that ever
     // registered — see registry::high_water).
     let hw = crate::util::registry::high_water() * SLOTS_PER_THREAD;
     let mut protected: Vec<usize> = SLOTS[..hw]
         .iter()
-        .map(|s| s.load(Ordering::SeqCst))
+        // Ordering: ACQUIRE — pairs with the RELEASE clear so a slot
+        // observed empty implies its protected reads completed.
+        .map(|s| s.load(P::ACQUIRE))
         .filter(|&p| p != 0)
         .collect();
     protected.sort_unstable();
@@ -210,9 +299,15 @@ pub fn scan() {
 /// Used by Algorithm 2's slab recycler (§3.2, "get_protected_ptrs").
 pub fn protected_snapshot(buf: &mut Vec<usize>) {
     buf.clear();
+    // Ordering: mandatory store-load fence — same retire→scan edge as
+    // `scan` (the slab recycler's uninstall store must be ordered before
+    // these announcement reads).
+    fence(Ordering::SeqCst);
     let hw = crate::util::registry::high_water() * SLOTS_PER_THREAD;
     for s in SLOTS[..hw].iter() {
-        let p = s.load(Ordering::SeqCst);
+        // Ordering: ACQUIRE — pairs with the announcers' publication as
+        // in `scan`.
+        let p = s.load(P::ACQUIRE);
         if p != 0 {
             buf.push(p);
         }
@@ -230,7 +325,9 @@ pub(crate) fn on_thread_exit(t: usize) {
         }
     });
     for j in 0..SLOTS_PER_THREAD {
-        SLOTS[t * SLOTS_PER_THREAD + j].store(0, Ordering::Release);
+        // Ordering: RELEASE — the exiting thread's protected reads
+        // happen-before any scanner sees its slots empty.
+        SLOTS[t * SLOTS_PER_THREAD + j].store(0, P::RELEASE);
     }
 }
 
@@ -285,6 +382,24 @@ mod tests {
         }
         // Must not panic ("all slots in use") — slots are recycled.
         let _hs: Vec<_> = (0..SLOTS_PER_THREAD).map(|_| HazardPointer::new()).collect();
+    }
+
+    #[test]
+    fn test_guards_claim_distinct_slots() {
+        // The trailing-zeros claim must never hand out the same slot to
+        // two live guards, in any drop order.
+        let a = HazardPointer::new();
+        let b = HazardPointer::new();
+        let c = HazardPointer::new();
+        assert_ne!(a.slot as *const _, b.slot as *const _);
+        assert_ne!(b.slot as *const _, c.slot as *const _);
+        assert_ne!(a.slot as *const _, c.slot as *const _);
+        // Non-LIFO release: drop the middle guard, re-acquire, and the
+        // freed slot (and only it) is reused.
+        let freed = b.slot as *const AtomicUsize;
+        drop(b);
+        let d = HazardPointer::new();
+        assert_eq!(d.slot as *const _, freed);
     }
 
     #[test]

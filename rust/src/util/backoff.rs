@@ -1,0 +1,241 @@
+//! Contention-adaptive truncated-exponential backoff for CAS retry
+//! loops, after Dice, Hendler & Mirsky, *Lightweight Contention
+//! Management for Efficient Compare-and-Swap Operations*.
+//!
+//! A failed CAS means another thread just wrote the same cache line;
+//! immediately retrying re-acquires the line in exclusive mode and
+//! steals it from whoever is about to make progress — under p-thread
+//! contention, bare retry loops collapse to coherence-traffic throughput.
+//! Backing off for a bounded, exponentially growing window lets the
+//! winner's successor complete before the line bounces.
+//!
+//! The Dice et al. refinement kept here is the *constant per-thread
+//! state*: each thread remembers how much backoff its recent operations
+//! needed ([`Backoff::adaptive`]) and starts the next operation there,
+//! so a thread on a contended object does not re-learn the contention
+//! level from zero on every call, and a thread on a quiet object decays
+//! back to zero-cost fast paths.
+//!
+//! The escalation ladder is crossbeam-shaped: spin `2^step` iterations
+//! while `step <= SPIN_LIMIT`, then `yield_now` (so oversubscribed runs
+//! — the paper's §5.1 pathology — cannot livelock behind a descheduled
+//! winner).
+//!
+//! [`set_enabled`] is a process-global kill-switch used by
+//! `repro ablate --panel ordering` to measure the fenced vs.
+//! fenced+backoff variants in one binary.  Disabled, [`Backoff::snooze`]
+//! degrades to the seed's behavior: a bare `spin_loop` with a
+//! scheduler-quantum yield safety valve.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Maximum spin exponent: a single snooze spins at most `2^SPIN_LIMIT`
+/// (= 64) `spin_loop` hints before escalating to yields.
+pub const SPIN_LIMIT: u32 = 6;
+/// Ladder cap: `step` saturates here; every snooze at or beyond
+/// `SPIN_LIMIT` yields the CPU.
+pub const YIELD_LIMIT: u32 = 10;
+
+/// Seed-equivalent safety valve for the disabled path: bare spins per
+/// yield (≈ a scheduler quantum, matching the seed's spin constants).
+const DISABLED_SPINS_PER_YIELD: u32 = 1 << 20;
+
+/// Process-global backoff switch (`true` by default).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable backoff process-wide (ablation harness only; not a
+/// synchronization point — readers sample it once per operation).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether backoff is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Dice et al.'s constant per-thread contention state: the backoff
+    /// level recent operations on this thread settled at.
+    static LEARNED: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Back off through a lazily-created adaptive [`Backoff`]: hot paths
+/// keep an `Option<Backoff>` that stays `None` (zero TLS traffic) until
+/// the first failed attempt.
+#[inline]
+pub fn snooze_lazy(slot: &mut Option<Backoff>) {
+    slot.get_or_insert_with(Backoff::adaptive).snooze();
+}
+
+/// Per-operation backoff state. Create one outside the retry loop,
+/// [`snooze`](Backoff::snooze) on every failed attempt (or keep an
+/// `Option` and use [`snooze_lazy`] so the uncontended path pays
+/// nothing).
+pub struct Backoff {
+    /// Current ladder position (spin exponent, then yield band).
+    step: u32,
+    /// Failed attempts this operation (0 ⇒ the op was uncontended).
+    fails: u32,
+    /// Whether this instance writes back to the thread's learned level.
+    adaptive: bool,
+    enabled: bool,
+    /// Disabled-path spin counter (seed-equivalent quantum yielding).
+    raw_spins: u32,
+}
+
+impl Backoff {
+    /// Fresh non-adaptive backoff starting at the bottom of the ladder.
+    #[inline]
+    pub fn new() -> Self {
+        Self {
+            step: 0,
+            fails: 0,
+            adaptive: false,
+            enabled: enabled(),
+            raw_spins: 0,
+        }
+    }
+
+    /// Contention-adaptive backoff: starts at the thread's learned
+    /// level and writes the level it settles at back on drop
+    /// (escalating on contention, halving when uncontended).
+    #[inline]
+    pub fn adaptive() -> Self {
+        let start = LEARNED.with(|l| l.get());
+        Self {
+            step: start,
+            fails: 0,
+            adaptive: true,
+            enabled: enabled(),
+            raw_spins: 0,
+        }
+    }
+
+    /// Back off once: spin `2^step` hints (escalating), then yield once
+    /// the ladder passes [`SPIN_LIMIT`]. Call after each failed attempt.
+    #[inline]
+    pub fn snooze(&mut self) {
+        self.fails = self.fails.saturating_add(1);
+        if !self.enabled {
+            // Seed behavior: bare spin with a quantum-sized yield valve.
+            self.raw_spins += 1;
+            if self.raw_spins >= DISABLED_SPINS_PER_YIELD {
+                self.raw_spins = 0;
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+            return;
+        }
+        if self.step <= SPIN_LIMIT {
+            for _ in 0..1u32 << self.step {
+                std::hint::spin_loop();
+            }
+        } else {
+            std::thread::yield_now();
+        }
+        if self.step < YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// Whether the ladder has escalated past pure spinning (callers that
+    /// must not yield — e.g. wait-free paths — can switch strategy).
+    #[inline]
+    pub fn is_yielding(&self) -> bool {
+        self.enabled && self.step > SPIN_LIMIT
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Backoff {
+    fn drop(&mut self) {
+        if !self.adaptive || !self.enabled {
+            return;
+        }
+        // Dice-style adaptation: an uncontended op halves the learned
+        // level (decay toward the free fast path); a contended op moves
+        // it halfway to the level this op needed. try_with: a guard
+        // dropped during TLS teardown just skips the write-back.
+        let _ = LEARNED.try_with(|l| {
+            let old = l.get();
+            let new = if self.fails == 0 {
+                old / 2
+            } else {
+                ((old + self.step) / 2).min(YIELD_LIMIT)
+            };
+            l.set(new);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn learned() -> u32 {
+        LEARNED.with(|l| l.get())
+    }
+
+    /// A Backoff with an explicit enabled flag, independent of the
+    /// process-global switch (which parallel ablation tests may toggle).
+    fn forced(enabled: bool) -> Backoff {
+        Backoff {
+            step: 0,
+            fails: 0,
+            adaptive: false,
+            enabled,
+            raw_spins: 0,
+        }
+    }
+
+    #[test]
+    fn test_snooze_escalates_and_caps() {
+        let mut b = forced(true);
+        for _ in 0..(YIELD_LIMIT + 5) {
+            b.snooze();
+        }
+        assert_eq!(b.step, YIELD_LIMIT);
+        assert!(b.is_yielding());
+    }
+
+    #[test]
+    fn test_adaptive_learns_and_decays() {
+        // TLS is per-thread and the harness runs each test on its own
+        // thread, so this state is isolated; force `enabled` so a
+        // parallel ablation toggling the global switch cannot race us.
+        LEARNED.with(|l| l.set(0));
+        {
+            let mut b = Backoff::adaptive();
+            b.enabled = true;
+            for _ in 0..8 {
+                b.snooze();
+            }
+        }
+        let after_contended = learned();
+        assert!(after_contended > 0, "contention must raise the level");
+        // Uncontended ops decay it back down.
+        for _ in 0..10 {
+            let mut b = Backoff::adaptive();
+            b.enabled = true;
+            drop(b);
+        }
+        assert_eq!(learned(), 0);
+    }
+
+    #[test]
+    fn test_disabled_backoff_still_makes_progress() {
+        let mut b = forced(false);
+        for _ in 0..1000 {
+            b.snooze();
+        }
+        assert_eq!(b.step, 0, "disabled backoff must not escalate");
+    }
+}

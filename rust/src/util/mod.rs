@@ -3,13 +3,17 @@
 //! proptest / crossbeam-utils / anyhow, which are not in the offline
 //! crate set — see DESIGN.md §Substitutions).
 
+pub mod backoff;
 pub mod cache_padded;
 pub mod error;
+pub mod ordering;
 pub mod props;
 pub mod registry;
 pub mod rng;
 
+pub use backoff::Backoff;
 pub use cache_padded::CachePadded;
+pub use ordering::{DefaultPolicy, Fenced, OrderingPolicy, SeqCstEverywhere};
 
 use std::time::{Duration, Instant};
 

@@ -1,0 +1,149 @@
+//! The crate's memory-ordering policy — the "ordering diet" switch.
+//!
+//! The seed paid `SeqCst` on every load/store/CAS in all eight big-atomic
+//! backends. Schweizer et al. ("Evaluating the Cost of Atomic Operations
+//! on Modern Architectures") measure why that hurts: on weakly-ordered
+//! hardware every `SeqCst` op is a full barrier, and the seqlock-style
+//! protocols here already carry their own validation, so most of those
+//! barriers buy nothing.  This module centralizes the diet:
+//!
+//! * [`Fenced`] — the default policy: Acquire/Release on version words
+//!   and node flags, Relaxed where the version protocol re-validates,
+//!   and explicit `fence(SeqCst)` **only** at the two store-load points
+//!   that need it (hazard announce→revalidate, and the retire-side scan
+//!   — see `smr::hazard`).  Every demoted site in the crate carries an
+//!   `// Ordering:` comment naming the happens-before edge it preserves.
+//! * [`SeqCstEverywhere`] — the audit policy: every constant collapses
+//!   back to `SeqCst` (the seed's behavior), so the full test suite can
+//!   run against blanket sequential consistency and any diet bug shows
+//!   up as a fenced-only failure.
+//!
+//! [`DefaultPolicy`] selects between them at compile time via the
+//! `seqcst_audit` cargo feature (`cargo test --features seqcst_audit`
+//! restores the seed's blanket `SeqCst`).  Backends that matter for the
+//! ordering ablation ([`crate::atomics::SeqLock`],
+//! [`crate::atomics::CachedWaitFree`]) additionally take the policy as a
+//! defaulted type parameter, so `repro ablate --panel ordering` can
+//! compare both policies inside one (fenced) binary.
+//!
+//! The two `fence(SeqCst)` points are deliberately **not** part of the
+//! policy: under the diet the announce *store* is `Relaxed`, and only
+//! the fence makes it totally ordered against the reclaimer's scan —
+//! remove it and the demoted protocol is unsound. (Under the audit
+//! policy the all-`SeqCst` accesses alone would also be correct, as in
+//! the seed; the fences stay in both builds so the two variants run
+//! one protocol shape and differ only in per-access strength.)
+
+use std::sync::atomic::Ordering;
+
+/// Compile-time selection of the memory orderings used at every demoted
+/// site in the synchronization core.
+///
+/// Implementors are zero-sized tags; all methods are `#[inline]` consts
+/// so the policy vanishes at codegen.
+pub trait OrderingPolicy: Copy + Clone + Send + Sync + Default + 'static {
+    /// Policy name for reports (`ablation_ordering` rows).
+    const NAME: &'static str;
+    /// Loads that must observe a releasing writer (version words,
+    /// published pointers).
+    const ACQUIRE: Ordering;
+    /// Stores/RMW-success that publish prior writes (unlock stores,
+    /// install CASes).
+    const RELEASE: Ordering;
+    /// Both-ways RMW (linearization-point CASes whose old value is
+    /// dereferenced).
+    const ACQREL: Ordering;
+    /// Accesses the surrounding version protocol already validates
+    /// (cache words, re-check loads, owner-private flags).
+    const RELAXED: Ordering;
+    /// Fence ordering for the reader-side load-load edge of the seqlock
+    /// protocol (data reads before the version re-check).
+    const FENCE_ACQUIRE: Ordering;
+    /// Fence ordering for the writer-side store-store edge of the
+    /// seqlock protocol (odd version before data writes).
+    const FENCE_RELEASE: Ordering;
+}
+
+/// The ordering diet (default): weakest sound ordering per site, plus
+/// the two mandatory `SeqCst` fences in `smr::hazard`.
+#[derive(Copy, Clone, Default, Debug)]
+pub struct Fenced;
+
+impl OrderingPolicy for Fenced {
+    const NAME: &'static str = "fenced";
+    const ACQUIRE: Ordering = Ordering::Acquire;
+    const RELEASE: Ordering = Ordering::Release;
+    const ACQREL: Ordering = Ordering::AcqRel;
+    const RELAXED: Ordering = Ordering::Relaxed;
+    const FENCE_ACQUIRE: Ordering = Ordering::Acquire;
+    const FENCE_RELEASE: Ordering = Ordering::Release;
+}
+
+/// The audit policy: the seed's blanket `SeqCst` at every site.
+///
+/// Note CAS *failure* orderings also map here: `SeqCst` is a legal
+/// failure ordering, so the audit build is strictly stronger than the
+/// diet at every site.
+#[derive(Copy, Clone, Default, Debug)]
+pub struct SeqCstEverywhere;
+
+impl OrderingPolicy for SeqCstEverywhere {
+    const NAME: &'static str = "seqcst";
+    const ACQUIRE: Ordering = Ordering::SeqCst;
+    const RELEASE: Ordering = Ordering::SeqCst;
+    const ACQREL: Ordering = Ordering::SeqCst;
+    const RELAXED: Ordering = Ordering::SeqCst;
+    const FENCE_ACQUIRE: Ordering = Ordering::SeqCst;
+    const FENCE_RELEASE: Ordering = Ordering::SeqCst;
+}
+
+/// The crate-wide policy: [`Fenced`] normally, [`SeqCstEverywhere`]
+/// under `--features seqcst_audit`.
+#[cfg(not(feature = "seqcst_audit"))]
+pub type DefaultPolicy = Fenced;
+/// The crate-wide policy: [`Fenced`] normally, [`SeqCstEverywhere`]
+/// under `--features seqcst_audit`.
+#[cfg(feature = "seqcst_audit")]
+pub type DefaultPolicy = SeqCstEverywhere;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_policies_are_legal_failure_orderings() {
+        // CAS failure orderings may be Relaxed/Acquire/SeqCst but never
+        // Release/AcqRel; the diet uses RELAXED and ACQUIRE on failure
+        // paths, which must stay legal under both policies.
+        for ord in [
+            Fenced::RELAXED,
+            Fenced::ACQUIRE,
+            SeqCstEverywhere::RELAXED,
+            SeqCstEverywhere::ACQUIRE,
+        ] {
+            assert!(!matches!(ord, Ordering::Release | Ordering::AcqRel));
+        }
+    }
+
+    #[test]
+    fn test_audit_policy_is_blanket_seqcst() {
+        assert_eq!(SeqCstEverywhere::ACQUIRE, Ordering::SeqCst);
+        assert_eq!(SeqCstEverywhere::RELEASE, Ordering::SeqCst);
+        assert_eq!(SeqCstEverywhere::RELAXED, Ordering::SeqCst);
+        assert_eq!(SeqCstEverywhere::FENCE_ACQUIRE, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn test_fences_never_relaxed() {
+        // `fence(Relaxed)` panics at runtime; the policy constants must
+        // never map a fence there.
+        for ord in [
+            Fenced::FENCE_ACQUIRE,
+            Fenced::FENCE_RELEASE,
+            SeqCstEverywhere::FENCE_ACQUIRE,
+            SeqCstEverywhere::FENCE_RELEASE,
+        ] {
+            assert!(!matches!(ord, Ordering::Relaxed));
+        }
+    }
+}

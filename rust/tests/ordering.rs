@@ -1,0 +1,227 @@
+//! Cross-backend fence-stress suite for the memory-ordering diet.
+//!
+//! The diet (Acquire/Release/Relaxed + two SeqCst fences — see
+//! `util::ordering`) must be observationally equivalent to the seed's
+//! blanket SeqCst. These tests hammer the properties a wrong demotion
+//! breaks first, across **all eight** backends:
+//!
+//! * **torn values** — a missing seqlock fence (reader load-load or
+//!   writer store-store) lets a reader assemble words from two different
+//!   stores and still pass the version re-check;
+//! * **witness monotonicity** — with a monotonically increasing counter,
+//!   every linearizable read (loads *and* failed-CAS witnesses) observed
+//!   by one thread must be non-decreasing; a mis-ordered
+//!   publication/validation lets a stale value surface after a newer one;
+//! * **hazard announce visibility** — the relaxed-store-plus-fence
+//!   announce path must still be visible to `protected_snapshot` across
+//!   threads.
+//!
+//! The whole file also runs under `--features seqcst_audit` (CI builds
+//! both), so a fenced-only failure localizes to a demotion.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use big_atomics::atomics::{
+    BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
+    SimpLock, Words,
+};
+use big_atomics::smr::hazard::{protected_snapshot, HazardPointer};
+
+/// Readers assert every load is word-uniform while writers run a heavy
+/// store/CAS mix over values of the form [x; 4] — any torn assembly that
+/// survives the version protocol trips the assert.
+fn torn_value_stress<A: BigAtomic<Words<4>> + 'static>() {
+    let a: Arc<A> = Arc::new(A::new(Words([0; 4])));
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let a = Arc::clone(&a);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    let v = a.load();
+                    assert!(
+                        v.0.iter().all(|&w| w == v.0[0]),
+                        "torn read on {}: {:?}",
+                        A::name(),
+                        v.0
+                    );
+                }
+            })
+        })
+        .collect();
+    let writers: Vec<_> = (0..2)
+        .map(|t| {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                let mut cur = a.load();
+                for i in 1..4_000u64 {
+                    let x = i * 4 + t;
+                    if i % 2 == 0 {
+                        // Store side of the mix.
+                        a.store(Words([x; 4]));
+                        cur = Words([x; 4]);
+                    } else {
+                        // CAS side: witness-fed retry, bounded attempts
+                        // (losing is fine — the mix is the point).
+                        for _ in 0..4 {
+                            match a.compare_exchange(cur, Words([x; 4])) {
+                                Ok(_) => break,
+                                Err(w) => cur = w,
+                            }
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    for r in readers {
+        r.join().unwrap();
+    }
+}
+
+/// Writers increment word 0 via `fetch_update` (word 1 mirrors it so
+/// tearing is also visible here); observers assert that the sequence of
+/// values they see — through plain loads *and* through failed-CAS
+/// witnesses — never goes backwards.
+fn witness_monotonicity<A: BigAtomic<Words<2>> + 'static>() {
+    let a: Arc<A> = Arc::new(A::new(Words([0, 0])));
+    let stop = Arc::new(AtomicBool::new(false));
+    let observers: Vec<_> = (0..2)
+        .map(|o| {
+            let a = Arc::clone(&a);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let v = if o == 0 {
+                        a.load()
+                    } else {
+                        // A CAS that can never succeed: its Err witness
+                        // must still be a linearizable read.
+                        match a.compare_exchange(Words([u64::MAX, 0]), Words([0, 0])) {
+                            Ok(v) | Err(v) => v,
+                        }
+                    };
+                    assert_eq!(v.0[0], v.0[1], "torn witness on {}: {:?}", A::name(), v.0);
+                    assert!(
+                        v.0[0] >= last,
+                        "witness went backwards on {}: {} -> {}",
+                        A::name(),
+                        last,
+                        v.0[0]
+                    );
+                    last = v.0[0];
+                }
+            })
+        })
+        .collect();
+    let writers: Vec<_> = (0..3)
+        .map(|_| {
+            let a = Arc::clone(&a);
+            std::thread::spawn(move || {
+                for _ in 0..2_000u64 {
+                    let _ = a
+                        .fetch_update(|mut v| {
+                            v.0[0] += 1;
+                            v.0[1] = v.0[0];
+                            Some(v)
+                        })
+                        .expect("unconditional update");
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    for o in observers {
+        o.join().unwrap();
+    }
+    assert_eq!(a.load(), Words([6_000, 6_000]));
+}
+
+macro_rules! fence_stress {
+    ($name:ident, $w4:ty, $w2:ty) => {
+        mod $name {
+            use super::*;
+
+            #[test]
+            fn torn_values() {
+                torn_value_stress::<$w4>();
+            }
+
+            #[test]
+            fn witness_monotonic() {
+                witness_monotonicity::<$w2>();
+            }
+        }
+    };
+}
+
+fence_stress!(seqlock, SeqLock<Words<4>>, SeqLock<Words<2>>);
+fence_stress!(simplock, SimpLock<Words<4>>, SimpLock<Words<2>>);
+fence_stress!(lockpool, LockPool<Words<4>>, LockPool<Words<2>>);
+fence_stress!(indirect, Indirect<Words<4>>, Indirect<Words<2>>);
+fence_stress!(
+    cached_waitfree,
+    CachedWaitFree<Words<4>>,
+    CachedWaitFree<Words<2>>
+);
+fence_stress!(cached_memeff, CachedMemEff<Words<4>>, CachedMemEff<Words<2>>);
+fence_stress!(
+    cached_writable,
+    CachedWritable<Words<4>>,
+    CachedWritable<Words<2>>
+);
+fence_stress!(htm_sim, HtmSim<Words<4>>, HtmSim<Words<2>>);
+
+#[test]
+fn protected_snapshot_sees_cross_thread_relaxed_announce() {
+    // The diet demotes the announce store to Relaxed + SeqCst fence; a
+    // snapshot taken by a *different* thread after the announce (ordered
+    // here via channels) must still contain it.
+    const ADDR: usize = 0x5A5A_0000;
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    let announcer = std::thread::spawn(move || {
+        let h = HazardPointer::new();
+        h.announce(ADDR);
+        ready_tx.send(()).unwrap();
+        done_rx.recv().unwrap();
+        h.clear();
+    });
+    ready_rx.recv().unwrap();
+    let mut buf = Vec::new();
+    protected_snapshot(&mut buf);
+    assert!(
+        buf.contains(&ADDR),
+        "cross-thread announcement missing from snapshot: {buf:?}"
+    );
+    done_tx.send(()).unwrap();
+    announcer.join().unwrap();
+}
+
+#[test]
+fn seqcst_audit_and_fenced_agree_on_semantics() {
+    // Explicit-policy instantiations (the ablation pair) must satisfy
+    // the exact same witness contract as the build default.
+    use big_atomics::util::ordering::{Fenced, SeqCstEverywhere};
+    fn check<A: BigAtomic<Words<2>>>() {
+        let a = A::new(Words([1, 2]));
+        assert_eq!(a.compare_exchange(Words([1, 2]), Words([3, 4])), Ok(Words([1, 2])));
+        assert_eq!(a.compare_exchange(Words([1, 2]), Words([9, 9])), Err(Words([3, 4])));
+        assert_eq!(a.swap(Words([5, 6])), Words([3, 4]));
+        assert_eq!(a.load(), Words([5, 6]));
+    }
+    check::<SeqLock<Words<2>, Fenced>>();
+    check::<SeqLock<Words<2>, SeqCstEverywhere>>();
+    check::<CachedWaitFree<Words<2>, Fenced>>();
+    check::<CachedWaitFree<Words<2>, SeqCstEverywhere>>();
+}
