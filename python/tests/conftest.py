@@ -1,5 +1,9 @@
 import os
 import sys
 
-# Make `compile` importable when pytest runs from python/ or repo root.
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+# Make `compile` importable when pytest runs from python/ or repo root,
+# and `ministrategy` (the vendored hypothesis shim) importable even when
+# pytest does not add the tests dir itself to sys.path.
+_TESTS = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.dirname(_TESTS))
+sys.path.insert(0, _TESTS)

@@ -1,0 +1,101 @@
+"""Vendored mini-strategy shim: a deterministic, shrink-free stand-in
+for the slice of the `hypothesis` API these tests use (ROADMAP open
+item: the offline container has no hypothesis, and the property sweeps
+used to skip there).
+
+Scope — exactly what test_hashmix.py / test_zipfian.py need:
+
+* ``@given(**kwargs)`` with keyword strategies,
+* ``@settings(max_examples=..., deadline=...)`` in either decorator
+  order,
+* ``strategies.integers / floats / booleans / sampled_from / tuples``.
+
+Examples are drawn with a ``random.Random`` seeded from the test's name
+(Python's version-2 string seeding hashes via SHA-512, so the stream is
+stable across processes, platforms, and PYTHONHASHSEED) — failures
+reproduce by rerunning the same test.  There is **no shrinking**: the
+failing example's kwargs appear in the assertion traceback instead.
+"""
+
+import random
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A sampling rule: ``sample(rng)`` draws one value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng):
+        return self._sample(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (import as ``st``)."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2**64 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_ignored):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def tuples(*parts):
+        return _Strategy(lambda rng: tuple(p.sample(rng) for p in parts))
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record ``max_examples``; works above or below ``@given``."""
+
+    def deco(fn):
+        if getattr(fn, "_ms_sweep", False):
+            # @given already wrapped fn: configure the sweep directly.
+            fn._ms_max_examples = max_examples
+        else:
+            # @given not applied yet: stash for it to pick up.
+            fn._ms_pending_max = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test once per drawn example (deterministic sweep)."""
+
+    def deco(fn):
+        pending = getattr(fn, "_ms_pending_max", None)
+
+        def sweep(*args, **kwargs):
+            rng = random.Random("ministrategy::" + fn.__name__)
+            for _ in range(sweep._ms_max_examples):
+                drawn = {name: s.sample(rng) for name, s in strats.items()}
+                drawn.update(kwargs)  # explicit kwargs win (fixtures)
+                fn(*args, **drawn)
+
+        # Copy identity by hand: functools.wraps would also set
+        # __wrapped__, which pytest follows to the original signature and
+        # then demands a fixture per strategy parameter.
+        sweep.__name__ = fn.__name__
+        sweep.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        sweep.__doc__ = fn.__doc__
+        sweep.__module__ = fn.__module__
+        sweep._ms_sweep = True
+        sweep._ms_max_examples = (
+            pending if pending is not None else _DEFAULT_MAX_EXAMPLES
+        )
+        return sweep
+
+    return deco

@@ -6,18 +6,16 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-# hypothesis is not in the offline container (ROADMAP open item): the
-# property sweeps skip cleanly when absent, the fixed-vector tests run
-# regardless.
+# hypothesis is not in the offline container: the vendored mini-strategy
+# shim (ministrategy.py — seeded, shrink-free sampling of the same API
+# slice) keeps the property sweeps running instead of skipping.
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover
-    HAVE_HYPOTHESIS = False
+except ImportError:  # offline container
+    from ministrategy import given, settings
+    from ministrategy import strategies as st
 
 from compile.kernels import hashmix, ref
 
@@ -36,32 +34,21 @@ def test_kernel_matches_oracle():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-if HAVE_HYPOTHESIS:
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_matches_oracle_hypothesis(seed):
+    keys = _keys(seed)
+    got = hashmix.hashmix(keys, batch=BATCH)
+    want = ref.hashmix_ref(keys)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
-    @settings(max_examples=25, deadline=None)
-    @given(seed=st.integers(0, 2**31 - 1))
-    def test_kernel_matches_oracle_hypothesis(seed):
-        keys = _keys(seed)
-        got = hashmix.hashmix(keys, batch=BATCH)
-        want = ref.hashmix_ref(keys)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
-    @given(x=st.integers(0, 2**64 - 1))
-    @settings(max_examples=50, deadline=None)
-    def test_vector_matches_scalar_python(x):
-        """The jnp lane algebra equals the pure-python big-int reference."""
-        got = int(np.asarray(ref.hashmix_ref(jnp.array([x], dtype=jnp.uint64)))[0])
-        assert got == ref.mix64_py(x)
-
-else:
-    # Visible skips (not silent absence) when hypothesis is missing.
-    @pytest.mark.skip(reason="hypothesis not installed (ROADMAP open item)")
-    def test_kernel_matches_oracle_hypothesis():
-        pass
-
-    @pytest.mark.skip(reason="hypothesis not installed (ROADMAP open item)")
-    def test_vector_matches_scalar_python():
-        pass
+@given(x=st.integers(0, 2**64 - 1))
+@settings(max_examples=50, deadline=None)
+def test_vector_matches_scalar_python(x):
+    """The jnp lane algebra equals the pure-python big-int reference."""
+    got = int(np.asarray(ref.hashmix_ref(jnp.array([x], dtype=jnp.uint64)))[0])
+    assert got == ref.mix64_py(x)
 
 
 def test_known_vectors():

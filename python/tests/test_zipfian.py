@@ -14,15 +14,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# hypothesis is not in the offline container (ROADMAP open item): the
-# property sweep skips cleanly when absent, everything else runs.
+# hypothesis is not in the offline container: the vendored mini-strategy
+# shim (ministrategy.py — seeded, shrink-free sampling of the same API
+# slice) keeps the property sweep running instead of skipping.
 try:
     from hypothesis import given, settings
     from hypothesis import strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover
-    HAVE_HYPOTHESIS = False
+except ImportError:  # offline container
+    from ministrategy import given, settings
+    from ministrategy import strategies as st
 
 from compile.kernels import ref, zipfian
 
@@ -44,26 +44,18 @@ def test_kernel_matches_oracle(theta, n):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-if HAVE_HYPOTHESIS:
-
-    @settings(max_examples=25, deadline=None)
-    @given(
-        seed=st.integers(0, 2**31 - 1),
-        n=st.integers(1, zipfian.N_CDF),
-        theta=st.floats(0.0, 0.999),
-    )
-    def test_kernel_matches_oracle_hypothesis(seed, n, theta):
-        cdf = zipfian.make_zipf_cdf(n, theta)
-        bits = _bits(seed, SMALL_BATCH)
-        got = zipfian.zipfian_indices(bits, cdf, batch=SMALL_BATCH)
-        want = ref.zipfian_indices_ref(bits, cdf)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-else:
-    # Visible skip (not silent absence) when hypothesis is missing.
-    @pytest.mark.skip(reason="hypothesis not installed (ROADMAP open item)")
-    def test_kernel_matches_oracle_hypothesis():
-        pass
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, zipfian.N_CDF),
+    theta=st.floats(0.0, 0.999),
+)
+def test_kernel_matches_oracle_hypothesis(seed, n, theta):
+    cdf = zipfian.make_zipf_cdf(n, theta)
+    bits = _bits(seed, SMALL_BATCH)
+    got = zipfian.zipfian_indices(bits, cdf, batch=SMALL_BATCH)
+    want = ref.zipfian_indices_ref(bits, cdf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_indices_in_range():

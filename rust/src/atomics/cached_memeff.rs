@@ -33,8 +33,16 @@
 //! * **recycler flags**: `is_installed` is `RELEASE`-stored /
 //!   `ACQUIRE`-snapshotted; `was_installed` / `is_protected` / `in_free`
 //!   are owner-private `RELAXED`. The snapshot-before-scan edge of the
-//!   two-phase rule is the mandatory `SeqCst` fence inside
-//!   `protected_snapshot` (see `smr::hazard`), sequenced after phase 1.
+//!   two-phase rule is the mandatory `SeqCst` fence inside the scheme's
+//!   [`Smr::reclaim_protected`] (hazard `protected_snapshot` /
+//!   epoch advance — see `smr`), sequenced after phase 1.
+//!
+//! The ordering policy `P` (default [`DefaultPolicy`]) is threaded
+//! through the whole algorithm *and* its shared domain, so the ordering
+//! ablation can instantiate a blanket-`SeqCst`
+//! `CachedMemEff<T, SeqCstEverywhere>` inside a fenced binary; the
+//! scheme parameter `S` (default hazard) picks the reclamation scheme
+//! the slab recycler answers to — see the recycler hooks on [`Smr`].
 
 use std::any::{Any, TypeId};
 use std::collections::HashMap;
@@ -43,9 +51,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use super::bytewise::WordBuf;
 use super::{AtomicValue, BigAtomic};
-use crate::smr::hazard::{protected_snapshot, HazardPointer};
+use crate::smr::{Hazard, Smr};
 use crate::util::backoff::{snooze_lazy, Backoff};
-use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
+use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::util::CachePadded;
 use crate::MAX_THREADS;
@@ -70,7 +78,7 @@ fn is_null(raw: usize) -> bool {
 }
 
 /// A pool node. `value` uses word-wise atomics because a stale (but
-/// hazard-protected) reader may still be reading while the owner has not
+/// guard-protected) reader may still be reading while the owner has not
 /// yet recycled it; all flag traffic is explicit.
 #[repr(C, align(8))]
 pub(crate) struct Node<T: AtomicValue> {
@@ -84,6 +92,12 @@ pub(crate) struct Node<T: AtomicValue> {
     is_protected: AtomicBool,
     /// Owner-private: already sitting in the owner's free list.
     in_free: AtomicBool,
+    /// Scheme stamp written at uninstall ([`Smr::reclaim_stamp`]):
+    /// under epochs a node may only be recycled once the global epoch
+    /// has advanced the scheme's full free distance past it (two reader
+    /// epochs + one stamp-slack epoch — `epoch::FREE_DISTANCE`); hazard
+    /// ignores it (address scans).
+    retired_at: AtomicU64,
 }
 
 struct Pool<T: AtomicValue> {
@@ -115,31 +129,34 @@ impl<T: AtomicValue> Pool<T> {
     }
 }
 
-/// Shared per-value-type domain: every thread's node pool. All
-/// `CachedMemEff<T>` in the process share one domain (node memory is
-/// O(p²k), independent of the number of atomics — the paper's headline
-/// space property).
-pub struct MemEffDomain<T: AtomicValue> {
+/// Shared per-(value-type, policy, scheme) domain: every thread's node
+/// pool. All `CachedMemEff<T, P, S>` in the process share one domain
+/// (node memory is O(p²k), independent of the number of atomics — the
+/// paper's headline space property).  Domains are keyed by the full
+/// `(T, P, S)` triple: pools recycled under one scheme's rules must
+/// never serve readers protected by the other.
+pub struct MemEffDomain<T: AtomicValue, P: OrderingPolicy = DefaultPolicy, S: Smr = Hazard> {
     pools: Vec<CachePadded<std::cell::UnsafeCell<Pool<T>>>>,
     live_nodes: AtomicU64,
     /// §3.2 deamortization: spread the reclamation scan over allocations
     /// (O(1) worst-case per op) instead of running it in one burst
     /// (O(1) amortized). See [`MemEffDomain::new_deamortized`].
     deamortized: bool,
+    _tags: std::marker::PhantomData<fn() -> (P, S)>,
 }
 
 // SAFETY: pool i is only accessed by the thread whose registry tid is i
 // (owner-private data), except for Node flag fields which are atomics.
-unsafe impl<T: AtomicValue> Send for MemEffDomain<T> {}
-unsafe impl<T: AtomicValue> Sync for MemEffDomain<T> {}
+unsafe impl<T: AtomicValue, P: OrderingPolicy, S: Smr> Send for MemEffDomain<T, P, S> {}
+unsafe impl<T: AtomicValue, P: OrderingPolicy, S: Smr> Sync for MemEffDomain<T, P, S> {}
 
-impl<T: AtomicValue> Default for MemEffDomain<T> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> Default for MemEffDomain<T, P, S> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<T: AtomicValue> MemEffDomain<T> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> MemEffDomain<T, P, S> {
     pub fn new() -> Self {
         Self {
             pools: (0..MAX_THREADS)
@@ -147,6 +164,7 @@ impl<T: AtomicValue> MemEffDomain<T> {
                 .collect(),
             live_nodes: AtomicU64::new(0),
             deamortized: false,
+            _tags: std::marker::PhantomData,
         }
     }
 
@@ -162,16 +180,16 @@ impl<T: AtomicValue> MemEffDomain<T> {
         }
     }
 
-    /// The process-wide shared domain for `T`.
+    /// The process-wide shared domain for the `(T, P, S)` triple.
     pub fn global() -> Arc<Self> {
         static REGISTRY: OnceLock<Mutex<HashMap<TypeId, Arc<dyn Any + Send + Sync>>>> =
             OnceLock::new();
         let reg = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
         let mut map = reg.lock().unwrap();
-        let entry = map
-            .entry(TypeId::of::<T>())
-            .or_insert_with(|| Arc::new(MemEffDomain::<T>::new()) as Arc<dyn Any + Send + Sync>);
-        Arc::clone(entry).downcast::<MemEffDomain<T>>().unwrap()
+        let entry = map.entry(TypeId::of::<(T, P, S)>()).or_insert_with(|| {
+            Arc::new(MemEffDomain::<T, P, S>::new()) as Arc<dyn Any + Send + Sync>
+        });
+        Arc::clone(entry).downcast::<MemEffDomain<T, P, S>>().unwrap()
     }
 
     /// Total nodes allocated across all pools (§5.5: must stay O(p²)).
@@ -200,6 +218,7 @@ impl<T: AtomicValue> MemEffDomain<T> {
             was_installed: AtomicBool::new(false),
             is_protected: AtomicBool::new(false),
             in_free: AtomicBool::new(true),
+            retired_at: AtomicU64::new(0),
         });
         let ptr = &*node as *const Node<T> as *mut Node<T>;
         pool.slab.push(node);
@@ -251,7 +270,7 @@ impl<T: AtomicValue> MemEffDomain<T> {
             if self.deamortized && pool.pass_phase != 0 {
                 (*node).was_installed.store(true, P::RELAXED);
             }
-            (*node).value.write(val);
+            (*node).value.write_p::<P>(val);
             // Ordering: RELEASE — the value words above happen-before
             // anyone who ACQUIREs is_installed (the recycler's phase-1
             // snapshot); the node itself is published to readers by the
@@ -301,7 +320,7 @@ impl<T: AtomicValue> MemEffDomain<T> {
                         // Ordering: ACQUIRE — pairs with the RELEASE
                         // (un)install stores; the snapshot→scan ordering
                         // that makes the two-phase rule sound comes from
-                        // the SeqCst fence inside protected_snapshot
+                        // the SeqCst fence inside S::reclaim_protected
                         // (phase 2), sequenced after this read.
                         node.was_installed
                             .store(node.is_installed.load(P::ACQUIRE), P::RELAXED);
@@ -313,16 +332,18 @@ impl<T: AtomicValue> MemEffDomain<T> {
                     }
                 }
                 2 => {
-                    // Phase 2: announce scan (bounded by the registry
-                    // high-water mark; counts as one step like the
-                    // paper's per-write iteration batch).
+                    // Phase 2: protection scan (hazard: announcement
+                    // array, bounded by the registry high-water mark;
+                    // epoch: temporal — one advance attempt instead).
+                    // Counts as one step like the paper's per-write
+                    // iteration batch.
                     let mut buf = std::mem::take(&mut pool.scan_buf);
-                    protected_snapshot(&mut buf);
+                    S::reclaim_protected(&mut buf);
                     for &addr in buf.iter() {
                         if pool.addrs.binary_search(&addr).is_ok() {
                             // SAFETY: addr is one of our live slab nodes.
                             unsafe {
-                                (*(addr as *mut Node<T>)).is_protected.store(true, Ordering::Relaxed)
+                                (*(addr as *mut Node<T>)).is_protected.store(true, P::RELAXED)
                             };
                         }
                     }
@@ -332,16 +353,19 @@ impl<T: AtomicValue> MemEffDomain<T> {
                     steps -= 1;
                 }
                 _ => {
-                    // Phase 3: sweep.
+                    // Phase 3: sweep — snapshotted-uninstalled, not
+                    // scheme-protected (address scan under hazard,
+                    // stamp expiry under epochs), and not already free.
                     let end = (pool.pass_cursor + 1).min(pool.slab.len());
                     for i in pool.pass_cursor..end {
                         let node = &pool.slab[i];
-                        let reclaimable = !node.was_installed.load(Ordering::Relaxed)
-                            && !node.is_protected.load(Ordering::Relaxed)
-                            && !node.in_free.load(Ordering::Relaxed);
-                        node.is_protected.store(false, Ordering::Relaxed);
+                        let reclaimable = !node.was_installed.load(P::RELAXED)
+                            && !node.is_protected.load(P::RELAXED)
+                            && !node.in_free.load(P::RELAXED)
+                            && S::reclaim_stamp_expired(node.retired_at.load(P::RELAXED));
+                        node.is_protected.store(false, P::RELAXED);
                         if reclaimable {
-                            node.in_free.store(true, Ordering::Relaxed);
+                            node.in_free.store(true, P::RELAXED);
                             pool.free.push(&**node as *const Node<T> as *mut Node<T>);
                         }
                     }
@@ -357,9 +381,10 @@ impl<T: AtomicValue> MemEffDomain<T> {
     }
 
     /// The §3.2 recycler. Two-phase rule: a node may be reclaimed only if
-    /// it was observed uninstalled *before* the announcement scan — this
-    /// guarantees any protector announced before the uninstall and is
-    /// therefore visible to the scan (the paper calls out that checking
+    /// it was observed uninstalled *before* the protection scan — this
+    /// guarantees any protector announced (hazard) or pinned (epoch)
+    /// before the uninstall and is therefore visible to the scan / still
+    /// blocking the stamp's expiry (the paper calls out that checking
     /// `!is_installed && !is_protected` without the snapshot is a
     /// use-after-free bug).
     fn reclaim(pool: &mut Pool<T>) {
@@ -368,29 +393,31 @@ impl<T: AtomicValue> MemEffDomain<T> {
             // Ordering: ACQUIRE/RELAXED — as in reclaim_step phase 1:
             // the uninstall signal is RELEASE'd by writers, and the
             // snapshot-before-scan edge is the SeqCst fence inside
-            // protected_snapshot below.
+            // S::reclaim_protected below.
             node.was_installed
                 .store(node.is_installed.load(P::ACQUIRE), P::RELAXED);
         }
-        // Phase 2: scan the global announcement array; mark our nodes.
+        // Phase 2: scheme protection scan; mark our nodes (hazard) or
+        // advance the epoch so stamp expiry can progress.
         let mut buf = std::mem::take(&mut pool.scan_buf);
-        protected_snapshot(&mut buf);
+        S::reclaim_protected(&mut buf);
         for &addr in buf.iter() {
             if pool.addrs.binary_search(&addr).is_ok() {
                 // SAFETY: addr is one of our live slab nodes.
-                unsafe { (*(addr as *mut Node<T>)).is_protected.store(true, Ordering::Relaxed) };
+                unsafe { (*(addr as *mut Node<T>)).is_protected.store(true, P::RELAXED) };
             }
         }
         pool.scan_buf = buf;
         // Phase 3: recycle everything neither snapshotted-installed nor
-        // protected (and not already free).
+        // scheme-protected (and not already free).
         for node in pool.slab.iter() {
-            let reclaimable = !node.was_installed.load(Ordering::Relaxed)
-                && !node.is_protected.load(Ordering::Relaxed)
-                && !node.in_free.load(Ordering::Relaxed);
-            node.is_protected.store(false, Ordering::Relaxed);
+            let reclaimable = !node.was_installed.load(P::RELAXED)
+                && !node.is_protected.load(P::RELAXED)
+                && !node.in_free.load(P::RELAXED)
+                && S::reclaim_stamp_expired(node.retired_at.load(P::RELAXED));
+            node.is_protected.store(false, P::RELAXED);
             if reclaimable {
-                node.in_free.store(true, Ordering::Relaxed);
+                node.in_free.store(true, P::RELAXED);
                 pool.free
                     .push(&**node as *const Node<T> as *mut Node<T>);
             }
@@ -408,18 +435,18 @@ enum Tli<T> {
     Fail,
 }
 
-pub struct CachedMemEff<T: AtomicValue> {
+pub struct CachedMemEff<T: AtomicValue, P: OrderingPolicy = DefaultPolicy, S: Smr = Hazard> {
     version: AtomicU64,
     /// Tagged pointer: low bit set ⇒ "null" carrying a version tag
     /// (defends the install CAS against null-ABA); else a `Node<T>`.
     backup: AtomicUsize,
     cache: WordBuf<T>,
-    domain: Arc<MemEffDomain<T>>,
+    domain: Arc<MemEffDomain<T, P, S>>,
 }
 
-impl<T: AtomicValue> CachedMemEff<T> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> CachedMemEff<T, P, S> {
     /// Construct against an explicit (shared) domain.
-    pub fn with_domain(init: T, domain: Arc<MemEffDomain<T>>) -> Self {
+    pub fn with_domain(init: T, domain: Arc<MemEffDomain<T, P, S>>) -> Self {
         Self {
             version: AtomicU64::new(0),
             backup: AtomicUsize::new(tagged_null(0)),
@@ -429,14 +456,14 @@ impl<T: AtomicValue> CachedMemEff<T> {
     }
 
     /// ABLATION ONLY (`repro ablate`): a load that never uses the cached
-    /// fast path — every read goes through the hazard-protected indirect
+    /// fast path — every read goes through the guard-protected indirect
     /// route (re-caching disabled from the reader side).  Quantifies the
     /// paper's central design claim: the value of the inlined cache.
     pub fn load_no_fast_path(&self) -> T {
-        let h = HazardPointer::new();
+        let g = S::pin();
         let mut bo = Backoff::new();
         loop {
-            match self.try_load_indirect(&h) {
+            match self.try_load_indirect(&g) {
                 Tli::Indirect { val, .. } | Tli::Cached { val, .. } => return val,
                 Tli::Fail => bo.snooze(),
             }
@@ -444,14 +471,15 @@ impl<T: AtomicValue> CachedMemEff<T> {
     }
 
     /// Protect the backup, announcing node addresses only (tagged nulls
-    /// announce 0 = nothing).
+    /// announce 0 = nothing; a no-op under region schemes).
     #[inline]
-    fn protect_backup(&self, h: &HazardPointer) -> usize {
+    fn protect_backup(&self, g: &S::Guard) -> usize {
         // Ordering: ACQUIRE — the validating call pairs with the
         // installer's RELEASE CAS so node contents are visible before
-        // node_value dereferences them; the announce→revalidate SeqCst
-        // fence is inside protect_raw_with.
-        h.protect_raw_with(
+        // node_value dereferences them; the scheme's store-load SeqCst
+        // fence is inside the guard (hazard) or was paid at pin time
+        // (epoch).
+        g.protect_raw(
             || self.backup.load(P::ACQUIRE),
             |r| if is_null(r) { 0 } else { r },
         )
@@ -460,13 +488,31 @@ impl<T: AtomicValue> CachedMemEff<T> {
     #[inline]
     fn node_value(raw: usize) -> T {
         debug_assert!(!is_null(raw));
-        // SAFETY: hazard-protected node (or never-recycled under the
+        // SAFETY: guard-protected node (or never-recycled under the
         // two-phase rule).
-        unsafe { (*(raw as *const Node<T>)).value.read() }
+        unsafe { (*(raw as *const Node<T>)).value.read_p::<P>() }
     }
 
-    fn try_load_indirect(&self, h: &HazardPointer) -> Tli<T> {
-        let raw = self.protect_backup(h);
+    /// Stamp + signal the uninstall of `raw_p` (any thread may do this —
+    /// whoever removes the node from a backup pointer).
+    ///
+    /// # Safety
+    /// `raw_p` must be a guard-protected slab node just unlinked by a
+    /// successful backup CAS.
+    #[inline]
+    unsafe fn uninstall(raw_p: usize) {
+        let node = unsafe { &*(raw_p as *const Node<T>) };
+        // Ordering: RELAXED — published by the RELEASE uninstall signal
+        // below (the recycler's ACQUIRE phase-1 snapshot of a false
+        // is_installed makes this stamp visible to its phase-3 check).
+        node.retired_at.store(S::reclaim_stamp(), P::RELAXED);
+        // Ordering: RELEASE — pairs with the recycler's ACQUIRE
+        // snapshot (recycle only after the uninstall is visible).
+        node.is_installed.store(false, P::RELEASE);
+    }
+
+    fn try_load_indirect(&self, g: &S::Guard) -> Tli<T> {
+        let raw = self.protect_backup(g);
         if !is_null(raw) {
             return Tli::Indirect {
                 raw,
@@ -490,7 +536,7 @@ impl<T: AtomicValue> CachedMemEff<T> {
     /// under the seqlock, then try to null out the backup; if a newer
     /// writer installed meanwhile, help cache *their* value, looping
     /// until the backup is null or someone else holds the lock.
-    fn try_seqlock(&self, mut ver: u64, mut desired: T, mut raw_p: usize, h: &HazardPointer) {
+    fn try_seqlock(&self, mut ver: u64, mut desired: T, mut raw_p: usize, g: &S::Guard) {
         loop {
             // Ordering: RELAXED pre-check — advisory only; the lock CAS
             // below re-validates against the same version.
@@ -530,11 +576,9 @@ impl<T: AtomicValue> CachedMemEff<T> {
             {
                 Ok(_) => {
                     // SAFETY: raw_p is a node we (or a helper chain)
-                    // protected; uninstall signal for its owner.
-                    // Ordering: RELEASE — pairs with the recycler's
-                    // ACQUIRE snapshot (free only after uninstall is
-                    // visible).
-                    unsafe { (*(raw_p as *const Node<T>)).is_installed.store(false, P::RELEASE) };
+                    // protected, unlinked by the successful null CAS;
+                    // stamp + uninstall signal for its owner's recycler.
+                    unsafe { Self::uninstall(raw_p) };
                     return;
                 }
                 Err(actual) => {
@@ -543,7 +587,7 @@ impl<T: AtomicValue> CachedMemEff<T> {
                     }
                     // Help the newer writer: protect + read their value
                     // and loop to cache it.
-                    let raw2 = self.protect_backup(h);
+                    let raw2 = self.protect_backup(g);
                     if is_null(raw2) {
                         return;
                     }
@@ -555,7 +599,7 @@ impl<T: AtomicValue> CachedMemEff<T> {
     }
 }
 
-impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedMemEff<T, P, S> {
     fn new(init: T) -> Self {
         Self::with_domain(init, MemEffDomain::global())
     }
@@ -579,13 +623,13 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
         fence(P::FENCE_ACQUIRE);
         // Ordering: RELAXED — ordered by the fence above.
         if is_null(raw) && ver == self.version.load(P::RELAXED) {
-            return val; // fast path: no indirection, no hazard
+            return val; // fast path: no indirection, no SMR
         }
         // Lock-free slow path: each retry implies an update completed.
-        let h = HazardPointer::new();
+        let g = S::pin();
         let mut bo = Backoff::new();
         loop {
-            match self.try_load_indirect(&h) {
+            match self.try_load_indirect(&g) {
                 Tli::Indirect { val, .. } | Tli::Cached { val, .. } => return val,
                 Tli::Fail => bo.snooze(),
             }
@@ -615,7 +659,7 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
     }
 
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
-        let h = HazardPointer::new();
+        let g = S::pin();
         // Lazy: the uncontended install pays no backoff/TLS cost.
         let mut bo = None;
         loop {
@@ -623,7 +667,7 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
             // when try_load_indirect returns Indirect (the install path
             // hands it to try_seqlock, whose lock CAS re-validates it).
             let mut ver = self.version.load(P::ACQUIRE);
-            let (raw, val) = match self.try_load_indirect(&h) {
+            let (raw, val) = match self.try_load_indirect(&g) {
                 Tli::Indirect { raw, val } => (raw, val),
                 Tli::Cached { ver: v, raw, val } => {
                     ver = v;
@@ -660,14 +704,11 @@ impl<T: AtomicValue> BigAtomic<T> for CachedMemEff<T> {
             {
                 Ok(_) => {
                     if !is_null(raw) {
-                        // SAFETY: protected node; uninstall signal.
-                        // Ordering: RELEASE — pairs with the recycler's
-                        // ACQUIRE snapshot.
-                        unsafe {
-                            (*(raw as *const Node<T>)).is_installed.store(false, P::RELEASE)
-                        };
+                        // SAFETY: protected node unlinked by our install
+                        // CAS; stamp + uninstall signal for its owner.
+                        unsafe { Self::uninstall(raw) };
                     }
-                    self.try_seqlock(ver, desired, new_raw, &h);
+                    self.try_seqlock(ver, desired, new_raw, &g);
                     return Ok(val);
                 }
                 Err(_) => {
@@ -813,6 +854,93 @@ mod tests {
         for r in readers {
             r.join().unwrap();
         }
+    }
+
+    #[test]
+    fn test_epoch_smr_roundtrip_and_cas() {
+        use crate::smr::Epoch;
+        use crate::util::ordering::DefaultPolicy;
+        let a: CachedMemEff<Words<3>, DefaultPolicy, Epoch> = CachedMemEff::new(Words([1, 2, 3]));
+        assert_eq!(a.load(), Words([1, 2, 3]));
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([4, 5, 6])),
+            Ok(Words([1, 2, 3]))
+        );
+        assert_eq!(
+            a.compare_exchange(Words([1, 2, 3]), Words([9, 9, 9])),
+            Err(Words([4, 5, 6]))
+        );
+        a.store(Words([7, 7, 7]));
+        assert_eq!(a.load(), Words([7, 7, 7]));
+    }
+
+    #[test]
+    fn test_epoch_smr_concurrent_cas_exactly_one_winner() {
+        use crate::smr::Epoch;
+        use crate::util::ordering::DefaultPolicy;
+        let a: Arc<CachedMemEff<Words<4>, DefaultPolicy, Epoch>> =
+            Arc::new(CachedMemEff::new(Words([0; 4])));
+        let threads = 4;
+        let rounds = 2_000u64;
+        let wins = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                let wins = Arc::clone(&wins);
+                std::thread::spawn(move || {
+                    for r in 0..rounds {
+                        let cur = a.load();
+                        let next = Words([cur.0[0] + 1, r + 1, t as u64, cur.0[3] ^ (r + 7)]);
+                        if a.compare_exchange(cur, next).is_ok() {
+                            wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.load().0[0], wins.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn test_epoch_smr_nodes_recycle() {
+        // The stamp rule must actually recycle nodes once epochs
+        // advance. Other tests in this binary may hold short-lived pins
+        // that stall stamp expiry, so instead of asserting a hard pool
+        // bound, drive update batches until one whole batch allocates
+        // zero fresh nodes — proof the recycler is feeding the free
+        // list — and fail only if that never happens.
+        use crate::smr::Epoch;
+        use crate::util::ordering::DefaultPolicy;
+        let domain: Arc<MemEffDomain<Words<2>, DefaultPolicy, Epoch>> =
+            Arc::new(MemEffDomain::new());
+        let a = CachedMemEff::with_domain(Words([0, 0]), Arc::clone(&domain));
+        let mut total = 0u64;
+        let mut last_alloc = domain.allocated_nodes();
+        let mut recycled = false;
+        for _batch in 0..60 {
+            for _ in 0..400u64 {
+                total += 1;
+                let cur = a.load();
+                assert!(a.compare_exchange(cur, Words([cur.0[0] + 1, total])).is_ok());
+            }
+            let now_alloc = domain.allocated_nodes();
+            if now_alloc == last_alloc {
+                recycled = true; // 400 updates, zero new nodes
+                break;
+            }
+            last_alloc = now_alloc;
+            std::thread::yield_now();
+        }
+        assert!(
+            recycled,
+            "epoch-scheme recycler never recycled: {} nodes after {} updates",
+            domain.allocated_nodes(),
+            total
+        );
+        assert_eq!(a.load(), Words([total, total]));
     }
 
     #[test]

@@ -28,19 +28,21 @@
 //!   happen-before the pointer value that reveals them; readers pair via
 //!   the `ACQUIRE` validating load in `HazardPointer::protect_raw_with`
 //!   or the pre-`FENCE_ACQUIRE` backup load of the fast path;
-//! * **hazard announce→revalidate** — the mandatory `SeqCst` fence lives
-//!   in `smr::hazard`, not here.
+//! * **SMR store-load** — the mandatory `SeqCst` fences live in the
+//!   scheme modules (`smr::hazard` announce→revalidate, `smr::epoch`
+//!   pin→validate), not here.
 //!
 //! The policy parameter `P` (default [`DefaultPolicy`]) lets the
 //! ordering ablation instantiate a blanket-`SeqCst` variant in a fenced
-//! binary.
+//! binary; the scheme parameter `S` (default [`Hazard`]) does the same
+//! for the reclamation ablation (`repro ablate --panel smr`).
 
 use std::marker::PhantomData;
 use std::sync::atomic::{fence, AtomicU64, AtomicUsize, Ordering};
 
 use super::bytewise::WordBuf;
 use super::{AtomicValue, BigAtomic};
-use crate::smr::hazard::{retire_box, HazardPointer};
+use crate::smr::{Hazard, Smr};
 use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
 
 #[repr(C, align(8))]
@@ -60,36 +62,37 @@ fn is_marked(raw: usize) -> bool {
     raw & MARK == MARK
 }
 
-pub struct CachedWaitFree<T: AtomicValue, P: OrderingPolicy = DefaultPolicy> {
+pub struct CachedWaitFree<T: AtomicValue, P: OrderingPolicy = DefaultPolicy, S: Smr = Hazard> {
     version: AtomicU64,
     /// Marked pointer to `Node<T>`; mark set ⇒ cache invalid.
     backup: AtomicUsize,
     cache: WordBuf<T>,
-    _policy: PhantomData<P>,
+    _policy: PhantomData<fn() -> (P, S)>,
 }
 
-impl<T: AtomicValue, P: OrderingPolicy> CachedWaitFree<T, P> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> CachedWaitFree<T, P, S> {
     #[inline]
     fn node_value(raw: usize) -> T {
-        // SAFETY: caller protected `unmark(raw)` with a hazard pointer
+        // SAFETY: caller protected `unmark(raw)` through an SMR guard
         // (or owns it exclusively); nodes are immutable after publish.
         unsafe { (*(unmark(raw) as *const Node<T>)).value }
     }
 
     /// Protect the current backup, announcing the *unmarked* node address
-    /// (the address reclaimers compare against).
+    /// (the address reclaimers compare against; a no-op under region
+    /// schemes, whose pin covers everything).
     #[inline]
-    fn protect_backup(&self, h: &HazardPointer) -> usize {
-        // Ordering: ACQUIRE — the validating (second) call of this load
-        // inside protect_raw_with pairs with the installer's RELEASE
-        // CAS, so the node's contents are visible before node_value
-        // dereferences it. The announce→revalidate SeqCst fence is
-        // inside protect_raw_with.
-        h.protect_raw_with(|| self.backup.load(P::ACQUIRE), unmark)
+    fn protect_backup(&self, g: &S::Guard) -> usize {
+        // Ordering: ACQUIRE — the validating call of this load inside
+        // protect_raw pairs with the installer's RELEASE CAS, so the
+        // node's contents are visible before node_value dereferences
+        // it. The scheme's store-load SeqCst fence is inside the guard
+        // (hazard) or was paid at pin time (epoch).
+        g.protect_raw(|| self.backup.load(P::ACQUIRE), unmark)
     }
 }
 
-impl<T: AtomicValue, P: OrderingPolicy> Drop for CachedWaitFree<T, P> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> Drop for CachedWaitFree<T, P, S> {
     fn drop(&mut self) {
         let raw = self.backup.load(Ordering::Relaxed);
         // SAFETY: exclusive in Drop; backup is always a live node.
@@ -97,7 +100,7 @@ impl<T: AtomicValue, P: OrderingPolicy> Drop for CachedWaitFree<T, P> {
     }
 }
 
-impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for CachedWaitFree<T, P> {
+impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<T, P, S> {
     fn new(init: T) -> Self {
         Self {
             version: AtomicU64::new(0),
@@ -131,8 +134,8 @@ impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for CachedWaitFree<T, P> {
         }
         // Slow path: one protected indirect read. The backup always holds
         // the current value, so no loop — wait-free.
-        let h = HazardPointer::new();
-        let raw = self.protect_backup(&h);
+        let g = S::pin();
+        let raw = self.protect_backup(&g);
         Self::node_value(raw)
     }
 
@@ -159,14 +162,14 @@ impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for CachedWaitFree<T, P> {
     }
 
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
-        let h = HazardPointer::new();
+        let g = S::pin();
         // Ordering: ACQUIRE — as in load's fast path.
         let ver = self.version.load(P::ACQUIRE);
         let mut val = self.cache.read_p::<P>();
         // Protect early: the install CAS below must only succeed if the
-        // backup hasn't changed since this read (hazard prevents the
+        // backup hasn't changed since this read (the guard prevents the
         // address being recycled — no ABA).
-        let raw = self.protect_backup(&h);
+        let raw = self.protect_backup(&g);
         // Ordering: ACQUIRE — the SeqCst fence inside protect_backup
         // already orders this after the reads above; ACQUIRE keeps the
         // cache-validity decision paired with the version unlock.
@@ -216,14 +219,14 @@ impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for CachedWaitFree<T, P> {
             // installed. Wait-free (no loop); may rarely equal
             // `expected` again if later updates restored it — see the
             // module docs' witness contract.
-            let raw2 = self.protect_backup(&h);
+            let raw2 = self.protect_backup(&g);
             return Err(Self::node_value(raw2));
         }
 
-        // Linearized at the install. Retire the old node (still hazard-
-        // protected by us, so it outlives this call).
+        // Linearized at the install. Retire the old node (still
+        // guard-protected by us, so it outlives this call).
         // SAFETY: unlinked by the successful install.
-        unsafe { retire_box(unmark(raw) as *mut Node<T>) };
+        unsafe { S::retire_box(unmark(raw) as *mut Node<T>) };
 
         // Try to copy into the cache: seqlock acquire, but additionally
         // require the version unchanged since *before* our install so we
@@ -310,6 +313,18 @@ mod tests {
         let a: CachedWaitFree<Words<2>, SeqCstEverywhere> = CachedWaitFree::new(Words([0, 0]));
         assert_eq!(a.compare_exchange(Words([0, 0]), Words([1, 2])), Ok(Words([0, 0])));
         assert_eq!(a.load(), Words([1, 2]));
+        a.store(Words([3, 4]));
+        assert_eq!(a.load(), Words([3, 4]));
+    }
+
+    #[test]
+    fn test_explicit_epoch_smr_variant() {
+        // The region-scheme instantiation (used by the smr ablation)
+        // must behave identically.
+        use crate::smr::Epoch;
+        let a: CachedWaitFree<Words<2>, DefaultPolicy, Epoch> = CachedWaitFree::new(Words([0, 0]));
+        assert_eq!(a.compare_exchange(Words([0, 0]), Words([1, 2])), Ok(Words([0, 0])));
+        assert_eq!(a.compare_exchange(Words([9, 9]), Words([3, 3])), Err(Words([1, 2])));
         a.store(Words([3, 4]));
         assert_eq!(a.load(), Words([3, 4]));
     }

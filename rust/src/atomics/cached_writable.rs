@@ -15,15 +15,20 @@
 //! contract applies to `Z`); the only orderings owned here govern the
 //! write-buffer pointer `W`: `RELEASE` on the buffering CAS (the new
 //! `WNode`'s contents happen-before its address) pairing with the
-//! `ACQUIRE` validating load inside `protect_w`, plus the hazard
-//! announce→revalidate fence in `smr::hazard`.
+//! `ACQUIRE` validating load inside `protect_w`, plus the reclamation
+//! scheme's own store-load fence (in `smr`).  The scheme parameter `S`
+//! (default [`Hazard`]) is threaded through to the inner `Z` as well,
+//! so `CachedWritable<T, Epoch>` runs entirely on epochs.
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::cached_waitfree::CachedWaitFree;
 use super::{AtomicValue, BigAtomic};
-use crate::smr::hazard::{retire_box, HazardPointer};
-use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
+use crate::smr::{Hazard, Smr};
+use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
+
+type P = DefaultPolicy;
 
 /// The triple stored in Z. `seq` defeats ABA on transfers; `mark`
 /// (0 or 1), compared against W's pointer mark, encodes write-pending.
@@ -55,26 +60,28 @@ struct WNode<T> {
 
 const MARK: usize = 1;
 
-pub struct CachedWritable<T: AtomicValue> {
-    z: CachedWaitFree<ZVal<T>>,
+pub struct CachedWritable<T: AtomicValue, S: Smr = Hazard> {
+    z: CachedWaitFree<ZVal<T>, P, S>,
     /// Marked pointer to `WNode<T>` — the write buffer.
     w: AtomicUsize,
+    _smr: PhantomData<fn() -> S>,
 }
 
-impl<T: AtomicValue> CachedWritable<T> {
+impl<T: AtomicValue, S: Smr> CachedWritable<T, S> {
     #[inline]
     fn w_value(raw: usize) -> T {
-        // SAFETY: caller holds a hazard on the unmarked node.
+        // SAFETY: caller protected the unmarked node through an SMR guard.
         unsafe { (*((raw & !MARK) as *const WNode<T>)).value }
     }
 
     #[inline]
-    fn protect_w(&self, h: &HazardPointer) -> usize {
+    fn protect_w(&self, g: &S::Guard) -> usize {
         // Ordering: ACQUIRE — the validating call pairs with the
         // buffering CAS's RELEASE so the WNode contents are visible
-        // before w_value dereferences them; the announce→revalidate
-        // SeqCst fence is inside protect_raw_with.
-        h.protect_raw_with(|| self.w.load(P::ACQUIRE), |r| r & !MARK)
+        // before w_value dereferences them; the scheme's store-load
+        // SeqCst fence is inside the guard (hazard) or was paid at pin
+        // time (epoch).
+        g.protect_raw(|| self.w.load(P::ACQUIRE), |r| r & !MARK)
     }
 
     /// Transfer a pending buffered write from W into Z (§3.3).
@@ -83,8 +90,8 @@ impl<T: AtomicValue> CachedWritable<T> {
     /// write, hence callers try twice.
     fn help_write(&self) -> bool {
         let z = self.z.load();
-        let h = HazardPointer::new();
-        let wr = self.protect_w(&h);
+        let g = S::pin();
+        let wr = self.protect_w(&g);
         let w_mark = (wr & MARK) as u64;
         if z.mark != w_mark {
             // Pending: move W's value into Z and re-match the marks.
@@ -104,7 +111,7 @@ impl<T: AtomicValue> CachedWritable<T> {
     }
 }
 
-impl<T: AtomicValue> Drop for CachedWritable<T> {
+impl<T: AtomicValue, S: Smr> Drop for CachedWritable<T, S> {
     fn drop(&mut self) {
         let raw = self.w.load(Ordering::Relaxed);
         // SAFETY: exclusive in Drop.
@@ -112,7 +119,7 @@ impl<T: AtomicValue> Drop for CachedWritable<T> {
     }
 }
 
-impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
+impl<T: AtomicValue, S: Smr> BigAtomic<T> for CachedWritable<T, S> {
     fn new(init: T) -> Self {
         Self {
             z: CachedWaitFree::new(ZVal {
@@ -122,6 +129,7 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
             }),
             // Unmarked node matching z.mark = 0: no pending write.
             w: AtomicUsize::new(Box::into_raw(Box::new(WNode { value: init })) as usize),
+            _smr: PhantomData,
         }
     }
 
@@ -131,8 +139,8 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
     }
 
     fn store(&self, desired: T) {
-        let h = HazardPointer::new();
-        let wr = self.protect_w(&h);
+        let g = S::pin();
+        let wr = self.protect_w(&g);
         let z = self.z.load();
         if z.value == desired {
             return; // silent linearization at the Z read
@@ -150,9 +158,9 @@ impl<T: AtomicValue> BigAtomic<T> for CachedWritable<T> {
                 .compare_exchange(wr, new_w, P::RELEASE, P::RELAXED)
                 .is_ok()
             {
-                // SAFETY: old buffer node unlinked (hazard-protected
+                // SAFETY: old buffer node unlinked (guard-protected
                 // readers may remain).
-                unsafe { retire_box((wr & !MARK) as *mut WNode<T>) };
+                unsafe { S::retire_box((wr & !MARK) as *mut WNode<T>) };
             } else {
                 // Another writer buffered first; we linearize silently
                 // just before their transfer.
@@ -224,6 +232,16 @@ mod tests {
         assert_eq!(a.load(), Words([3, 4]));
         assert_eq!(a.compare_exchange(Words([3, 4]), Words([5, 6])), Ok(Words([3, 4])));
         assert_eq!(a.compare_exchange(Words([3, 4]), Words([7, 8])), Err(Words([5, 6])));
+        assert_eq!(a.load(), Words([5, 6]));
+    }
+
+    #[test]
+    fn test_roundtrip_under_epoch_smr() {
+        use crate::smr::Epoch;
+        let a: CachedWritable<Words<2>, Epoch> = CachedWritable::new(Words([1, 2]));
+        a.store(Words([3, 4]));
+        assert_eq!(a.load(), Words([3, 4]));
+        assert_eq!(a.compare_exchange(Words([3, 4]), Words([5, 6])), Ok(Words([3, 4])));
         assert_eq!(a.load(), Words([5, 6]));
     }
 

@@ -3,21 +3,27 @@
 //!
 //! Loads read through the pointer (two dependent cache misses — the
 //! performance problem the paper's cached algorithms exist to fix);
-//! updates install a fresh node with a single-word CAS.  Hazard pointers
-//! protect readers from reclamation races.
+//! updates install a fresh node with a single-word CAS.  The reclamation
+//! scheme is pluggable ([`Smr`]): hazard pointers by default (the
+//! paper's choice), or `Indirect<T, Epoch>` to defer reclamation to
+//! epoch advances instead of per-pointer announcements — `repro ablate
+//! --panel smr` measures the difference.
 //!
 //! ## Ordering contract
 //!
 //! Nodes are immutable after publish, so one edge does all the work:
 //! `RELEASE` on every installing CAS/swap (node contents happen-before
 //! the pointer is observable) pairing with the `ACQUIRE` validating load
-//! inside [`HazardPointer::protect`].  The announce→revalidate
-//! store-load fence lives in `smr::hazard`, not here.
+//! inside [`protect_ptr`](crate::smr::SmrGuard::protect_ptr).  The
+//! scheme's own store-load
+//! fences (hazard announce→revalidate, epoch pin→validate) live in
+//! `smr`, not here.
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicPtr, Ordering};
 
 use super::{AtomicValue, BigAtomic};
-use crate::smr::hazard::{retire_box, HazardPointer};
+use crate::smr::{Hazard, Smr};
 use crate::util::backoff::snooze_lazy;
 use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 
@@ -25,11 +31,12 @@ struct Node<T> {
     value: T,
 }
 
-pub struct Indirect<T: AtomicValue> {
+pub struct Indirect<T: AtomicValue, S: Smr = Hazard> {
     ptr: AtomicPtr<Node<T>>,
+    _smr: PhantomData<fn() -> S>,
 }
 
-impl<T: AtomicValue> Drop for Indirect<T> {
+impl<T: AtomicValue, S: Smr> Drop for Indirect<T, S> {
     fn drop(&mut self) {
         let p = self.ptr.load(Ordering::Relaxed);
         if !p.is_null() {
@@ -39,18 +46,19 @@ impl<T: AtomicValue> Drop for Indirect<T> {
     }
 }
 
-impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
+impl<T: AtomicValue, S: Smr> BigAtomic<T> for Indirect<T, S> {
     fn new(init: T) -> Self {
         Self {
             ptr: AtomicPtr::new(Box::into_raw(Box::new(Node { value: init }))),
+            _smr: PhantomData,
         }
     }
 
     #[inline]
     fn load(&self) -> T {
-        let h = HazardPointer::new();
-        let p = h.protect(&self.ptr);
-        // SAFETY: protected from reclamation by the hazard pointer.
+        let g = S::pin();
+        let p = g.protect_ptr(&self.ptr);
+        // SAFETY: protected from reclamation by the guard.
         unsafe { (*p).value }
     }
 
@@ -67,12 +75,12 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
         // writes.
         let old = self.ptr.swap(new, P::ACQREL);
         // SAFETY: old is unlinked and was uniquely owned by this atomic.
-        unsafe { retire_box(old) };
+        unsafe { S::retire_box(old) };
     }
 
     fn compare_exchange(&self, expected: T, desired: T) -> Result<T, T> {
-        let h = HazardPointer::new();
-        let mut p = h.protect(&self.ptr);
+        let g = S::pin();
+        let mut p = g.protect_ptr(&self.ptr);
         // Lazy: the uncontended install pays no backoff/TLS cost.
         let mut bo = None;
         loop {
@@ -87,18 +95,20 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
                 return Ok(cur);
             }
             let new = Box::into_raw(Box::new(Node { value: desired }));
-            // The hazard on p prevents its address being recycled, so
-            // this CAS succeeding means the logical value is still
-            // `expected` (no ABA).
+            // The guard's protection of p prevents its address being
+            // recycled (hazard: announced; epoch: retired-under-pin
+            // garbage is never freed while we stay pinned), so this CAS
+            // succeeding means the logical value is still `expected`
+            // (no ABA).
             // Ordering: RELEASE on success — publish the new node before
             // its address (no Acquire half: p's contents were already
-            // acquired by protect's validating load). RELAXED on failure
-            // — the retry goes back through protect, whose ACQUIRE load
-            // re-synchronizes.
+            // acquired by the protecting load). RELAXED on failure
+            // — the retry goes back through protect_ptr, whose ACQUIRE
+            // load re-synchronizes.
             match self.ptr.compare_exchange(p, new, P::RELEASE, P::RELAXED) {
                 Ok(_) => {
                     // SAFETY: p is now unlinked.
-                    unsafe { retire_box(p) };
+                    unsafe { S::retire_box(p) };
                     return Ok(cur);
                 }
                 Err(_) => {
@@ -112,7 +122,7 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
                     // level ABA restored `expected` and we retry the
                     // install. Lock-free: every iteration implies a
                     // competing update succeeded.
-                    p = h.protect(&self.ptr);
+                    p = g.protect_ptr(&self.ptr);
                 }
             }
         }
@@ -130,7 +140,7 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
         // immutable after publish.
         let prev = unsafe { (*old).value };
         // SAFETY: old is unlinked and was uniquely owned by this atomic.
-        unsafe { retire_box(old) };
+        unsafe { S::retire_box(old) };
         prev
     }
 
@@ -147,6 +157,7 @@ impl<T: AtomicValue> BigAtomic<T> for Indirect<T> {
 mod tests {
     use super::*;
     use crate::atomics::Words;
+    use crate::smr::Epoch;
     use std::sync::Arc;
 
     #[test]
@@ -168,6 +179,20 @@ mod tests {
     }
 
     #[test]
+    fn test_roundtrip_under_epoch_smr() {
+        // The same algorithm over the region scheme: identical semantics.
+        let a: Indirect<Words<3>, Epoch> = Indirect::new(Words([1, 2, 3]));
+        assert_eq!(a.load(), Words([1, 2, 3]));
+        a.store(Words([4, 5, 6]));
+        assert_eq!(
+            a.compare_exchange(Words([4, 5, 6]), Words([7, 8, 9])),
+            Ok(Words([4, 5, 6]))
+        );
+        assert_eq!(a.swap(Words([1, 1, 1])), Words([7, 8, 9]));
+        Epoch::<crate::util::ordering::DefaultPolicy>::try_advance_and_collect();
+    }
+
+    #[test]
     fn test_cas_equal_value_is_noop_ok() {
         let a: Indirect<Words<1>> = Indirect::new(Words([5]));
         assert_eq!(a.compare_exchange(Words([5]), Words([5])), Ok(Words([5])));
@@ -177,35 +202,39 @@ mod tests {
     #[test]
     fn test_concurrent_witness_fed_cas_total() {
         // The retry loop consumes the Err witness instead of re-loading;
-        // the counter still must be exact.
-        let a: Arc<Indirect<Words<4>>> = Arc::new(Indirect::new(Words([0; 4])));
-        let threads = 4;
-        let per = 3_000u64;
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
-                let a = Arc::clone(&a);
-                std::thread::spawn(move || {
-                    let mut wins = 0u64;
-                    let mut cur = a.load();
-                    while wins < per {
-                        let mut next = cur;
-                        next.0[0] += 1;
-                        next.0[1 + (t % 3)] ^= wins + 1;
-                        match a.compare_exchange(cur, next) {
-                            Ok(_) => {
-                                wins += 1;
-                                cur = next;
+        // the counter still must be exact — under both SMR schemes.
+        fn run<S: Smr>() {
+            let a: Arc<Indirect<Words<4>, S>> = Arc::new(Indirect::new(Words([0; 4])));
+            let threads = 4;
+            let per = 3_000u64;
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let a = Arc::clone(&a);
+                    std::thread::spawn(move || {
+                        let mut wins = 0u64;
+                        let mut cur = a.load();
+                        while wins < per {
+                            let mut next = cur;
+                            next.0[0] += 1;
+                            next.0[1 + (t % 3)] ^= wins + 1;
+                            match a.compare_exchange(cur, next) {
+                                Ok(_) => {
+                                    wins += 1;
+                                    cur = next;
+                                }
+                                Err(w) => cur = w,
                             }
-                            Err(w) => cur = w,
                         }
-                    }
+                    })
                 })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert_eq!(a.load().0[0], threads as u64 * per, "{}", S::NAME);
         }
-        assert_eq!(a.load().0[0], threads as u64 * per);
+        run::<Hazard>();
+        run::<Epoch>();
     }
 
     #[test]

@@ -75,9 +75,11 @@
 //! 2. **Pointer publication** — installing CAS/swap is `RELEASE`
 //!    (node contents happen-before the address), readers `ACQUIRE` the
 //!    pointer before dereferencing.
-//! 3. **Hazard store-load** — the only `fence(SeqCst)` pair in the
-//!    crate lives in [`crate::smr::hazard`] (announce→revalidate and
-//!    retire→scan); it is mandatory under *both* policies.
+//! 3. **SMR store-load** — the crate's only `fence(SeqCst)` points live
+//!    in [`crate::smr`]: the hazard pair (announce→revalidate and
+//!    retire→scan, `smr::hazard`) and the epoch pair (pin→validate and
+//!    advance→scan, `smr::epoch`); all four are mandatory under *both*
+//!    policies.
 //!
 //! `cargo build --features seqcst_audit` restores the seed's blanket
 //! `SeqCst` at every demoted site (the fences widen to `SeqCst` too), so

@@ -14,18 +14,27 @@
 //!    explicit `OrderingPolicy` instantiations of `SeqLock` and
 //!    `CachedWaitFree` and the runtime backoff switch — the win of the
 //!    diet is a number in the report, not a claim.
+//! 5. **Reclamation scheme** (`--panel smr`): hazard pointers vs epochs
+//!    on every pointer-protect backend (the `Smr` parameter), plus the
+//!    epoch ordering-policy pair (`Epoch<Fenced>` vs
+//!    `Epoch<SeqCstEverywhere>`) on the hash tables — the reclamation
+//!    leg of the ordering diet, measured not claimed.
 //!
-//! Run with `repro ablate [--panel ordering]`.
+//! Run with `repro ablate [--panel ordering|smr]`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
-use super::driver::{hw_threads, run_map, MapImpl, OpSource};
+use super::driver::{hw_threads, run_map, run_throughput, MapImpl, MapTarget, OpSource};
 use super::figures::{FigureCfg, Report};
 use super::workload::{WorkloadSpec, ZipfCdf};
-use crate::atomics::{BigAtomic, CachedMemEff, CachedWaitFree, SeqLock, SimpLock, Words};
+use crate::atomics::{
+    BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, Indirect, SeqLock, SimpLock, Words,
+};
+use crate::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal};
+use crate::smr::{Epoch, Hazard, Smr};
 use crate::util::backoff;
-use crate::util::ordering::{Fenced, SeqCstEverywhere};
+use crate::util::ordering::{DefaultPolicy, Fenced, SeqCstEverywhere};
 use crate::util::rng::Xoshiro256;
 use crate::util::{ns_per_op, time_for};
 
@@ -174,6 +183,88 @@ pub fn run_ordering_ablation(cfg: &FigureCfg) -> Report {
     rep
 }
 
+/// Ablation 5a (`repro ablate --panel smr`): hazard vs epoch on every
+/// pointer-protect backend — contended witness-fed CAS-loop Mop/s and
+/// uncontended load ns per (scheme, backend) pair, in one binary via the
+/// `Smr` type parameter.
+pub fn run_smr_ablation(cfg: &FigureCfg) -> Report {
+    let threads = hw_threads().max(2);
+    let dur = cfg.dur();
+    let mut rep = Report::new(
+        "ablation_smr",
+        &["scheme", "impl", "contended_casloop_mops", "uncontended_load_ns"],
+    );
+    fn scheme_rows<S: Smr>(rep: &mut Report, threads: usize, dur: Duration) {
+        let mut row = |imp: &str, (mops, ns): (f64, f64)| {
+            rep.row(vec![
+                S::NAME.into(),
+                imp.into(),
+                format!("{mops:.3}"),
+                format!("{ns:.1}"),
+            ]);
+        };
+        row("Indirect", ordering_point::<Indirect<Words<4>, S>>(threads, dur));
+        row(
+            "Cached-WaitFree",
+            ordering_point::<CachedWaitFree<Words<4>, DefaultPolicy, S>>(threads, dur),
+        );
+        row(
+            "Cached-MemEff",
+            ordering_point::<CachedMemEff<Words<4>, DefaultPolicy, S>>(threads, dur),
+        );
+        row(
+            "Cached-WF-Writable",
+            ordering_point::<CachedWritable<Words<4>, S>>(threads, dur),
+        );
+    }
+    scheme_rows::<Hazard>(&mut rep, threads, dur);
+    scheme_rows::<Epoch>(&mut rep, threads, dur);
+    rep
+}
+
+/// Ablation 5b: the epoch ordering-policy pair on the epoch consumers —
+/// hash-table throughput under `Epoch<Fenced>` vs
+/// `Epoch<SeqCstEverywhere>` (the reclamation leg of the ordering diet,
+/// where the hash tables are the real workload).
+pub fn run_smr_table_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let threads = hw_threads().max(2);
+    let spec = WorkloadSpec {
+        n: cfg.n,
+        theta: 0.0,
+        update_pct: 50,
+        seed: 0x53,
+    };
+    let mut rep = Report::new("ablation_smr_tables", &["epoch_policy", "map", "mops"]);
+    let mut point = |policy: &str, label: &str, map: Box<dyn ConcurrentMap>| {
+        let target = MapTarget::new(map, &spec);
+        let r = run_throughput(&target, &spec, threads, cfg.dur(), source);
+        rep.row(vec![policy.into(), label.into(), format!("{:.3}", r.mops())]);
+    };
+    point(
+        "fenced",
+        "CacheHash(MemEff)",
+        Box::new(CacheHash::<CachedMemEff<LinkVal>, u64, u64, Epoch<Fenced>>::new(spec.n)),
+    );
+    point(
+        "seqcst",
+        "CacheHash(MemEff)",
+        Box::new(CacheHash::<CachedMemEff<LinkVal>, u64, u64, Epoch<SeqCstEverywhere>>::new(
+            spec.n,
+        )),
+    );
+    point(
+        "fenced",
+        "Chaining(no-inline)",
+        Box::new(Chaining::<u64, u64, Epoch<Fenced>>::new(spec.n)),
+    );
+    point(
+        "seqcst",
+        "Chaining(no-inline)",
+        Box::new(Chaining::<u64, u64, Epoch<SeqCstEverywhere>>::new(spec.n)),
+    );
+    rep
+}
+
 /// Run all ablations; returns the report (saved by the coordinator).
 pub fn run_ablations(cfg: &FigureCfg, source: &OpSource) -> Report {
     let mut rep = Report::new(
@@ -246,6 +337,49 @@ mod tests {
         }
         // The toggle must be restored for the rest of the suite.
         assert!(backoff::enabled());
+    }
+
+    #[test]
+    fn test_smr_ablation_shape() {
+        let cfg = FigureCfg {
+            secs_per_point: 0.02,
+            n: 256,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_smr_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_smr_ablation(&cfg);
+        // 2 schemes x 4 backends.
+        assert_eq!(rep.rows().len(), 8);
+        let schemes: Vec<&str> = rep.rows().iter().map(|r| r[0].as_str()).collect();
+        for s in ["hazard", "epoch"] {
+            assert_eq!(schemes.iter().filter(|x| **x == s).count(), 4, "{s}");
+        }
+        for row in rep.rows() {
+            assert!(row[2].parse::<f64>().unwrap() > 0.0, "{row:?}");
+            assert!(row[3].parse::<f64>().unwrap() > 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn test_smr_table_ablation_shape() {
+        let cfg = FigureCfg {
+            secs_per_point: 0.02,
+            n: 256,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_smr_tables_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_smr_table_ablation(&cfg, &OpSource::Rust);
+        // 2 policies x 2 maps.
+        assert_eq!(rep.rows().len(), 4);
+        for row in rep.rows() {
+            assert!(row[2].parse::<f64>().unwrap() > 0.0, "{row:?}");
+        }
     }
 
     #[test]

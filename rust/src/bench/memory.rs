@@ -91,7 +91,9 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
     }
     let inline = n * std::mem::size_of::<CachedMemEff<Words<K>>>();
     let pool_nodes = domain.allocated_nodes() as usize;
-    let pool_bytes = pool_nodes * (std::mem::size_of::<Words<K>>() + 32);
+    // Node overhead: four flag bytes padded to words + the uninstall
+    // stamp (see atomics::cached_memeff::Node).
+    let pool_bytes = pool_nodes * (std::mem::size_of::<Words<K>>() + 40);
     rep.row(vec![
         "Cached-MemEff".into(),
         n.to_string(),

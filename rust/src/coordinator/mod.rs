@@ -108,11 +108,17 @@ impl Coordinator {
             "memory" => save(crate::bench::memory::memory_census(cfg))?,
             "ablate" => match panel {
                 "ordering" => save(crate::bench::ablation::run_ordering_ablation(cfg))?,
+                "smr" => {
+                    save(crate::bench::ablation::run_smr_ablation(cfg))?;
+                    save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
+                }
                 "" | "all" => {
                     save(crate::bench::ablation::run_ablations(cfg, &source))?;
                     save(crate::bench::ablation::run_ordering_ablation(cfg))?;
+                    save(crate::bench::ablation::run_smr_ablation(cfg))?;
+                    save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
                 }
-                other => crate::bail!("ablate panel {other}: use ordering (or omit for all)"),
+                other => crate::bail!("ablate panel {other}: use ordering|smr (or omit for all)"),
             },
             "all" => {
                 saved.extend(figures::run_all(cfg, &source));
@@ -121,6 +127,13 @@ impl Coordinator {
                 );
                 saved.push(
                     crate::bench::ablation::run_ordering_ablation(cfg).save(&cfg.report_dir)?,
+                );
+                saved.push(
+                    crate::bench::ablation::run_smr_ablation(cfg).save(&cfg.report_dir)?,
+                );
+                saved.push(
+                    crate::bench::ablation::run_smr_table_ablation(cfg, &source)
+                        .save(&cfg.report_dir)?,
                 );
             }
             other => crate::bail!("unknown figure {other}"),

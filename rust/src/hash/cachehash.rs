@@ -15,11 +15,18 @@
 //! second chain walk entirely. Retries back off through the adaptive
 //! `util::backoff::Backoff`.
 //!
-//! Epoch-based reclamation protects chain traversals (§4).
+//! Chain traversals are unbounded, so reclamation needs a
+//! *region-grained* scheme ([`RegionSmr`]): epoch-based by default (§4:
+//! "We use epoch-based memory management to protect the links"), with
+//! the scheme parameter `S` selecting the epoch ordering policy
+//! (`Epoch<Fenced>` vs `Epoch<SeqCstEverywhere>` — the reclamation leg
+//! of the ordering ablation). Hazard pointers cannot satisfy the region
+//! contract and are rejected at the type level — see `smr`'s module
+//! docs for why.
 
 use super::{bucket_for, table_capacity, ConcurrentMap};
 use crate::atomics::{AtomicValue, BigAtomic};
-use crate::smr::epoch;
+use crate::smr::{Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
 use crate::util::CachePadded;
 
@@ -86,39 +93,43 @@ struct ChainNode<K, V> {
     next: *mut ChainNode<K, V>,
 }
 
-pub struct CacheHash<A, K = u64, V = u64>
+pub struct CacheHash<A, K = u64, V = u64, S = Epoch>
 where
     K: AtomicValue,
     V: AtomicValue,
     A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
 {
     buckets: Box<[CachePadded<A>]>,
     name: &'static str,
-    _kv: std::marker::PhantomData<Link<K, V>>,
+    _kv: std::marker::PhantomData<(Link<K, V>, fn() -> S)>,
 }
 
 // SAFETY: buckets are Sync big atomics; chain nodes are immutable and
-// epoch-protected.
-unsafe impl<A, K, V> Send for CacheHash<A, K, V>
+// region-protected.
+unsafe impl<A, K, V, S> Send for CacheHash<A, K, V, S>
 where
     K: AtomicValue,
     V: AtomicValue,
     A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
 {
 }
-unsafe impl<A, K, V> Sync for CacheHash<A, K, V>
+unsafe impl<A, K, V, S> Sync for CacheHash<A, K, V, S>
 where
     K: AtomicValue,
     V: AtomicValue,
     A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
 {
 }
 
-impl<A, K, V> CacheHash<A, K, V>
+impl<A, K, V, S> CacheHash<A, K, V, S>
 where
     K: AtomicValue,
     V: AtomicValue,
     A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
 {
     /// A table with capacity for ~`n` entries at load factor one.
     pub fn new(n: usize) -> Self {
@@ -141,7 +152,7 @@ where
     #[inline]
     fn chain_find(mut p: *mut ChainNode<K, V>, key: &K) -> Option<V> {
         while !p.is_null() {
-            // SAFETY: epoch-pinned by caller; nodes retired only after
+            // SAFETY: region-pinned by caller; nodes retired only after
             // being unlinked by a bucket CAS that happened-after our
             // head load.
             let n = unsafe { &*p };
@@ -158,14 +169,15 @@ where
     }
 }
 
-impl<A, K, V> ConcurrentMap<K, V> for CacheHash<A, K, V>
+impl<A, K, V, S> ConcurrentMap<K, V> for CacheHash<A, K, V, S>
 where
     K: AtomicValue,
     V: AtomicValue,
     A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
 {
     fn find(&self, key: K) -> Option<V> {
-        let _g = epoch::pin();
+        let _g = S::pin();
         let head = self.bucket(&key).load();
         if !head.occupied() {
             return None;
@@ -177,11 +189,11 @@ where
     }
 
     fn insert(&self, key: K, value: V) -> bool {
-        let _g = epoch::pin();
+        let _g = S::pin();
         let bucket = self.bucket(&key);
         let mut head = bucket.load();
         // The chain pointer we last walked and proved free of `key`.
-        // Chain nodes are immutable after publish and we hold the epoch
+        // Chain nodes are immutable after publish and we hold the region
         // pin for the whole operation, so no node reachable from a head
         // we read can be freed (or its address reused) before we return
         // — pointer equality therefore implies the entire chain is
@@ -237,7 +249,7 @@ where
     }
 
     fn remove(&self, key: K) -> bool {
-        let _g = epoch::pin();
+        let _g = S::pin();
         let bucket = self.bucket(&key);
         let mut head = bucket.load();
         // Lazy: an uncontended remove pays no backoff/TLS cost.
@@ -260,13 +272,13 @@ where
                     }
                 }
                 // Promote the first chain node inline.
-                // SAFETY: epoch-pinned, reachable.
+                // SAFETY: region-pinned, reachable.
                 let n = unsafe { &*p };
                 let promoted = Link::with_chain(n.key, n.value, n.next);
                 match bucket.compare_exchange(head, promoted) {
                     Ok(_) => {
                         // SAFETY: p unlinked by the successful CAS.
-                        unsafe { epoch::retire_box(p) };
+                        unsafe { S::retire_box(p) };
                         return true;
                     }
                     Err(w) => {
@@ -282,7 +294,7 @@ where
             let mut found = false;
             let mut suffix: *mut ChainNode<K, V> = std::ptr::null_mut();
             while !p.is_null() {
-                // SAFETY: epoch-pinned traversal.
+                // SAFETY: region-pinned traversal.
                 let n = unsafe { &*p };
                 if n.key == key {
                     found = true;
@@ -311,11 +323,11 @@ where
                     // Retire the victim and the replaced original prefix.
                     // SAFETY: all unlinked by the successful CAS.
                     unsafe {
-                        epoch::retire_box(victim);
+                        S::retire_box(victim);
                         let mut q = head.next_ptr();
                         while q != victim {
                             let nx = (*q).next;
-                            epoch::retire_box(q);
+                            S::retire_box(q);
                             q = nx;
                         }
                     }
@@ -342,11 +354,12 @@ where
     }
 }
 
-impl<A, K, V> Drop for CacheHash<A, K, V>
+impl<A, K, V, S> Drop for CacheHash<A, K, V, S>
 where
     K: AtomicValue,
     V: AtomicValue,
     A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
 {
     fn drop(&mut self) {
         // Exclusive: free all chains directly.
@@ -361,7 +374,7 @@ where
                 }
             }
         }
-        epoch::flush_thread_bag();
+        S::flush_thread_bag();
     }
 }
 
@@ -390,6 +403,30 @@ mod tests {
     #[test]
     fn test_basic_memeff() {
         basic::<CachedMemEff<LinkVal>>();
+    }
+
+    #[test]
+    fn test_explicit_epoch_policy_instantiations() {
+        // The table is generic over the epoch ordering policy: the
+        // fenced default and the blanket-SeqCst audit instantiation must
+        // behave identically (the smr ablation compares them).
+        use crate::smr::Epoch;
+        use crate::util::ordering::{Fenced, SeqCstEverywhere};
+        fn run<S: crate::smr::RegionSmr>() {
+            let t: CacheHash<SeqLock<LinkVal>, u64, u64, S> = CacheHash::new(8);
+            for k in 0..64u64 {
+                assert!(t.insert(k, k + 1));
+            }
+            for k in (0..64u64).step_by(2) {
+                assert!(t.remove(k));
+            }
+            for k in 0..64u64 {
+                let want = if k % 2 == 0 { None } else { Some(k + 1) };
+                assert_eq!(t.find(k), want);
+            }
+        }
+        run::<Epoch<Fenced>>();
+        run::<Epoch<SeqCstEverywhere>>();
     }
 
     #[test]

@@ -2,13 +2,16 @@
 //! "Chaining" series in Fig 3): identical algorithm to CacheHash but the
 //! bucket is a plain atomic *pointer* to the first link, so every
 //! non-empty find pays at least one extra dependent cache miss.
-//! Generic over the same key/value types as [`CacheHash`](super::CacheHash).
+//! Generic over the same key/value types as [`CacheHash`](super::CacheHash),
+//! and over the same region-grained reclamation parameter (epoch-based;
+//! see `smr` for why hazard pointers are rejected at the type level).
 
+use std::marker::PhantomData;
 use std::sync::atomic::{AtomicPtr, Ordering};
 
 use super::{bucket_for, table_capacity, ConcurrentMap};
 use crate::atomics::AtomicValue;
-use crate::smr::epoch;
+use crate::smr::{Epoch, RegionSmr};
 use crate::util::CachePadded;
 
 struct Node<K, V> {
@@ -17,21 +20,23 @@ struct Node<K, V> {
     next: *mut Node<K, V>,
 }
 
-pub struct Chaining<K: AtomicValue = u64, V: AtomicValue = u64> {
+pub struct Chaining<K: AtomicValue = u64, V: AtomicValue = u64, S: RegionSmr = Epoch> {
     buckets: Box<[CachePadded<AtomicPtr<Node<K, V>>>]>,
+    _smr: PhantomData<fn() -> S>,
 }
 
-// SAFETY: mutations via CAS on bucket heads; nodes immutable + epoch SMR.
-unsafe impl<K: AtomicValue, V: AtomicValue> Send for Chaining<K, V> {}
-unsafe impl<K: AtomicValue, V: AtomicValue> Sync for Chaining<K, V> {}
+// SAFETY: mutations via CAS on bucket heads; nodes immutable + region SMR.
+unsafe impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Send for Chaining<K, V, S> {}
+unsafe impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Sync for Chaining<K, V, S> {}
 
-impl<K: AtomicValue, V: AtomicValue> Chaining<K, V> {
+impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
     pub fn new(n: usize) -> Self {
         let cap = table_capacity(n);
         Self {
             buckets: (0..cap)
                 .map(|_| CachePadded::new(AtomicPtr::new(std::ptr::null_mut())))
                 .collect(),
+            _smr: PhantomData,
         }
     }
 
@@ -43,7 +48,7 @@ impl<K: AtomicValue, V: AtomicValue> Chaining<K, V> {
     #[inline]
     fn chain_find(mut p: *mut Node<K, V>, key: &K) -> Option<V> {
         while !p.is_null() {
-            // SAFETY: epoch-pinned by caller.
+            // SAFETY: region-pinned by caller.
             let n = unsafe { &*p };
             if n.key == *key {
                 return Some(n.value);
@@ -54,15 +59,15 @@ impl<K: AtomicValue, V: AtomicValue> Chaining<K, V> {
     }
 }
 
-impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for Chaining<K, V> {
+impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chaining<K, V, S> {
     fn find(&self, key: K) -> Option<V> {
-        let _g = epoch::pin();
+        let _g = S::pin();
         Self::chain_find(self.bucket(&key).load(Ordering::SeqCst), &key)
     }
 
     fn insert(&self, key: K, value: V) -> bool {
         loop {
-            let _g = epoch::pin();
+            let _g = S::pin();
             let bucket = self.bucket(&key);
             let head = bucket.load(Ordering::SeqCst);
             if Self::chain_find(head, &key).is_some() {
@@ -86,7 +91,7 @@ impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for Chaining<K, V> {
 
     fn remove(&self, key: K) -> bool {
         loop {
-            let _g = epoch::pin();
+            let _g = S::pin();
             let bucket = self.bucket(&key);
             let head = bucket.load(Ordering::SeqCst);
             // Find the victim, collecting the prefix to path-copy.
@@ -95,7 +100,7 @@ impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for Chaining<K, V> {
             let mut suffix: *mut Node<K, V> = std::ptr::null_mut();
             let mut found = false;
             while !p.is_null() {
-                // SAFETY: epoch-pinned.
+                // SAFETY: region-pinned.
                 let n = unsafe { &*p };
                 if n.key == key {
                     found = true;
@@ -123,11 +128,11 @@ impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for Chaining<K, V> {
             {
                 // SAFETY: victim + original prefix unlinked by the CAS.
                 unsafe {
-                    epoch::retire_box(victim);
+                    S::retire_box(victim);
                     let mut q = head;
                     while q != victim {
                         let nx = (*q).next;
-                        epoch::retire_box(q);
+                        S::retire_box(q);
                         q = nx;
                     }
                 }
@@ -147,7 +152,7 @@ impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for Chaining<K, V> {
     }
 }
 
-impl<K: AtomicValue, V: AtomicValue> Drop for Chaining<K, V> {
+impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Drop for Chaining<K, V, S> {
     fn drop(&mut self) {
         for b in self.buckets.iter() {
             let mut p = b.load(Ordering::Relaxed);
@@ -157,7 +162,7 @@ impl<K: AtomicValue, V: AtomicValue> Drop for Chaining<K, V> {
                 p = n.next;
             }
         }
-        epoch::flush_thread_bag();
+        S::flush_thread_bag();
     }
 }
 

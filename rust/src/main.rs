@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! repro fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all   regenerate paper exhibits + ablations
-//!       [--panel u|z|n|w|p|ordering] [--oversub] [--secs S] [--n N]
+//!       [--panel u|z|n|w|p|ordering|smr] [--oversub] [--secs S] [--n N]
 //!       [--artifact] [--reports DIR]
 //! repro kv [--workers W] [--secs S] [--n N] [--u PCT] [--z Z] [--artifact]
 //! repro validate [--count C]        cross-check AOT artifact vs Rust generator
@@ -91,7 +91,7 @@ USAGE:
 
 OPTIONS:
   --panel PANEL       figure panel (fig2: u|z|n|w|p|fu; fig3: u|z|n|wide;
-                      ablate: ordering; default: all panels)
+                      ablate: ordering|smr; default: all panels)
   --oversub           run the 4x-oversubscribed variant of the panel
   --secs S            seconds per measured point      [0.3]
   --n N               elements / key-space size       [65536]

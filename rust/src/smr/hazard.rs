@@ -27,9 +27,11 @@
 //! ## Ordering contract
 //!
 //! Hazard pointers are the textbook case of a required store-load
-//! barrier, and this module owns **both** of the crate's mandatory
-//! `fence(SeqCst)` points (everything else in the synchronization core
-//! is Acquire/Release/Relaxed — see [`crate::util::ordering`]):
+//! barrier, and this module owns the first of the crate's **two pairs**
+//! of mandatory `fence(SeqCst)` points (the second pair — pin→validate
+//! and advance→scan — lives in [`epoch`](super::epoch); everything else
+//! in the synchronization core is Acquire/Release/Relaxed — see
+//! [`crate::util::ordering`]):
 //!
 //! 1. **announce → revalidate** ([`HazardPointer::protect`] /
 //!    [`protect_raw_with`](HazardPointer::protect_raw_with)): the slot
@@ -55,6 +57,7 @@ use std::cell::{Cell, RefCell};
 use std::sync::atomic::{fence, AtomicPtr, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+use super::{Smr, SmrGuard};
 use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::MAX_THREADS;
@@ -89,6 +92,21 @@ unsafe impl Send for Retired {}
 
 static ORPHANS: Mutex<Vec<Retired>> = Mutex::new(Vec::new());
 
+/// The per-thread retire list, self-flushing: TLS destructor order is
+/// unspecified, so relying on the registry exit hook alone could run
+/// after this list is already gone and leak its garbage — instead the
+/// list's own destructor hands everything to the orphan list.
+struct RetireList(RefCell<Vec<Retired>>);
+
+impl Drop for RetireList {
+    fn drop(&mut self) {
+        let items = std::mem::take(&mut *self.0.borrow_mut());
+        if !items.is_empty() {
+            ORPHANS.lock().unwrap().extend(items);
+        }
+    }
+}
+
 /// The per-thread slot cache: base index into [`SLOTS`] plus the in-use
 /// bitmap, resolved through a *single* TLS access per guard acquisition.
 struct SlotCache {
@@ -97,7 +115,7 @@ struct SlotCache {
 }
 
 thread_local! {
-    static RETIRED: RefCell<Vec<Retired>> = const { RefCell::new(Vec::new()) };
+    static RETIRED: RetireList = const { RetireList(RefCell::new(Vec::new())) };
     // One TLS struct for the whole claim path (tid is resolved once, at
     // first use, not per operation).
     static SLOT_CACHE: SlotCache = SlotCache {
@@ -218,6 +236,61 @@ impl Default for HazardPointer {
     }
 }
 
+impl SmrGuard for HazardPointer {
+    #[inline]
+    fn protect_ptr<T>(&self, src: &AtomicPtr<T>) -> *mut T {
+        self.protect(src)
+    }
+
+    #[inline]
+    fn protect_raw<F: Fn() -> usize, G: Fn(usize) -> usize>(&self, load: F, to_node: G) -> usize {
+        self.protect_raw_with(load, to_node)
+    }
+}
+
+/// Hazard pointers as a zero-sized [`Smr`] tag — the pointer-grained
+/// scheme (a guard protects exactly what it announces). The default for
+/// every pointer-protect big-atomic backend.
+pub struct Hazard;
+
+impl Smr for Hazard {
+    type Guard = HazardPointer;
+    const NAME: &'static str = "hazard";
+
+    #[inline]
+    fn pin() -> HazardPointer {
+        HazardPointer::new()
+    }
+
+    unsafe fn retire_box<T>(ptr: *mut T) {
+        unsafe { retire_box(ptr) }
+    }
+
+    fn collect() {
+        scan();
+    }
+
+    fn pending_reclaims() -> usize {
+        pending_reclaims()
+    }
+
+    fn flush_thread_bag() {
+        flush_thread_bag();
+    }
+
+    fn reclaim_protected(buf: &mut Vec<usize>) {
+        protected_snapshot(buf);
+    }
+
+    fn reclaim_stamp() -> u64 {
+        0 // protection is address-based; uninstall times are irrelevant
+    }
+
+    fn reclaim_stamp_expired(_stamp: u64) -> bool {
+        true // ditto: the reclaim_protected scan is the whole answer
+    }
+}
+
 impl Drop for HazardPointer {
     fn drop(&mut self) {
         // Ordering: RELEASE — as in `clear`: protected reads
@@ -243,7 +316,7 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
         drop_fn: dropper::<T>,
     };
     let len = RETIRED.with(|r| {
-        let mut r = r.borrow_mut();
+        let mut r = r.0.borrow_mut();
         r.push(item);
         r.len()
     });
@@ -289,7 +362,7 @@ pub fn scan() {
         *list = kept;
     };
 
-    RETIRED.with(|r| free(&mut r.borrow_mut()));
+    let _ = RETIRED.try_with(|r| free(&mut r.0.borrow_mut()));
     if let Ok(mut orphans) = ORPHANS.try_lock() {
         free(&mut orphans);
     }
@@ -314,16 +387,23 @@ pub fn protected_snapshot(buf: &mut Vec<usize>) {
     }
 }
 
-/// Registry hook: a thread is exiting; park its garbage on the orphan
-/// list and clear its announcement slots.
-pub(crate) fn on_thread_exit(t: usize) {
-    // TLS destructor ordering is unspecified; RETIRED may already be gone.
+/// Hand this thread's retire list to the process-wide orphan list now
+/// (table drops on borrowed threads). Thread *exit* needs no call: the
+/// list's own TLS destructor performs the handoff regardless of
+/// destructor order.
+pub fn flush_thread_bag() {
     let _ = RETIRED.try_with(|r| {
-        let mut r = r.borrow_mut();
+        let mut r = r.0.borrow_mut();
         if !r.is_empty() {
             ORPHANS.lock().unwrap().append(&mut r);
         }
     });
+}
+
+/// Registry hook: a thread is exiting; park its garbage on the orphan
+/// list and clear its announcement slots.
+pub(crate) fn on_thread_exit(t: usize) {
+    flush_thread_bag();
     for j in 0..SLOTS_PER_THREAD {
         // Ordering: RELEASE — the exiting thread's protected reads
         // happen-before any scanner sees its slots empty.
@@ -334,7 +414,7 @@ pub(crate) fn on_thread_exit(t: usize) {
 /// Number of retired-but-not-yet-freed nodes owned by this thread
 /// (plus orphans if the lock is free) — used by the §5.5 memory census.
 pub fn pending_reclaims() -> usize {
-    let local = RETIRED.with(|r| r.borrow().len());
+    let local = RETIRED.try_with(|r| r.0.borrow().len()).unwrap_or(0);
     let orphaned = ORPHANS.try_lock().map(|o| o.len()).unwrap_or(0);
     local + orphaned
 }

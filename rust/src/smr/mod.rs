@@ -1,16 +1,170 @@
-//! Safe memory reclamation (SMR).
+//! Safe memory reclamation (SMR), unified behind the [`Smr`] trait.
 //!
 //! The paper's indirect big-atomic nodes are heap values read through
 //! pointers that concurrent updaters unlink; reclamation must wait until
-//! no reader can still hold the pointer (§2).  Two schemes, matching the
-//! paper's usage:
+//! no reader can still hold the pointer (§2).  Two schemes, both
+//! implementations of one policy-parametric interface:
 //!
-//! * [`hazard`] — hazard pointers [Michael '04], used by `Indirect`,
-//!   `CachedWaitFree` (Alg 1), `CachedWritable` (Alg 3), and for the
-//!   announcement array of Alg 2's custom slab recycler.
-//! * [`epoch`] — epoch-based reclamation, used by the hash tables'
-//!   chain links (§4: "We use epoch-based memory management to protect
-//!   the links that are being read").
+//! * [`Hazard`] — hazard pointers [Michael '04] with cached per-thread
+//!   slots (see [`hazard`]), the default for the pointer-protect
+//!   consumers: `Indirect`, `CachedWaitFree` (Alg 1), `CachedWritable`
+//!   (Alg 3), and the announcement array of Alg 2's slab recycler.
+//! * [`Epoch`] — epoch-based reclamation (see [`epoch`]), the default
+//!   for the hash tables' chain links (§4: "We use epoch-based memory
+//!   management to protect the links that are being read").  Generic
+//!   over [`OrderingPolicy`](crate::util::ordering::OrderingPolicy):
+//!   `Epoch<Fenced>` is the dieted protocol (Acquire/Release/Relaxed
+//!   plus two named `fence(SeqCst)` store-load points),
+//!   `Epoch<SeqCstEverywhere>` restores the seed's blanket `SeqCst`.
+//!
+//! ## The trait split: [`Smr`] vs [`RegionSmr`]
+//!
+//! [`Smr`] is *pointer-grained*: a [`pin`](Smr::pin)ned guard protects
+//! exactly the pointers it [`protect_ptr`](SmrGuard::protect_ptr)s /
+//! [`protect_raw`](SmrGuard::protect_raw)s.  Both schemes implement it,
+//! so every pointer-protect backend is generic over the scheme
+//! (`Indirect<T, S>`, `CachedWaitFree<T, P, S>`, `CachedWritable<T, S>`,
+//! `CachedMemEff<T, P, S>`) and `repro ablate --panel smr` compares
+//! hazard vs epoch per backend in one binary.
+//!
+//! [`RegionSmr`] is the stronger *region-grained* contract: the guard
+//! alone keeps **everything reachable at pin time** (and everything
+//! retired afterwards) alive — what an unbounded chain traversal needs.
+//! Only [`Epoch`] implements it.  This is a theorem, not a shortcut:
+//! hazard pointers protect a constant number of announced addresses, so
+//! a traversal of an unbounded chain cannot be protected by them without
+//! per-node re-validation against the root, and the path-copying chains
+//! here admit an (astronomically rare but real) bitwise-ABA on the
+//! bucket head that defeats such validation.  The type system therefore
+//! rejects `CacheHash<_, _, _, Hazard>` instead of letting it compile
+//! into a use-after-free.  The hash tables stay generic where it is
+//! meaningful: over the epoch *ordering policy* (`Epoch<Fenced>` vs
+//! `Epoch<SeqCstEverywhere>` — the reclamation leg of the §Perf
+//! ordering-diet ablation).
+//!
+//! ## Choosing a scheme for a backend
+//!
+//! ```
+//! use big_atomics::atomics::{BigAtomic, Indirect, Words};
+//! use big_atomics::smr::{Epoch, Hazard, Smr};
+//!
+//! // Default: hazard pointers (the paper's choice for indirect nodes).
+//! let a: Indirect<Words<4>> = Indirect::new(Words([1; 4]));
+//! // Explicit epoch instantiation — same API, reclamation deferred to
+//! // epoch advances instead of per-pointer announcements.
+//! let b: Indirect<Words<4>, Epoch> = Indirect::new(Words([2; 4]));
+//! assert_eq!(a.load(), Words([1; 4]));
+//! assert_eq!(b.load(), Words([2; 4]));
+//! assert_eq!(Hazard::NAME, "hazard");
+//! assert_eq!(<Epoch>::NAME, "epoch");
+//! ```
+//!
+//! ## Recycler hooks
+//!
+//! Algorithm 2's thread-private slab recycler (§3.2) does not free
+//! nodes — it *recycles* them — but its safety question is the same
+//! ("can any reader still be looking at this node?").  The three
+//! `reclaim_*` hooks let `CachedMemEff` ask that question of either
+//! scheme: under [`Hazard`] the answer is an announcement scan
+//! ([`reclaim_protected`](Smr::reclaim_protected)); under [`Epoch`] it
+//! is a temporal check — every uninstall is stamped
+//! ([`reclaim_stamp`](Smr::reclaim_stamp)) and a node may be recycled
+//! once the global epoch has advanced past the stamp by the scheme's
+//! free distance (two reader epochs plus one slack epoch — see
+//! [`epoch`]) per [`reclaim_stamp_expired`](Smr::reclaim_stamp_expired).
 
 pub mod epoch;
 pub mod hazard;
+
+pub use epoch::Epoch;
+pub use hazard::Hazard;
+
+use std::sync::atomic::AtomicPtr;
+
+/// A pinned guard's protection interface.
+///
+/// Under [`Hazard`] each call announces the address in the guard's slot
+/// (re-arming replaces the previous protection); under [`Epoch`] the
+/// pin itself is the protection and these are plain `Acquire` reads.
+pub trait SmrGuard {
+    /// Protect and read `src`: the returned pointer stays valid (not
+    /// freed, address not recycled) until the guard is dropped or
+    /// re-armed by a later `protect_*` call on the same guard.
+    fn protect_ptr<T>(&self, src: &AtomicPtr<T>) -> *mut T;
+
+    /// Tagged-pointer form: `load` reads the raw word, `to_node` strips
+    /// tags to the node address that reclaimers compare against (0 =
+    /// nothing to protect).  Same validity contract as
+    /// [`protect_ptr`](Self::protect_ptr).
+    fn protect_raw<F: Fn() -> usize, G: Fn(usize) -> usize>(&self, load: F, to_node: G) -> usize;
+}
+
+/// A safe-memory-reclamation scheme: RAII pinning, deferred reclamation
+/// of retired allocations, and the recycler hooks Algorithm 2 needs.
+///
+/// Implementors are zero-sized tags ([`Hazard`], [`Epoch<P>`]); all
+/// state is process-wide inside the scheme's module.
+pub trait Smr: Send + Sync + 'static {
+    /// The RAII guard returned by [`pin`](Self::pin).
+    type Guard: SmrGuard;
+
+    /// Scheme name for reports (`ablation_smr` rows).
+    const NAME: &'static str;
+
+    /// Enter a protected section.  Pointer validity is per
+    /// [`SmrGuard`]'s contract — see [`RegionSmr`] for the stronger
+    /// region guarantee.
+    fn pin() -> Self::Guard;
+
+    /// Defer-destroy a `Box<T>` allocation.
+    ///
+    /// # Safety
+    /// `ptr` must be a unique, unlinked `Box<T>` allocation; no new
+    /// references may be created after retirement (only readers that
+    /// protected it before the unlink may still dereference it).
+    unsafe fn retire_box<T>(ptr: *mut T);
+
+    /// Attempt to reclaim retired allocations now (hazard: scan; epoch:
+    /// advance + free sufficiently old bags).
+    fn collect();
+
+    /// Retired-but-not-yet-freed allocations visible to this thread
+    /// (plus orphans) — the §5.5 memory census.
+    fn pending_reclaims() -> usize;
+
+    /// Hand this thread's retired list to the process-wide orphan list
+    /// (thread exit, or table drop on a borrowed thread).
+    fn flush_thread_bag();
+
+    /// Recycler phase-2 hook (§3.2): snapshot the set of protected node
+    /// addresses into `buf`.  Hazard: the announcement array (behind the
+    /// mandatory retire→scan fence).  Epoch: empty — protection is
+    /// temporal — but the call tries one epoch advance so
+    /// [`reclaim_stamp_expired`](Self::reclaim_stamp_expired) can make
+    /// progress.
+    fn reclaim_protected(buf: &mut Vec<usize>);
+
+    /// Stamp recorded when a slab node is uninstalled (epoch: the global
+    /// epoch; hazard: unused, 0).
+    fn reclaim_stamp() -> u64;
+
+    /// Is a node uninstalled at `stamp` temporally safe to recycle?
+    /// Hazard: always (safety is the address scan).  Epoch: only once
+    /// the global epoch has advanced the scheme's full free distance
+    /// past the stamp (two reader epochs plus one stamp-slack epoch —
+    /// see `epoch::FREE_DISTANCE`).
+    fn reclaim_stamp_expired(stamp: u64) -> bool;
+}
+
+/// Region-grained SMR: the guard alone protects every allocation that
+/// was reachable when [`pin`](Smr::pin) was called, for the guard's
+/// whole lifetime — unbounded traversals need no per-pointer protection.
+///
+/// # Safety
+/// Implementors must guarantee that no allocation reachable at pin time
+/// (nor anything retired after it) is freed while any guard pinned at or
+/// before that point is live.  Hazard pointers **cannot** satisfy this
+/// (they protect a constant number of addresses), which is why the hash
+/// tables bound their scheme parameter by this trait — see the module
+/// docs.
+pub unsafe trait RegionSmr: Smr {}

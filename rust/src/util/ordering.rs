@@ -9,10 +9,12 @@
 //!
 //! * [`Fenced`] — the default policy: Acquire/Release on version words
 //!   and node flags, Relaxed where the version protocol re-validates,
-//!   and explicit `fence(SeqCst)` **only** at the two store-load points
-//!   that need it (hazard announce→revalidate, and the retire-side scan
-//!   — see `smr::hazard`).  Every demoted site in the crate carries an
-//!   `// Ordering:` comment naming the happens-before edge it preserves.
+//!   and explicit `fence(SeqCst)` **only** at the four store-load points
+//!   that need it (hazard announce→revalidate and the retire-side scan
+//!   — see `smr::hazard`; epoch pin→validate-global and the
+//!   advance-side announcement scan — see `smr::epoch`).  Every demoted
+//!   site in the crate carries an `// Ordering:` comment naming the
+//!   happens-before edge it preserves.
 //! * [`SeqCstEverywhere`] — the audit policy: every constant collapses
 //!   back to `SeqCst` (the seed's behavior), so the full test suite can
 //!   run against blanket sequential consistency and any diet bug shows
@@ -22,11 +24,13 @@
 //! `seqcst_audit` cargo feature (`cargo test --features seqcst_audit`
 //! restores the seed's blanket `SeqCst`).  Backends that matter for the
 //! ordering ablation ([`crate::atomics::SeqLock`],
-//! [`crate::atomics::CachedWaitFree`]) additionally take the policy as a
-//! defaulted type parameter, so `repro ablate --panel ordering` can
-//! compare both policies inside one (fenced) binary.
+//! [`crate::atomics::CachedWaitFree`], [`crate::atomics::CachedMemEff`])
+//! and the epoch reclamation scheme ([`crate::smr::Epoch`]) additionally
+//! take the policy as a defaulted type parameter, so `repro ablate
+//! --panel ordering` / `--panel smr` can compare both policies inside
+//! one (fenced) binary.
 //!
-//! The two `fence(SeqCst)` points are deliberately **not** part of the
+//! The four `fence(SeqCst)` points are deliberately **not** part of the
 //! policy: under the diet the announce *store* is `Relaxed`, and only
 //! the fence makes it totally ordered against the reclaimer's scan —
 //! remove it and the demoted protocol is unsound. (Under the audit
@@ -65,7 +69,7 @@ pub trait OrderingPolicy: Copy + Clone + Send + Sync + Default + 'static {
 }
 
 /// The ordering diet (default): weakest sound ordering per site, plus
-/// the two mandatory `SeqCst` fences in `smr::hazard`.
+/// the four mandatory `SeqCst` fences in `smr` (hazard + epoch pairs).
 #[derive(Copy, Clone, Default, Debug)]
 pub struct Fenced;
 

@@ -56,7 +56,11 @@ impl Lease {
 
 impl Drop for Lease {
     fn drop(&mut self) {
+        // Both SMR schemes get the exit hook: orphan-bag handoff plus
+        // announcement-slot clearing, so a churned thread can neither
+        // leak garbage nor wedge reclamation for the survivors.
         crate::smr::hazard::on_thread_exit(self.id);
+        crate::smr::epoch::on_thread_exit(self.id);
         CLAIMED[self.id].store(false, Ordering::Release);
     }
 }

@@ -26,6 +26,7 @@ use big_atomics::atomics::{
     BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
     SimpLock, Words,
 };
+use big_atomics::hash::{CacheHash, ConcurrentMap, Link};
 
 const K: usize = 4;
 type V = Words<K>;
@@ -227,6 +228,107 @@ fn test_linearizable_cached_writable() {
 #[test]
 fn test_linearizable_htm_sim() {
     check_impl::<HtmSim<V>>("HTM(sim)");
+}
+
+// ---------------------------------------------------------------------
+// Wide-table sweeps (ROADMAP): linearizability-style checks at the
+// CacheHash<_, Words<4>, Words<4>> instantiation.
+// ---------------------------------------------------------------------
+
+type WK = Words<4>;
+
+fn wkey(i: u64) -> WK {
+    Words([i, i ^ 0x5151, i.rotate_left(11), !i])
+}
+
+/// The register driving a wide bucket is a 9-word `Link` value; run the
+/// unique-value chain check directly on it: every successful CAS must
+/// consume a distinct prior value (no forks), and the final value must
+/// account for exactly the total number of wins.
+#[test]
+fn test_wide_link_register_unique_cas_chain() {
+    type L = Link<WK, WK>;
+    let a: Arc<CachedMemEff<L>> = Arc::new(CachedMemEff::new(L::default()));
+    let threads = 4u64;
+    let per = 1_500u64;
+    let consumed: Arc<std::sync::Mutex<HashMap<([u64; 4], [u64; 4], u64), ()>>> =
+        Arc::new(std::sync::Mutex::new(HashMap::new()));
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let a = Arc::clone(&a);
+            let consumed = Arc::clone(&consumed);
+            std::thread::spawn(move || {
+                let mut cur = a.load();
+                let mut wins = 0u64;
+                let mut seq = 0u64;
+                while wins < per {
+                    seq += 1;
+                    // Globally unique desired value: thread in key word 0,
+                    // seq in value word 0, occupied-flagged next field.
+                    let desired = L {
+                        key: wkey((t + 1) << 32 | seq),
+                        value: wkey(seq),
+                        next: 1,
+                    };
+                    match a.compare_exchange(cur, desired) {
+                        Ok(prev) => {
+                            // Each consumed value must be consumed once.
+                            let k = (prev.key.0, prev.value.0, prev.next);
+                            let dup = consumed.lock().unwrap().insert(k, ()).is_some();
+                            assert!(!dup, "two CASes consumed {k:?}");
+                            wins += 1;
+                            cur = desired;
+                        }
+                        Err(w) => cur = w,
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(consumed.lock().unwrap().len() as u64, threads * per);
+}
+
+/// Same-key contention on the wide table: the net of successful inserts
+/// and removes must equal final presence, and every observed value must
+/// be the one its inserter wrote (values derive from keys).
+#[test]
+fn test_wide_map_same_key_accounting() {
+    let t: Arc<CacheHash<CachedMemEff<Link<WK, WK>>, WK, WK>> = Arc::new(CacheHash::new(8));
+    let key = wkey(42);
+    let val = wkey(4242);
+    let inserts = Arc::new(AtomicU64::new(0));
+    let removes = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..4u64)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            let inserts = Arc::clone(&inserts);
+            let removes = Arc::clone(&removes);
+            std::thread::spawn(move || {
+                for i in 0..2_500u64 {
+                    if (i + tix) % 2 == 0 {
+                        if t.insert(key, val) {
+                            inserts.fetch_add(1, Ordering::Relaxed);
+                        }
+                    } else if t.remove(key) {
+                        removes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if let Some(v) = t.find(key) {
+                        assert_eq!(v, val, "foreign value under the wide key");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let ins = inserts.load(Ordering::SeqCst);
+    let rem = removes.load(Ordering::SeqCst);
+    let present = t.find(key).is_some() as u64;
+    assert_eq!(ins, rem + present, "ins={ins} rem={rem} present={present}");
 }
 
 /// Stores interleaved with CASes: the writable implementations must keep

@@ -14,7 +14,14 @@
 //!   publication/validation lets a stale value surface after a newer one;
 //! * **hazard announce visibility** — the relaxed-store-plus-fence
 //!   announce path must still be visible to `protected_snapshot` across
-//!   threads.
+//!   threads;
+//! * **epoch announce visibility** — the relaxed-store-plus-fence *pin*
+//!   path (the epoch mirror of the hazard announce) must block a
+//!   cross-thread advance, under the fenced and the blanket-`SeqCst`
+//!   policies alike;
+//! * **retire/recycle integrity** — link chains whose nodes are
+//!   retired-then-recycled under the epoch scheme must never surface a
+//!   torn or stale value to a concurrent reader.
 //!
 //! The whole file also runs under `--features seqcst_audit` (CI builds
 //! both), so a fenced-only failure localizes to a demotion.
@@ -26,7 +33,10 @@ use big_atomics::atomics::{
     BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
     SimpLock, Words,
 };
+use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
 use big_atomics::smr::hazard::{protected_snapshot, HazardPointer};
+use big_atomics::smr::{epoch, Epoch, RegionSmr};
+use big_atomics::util::ordering::OrderingPolicy;
 
 /// Readers assert every load is word-uniform while writers run a heavy
 /// store/CAS mix over values of the form [x; 4] — any torn assembly that
@@ -206,6 +216,109 @@ fn protected_snapshot_sees_cross_thread_relaxed_announce() {
     );
     done_tx.send(()).unwrap();
     announcer.join().unwrap();
+}
+
+/// The epoch mirror of the hazard announce-visibility case: a pin made
+/// on another thread (ordered here via channels) must be visible to the
+/// advance scan — i.e. it stalls the global epoch at most one advance
+/// away. A lost relaxed-announce (missing pin fence) would let the
+/// advancer run the epoch arbitrarily far past the pinned reader.
+fn epoch_pin_blocks_cross_thread_advance<P: OrderingPolicy>() {
+    let (pinned_tx, pinned_rx) = std::sync::mpsc::channel::<()>();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+    let pinner = std::thread::spawn(move || {
+        let _g = Epoch::<P>::pin();
+        pinned_tx.send(()).unwrap();
+        done_rx.recv().unwrap();
+    });
+    pinned_rx.recv().unwrap();
+    let e0 = epoch::global_epoch();
+    for _ in 0..64 {
+        Epoch::<P>::try_advance_and_collect();
+    }
+    let now = epoch::global_epoch();
+    assert!(
+        now <= e0 + 1,
+        "advance ignored a cross-thread pin ({}): {e0} -> {now}",
+        P::NAME
+    );
+    done_tx.send(()).unwrap();
+    pinner.join().unwrap();
+}
+
+#[test]
+fn epoch_pin_blocks_cross_thread_advance_fenced_policy() {
+    use big_atomics::util::ordering::Fenced;
+    epoch_pin_blocks_cross_thread_advance::<Fenced>();
+}
+
+#[test]
+fn epoch_pin_blocks_cross_thread_advance_seqcst_audit_policy() {
+    // The seqcst_audit leg of the same case, runnable in any build: the
+    // blanket-SeqCst policy instantiation shares the protocol state.
+    use big_atomics::util::ordering::SeqCstEverywhere;
+    epoch_pin_blocks_cross_thread_advance::<SeqCstEverywhere>();
+}
+
+/// Torn-free reads of retired-then-recycled links: a contended CacheHash
+/// bucket churns chain nodes (retire on every remove, reallocation on
+/// every insert — maximum address reuse pressure on the epoch scheme)
+/// while readers validate the key→value invariant. A reclamation
+/// ordering bug surfaces as a stale or torn value.
+fn retired_link_read_integrity<S: RegionSmr>() {
+    let t: Arc<CacheHash<CachedMemEff<LinkVal>, u64, u64, S>> = Arc::new(CacheHash::new(2));
+    let stop = Arc::new(AtomicBool::new(false));
+    // Every present key k maps to k * 31 + 7 — readers check or absent.
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let t = Arc::clone(&t);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    for k in 0..32u64 {
+                        if let Some(v) = t.find(k) {
+                            assert_eq!(v, k * 31 + 7, "stale/torn link value for key {k}");
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    let writers: Vec<_> = (0..2)
+        .map(|w| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                for round in 0..400u64 {
+                    for k in (w % 2..32).step_by(2) {
+                        if round % 2 == 0 {
+                            let _ = t.insert(k, k * 31 + 7);
+                        } else {
+                            let _ = t.remove(k);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    for r in readers {
+        r.join().unwrap();
+    }
+}
+
+#[test]
+fn retired_link_reads_untorn_fenced_epoch() {
+    use big_atomics::util::ordering::Fenced;
+    retired_link_read_integrity::<Epoch<Fenced>>();
+}
+
+#[test]
+fn retired_link_reads_untorn_seqcst_epoch() {
+    use big_atomics::util::ordering::SeqCstEverywhere;
+    retired_link_read_integrity::<Epoch<SeqCstEverywhere>>();
 }
 
 #[test]

@@ -23,6 +23,7 @@ use big_atomics::atomics::{
     BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
     SimpLock, Words,
 };
+use big_atomics::hash::{CacheHash, ConcurrentMap, Link};
 use big_atomics::util::props::forall;
 
 const MAGIC: u64 = 0xD1CE_BA5E_0DD5_EED5;
@@ -179,6 +180,109 @@ fn test_swap_chain_all_backends() {
     swap_chain::<CachedMemEff<Words<2>>>("Cached-MemEff");
     swap_chain::<CachedWritable<Words<2>>>("Cached-Writable");
     swap_chain::<HtmSim<Words<2>>>("HTM(sim)");
+}
+
+// ---------------------------------------------------------------------
+// Wide-table sweeps (ROADMAP): CacheHash<_, Words<4>, Words<4>> covered
+// by correctness tests, not just the fig3_wide bench panel.
+// ---------------------------------------------------------------------
+
+/// Derive the only legal value for a wide key: each word mixes the key's
+/// corresponding word, so any torn/stale read fails loudly.
+fn wide_value_for(key: Words<4>) -> Words<4> {
+    Words([
+        key.0[0].wrapping_mul(3).wrapping_add(1),
+        key.0[1] ^ MAGIC,
+        key.0[2].rotate_left(9),
+        !key.0[3],
+    ])
+}
+
+fn wide_key(i: u64) -> Words<4> {
+    Words([i, i ^ 0xA5A5, i.rotate_left(23), !i])
+}
+
+fn wide_map_checksummed_values<A>()
+where
+    A: BigAtomic<Link<Words<4>, Words<4>>> + 'static,
+{
+    // Tiny table: every bucket develops 9-word-link chains, so the
+    // inline fast path, the chain walk, and the path-copying remove all
+    // run at the wide instantiation.
+    let t: Arc<CacheHash<A, Words<4>, Words<4>>> = Arc::new(CacheHash::new(4));
+    let threads = 4u64;
+    let keys = 48u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|w| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                for round in 0..200u64 {
+                    for i in (w % 2..keys).step_by(2) {
+                        let k = wide_key(i);
+                        if round % 2 == 0 {
+                            let _ = t.insert(k, wide_value_for(k));
+                        } else {
+                            let _ = t.remove(k);
+                        }
+                        // Every observation must satisfy the checksum.
+                        if let Some(v) = t.find(k) {
+                            assert_eq!(v, wide_value_for(k), "torn wide value for {:?}", k.0);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Deterministic tail: fill and verify every key.
+    for i in 0..keys {
+        let k = wide_key(i);
+        let _ = t.insert(k, wide_value_for(k));
+        assert_eq!(t.find(k), Some(wide_value_for(k)));
+    }
+}
+
+#[test]
+fn test_wide_map_checksummed_values_memeff() {
+    wide_map_checksummed_values::<CachedMemEff<Link<Words<4>, Words<4>>>>();
+}
+
+#[test]
+fn test_wide_map_checksummed_values_seqlock() {
+    wide_map_checksummed_values::<SeqLock<Link<Words<4>, Words<4>>>>();
+}
+
+#[test]
+fn test_wide_map_duplicate_inserts_one_winner() {
+    // The §5.3 wide instantiation under duplicate-insert races: exactly
+    // one winner per key (the witness-fed duplicate check at 9 words).
+    let t: Arc<CacheHash<CachedMemEff<Link<Words<4>, Words<4>>>, Words<4>, Words<4>>> =
+        Arc::new(CacheHash::new(2));
+    let wins = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let t = Arc::clone(&t);
+            let wins = Arc::clone(&wins);
+            std::thread::spawn(move || {
+                for i in 0..300u64 {
+                    let k = wide_key(i);
+                    if t.insert(k, wide_value_for(k)) {
+                        wins.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(wins.load(std::sync::atomic::Ordering::SeqCst), 300);
+    for i in 0..300u64 {
+        let k = wide_key(i);
+        assert_eq!(t.find(k), Some(wide_value_for(k)), "key {i}");
+    }
 }
 
 #[test]
