@@ -40,6 +40,7 @@ fn main() -> big_atomics::util::error::Result<()> {
             update_pct: 30,
             theta: 0.9,
             seed: 0x4B56,
+            initial_capacity: 0,
         };
         println!(
             "\nkv_server: n={} {} batch={} u={}% z={} for {:?}",

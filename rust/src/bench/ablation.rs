@@ -19,8 +19,13 @@
 //!    epoch ordering-policy pair (`Epoch<Fenced>` vs
 //!    `Epoch<SeqCstEverywhere>`) on the hash tables — the reclamation
 //!    leg of the ordering diet, measured not claimed.
+//! 6. **Growth under load** (`--panel resize`): tables constructed
+//!    deliberately undersized (64 buckets for a `cfg.n`-key workload)
+//!    vs pre-sized, driven update-heavy from empty — the cost of online
+//!    resizing is a number, and the growth itself is reported (final
+//!    bucket count + live-entry estimate per row).
 //!
-//! Run with `repro ablate [--panel ordering|smr]`.
+//! Run with `repro ablate [--panel ordering|smr|resize]`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
@@ -265,6 +270,51 @@ pub fn run_smr_table_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
     rep
 }
 
+/// Ablation 6 (`repro ablate --panel resize`): the growth-under-load
+/// panel. Each row drives the update-heavy workload (u=100 over the
+/// full `cfg.n` key space) against an *empty* table, once constructed
+/// undersized at 64 buckets (so the timed region absorbs every doubling
+/// up to the steady-state size) and once pre-sized for `cfg.n` — the
+/// throughput ratio is the online-resize toll, and the reported final
+/// bucket count proves the growth actually ran.
+pub fn run_resize_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
+    let threads = hw_threads().max(2);
+    let spec = WorkloadSpec {
+        n: cfg.n,
+        theta: 0.0,
+        update_pct: 100,
+        seed: 0x5253, // "RS"
+    };
+    let mut rep = Report::new(
+        "ablation_resize",
+        &["map", "initial_buckets", "final_buckets", "entries_est", "mops"],
+    );
+    let mut point = |label: &str, map: Box<dyn ConcurrentMap>| {
+        let initial = map.capacity();
+        let target = MapTarget::new_unfilled(map);
+        let r = run_throughput(&target, &spec, threads, cfg.dur(), source);
+        let m = target.map();
+        rep.row(vec![
+            label.into(),
+            initial.to_string(),
+            m.capacity().to_string(),
+            m.occupancy().to_string(),
+            format!("{:.3}", r.mops()),
+        ]);
+    };
+    point(
+        "CacheHash(MemEff)/undersized",
+        Box::new(CacheHash::<CachedMemEff<LinkVal>>::new(64)),
+    );
+    point(
+        "CacheHash(MemEff)/presized",
+        Box::new(CacheHash::<CachedMemEff<LinkVal>>::new(cfg.n)),
+    );
+    point("Chaining(no-inline)/undersized", Box::new(Chaining::new(64)));
+    point("Chaining(no-inline)/presized", Box::new(Chaining::new(cfg.n)));
+    rep
+}
+
 /// Run all ablations; returns the report (saved by the coordinator).
 pub fn run_ablations(cfg: &FigureCfg, source: &OpSource) -> Report {
     let mut rep = Report::new(
@@ -379,6 +429,33 @@ mod tests {
         assert_eq!(rep.rows().len(), 4);
         for row in rep.rows() {
             assert!(row[2].parse::<f64>().unwrap() > 0.0, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn test_resize_ablation_shape_and_growth() {
+        let cfg = FigureCfg {
+            secs_per_point: 0.05,
+            n: 4096,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_resize_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_resize_ablation(&cfg, &OpSource::Rust);
+        // 2 maps x {undersized, presized}.
+        assert_eq!(rep.rows().len(), 4);
+        for row in rep.rows() {
+            let initial: usize = row[1].parse().unwrap();
+            let fin: usize = row[2].parse().unwrap();
+            let _entries: usize = row[3].parse().unwrap();
+            assert!(row[4].parse::<f64>().unwrap() > 0.0, "{row:?}");
+            assert!(fin >= initial, "table shrank? {row:?}");
+            if row[0].ends_with("undersized") {
+                assert_eq!(initial, 64, "{row:?}");
+                assert!(fin > 64, "undersized table never grew: {row:?}");
+            }
         }
     }
 

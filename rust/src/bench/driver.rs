@@ -19,6 +19,7 @@ use crate::hash::{
     CacheHash, Chaining, ConcurrentMap, GlobalLockMap, Link, LinkVal, ShardedLockMap,
 };
 use crate::runtime::workload_gen::WorkloadEngine;
+use crate::util::error::Result;
 use crate::util::rng::mix64;
 
 use super::workload::{generate_rust, GenOp, Op, WorkloadSpec};
@@ -201,10 +202,15 @@ impl AtomicImpl {
     }
 }
 
+/// Element sizes (words) the monomorphized targets support — the
+/// paper's w sweep points (3 = the hash-link size used by the
+/// cross-section figures).
+pub const SUPPORTED_K: &[usize] = &[1, 2, 3, 4, 8, 16];
+
 /// Build an array target for (implementation, element words k, size n).
-/// k ∈ {1, 2, 3, 4, 8, 16} — the paper's w sweep points (3 = the
-/// hash-link size used by the cross-section figures).
-pub fn make_array_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn BenchTarget> {
+/// `k` outside [`SUPPORTED_K`] is an `Err` (the element size selects a
+/// monomorphized instantiation; it cannot be constructed at runtime).
+pub fn make_array_target(imp: AtomicImpl, k: usize, n: usize) -> Result<Box<dyn BenchTarget>> {
     macro_rules! for_k {
         ($kk:literal) => {{
             match imp {
@@ -227,20 +233,25 @@ pub fn make_array_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn BenchTa
             }
         }};
     }
-    match k {
+    Ok(match k {
         1 => for_k!(1),
         2 => for_k!(2),
         3 => for_k!(3),
         4 => for_k!(4),
         8 => for_k!(8),
         16 => for_k!(16),
-        other => panic!("unsupported element size k={other} (use 1,2,3,4,8,16)"),
-    }
+        other => crate::bail!("unsupported element size k={other} (use {SUPPORTED_K:?})"),
+    })
 }
 
 /// Build a `fetch_update`-mix target for (implementation, element words
 /// k, size n) — the read-modify-write companion of [`make_array_target`].
-pub fn make_fetch_update_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn BenchTarget> {
+/// Same [`SUPPORTED_K`] contract.
+pub fn make_fetch_update_target(
+    imp: AtomicImpl,
+    k: usize,
+    n: usize,
+) -> Result<Box<dyn BenchTarget>> {
     macro_rules! for_k {
         ($kk:literal) => {{
             match imp {
@@ -272,15 +283,15 @@ pub fn make_fetch_update_target(imp: AtomicImpl, k: usize, n: usize) -> Box<dyn 
             }
         }};
     }
-    match k {
+    Ok(match k {
         1 => for_k!(1),
         2 => for_k!(2),
         3 => for_k!(3),
         4 => for_k!(4),
         8 => for_k!(8),
         16 => for_k!(16),
-        other => panic!("unsupported element size k={other} (use 1,2,3,4,8,16)"),
-    }
+        other => crate::bail!("unsupported element size k={other} (use {SUPPORTED_K:?})"),
+    })
 }
 
 // ---------------------------------------------------------------------
@@ -300,6 +311,18 @@ impl MapTarget {
             map.insert(key, rank as u64);
         }
         Self { map }
+    }
+
+    /// No prefill — the growth-under-load panel starts deliberately
+    /// undersized *and* empty, so the timed region includes filling the
+    /// table and every online resize that filling triggers.
+    pub fn new_unfilled(map: Box<dyn ConcurrentMap>) -> Self {
+        Self { map }
+    }
+
+    /// The map under test (capacity/occupancy probes after a run).
+    pub fn map(&self) -> &dyn ConcurrentMap {
+        &*self.map
     }
 }
 
@@ -550,6 +573,7 @@ pub fn run_throughput(
 }
 
 /// Convenience wrapper: array benchmark for one configuration point.
+/// `Err` only for `k` outside [`SUPPORTED_K`].
 pub fn run_atomics(
     imp: AtomicImpl,
     k: usize,
@@ -557,9 +581,9 @@ pub fn run_atomics(
     threads: usize,
     duration: Duration,
     source: &OpSource,
-) -> RunResult {
-    let target = make_array_target(imp, k, spec.n);
-    run_throughput(&*target, spec, threads, duration, source)
+) -> Result<RunResult> {
+    let target = make_array_target(imp, k, spec.n)?;
+    Ok(run_throughput(&*target, spec, threads, duration, source))
 }
 
 /// Convenience wrapper: hash-table benchmark for one configuration point.
@@ -575,6 +599,7 @@ pub fn run_map(
 }
 
 /// Convenience wrapper: the `fetch_update` op-mix benchmark.
+/// `Err` only for `k` outside [`SUPPORTED_K`].
 pub fn run_fetch_update(
     imp: AtomicImpl,
     k: usize,
@@ -582,9 +607,9 @@ pub fn run_fetch_update(
     threads: usize,
     duration: Duration,
     source: &OpSource,
-) -> RunResult {
-    let target = make_fetch_update_target(imp, k, spec.n);
-    run_throughput(&*target, spec, threads, duration, source)
+) -> Result<RunResult> {
+    let target = make_fetch_update_target(imp, k, spec.n)?;
+    Ok(run_throughput(&*target, spec, threads, duration, source))
 }
 
 /// Convenience wrapper: the §5.3 wide (4-word key/value) hash-table
@@ -622,8 +647,20 @@ mod tests {
     }
 
     #[test]
+    fn test_unsupported_k_is_err_not_panic() {
+        // Regression: the seed panicked on out-of-set element sizes.
+        for k in [0usize, 5, 7, 32] {
+            assert!(make_array_target(AtomicImpl::SeqLock, k, 8).is_err(), "k={k}");
+            assert!(make_fetch_update_target(AtomicImpl::SeqLock, k, 8).is_err(), "k={k}");
+        }
+        for &k in SUPPORTED_K {
+            assert!(make_array_target(AtomicImpl::SeqLock, k, 8).is_ok(), "k={k}");
+        }
+    }
+
+    #[test]
     fn test_array_target_exec_all_ops() {
-        let t = make_array_target(AtomicImpl::CachedMemEff, 4, 64);
+        let t = make_array_target(AtomicImpl::CachedMemEff, 4, 64).unwrap();
         for (i, opk) in [Op::Find, Op::Insert, Op::Delete].iter().cycle().take(300).enumerate() {
             t.exec(&GenOp {
                 op: *opk,
@@ -643,7 +680,8 @@ mod tests {
             2,
             Duration::from_millis(50),
             &OpSource::Rust,
-        );
+        )
+        .unwrap();
         assert!(r.total_ops > 1000, "only {} ops", r.total_ops);
         assert!(r.mops() > 0.0);
     }
@@ -671,7 +709,8 @@ mod tests {
     fn test_all_array_impls_and_sizes_smoke() {
         let spec = tiny_spec();
         for imp in AtomicImpl::ALL {
-            let r = run_atomics(imp, 1, &spec, 1, Duration::from_millis(10), &OpSource::Rust);
+            let r = run_atomics(imp, 1, &spec, 1, Duration::from_millis(10), &OpSource::Rust)
+                .unwrap();
             assert!(r.total_ops > 0, "{}", imp.name());
         }
         for k in [2usize, 8, 16] {
@@ -682,7 +721,8 @@ mod tests {
                 1,
                 Duration::from_millis(10),
                 &OpSource::Rust,
-            );
+            )
+            .unwrap();
             assert!(r.total_ops > 0, "k={k}");
         }
     }
@@ -715,7 +755,8 @@ mod tests {
     fn test_run_fetch_update_all_impls_smoke() {
         let spec = tiny_spec();
         for imp in AtomicImpl::ALL {
-            let r = run_fetch_update(imp, 4, &spec, 2, Duration::from_millis(15), &OpSource::Rust);
+            let r = run_fetch_update(imp, 4, &spec, 2, Duration::from_millis(15), &OpSource::Rust)
+                .unwrap();
             assert!(r.total_ops > 100, "{}: {} ops", imp.name(), r.total_ops);
             assert!(r.label.contains("fetch_update"));
         }

@@ -124,8 +124,10 @@ pub fn fig1(cfg: &FigureCfg, source: &OpSource) -> Report {
         (AtomicImpl::CachedMemEff, MapImpl::CacheHashMemEff),
     ];
     for (ai, mi) in pairs {
-        let a1 = run_atomics(ai, 3, &spec, p, cfg.dur(), source);
-        let a4 = run_atomics(ai, 3, &spec, p_over, cfg.dur(), source);
+        let a1 = run_atomics(ai, 3, &spec, p, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
+        let a4 = run_atomics(ai, 3, &spec, p_over, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
         let h1 = run_map(mi, &spec, p, cfg.dur(), source);
         let h4 = run_map(mi, &spec, p_over, cfg.dur(), source);
         rep.row(vec![
@@ -157,7 +159,8 @@ pub fn fig2_u(cfg: &FigureCfg, source: &OpSource, oversub: bool) -> Report {
             seed: 0xF2,
         };
         for imp in AtomicImpl::CORE {
-            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![u.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -177,7 +180,8 @@ pub fn fig2_z(cfg: &FigureCfg, source: &OpSource, oversub: bool) -> Report {
             seed: 0xF3,
         };
         for imp in AtomicImpl::CORE {
-            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![format!("{z}"), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -197,7 +201,8 @@ pub fn fig2_n(cfg: &FigureCfg, source: &OpSource, oversub: bool) -> Report {
             seed: 0xF4,
         };
         for imp in AtomicImpl::CORE {
-            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![n.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -215,7 +220,8 @@ pub fn fig2_w(cfg: &FigureCfg, source: &OpSource) -> Report {
             seed: 0xF5,
         };
         for imp in AtomicImpl::CORE {
-            let r = run_atomics(imp, k, &spec, p, cfg.dur(), source);
+            let r = run_atomics(imp, k, &spec, p, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![k.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -241,7 +247,8 @@ pub fn fig2_p(cfg: &FigureCfg, source: &OpSource) -> Report {
             seed: 0xF6,
         };
         for imp in AtomicImpl::CORE {
-            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![threads.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -358,7 +365,8 @@ pub fn fig2_fetch_update(cfg: &FigureCfg, source: &OpSource) -> Report {
             seed: 0x2F,
         };
         for imp in AtomicImpl::CORE {
-            let r = run_fetch_update(imp, 3, &spec, p, cfg.dur(), source);
+            let r = run_fetch_update(imp, 3, &spec, p, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![u.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -429,7 +437,8 @@ pub fn fig5(cfg: &FigureCfg, source: &OpSource) -> Vec<Report> {
             seed: 0xFC,
         };
         for imp in impls {
-            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, threads, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![threads.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -444,7 +453,8 @@ pub fn fig5(cfg: &FigureCfg, source: &OpSource) -> Vec<Report> {
             seed: 0xFD,
         };
         for imp in impls {
-            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![format!("{z}"), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -459,7 +469,8 @@ pub fn fig5(cfg: &FigureCfg, source: &OpSource) -> Vec<Report> {
             seed: 0xFE,
         };
         for imp in impls {
-            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![u.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }
@@ -474,7 +485,8 @@ pub fn fig5(cfg: &FigureCfg, source: &OpSource) -> Vec<Report> {
             seed: 0xFF,
         };
         for imp in impls {
-            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source);
+            let r = run_atomics(imp, 3, &spec, p, cfg.dur(), source)
+                .expect("k from SUPPORTED_K");
             rep.row(vec![n.to_string(), imp.name().into(), fmt_mops(&r)]);
         }
     }

@@ -15,7 +15,8 @@ use crate::atomics::{
     AtomicArray, BigAtomic, CachedMemEff, CachedWaitFree, Indirect, MemEffDomain, SeqLock,
     SimpLock, Words,
 };
-use crate::smr::hazard;
+use crate::hash::{CacheHash, ConcurrentMap, LinkVal};
+use crate::smr::{epoch, hazard};
 
 const K: usize = 4; // census element size (words)
 
@@ -33,52 +34,50 @@ fn census_one<A: BigAtomic<Words<K>>>(n: usize) -> (usize, usize) {
 
 /// Produce the §5.5 table (also a regression test for the space bounds:
 /// `rust/tests/properties.rs` asserts the measured/formula ratios).
+///
+/// Every row reports the retired-but-unfreed census of **both** SMR
+/// schemes: the seed printed only `hazard::pending_reclaims()`, which
+/// silently under-counted any epoch-backed configuration (the hash
+/// tables' chain links and drained resize tables) as zero.
 pub fn memory_census(_cfg: &FigureCfg) -> Report {
     let n = 1 << 14;
     let mut rep = Report::new(
         "memory_census",
-        &["impl", "n", "k", "inline_bytes", "indirect_bytes", "pool_or_retired"],
+        &[
+            "impl",
+            "n",
+            "k",
+            "inline_bytes",
+            "indirect_bytes",
+            "pool_bytes",
+            "retired_hazard",
+            "retired_epoch",
+        ],
     );
+    let mut row = |imp: &str, k: usize, inline: usize, indirect: usize, pool: usize| {
+        rep.row(vec![
+            imp.into(),
+            n.to_string(),
+            k.to_string(),
+            inline.to_string(),
+            indirect.to_string(),
+            pool.to_string(),
+            hazard::pending_reclaims().to_string(),
+            epoch::pending_reclaims().to_string(),
+        ]);
+    };
 
     let (inline, ind) = census_one::<SeqLock<Words<K>>>(n);
-    rep.row(vec![
-        "SeqLock".into(),
-        n.to_string(),
-        K.to_string(),
-        inline.to_string(),
-        ind.to_string(),
-        "0".into(),
-    ]);
+    row("SeqLock", K, inline, ind, 0);
 
     let (inline, ind) = census_one::<SimpLock<Words<K>>>(n);
-    rep.row(vec![
-        "SimpLock".into(),
-        n.to_string(),
-        K.to_string(),
-        inline.to_string(),
-        ind.to_string(),
-        "0".into(),
-    ]);
+    row("SimpLock", K, inline, ind, 0);
 
     let (inline, ind) = census_one::<Indirect<Words<K>>>(n);
-    rep.row(vec![
-        "Indirect".into(),
-        n.to_string(),
-        K.to_string(),
-        inline.to_string(),
-        ind.to_string(),
-        hazard::pending_reclaims().to_string(),
-    ]);
+    row("Indirect", K, inline, ind, 0);
 
     let (inline, ind) = census_one::<CachedWaitFree<Words<K>>>(n);
-    rep.row(vec![
-        "Cached-WaitFree".into(),
-        n.to_string(),
-        K.to_string(),
-        inline.to_string(),
-        ind.to_string(),
-        hazard::pending_reclaims().to_string(),
-    ]);
+    row("Cached-WaitFree", K, inline, ind, 0);
 
     // MemEff: use a private domain so the pool is attributable.
     let domain: Arc<MemEffDomain<Words<K>>> = Arc::new(MemEffDomain::new());
@@ -94,14 +93,21 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
     // Node overhead: four flag bytes padded to words + the uninstall
     // stamp (see atomics::cached_memeff::Node).
     let pool_bytes = pool_nodes * (std::mem::size_of::<Words<K>>() + 40);
-    rep.row(vec![
-        "Cached-MemEff".into(),
-        n.to_string(),
-        K.to_string(),
-        inline.to_string(),
-        "0".into(),
-        pool_bytes.to_string(),
-    ]);
+    row("Cached-MemEff", K, inline, 0, pool_bytes);
+
+    // The epoch-backed configuration (§4: chain links protected by
+    // epochs): insert n keys, delete half — the path-copied prefixes and
+    // promoted heads become epoch garbage that the hazard column cannot
+    // see. LinkVal is 3 words (the k column).
+    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(n);
+    for i in 0..n as u64 {
+        table.insert(crate::util::rng::mix64(i), i);
+    }
+    for i in 0..n as u64 / 2 {
+        table.remove(crate::util::rng::mix64(i));
+    }
+    let inline = table.capacity() * std::mem::size_of::<CachedMemEff<LinkVal>>();
+    row("CacheHash(MemEff)", 3, inline, 0, 0);
 
     rep
 }
@@ -114,7 +120,13 @@ mod tests {
     fn test_census_runs_and_memeff_pool_tiny() {
         let rep = memory_census(&FigureCfg::default());
         let rows = rep.rows();
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 6);
+        // Both reclamation columns must be present and parseable on
+        // every row (the epoch column was silently missing pre-fix).
+        for r in rows {
+            let _hazard: usize = r[6].parse().unwrap();
+            let _epoch: usize = r[7].parse().unwrap();
+        }
         // Cached-MemEff's pool bytes must be tiny vs inline (§3.2's
         // n-independence).
         let memeff = rows.iter().find(|r| r[0] == "Cached-MemEff").unwrap();
@@ -126,5 +138,12 @@ mod tests {
         let wf = rows.iter().find(|r| r[0] == "Cached-WaitFree").unwrap();
         let indirect: usize = wf[4].parse().unwrap();
         assert!(indirect >= (1 << 14) * K * 8);
+        // The epoch-backed hash-table row must actually surface epoch
+        // garbage: the deletions just retired thousands of chain links
+        // on this thread, and at least the newest (< FREE_DISTANCE old)
+        // cannot have been freed yet.
+        let ch = rows.iter().find(|r| r[0] == "CacheHash(MemEff)").unwrap();
+        let retired_epoch: usize = ch[7].parse().unwrap();
+        assert!(retired_epoch > 0, "epoch census column still blind");
     }
 }

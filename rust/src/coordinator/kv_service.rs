@@ -1,9 +1,24 @@
 //! A miniature KV service over CacheHash — the end-to-end driver.
 //!
 //! Shape: a leader thread generates request batches (via the AOT
-//! workload artifact when available), pushes them through a bounded
-//! queue to worker threads that execute them against a shared
-//! `CacheHash<CachedMemEff>` table, and collects per-batch latencies.
+//! workload artifact when available) and feeds them **round-robin into
+//! per-worker bounded mailboxes**; workers execute them against a shared
+//! `CacheHash<CachedMemEff>` table and collect per-batch latencies.
+//! The seed instead pushed every batch through one shared
+//! `Mutex<Receiver>` whose guard was held across a *blocking* `recv()`
+//! — serializing all workers on a single dequeue and wedging idle
+//! workers behind a blocked one. With per-worker queues the only shared
+//! structure is the table itself; on shutdown each worker drains its own
+//! mailbox and then steals siblings' leftovers, so one slow worker
+//! cannot strand batches. The report carries per-worker batch counts
+//! and the observed peak service concurrency so the fan-out is a
+//! number, not a hope.
+//!
+//! The table may be constructed deliberately undersized
+//! ([`KvConfig::initial_capacity`]) to exercise the online-resize path
+//! end to end: the warm fill and the serving inserts drive the table
+//! through its doublings while finds stream lock-free.
+//!
 //! The latency summary is computed by the `stats.hlo.txt` artifact
 //! (the L2 stats model) when a runtime is supplied.
 //!
@@ -11,9 +26,9 @@
 //! PJRT runtime → big atomics → CacheHash → throughput/latency report
 //! (recorded in EXPERIMENTS.md §End-to-end).
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::apps::stats::{Snapshot, StatsCell};
@@ -25,17 +40,21 @@ use crate::util::error::Result;
 
 #[derive(Clone, Debug)]
 pub struct KvConfig {
-    /// Key-space / table size.
+    /// Key-space size.
     pub n: usize,
     /// Worker threads serving requests.
     pub workers: usize,
-    /// Requests per batch (one queue message).
+    /// Requests per batch (one mailbox message).
     pub batch: usize,
     /// Total run duration.
     pub duration: Duration,
     pub update_pct: u32,
     pub theta: f64,
     pub seed: u64,
+    /// Initial table capacity; 0 ⇒ sized for `n`. Set small (e.g. 64)
+    /// to serve from a deliberately undersized table and exercise
+    /// online growth under live traffic.
+    pub initial_capacity: usize,
 }
 
 impl Default for KvConfig {
@@ -48,6 +67,7 @@ impl Default for KvConfig {
             update_pct: 30,
             theta: 0.5,
             seed: 0x4B56, // "KV"
+            initial_capacity: 0,
         }
     }
 }
@@ -67,6 +87,14 @@ pub struct KvReport {
     /// `fetch_update` cell — no lock, no torn snapshot, no artifacts
     /// needed.
     pub latency_stats: Snapshot,
+    /// Batches served by each worker (all > 0 ⇔ the fan-out fanned out).
+    pub worker_batches: Vec<u64>,
+    /// Maximum number of workers observed mid-batch simultaneously.
+    pub peak_concurrent_workers: u64,
+    /// Table buckets at construction / after the run (growth proof when
+    /// `initial_capacity` undersizes the table).
+    pub initial_buckets: usize,
+    pub final_buckets: usize,
 }
 
 impl KvReport {
@@ -75,11 +103,93 @@ impl KvReport {
     }
 }
 
+/// Batches buffered per worker mailbox before the leader blocks.
+const MAILBOX_CAP: usize = 8;
+
+type Batch = (Instant, Vec<GenOp>);
+
+/// One worker's bounded mailbox. The leader's bounded `push` and the
+/// worker's blocking `pop` meet on one short-held mutex; `steal` is the
+/// shutdown-drain path for siblings.
+struct Mailbox {
+    q: Mutex<VecDeque<Batch>>,
+    /// Batch arrived (or shutdown flagged).
+    ready: Condvar,
+    /// Space freed.
+    space: Condvar,
+}
+
+impl Mailbox {
+    fn new() -> Self {
+        Self {
+            q: Mutex::new(VecDeque::with_capacity(MAILBOX_CAP)),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+        }
+    }
+
+    /// Leader side: blocking bounded push.
+    fn push(&self, item: Batch) {
+        let mut q = self.q.lock().unwrap();
+        while q.len() >= MAILBOX_CAP {
+            q = self.space.wait(q).unwrap();
+        }
+        q.push_back(item);
+        drop(q);
+        self.ready.notify_one();
+    }
+
+    /// Owner side: pop, blocking until a batch arrives; `None` once the
+    /// mailbox is empty and shutdown is flagged.
+    fn pop(&self, done: &AtomicBool) -> Option<Batch> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                drop(q);
+                self.space.notify_one();
+                return Some(item);
+            }
+            // Ordering: Acquire — pairs with the leader's Release store
+            // so every pre-shutdown push is visible before we give up.
+            if done.load(Ordering::Acquire) {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap();
+        }
+    }
+
+    /// Shutdown drain: non-blocking steal by a sibling.
+    fn steal(&self) -> Option<Batch> {
+        let item = self.q.lock().unwrap().pop_front();
+        if item.is_some() {
+            self.space.notify_one();
+        }
+        item
+    }
+
+    /// Shutdown wakeup. Must take the mailbox mutex: `pop`'s
+    /// check-empty-then-park is atomic only under that lock (Condvar
+    /// wait releases it when parking), so a bare `notify_all` could
+    /// land between a worker's `done` check and its park and be lost
+    /// forever — the classic lost-wakeup deadlock.
+    fn wake_all(&self) {
+        let _q = self.q.lock().unwrap();
+        self.ready.notify_all();
+    }
+}
+
 /// Run the service; `runtime` enables artifact-backed generation and the
 /// HLO stats summary.
 pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
-    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(cfg.n);
-    // Warm the table to ~half occupancy.
+    let cap = if cfg.initial_capacity > 0 {
+        cfg.initial_capacity
+    } else {
+        cfg.n
+    };
+    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(cap);
+    let initial_buckets = table.capacity();
+    // Warm the table to ~half occupancy (undersized tables grow here
+    // already — and keep growing under the serving load below).
     for rank in (0..cfg.n).step_by(2) {
         table.insert(crate::util::rng::mix64(rank as u64), rank as u64);
     }
@@ -103,19 +213,26 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
         None => generate_rust(&spec, stream_len, 0),
     };
 
+    let workers = cfg.workers.max(1);
     let finds = AtomicU64::new(0);
     let lat_stats: StatsCell<CachedMemEff<Snapshot>> = StatsCell::new();
     let inserts = AtomicU64::new(0);
     let deletes = AtomicU64::new(0);
     let served = AtomicU64::new(0);
     let latencies: Mutex<Vec<f32>> = Mutex::new(Vec::new());
+    let mailboxes: Vec<Mailbox> = (0..workers).map(|_| Mailbox::new()).collect();
+    let done = AtomicBool::new(false);
+    let active = AtomicU64::new(0);
+    let peak_active = AtomicU64::new(0);
+    let batch_counts: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(0)).collect();
 
-    let (tx, rx) = sync_channel::<(Instant, Vec<GenOp>)>(cfg.workers * 4);
-    let rx = Mutex::new(rx);
     let elapsed = std::thread::scope(|s| {
-
-        for _ in 0..cfg.workers {
-            let rx: &Mutex<Receiver<(Instant, Vec<GenOp>)>> = &rx;
+        for w in 0..workers {
+            let mailboxes = &mailboxes;
+            let done = &done;
+            let active = &active;
+            let peak_active = &peak_active;
+            let batch_counts = &batch_counts;
             let table = &table;
             let finds = &finds;
             let inserts = &inserts;
@@ -125,9 +242,10 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
             let lat_stats = &lat_stats;
             s.spawn(move || {
                 let mut local_lat: Vec<f32> = Vec::new();
-                loop {
-                    let msg = { rx.lock().unwrap().recv() };
-                    let Ok((enqueued, batch)) = msg else { break };
+                let mut serve = |(enqueued, batch): Batch| {
+                    // Concurrency gauge: how many workers are mid-batch.
+                    let now = active.fetch_add(1, Ordering::AcqRel) + 1;
+                    peak_active.fetch_max(now, Ordering::AcqRel);
                     for req in &batch {
                         match req.op {
                             Op::Find => {
@@ -145,19 +263,39 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
                         }
                     }
                     served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    batch_counts[w].fetch_add(1, Ordering::Relaxed);
                     // Per-request latency ≈ (queueing + service) / batch.
                     let total_ns = enqueued.elapsed().as_nanos() as f32;
                     let per_req = total_ns / batch.len() as f32;
                     local_lat.push(per_req);
                     lat_stats.record(per_req as u64);
+                    active.fetch_sub(1, Ordering::AcqRel);
+                };
+                // Serve the own mailbox until shutdown...
+                while let Some(batch) = mailboxes[w].pop(done) {
+                    serve(batch);
+                }
+                // ...then drain-and-steal so no sibling strands work.
+                loop {
+                    let mut got = false;
+                    for mb in mailboxes.iter() {
+                        while let Some(batch) = mb.steal() {
+                            serve(batch);
+                            got = true;
+                        }
+                    }
+                    if !got {
+                        break;
+                    }
                 }
                 latencies.lock().unwrap().extend(local_lat);
             });
         }
 
-        // Leader: feed batches for the configured duration.
+        // Leader: feed batches round-robin for the configured duration.
         let t0 = Instant::now();
         let mut cursor = 0usize;
+        let mut rr = 0usize;
         while t0.elapsed() < cfg.duration {
             let batch: Vec<GenOp> = stream[cursor..]
                 .iter()
@@ -166,11 +304,15 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
                 .copied()
                 .collect();
             cursor = (cursor + cfg.batch) % stream.len();
-            if tx.send((Instant::now(), batch)).is_err() {
-                break;
-            }
+            mailboxes[rr % workers].push((Instant::now(), batch));
+            rr += 1;
         }
-        drop(tx); // close the queue; workers drain and exit
+        // Ordering: Release — every push above happens-before a worker
+        // observes the shutdown flag.
+        done.store(true, Ordering::Release);
+        for mb in &mailboxes {
+            mb.wake_all();
+        }
         t0.elapsed()
     });
 
@@ -189,6 +331,10 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
         latency,
         sample_count: lat_samples.len(),
         latency_stats: lat_stats.snapshot(),
+        worker_batches: batch_counts.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
+        peak_concurrent_workers: peak_active.load(Ordering::SeqCst),
+        initial_buckets,
+        final_buckets: table.capacity(),
     })
 }
 
@@ -206,6 +352,7 @@ mod tests {
             update_pct: 30,
             theta: 0.5,
             seed: 7,
+            initial_capacity: 0,
         };
         let rep = run(&cfg, None).unwrap();
         assert!(rep.total_requests > 100, "{rep:?}");
@@ -222,5 +369,49 @@ mod tests {
             let mean = rep.latency_stats.mean().unwrap();
             assert!(rep.latency_stats.min as f64 <= mean && mean <= rep.latency_stats.max as f64);
         }
+        // Every batch is accounted to exactly one worker.
+        assert_eq!(rep.worker_batches.len(), 2);
+        assert_eq!(
+            rep.worker_batches.iter().sum::<u64>() as usize,
+            rep.sample_count
+        );
+    }
+
+    #[test]
+    fn test_kv_workers_serve_concurrently_and_table_grows() {
+        // Regression for the shared Mutex<Receiver> dequeue: with
+        // per-worker mailboxes every worker must serve batches, and at
+        // least two must be observed mid-batch simultaneously. The
+        // undersized table must also grow under live traffic.
+        let cfg = KvConfig {
+            n: 1 << 12,
+            workers: 4,
+            batch: 256,
+            duration: Duration::from_millis(250),
+            update_pct: 50,
+            theta: 0.0,
+            seed: 9,
+            initial_capacity: 64,
+        };
+        let rep = run(&cfg, None).unwrap();
+        assert_eq!(rep.worker_batches.len(), 4);
+        assert!(
+            rep.worker_batches.iter().all(|&b| b > 0),
+            "a worker served nothing: {:?}",
+            rep.worker_batches
+        );
+        assert!(
+            rep.peak_concurrent_workers >= 2,
+            "workers serialized: peak {}",
+            rep.peak_concurrent_workers
+        );
+        assert_eq!(rep.initial_buckets, 64);
+        assert!(
+            rep.final_buckets > rep.initial_buckets,
+            "undersized table never grew: {} -> {}",
+            rep.initial_buckets,
+            rep.final_buckets
+        );
+        assert_eq!(rep.total_requests, rep.finds + rep.inserts + rep.deletes);
     }
 }

@@ -112,13 +112,17 @@ impl Coordinator {
                     save(crate::bench::ablation::run_smr_ablation(cfg))?;
                     save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
                 }
+                "resize" => save(crate::bench::ablation::run_resize_ablation(cfg, &source))?,
                 "" | "all" => {
                     save(crate::bench::ablation::run_ablations(cfg, &source))?;
                     save(crate::bench::ablation::run_ordering_ablation(cfg))?;
                     save(crate::bench::ablation::run_smr_ablation(cfg))?;
                     save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
+                    save(crate::bench::ablation::run_resize_ablation(cfg, &source))?;
                 }
-                other => crate::bail!("ablate panel {other}: use ordering|smr (or omit for all)"),
+                other => {
+                    crate::bail!("ablate panel {other}: use ordering|smr|resize (or omit for all)")
+                }
             },
             "all" => {
                 saved.extend(figures::run_all(cfg, &source));
@@ -133,6 +137,10 @@ impl Coordinator {
                 );
                 saved.push(
                     crate::bench::ablation::run_smr_table_ablation(cfg, &source)
+                        .save(&cfg.report_dir)?,
+                );
+                saved.push(
+                    crate::bench::ablation::run_resize_ablation(cfg, &source)
                         .save(&cfg.report_dir)?,
                 );
             }

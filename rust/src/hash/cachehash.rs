@@ -1,7 +1,8 @@
 //! CacheHash (paper §4): separate chaining with the first link inlined
-//! into the bucket as a big atomic — generic over key and value types.
+//! into the bucket as a big atomic — generic over key and value types,
+//! and **growable online** (epoch-protected incremental resize).
 //!
-//! Each bucket is a big atomic [`Link<K, V>`] = (key, value, next+flag):
+//! Each bucket is a big atomic [`Link<K, V>`] = (key, value, next+tags):
 //! the common case (load factor one, most chains of length ≤ 1) touches
 //! a single cache line and zero pointers — the paper's motivating win.
 //! Chain nodes beyond the first are immutable heap links; every mutation
@@ -15,6 +16,35 @@
 //! second chain walk entirely. Retries back off through the adaptive
 //! `util::backoff::Backoff`.
 //!
+//! ## Online resize
+//!
+//! The table is a generation chain: the live generation is published
+//! through `root`, and a growth (triggered when a per-stripe occupancy
+//! estimate crosses [`GROW_LOAD_FACTOR`]) publishes a
+//! [`ResizeState`](super::ResizeState) descriptor — (old table, new
+//! table, stripe cursor) — through a `SeqLock` big atomic.  Every
+//! *update* entering the map claims one stripe of source buckets with
+//! the witnessing `compare_exchange` on the cursor and migrates it:
+//!
+//! 1. **seal** — CAS the source bucket to its FROZEN image (same key /
+//!    value / chain, FORWARDED tag set).  The seal winner is the single
+//!    copier; updates that land on a FROZEN bucket wait out the (chain-
+//!    length-bounded) copy window, `find`s read the frozen content in
+//!    place — the frozen image *is* the current state, because no
+//!    mutation of those keys can complete before the DONE transition.
+//! 2. **copy** — re-hash the inlined pair and every chain node into the
+//!    destination (fresh allocations; insert-if-absent).
+//! 3. **DONE** — CAS FROZEN → the empty-forwarded sentinel.  From this
+//!    (big-atomic, hence linearizable) transition on, readers and
+//!    updaters fall through old → new, and the drained chain is retired
+//!    through the epoch scheme.
+//!
+//! `find` therefore stays lock-free throughout: it never helps, never
+//! waits, and crosses generations only over DONE seal marks.  The
+//! drained table itself is retired with `S::retire_box` once every
+//! bucket is DONE — `RegionSmr` guarantees a pinned reader mid-fall-
+//! through cannot see a freed table.
+//!
 //! Chain traversals are unbounded, so reclamation needs a
 //! *region-grained* scheme ([`RegionSmr`]): epoch-based by default (§4:
 //! "We use epoch-based memory management to protect the links"), with
@@ -24,16 +54,23 @@
 //! contract and are rejected at the type level — see `smr`'s module
 //! docs for why.
 
-use super::{bucket_for, table_capacity, ConcurrentMap};
-use crate::atomics::{AtomicValue, BigAtomic};
+use std::marker::PhantomData;
+use std::ptr::null_mut;
+use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
+
+use super::{bucket_for, table_capacity, ConcurrentMap, ResizeState};
+use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
 use crate::smr::{Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
 use crate::util::CachePadded;
 
 /// The inlined first link: key, value, and a tagged next pointer.
-/// Bit 0 of `next` is the occupied flag — `0x0` = empty bucket,
-/// `0x1` = single inline entry (null next), `ptr|1` = inline entry with
-/// a chain. "Null and empty have distinct meanings" (§4).
+/// Bit 0 of `next` is the occupied flag, bit 1 the resize FORWARDED
+/// seal — `0x0` = empty bucket, `0x1` = single inline entry (null
+/// next), `ptr|1` = inline entry with a chain, `ptr|1|2` = FROZEN
+/// (content intact, migration copy in progress), `0x2` = DONE (contents
+/// live in the next table). "Null and empty have distinct meanings"
+/// (§4), and so do the two seal states.
 #[repr(C, align(8))]
 #[derive(Copy, Clone, PartialEq, Debug, Default)]
 pub struct Link<K: AtomicValue, V: AtomicValue> {
@@ -58,6 +95,20 @@ impl Link<u64, u64> {
 }
 
 const OCCUPIED: u64 = 1;
+const FORWARDED: u64 = 2;
+const TAG_MASK: u64 = OCCUPIED | FORWARDED;
+
+/// Source buckets migrated per helper claim (one stripe).
+const MIGRATION_STRIPE: usize = 64;
+
+/// Buckets covered by one occupancy counter (the growth estimator's
+/// grain — matches the migration stripe).
+const OCCUPANCY_STRIPE: usize = 64;
+
+/// Grow when a stripe's live-entry estimate exceeds this multiple of
+/// its bucket count (estimated load factor threshold — the paper's
+/// design point is load factor one; beyond ~2 the chains dominate).
+const GROW_LOAD_FACTOR: usize = 2;
 
 impl<K: AtomicValue, V: AtomicValue> Link<K, V> {
     /// An unoccupied bucket value.
@@ -71,9 +122,44 @@ impl<K: AtomicValue, V: AtomicValue> Link<K, V> {
         self.next & OCCUPIED == OCCUPIED
     }
 
+    /// Any seal tag set (FROZEN or DONE).
+    #[inline]
+    fn forwarded(&self) -> bool {
+        self.next & FORWARDED == FORWARDED
+    }
+
+    /// Sealed with content: the single copier is mid-copy.
+    #[inline]
+    fn frozen(&self) -> bool {
+        self.next & TAG_MASK == TAG_MASK
+    }
+
+    /// Sealed empty: contents (if any) live in the next generation.
+    #[inline]
+    fn done(&self) -> bool {
+        self.next & TAG_MASK == FORWARDED
+    }
+
+    /// This bucket's image with the FORWARDED seal added.
+    #[inline]
+    fn sealed(mut self) -> Self {
+        self.next |= FORWARDED;
+        self
+    }
+
+    /// The empty-forwarded sentinel a fully-migrated bucket holds.
+    #[inline]
+    fn done_link() -> Self {
+        Link {
+            key: K::default(),
+            value: V::default(),
+            next: FORWARDED,
+        }
+    }
+
     #[inline]
     fn next_ptr(&self) -> *mut ChainNode<K, V> {
-        (self.next & !OCCUPIED) as *mut ChainNode<K, V>
+        (self.next & !TAG_MASK) as *mut ChainNode<K, V>
     }
 
     #[inline]
@@ -93,6 +179,82 @@ struct ChainNode<K, V> {
     next: *mut ChainNode<K, V>,
 }
 
+/// One generation of the bucket array. Resizes allocate a fresh, larger
+/// `Table`, migrate into it, and epoch-retire the drained source.
+struct Table<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
+    buckets: Box<[CachePadded<A>]>,
+    /// Per-stripe live-entry estimates (insert +1 / remove −1) feeding
+    /// the growth trigger. Signed: the +1 and −1 of a racing
+    /// insert/remove pair may land in either order.
+    stripes: Box<[CachePadded<AtomicIsize>]>,
+    /// Buckets sealed DONE; reaching `len()` completes the migration.
+    migrated: AtomicUsize,
+}
+
+impl<A, K, V> Table<A, K, V>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
+    fn new(cap: usize) -> Self {
+        let nstripes = cap.div_ceil(OCCUPANCY_STRIPE).max(1);
+        Self {
+            buckets: (0..cap)
+                .map(|_| CachePadded::new(A::new(Link::empty())))
+                .collect(),
+            stripes: (0..nstripes)
+                .map(|_| CachePadded::new(AtomicIsize::new(0)))
+                .collect(),
+            migrated: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    #[inline]
+    fn bucket(&self, idx: usize) -> &A {
+        &self.buckets[idx]
+    }
+
+    #[inline]
+    fn stripe(&self, idx: usize) -> &AtomicIsize {
+        &self.stripes[idx / OCCUPANCY_STRIPE]
+    }
+}
+
+/// Free a table and every chain still linked from its buckets
+/// (exclusive access — `Drop` only; DONE buckets' chains were already
+/// retired at their DONE transitions).
+unsafe fn drop_table<A, K, V>(ptr: *mut Table<A, K, V>)
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+{
+    // SAFETY: caller guarantees exclusivity; the Box frees the arrays.
+    let t = unsafe { Box::from_raw(ptr) };
+    for b in t.buckets.iter() {
+        let head = b.load();
+        if head.occupied() {
+            let mut p = head.next_ptr();
+            while !p.is_null() {
+                // SAFETY: exclusive in Drop.
+                let n = unsafe { Box::from_raw(p) };
+                p = n.next;
+            }
+        }
+    }
+}
+
 pub struct CacheHash<A, K = u64, V = u64, S = Epoch>
 where
     K: AtomicValue,
@@ -100,13 +262,20 @@ where
     A: BigAtomic<Link<K, V>>,
     S: RegionSmr,
 {
-    buckets: Box<[CachePadded<A>]>,
+    /// The live generation. Readers reach newer generations by falling
+    /// through DONE seal marks; updated once a migration completes.
+    root: AtomicPtr<Table<A, K, V>>,
+    /// The migration descriptor (see [`ResizeState`]); a `SeqLock` big
+    /// atomic so stripe claims are witness-fed CASes.
+    resize: SeqLock<ResizeState>,
+    /// Completed growths (each retired one drained table through `S`).
+    generations: AtomicUsize,
     name: &'static str,
-    _kv: std::marker::PhantomData<(Link<K, V>, fn() -> S)>,
+    _kv: PhantomData<(Link<K, V>, fn() -> S)>,
 }
 
-// SAFETY: buckets are Sync big atomics; chain nodes are immutable and
-// region-protected.
+// SAFETY: buckets are Sync big atomics; chain nodes and drained tables
+// are immutable and region-protected.
 unsafe impl<A, K, V, S> Send for CacheHash<A, K, V, S>
 where
     K: AtomicValue,
@@ -132,20 +301,52 @@ where
     S: RegionSmr,
 {
     /// A table with capacity for ~`n` entries at load factor one.
+    /// Undershooting is no longer fatal: the table grows online once the
+    /// estimated load factor crosses [`GROW_LOAD_FACTOR`].
     pub fn new(n: usize) -> Self {
         let cap = table_capacity(n);
         Self {
-            buckets: (0..cap)
-                .map(|_| CachePadded::new(A::new(Link::empty())))
-                .collect(),
+            root: AtomicPtr::new(Box::into_raw(Box::new(Table::new(cap)))),
+            resize: SeqLock::new(ResizeState::default()),
+            generations: AtomicUsize::new(0),
             name: A::name(),
-            _kv: std::marker::PhantomData,
+            _kv: PhantomData,
         }
     }
 
+    /// The live root table.
+    ///
+    /// # Safety (internal)
+    /// Callers must hold the region pin: drained tables are only
+    /// epoch-retired, so the reference stays valid for the pin's
+    /// lifetime even across concurrent resizes.
     #[inline]
-    fn bucket(&self, key: &K) -> &A {
-        &self.buckets[bucket_for(key, self.buckets.len())]
+    fn root_table(&self) -> &Table<A, K, V> {
+        // Ordering: Acquire — pairs with the Release root swing in
+        // `finish_resize` so the promoted table's contents are visible.
+        unsafe { &*self.root.load(Ordering::Acquire) }
+    }
+
+    /// The table a DONE seal mark in `t` forwards to: the in-flight
+    /// migration's destination when the descriptor matches `t` *and*
+    /// the root, else the (necessarily newer) root.
+    fn table_after(&self, t: &Table<A, K, V>) -> &Table<A, K, V> {
+        let rs = self.resize.load();
+        let root = self.root.load(Ordering::Acquire);
+        let tp = t as *const Table<A, K, V> as u64;
+        if rs.in_flight() && rs.old == root as u64 && rs.old == tp {
+            // SAFETY: the descriptor matches the live root, so `new` is
+            // the live in-flight destination — pinned-protected like
+            // every table.
+            unsafe { &*(rs.new as *const Table<A, K, V>) }
+        } else {
+            // The migration that sealed `t` has completed (the root is
+            // swung before the descriptor is cleared), or a later one is
+            // in flight: restart from the root, which is strictly newer
+            // than `t`.
+            // SAFETY: root is live under the caller's pin.
+            unsafe { &*root }
+        }
     }
 
     /// Walk the (immutable) chain for `key`.
@@ -164,8 +365,284 @@ where
         None
     }
 
-    pub fn capacity(&self) -> usize {
-        self.buckets.len()
+    /// True while a migration descriptor is published.
+    pub fn resize_in_flight(&self) -> bool {
+        self.resize.load().in_flight()
+    }
+
+    /// Completed growths (old tables retired through `S`).
+    pub fn generation(&self) -> usize {
+        self.generations.load(Ordering::Acquire)
+    }
+
+    /// Drive any in-flight migration to completion — a cooperative
+    /// helper for maintenance threads, drops, and tests; normal updates
+    /// migrate one stripe at a time.
+    pub fn finish_resizes(&self) {
+        let _g = S::pin();
+        let mut bo = None;
+        while self.resize.load().in_flight() {
+            self.help_resize();
+            snooze_lazy(&mut bo);
+        }
+    }
+
+    /// Account a successful insert into `t`'s stripe estimate and
+    /// trigger growth when the stripe crosses the load-factor threshold.
+    fn note_insert(&self, t: &Table<A, K, V>, idx: usize) {
+        // Ordering: Relaxed — the stripe counters are a statistical
+        // estimate; nothing synchronizes through them.
+        let n = t.stripe(idx).fetch_add(1, Ordering::Relaxed) + 1;
+        let span = OCCUPANCY_STRIPE.min(t.len());
+        if n > (span * GROW_LOAD_FACTOR) as isize {
+            self.try_begin_grow(t);
+        }
+    }
+
+    fn note_remove(&self, t: &Table<A, K, V>, idx: usize) {
+        // Ordering: Relaxed — as in note_insert.
+        t.stripe(idx).fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Publish a double-size destination for `t` if no migration is in
+    /// flight and `t` is still the root. Requires the caller's pin.
+    fn try_begin_grow(&self, t: &Table<A, K, V>) {
+        if self.resize.load().in_flight() {
+            return;
+        }
+        let tp = t as *const Table<A, K, V> as *mut Table<A, K, V>;
+        // Only the root grows; a mid-migration destination grows after
+        // promotion.
+        if self.root.load(Ordering::Acquire) != tp {
+            return;
+        }
+        let new: *mut Table<A, K, V> = Box::into_raw(Box::new(Table::new(t.len() * 2)));
+        let desc = ResizeState {
+            old: tp as u64,
+            new: new as u64,
+            cursor: 0,
+        };
+        if self.resize.compare_exchange(ResizeState::default(), desc).is_err() {
+            // Lost the publish race to another grower.
+            // SAFETY: never published.
+            drop(unsafe { Box::from_raw(new) });
+            return;
+        }
+        if self.root.load(Ordering::Acquire) != tp {
+            // A full resize completed between our root check and the
+            // publish: the descriptor is stale. Helpers ignore
+            // descriptors whose `old` is not the root (and `t` cannot be
+            // freed while we are pinned, so its address cannot be
+            // recycled into a new root), so a successful exact retract
+            // proves the fresh table is still unreferenced.
+            if self.resize.compare_exchange(desc, ResizeState::default()).is_ok() {
+                // SAFETY: unpublished again, never dereferenced.
+                drop(unsafe { Box::from_raw(new) });
+            }
+            return;
+        }
+        // Kick-start: migrate the first stripe ourselves.
+        self.help_resize();
+    }
+
+    /// Claim and migrate one stripe of the in-flight resize (no-op when
+    /// idle). Requires the caller's pin.
+    fn help_resize(&self) {
+        let mut rs = self.resize.load();
+        if !rs.in_flight() {
+            return;
+        }
+        let root = self.root.load(Ordering::Acquire);
+        if rs.old != root as u64 {
+            return; // stale descriptor (retraction pending) or finishing
+        }
+        // SAFETY: old == root — live under the caller's pin.
+        let old = unsafe { &*root };
+        let len = old.len();
+        // Claim one stripe with the witnessing CAS on the cursor.
+        let (start, end) = loop {
+            if !rs.in_flight() || rs.old != root as u64 {
+                return;
+            }
+            let c = rs.cursor as usize;
+            if c >= len {
+                return; // fully claimed; stragglers still copying
+            }
+            let end = (c + MIGRATION_STRIPE).min(len);
+            match self.resize.compare_exchange(
+                rs,
+                ResizeState {
+                    cursor: end as u64,
+                    ..rs
+                },
+            ) {
+                Ok(_) => break (c, end),
+                Err(w) => rs = w,
+            }
+        };
+        // SAFETY: the claimed descriptor matched the root — `new` is the
+        // live destination.
+        let new = unsafe { &*(rs.new as *const Table<A, K, V>) };
+        for idx in start..end {
+            self.migrate_bucket(old, idx, new);
+        }
+    }
+
+    /// Seal-and-copy one source bucket into `new`. The seal-CAS winner
+    /// is the single copier (updates landing on the FROZEN window wait;
+    /// finds read the frozen content in place).
+    fn migrate_bucket(&self, old: &Table<A, K, V>, idx: usize, new: &Table<A, K, V>) {
+        let bucket = old.bucket(idx);
+        let mut head = bucket.load();
+        let mut bo = None;
+        loop {
+            if head.forwarded() {
+                // Only the stripe owner seals, and stripes are claimed
+                // exclusively — a pre-existing seal means this bucket is
+                // already migrated (re-entry via finish_resizes).
+                debug_assert!(head.done(), "second copier on a frozen bucket");
+                return;
+            }
+            if !head.occupied() {
+                // Empty source: seal straight to DONE.
+                match bucket.compare_exchange(head, Link::done_link()) {
+                    Ok(_) => break,
+                    Err(w) => {
+                        head = w;
+                        snooze_lazy(&mut bo);
+                    }
+                }
+                continue;
+            }
+            // Freeze the content: one-way — updates now wait, finds
+            // still read the (authoritative, immutable) frozen image.
+            match bucket.compare_exchange(head, head.sealed()) {
+                Ok(_) => {
+                    // We own the copy: re-hash the inlined pair and
+                    // every chain node into the destination.
+                    self.copy_entry(new, head.key, head.value);
+                    let mut p = head.next_ptr();
+                    while !p.is_null() {
+                        // SAFETY: chain reachable from the frozen head;
+                        // region-pinned.
+                        let n = unsafe { &*p };
+                        self.copy_entry(new, n.key, n.value);
+                        p = n.next;
+                    }
+                    // Publish DONE — the linearization point after which
+                    // this bucket's keys live in the destination.
+                    let done_ok = bucket
+                        .compare_exchange(head.sealed(), Link::done_link())
+                        .is_ok();
+                    debug_assert!(done_ok, "frozen bucket mutated during copy");
+                    // Retire the drained chain through the region scheme.
+                    let mut p = head.next_ptr();
+                    while !p.is_null() {
+                        // SAFETY: unlinked by the DONE transition;
+                        // lagging readers of the frozen image are pinned.
+                        let nx = unsafe { (*p).next };
+                        unsafe { S::retire_box(p) };
+                        p = nx;
+                    }
+                    break;
+                }
+                Err(w) => {
+                    head = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+        }
+        // Exactly one DONE transition per bucket reports it migrated.
+        // Ordering: AcqRel — the finisher's promotion happens-after
+        // every copier's DONE publication.
+        if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
+            self.finish_resize(old);
+        }
+    }
+
+    /// Insert-if-absent into the destination table (no growth trigger:
+    /// the destination cannot resize while this migration holds the
+    /// descriptor; its stripe counters still accumulate for the next
+    /// cycle).
+    fn copy_entry(&self, new: &Table<A, K, V>, key: K, value: V) {
+        let idx = bucket_for(&key, new.len());
+        let bucket = new.bucket(idx);
+        let mut head = bucket.load();
+        let mut bo = None;
+        loop {
+            debug_assert!(!head.forwarded(), "destination sealed mid-migration");
+            if !head.occupied() {
+                match bucket.compare_exchange(head, Link::with_chain(key, value, null_mut())) {
+                    Ok(_) => {
+                        // Ordering: Relaxed — estimate, as in note_insert.
+                        new.stripe(idx).fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(w) => {
+                        head = w;
+                        snooze_lazy(&mut bo);
+                        continue;
+                    }
+                }
+            }
+            if head.key == key || Self::chain_find(head.next_ptr(), &key).is_some() {
+                // Already present: a user insert of this key cannot land
+                // here pre-DONE, so this is idempotence insurance only.
+                return;
+            }
+            let spill = Box::into_raw(Box::new(ChainNode {
+                key: head.key,
+                value: head.value,
+                next: head.next_ptr(),
+            }));
+            match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
+                Ok(_) => {
+                    // Ordering: Relaxed — estimate.
+                    new.stripe(idx).fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(w) => {
+                    // SAFETY: never published.
+                    drop(unsafe { Box::from_raw(spill) });
+                    head = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+        }
+    }
+
+    /// Run by the unique copier whose DONE transition drained the last
+    /// bucket: promote the destination, clear the descriptor, retire the
+    /// source.
+    fn finish_resize(&self, old: &Table<A, K, V>) {
+        let rs = self.resize.load();
+        let op = old as *const Table<A, K, V> as *mut Table<A, K, V>;
+        debug_assert!(rs.in_flight() && rs.old == op as u64, "finisher raced the descriptor");
+        let new = rs.new as *mut Table<A, K, V>;
+        // Ordering: AcqRel CAS — the Release half publishes the fully
+        // populated destination to readers' Acquire root loads.
+        let swung = self
+            .root
+            .compare_exchange(op, new, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        debug_assert!(swung, "root moved before the finisher");
+        // Clear the descriptor only after the root swing so
+        // `table_after`'s descriptor-matches-root rule stays sound.
+        let mut cur = rs;
+        while cur.in_flight() && cur.old == op as u64 {
+            match self.resize.compare_exchange(cur, ResizeState::default()) {
+                Ok(_) => break,
+                Err(w) => cur = w,
+            }
+        }
+        // Ordering: AcqRel — generation reads observe a promoted root.
+        self.generations.fetch_add(1, Ordering::AcqRel);
+        // Retire the drained generation — bucket array and all (every
+        // bucket holds a DONE seal; chains were retired at their DONE
+        // transitions). Pinned readers mid-fall-through keep it alive:
+        // the region guarantee of `S`.
+        // SAFETY: unlinked from both the root and the descriptor; unique.
+        unsafe { S::retire_box(op) };
     }
 }
 
@@ -178,19 +655,32 @@ where
 {
     fn find(&self, key: K) -> Option<V> {
         let _g = S::pin();
-        let head = self.bucket(&key).load();
-        if !head.occupied() {
-            return None;
+        let mut t = self.root_table();
+        loop {
+            let head = t.bucket(bucket_for(&key, t.len())).load();
+            if head.done() {
+                // Fully migrated: fall through old → new. No lock, no
+                // helping, no waiting — the find path stays lock-free.
+                t = self.table_after(t);
+                continue;
+            }
+            if !head.occupied() {
+                return None;
+            }
+            if head.key == key {
+                return Some(head.value); // the inlined fast path (frozen included)
+            }
+            return Self::chain_find(head.next_ptr(), &key);
         }
-        if head.key == key {
-            return Some(head.value); // the inlined fast path
-        }
-        Self::chain_find(head.next_ptr(), &key)
     }
 
     fn insert(&self, key: K, value: V) -> bool {
         let _g = S::pin();
-        let bucket = self.bucket(&key);
+        // Updates pay the incremental-migration toll: one stripe.
+        self.help_resize();
+        let mut t = self.root_table();
+        let mut idx = bucket_for(&key, t.len());
+        let mut bucket = t.bucket(idx);
         let mut head = bucket.load();
         // The chain pointer we last walked and proved free of `key`.
         // Chain nodes are immutable after publish and we hold the region
@@ -204,14 +694,30 @@ where
         // Lazy: an uncontended insert pays no backoff/TLS cost.
         let mut bo = None;
         loop {
+            if head.forwarded() {
+                if head.frozen() {
+                    // The stripe owner is copying this bucket out; the
+                    // window is bounded by the chain length.
+                    snooze_lazy(&mut bo);
+                    head = bucket.load();
+                    continue;
+                }
+                // DONE: this bucket's keys live in a newer generation.
+                t = self.table_after(t);
+                idx = bucket_for(&key, t.len());
+                bucket = t.bucket(idx);
+                head = bucket.load();
+                searched = None;
+                continue;
+            }
             if !head.occupied() {
                 // Empty bucket: install inline. On failure the witness
                 // is the new head — no re-load.
-                match bucket.compare_exchange(
-                    head,
-                    Link::with_chain(key, value, std::ptr::null_mut()),
-                ) {
-                    Ok(_) => return true,
+                match bucket.compare_exchange(head, Link::with_chain(key, value, null_mut())) {
+                    Ok(_) => {
+                        self.note_insert(t, idx);
+                        return true;
+                    }
                     Err(w) => {
                         head = w;
                         snooze_lazy(&mut bo);
@@ -237,7 +743,10 @@ where
                 next: chain,
             }));
             match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
-                Ok(_) => return true,
+                Ok(_) => {
+                    self.note_insert(t, idx);
+                    return true;
+                }
                 Err(w) => {
                     // SAFETY: never published.
                     drop(unsafe { Box::from_raw(spill) });
@@ -250,11 +759,27 @@ where
 
     fn remove(&self, key: K) -> bool {
         let _g = S::pin();
-        let bucket = self.bucket(&key);
+        // Updates pay the incremental-migration toll: one stripe.
+        self.help_resize();
+        let mut t = self.root_table();
+        let mut idx = bucket_for(&key, t.len());
+        let mut bucket = t.bucket(idx);
         let mut head = bucket.load();
         // Lazy: an uncontended remove pays no backoff/TLS cost.
         let mut bo = None;
         loop {
+            if head.forwarded() {
+                if head.frozen() {
+                    snooze_lazy(&mut bo);
+                    head = bucket.load();
+                    continue;
+                }
+                t = self.table_after(t);
+                idx = bucket_for(&key, t.len());
+                bucket = t.bucket(idx);
+                head = bucket.load();
+                continue;
+            }
             if !head.occupied() {
                 return false;
             }
@@ -263,7 +788,10 @@ where
                 if p.is_null() {
                     // Single inline entry -> empty.
                     match bucket.compare_exchange(head, Link::empty()) {
-                        Ok(_) => return true,
+                        Ok(_) => {
+                            self.note_remove(t, idx);
+                            return true;
+                        }
                         Err(w) => {
                             head = w;
                             snooze_lazy(&mut bo);
@@ -279,6 +807,7 @@ where
                     Ok(_) => {
                         // SAFETY: p unlinked by the successful CAS.
                         unsafe { S::retire_box(p) };
+                        self.note_remove(t, idx);
                         return true;
                     }
                     Err(w) => {
@@ -292,7 +821,7 @@ where
             let mut prefix: Vec<(K, V)> = Vec::new();
             let mut p = head.next_ptr();
             let mut found = false;
-            let mut suffix: *mut ChainNode<K, V> = std::ptr::null_mut();
+            let mut suffix: *mut ChainNode<K, V> = null_mut();
             while !p.is_null() {
                 // SAFETY: region-pinned traversal.
                 let n = unsafe { &*p };
@@ -331,6 +860,7 @@ where
                             q = nx;
                         }
                     }
+                    self.note_remove(t, idx);
                     return true;
                 }
                 Err(w) => {
@@ -352,6 +882,22 @@ where
     fn map_name(&self) -> &'static str {
         self.name
     }
+
+    fn capacity(&self) -> usize {
+        let _g = S::pin();
+        self.root_table().len()
+    }
+
+    fn occupancy(&self) -> usize {
+        let _g = S::pin();
+        self.root_table()
+            .stripes
+            .iter()
+            // Ordering: Relaxed — estimate.
+            .map(|s| s.load(Ordering::Relaxed))
+            .sum::<isize>()
+            .max(0) as usize
+    }
 }
 
 impl<A, K, V, S> Drop for CacheHash<A, K, V, S>
@@ -362,17 +908,18 @@ where
     S: RegionSmr,
 {
     fn drop(&mut self) {
-        // Exclusive: free all chains directly.
-        for b in self.buckets.iter() {
-            let head = b.load();
-            if head.occupied() {
-                let mut p = head.next_ptr();
-                while !p.is_null() {
-                    // SAFETY: exclusive in Drop.
-                    let n = unsafe { Box::from_raw(p) };
-                    p = n.next;
-                }
+        let root = *self.root.get_mut();
+        let rs = self.resize.load();
+        // Exclusive (&mut self): free the live table and, when a
+        // migration was abandoned mid-flight, its half-built destination
+        // (migration copies are fresh allocations, so the two frees are
+        // disjoint; chains behind DONE seals were already retired).
+        unsafe {
+            if rs.in_flight() {
+                debug_assert_eq!(rs.old, root as u64, "descriptor of a foreign root at drop");
+                drop_table(rs.new as *mut Table<A, K, V>);
             }
+            drop_table(root);
         }
         S::flush_thread_bag();
     }
@@ -465,7 +1012,8 @@ mod tests {
 
     #[test]
     fn test_chains_beyond_one_bucket() {
-        // Tiny table forces chains; all pairs must survive.
+        // Tiny table forces chains (and, since the resize PR, growth);
+        // all pairs must survive both.
         let t: CacheHash<SeqLock<LinkVal>> = CacheHash::new(2);
         for k in 0..100u64 {
             assert!(t.insert(k, k * 7));
@@ -480,6 +1028,33 @@ mod tests {
         for k in 0..100u64 {
             let want = if k % 3 == 0 { None } else { Some(k * 7) };
             assert_eq!(t.find(k), want, "key {k}");
+        }
+    }
+
+    #[test]
+    fn test_grow_from_tiny_capacity_single_thread() {
+        // Deterministic growth: a capacity-2 table absorbing 10k inserts
+        // must double repeatedly, keep every pair, and end with the
+        // descriptor idle (single-threaded helpers finish inline).
+        let t: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(2);
+        assert_eq!(t.capacity(), 2);
+        for k in 0..10_000u64 {
+            assert!(t.insert(k, k ^ 0xBEEF));
+        }
+        t.finish_resizes();
+        assert!(!t.resize_in_flight());
+        assert!(t.capacity() >= 2048, "capacity stuck at {}", t.capacity());
+        assert!(t.generation() >= 10, "only {} doublings", t.generation());
+        let occ = t.occupancy();
+        assert!(
+            (9_000..=11_000).contains(&occ),
+            "occupancy estimate {occ} far from 10000"
+        );
+        // No lost keys, no duplicates: each key removes exactly once.
+        for k in 0..10_000u64 {
+            assert_eq!(t.find(k), Some(k ^ 0xBEEF), "key {k}");
+            assert!(t.remove(k), "lost key {k}");
+            assert!(!t.remove(k), "duplicated key {k}");
         }
     }
 
@@ -518,8 +1093,8 @@ mod tests {
     fn test_concurrent_duplicate_inserts_exactly_one_winner() {
         // Both threads race to insert the same keys into a 2-bucket
         // table (long chains force the duplicate check through the
-        // witness-fed retry with the searched-chain skip): every key
-        // must be inserted exactly once.
+        // witness-fed retry with the searched-chain skip, and growth
+        // races the inserts): every key must be inserted exactly once.
         let t: Arc<CacheHash<CachedMemEff<LinkVal>>> = Arc::new(CacheHash::new(2));
         let wins = Arc::new(std::sync::atomic::AtomicU64::new(0));
         let handles: Vec<_> = (0..2)

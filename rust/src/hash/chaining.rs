@@ -1,17 +1,35 @@
 //! Chaining — the paper's no-inlining baseline (§4 first paragraph,
 //! "Chaining" series in Fig 3): identical algorithm to CacheHash but the
-//! bucket is a plain atomic *pointer* to the first link, so every
-//! non-empty find pays at least one extra dependent cache miss.
+//! bucket is a plain atomic *word* (a tagged pointer to the first link),
+//! so every non-empty find pays at least one extra dependent cache miss.
 //! Generic over the same key/value types as [`CacheHash`](super::CacheHash),
 //! and over the same region-grained reclamation parameter (epoch-based;
 //! see `smr` for why hazard pointers are rejected at the type level).
+//!
+//! Grows online exactly like `CacheHash` (see its module docs): a
+//! [`ResizeState`](super::ResizeState) descriptor, stripe-claimed
+//! migration, FROZEN (`ptr|1`, content intact) → DONE (`0|1`) bucket
+//! seals, lock-free finds falling through DONE marks, and epoch-retired
+//! drained tables.
+//!
+//! The bucket protocol is on the memory-ordering diet (PR 3/4 house
+//! style): every access runs at the weakest sound ordering under the
+//! [`OrderingPolicy`](crate::util::ordering::OrderingPolicy) constants
+//! of `DefaultPolicy` (so `--features seqcst_audit` restores blanket
+//! `SeqCst`), each site carrying an `// Ordering:` comment naming its
+//! happens-before edge. Inserts also reuse the failed-CAS witness: the
+//! chain suffix a previous walk proved duplicate-free is skipped on
+//! retry (nodes are immutable and region-pinned, so pointer equality
+//! identifies the proven suffix).
 
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 
-use super::{bucket_for, table_capacity, ConcurrentMap};
-use crate::atomics::AtomicValue;
+use super::{bucket_for, table_capacity, ConcurrentMap, ResizeState};
+use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
 use crate::smr::{Epoch, RegionSmr};
+use crate::util::backoff::snooze_lazy;
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::CachePadded;
 
 struct Node<K, V> {
@@ -20,12 +38,86 @@ struct Node<K, V> {
     next: *mut Node<K, V>,
 }
 
+/// Bucket tag bit (nodes are ≥ 8-byte aligned, so bit 0 is free):
+/// `0` = empty, `p` = chain head, `p|1` = FROZEN (copy in progress),
+/// `1` = DONE (contents live in the next generation).
+const FWD: usize = 1;
+
+#[inline]
+fn node_of<K, V>(raw: usize) -> *mut Node<K, V> {
+    (raw & !FWD) as *mut Node<K, V>
+}
+
+/// Source buckets migrated per helper claim / occupancy-counter grain /
+/// growth threshold — shared with `CacheHash` by construction.
+const MIGRATION_STRIPE: usize = 64;
+const OCCUPANCY_STRIPE: usize = 64;
+const GROW_LOAD_FACTOR: usize = 2;
+
+/// One generation of the bucket array (see `CacheHash`'s `Table`).
+struct CTable<K, V> {
+    buckets: Box<[CachePadded<AtomicUsize>]>,
+    stripes: Box<[CachePadded<std::sync::atomic::AtomicIsize>]>,
+    migrated: AtomicUsize,
+    _kv: PhantomData<(K, V)>,
+}
+
+impl<K: AtomicValue, V: AtomicValue> CTable<K, V> {
+    fn new(cap: usize) -> Self {
+        let nstripes = cap.div_ceil(OCCUPANCY_STRIPE).max(1);
+        Self {
+            buckets: (0..cap).map(|_| CachePadded::new(AtomicUsize::new(0))).collect(),
+            stripes: (0..nstripes)
+                .map(|_| CachePadded::new(std::sync::atomic::AtomicIsize::new(0)))
+                .collect(),
+            migrated: AtomicUsize::new(0),
+            _kv: PhantomData,
+        }
+    }
+
+    #[inline]
+    fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    #[inline]
+    fn bucket(&self, idx: usize) -> &AtomicUsize {
+        &self.buckets[idx]
+    }
+
+    #[inline]
+    fn stripe(&self, idx: usize) -> &std::sync::atomic::AtomicIsize {
+        &self.stripes[idx / OCCUPANCY_STRIPE]
+    }
+}
+
+/// Free a table and every chain still linked from its buckets
+/// (exclusive access — `Drop` only).
+unsafe fn drop_ctable<K: AtomicValue, V: AtomicValue>(ptr: *mut CTable<K, V>) {
+    // SAFETY: caller guarantees exclusivity.
+    let t = unsafe { Box::from_raw(ptr) };
+    for b in t.buckets.iter() {
+        let raw = b.load(Ordering::Relaxed);
+        let mut p = node_of::<K, V>(raw);
+        while !p.is_null() {
+            // SAFETY: exclusive in Drop.
+            let n = unsafe { Box::from_raw(p) };
+            p = n.next;
+        }
+    }
+}
+
 pub struct Chaining<K: AtomicValue = u64, V: AtomicValue = u64, S: RegionSmr = Epoch> {
-    buckets: Box<[CachePadded<AtomicPtr<Node<K, V>>>]>,
+    /// The live generation (see `CacheHash::root`).
+    root: AtomicPtr<CTable<K, V>>,
+    /// The migration descriptor, published via a big atomic.
+    resize: SeqLock<ResizeState>,
+    /// Completed growths.
+    generations: AtomicUsize,
     _smr: PhantomData<fn() -> S>,
 }
 
-// SAFETY: mutations via CAS on bucket heads; nodes immutable + region SMR.
+// SAFETY: mutations via CAS on bucket words; nodes immutable + region SMR.
 unsafe impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Send for Chaining<K, V, S> {}
 unsafe impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Sync for Chaining<K, V, S> {}
 
@@ -33,16 +125,36 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
     pub fn new(n: usize) -> Self {
         let cap = table_capacity(n);
         Self {
-            buckets: (0..cap)
-                .map(|_| CachePadded::new(AtomicPtr::new(std::ptr::null_mut())))
-                .collect(),
+            root: AtomicPtr::new(Box::into_raw(Box::new(CTable::new(cap)))),
+            resize: SeqLock::new(ResizeState::default()),
+            generations: AtomicUsize::new(0),
             _smr: PhantomData,
         }
     }
 
+    /// The live root table (callers must hold the region pin).
     #[inline]
-    fn bucket(&self, key: &K) -> &AtomicPtr<Node<K, V>> {
-        &self.buckets[bucket_for(key, self.buckets.len())]
+    fn root_table(&self) -> &CTable<K, V> {
+        // Ordering: ACQUIRE — pairs with the RELEASE root swing in
+        // `finish_resize` so the promoted table's contents are visible.
+        unsafe { &*self.root.load(P::ACQUIRE) }
+    }
+
+    /// The table a DONE mark in `t` forwards to (see
+    /// `CacheHash::table_after` for the full argument).
+    fn table_after(&self, t: &CTable<K, V>) -> &CTable<K, V> {
+        let rs = self.resize.load();
+        // Ordering: ACQUIRE — as in root_table.
+        let root = self.root.load(P::ACQUIRE);
+        let tp = t as *const CTable<K, V> as u64;
+        if rs.in_flight() && rs.old == root as u64 && rs.old == tp {
+            // SAFETY: descriptor matches the live root — `new` is the
+            // live destination, pin-protected.
+            unsafe { &*(rs.new as *const CTable<K, V>) }
+        } else {
+            // SAFETY: root is live under the caller's pin.
+            unsafe { &*root }
+        }
     }
 
     #[inline]
@@ -57,43 +169,364 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
         }
         None
     }
+
+    /// True while a migration descriptor is published.
+    pub fn resize_in_flight(&self) -> bool {
+        self.resize.load().in_flight()
+    }
+
+    /// Completed growths (old tables retired through `S`).
+    pub fn generation(&self) -> usize {
+        self.generations.load(Ordering::Acquire)
+    }
+
+    /// Drive any in-flight migration to completion (tests, maintenance).
+    pub fn finish_resizes(&self) {
+        let _g = S::pin();
+        let mut bo = None;
+        while self.resize.load().in_flight() {
+            self.help_resize();
+            snooze_lazy(&mut bo);
+        }
+    }
+
+    fn note_insert(&self, t: &CTable<K, V>, idx: usize) {
+        // Ordering: RELAXED — statistical estimate only.
+        let n = t.stripe(idx).fetch_add(1, P::RELAXED) + 1;
+        let span = OCCUPANCY_STRIPE.min(t.len());
+        if n > (span * GROW_LOAD_FACTOR) as isize {
+            self.try_begin_grow(t);
+        }
+    }
+
+    fn note_remove(&self, t: &CTable<K, V>, idx: usize) {
+        // Ordering: RELAXED — as in note_insert.
+        t.stripe(idx).fetch_sub(1, P::RELAXED);
+    }
+
+    /// Publish a double-size destination (see `CacheHash::try_begin_grow`
+    /// for the stale-descriptor argument). Requires the caller's pin.
+    fn try_begin_grow(&self, t: &CTable<K, V>) {
+        if self.resize.load().in_flight() {
+            return;
+        }
+        let tp = t as *const CTable<K, V> as *mut CTable<K, V>;
+        if self.root.load(P::ACQUIRE) != tp {
+            return;
+        }
+        let new: *mut CTable<K, V> = Box::into_raw(Box::new(CTable::new(t.len() * 2)));
+        let desc = ResizeState {
+            old: tp as u64,
+            new: new as u64,
+            cursor: 0,
+        };
+        if self.resize.compare_exchange(ResizeState::default(), desc).is_err() {
+            // SAFETY: never published.
+            drop(unsafe { Box::from_raw(new) });
+            return;
+        }
+        if self.root.load(P::ACQUIRE) != tp {
+            if self.resize.compare_exchange(desc, ResizeState::default()).is_ok() {
+                // SAFETY: unpublished again, never dereferenced.
+                drop(unsafe { Box::from_raw(new) });
+            }
+            return;
+        }
+        self.help_resize();
+    }
+
+    /// Claim and migrate one stripe (no-op when idle). Requires the pin.
+    fn help_resize(&self) {
+        let mut rs = self.resize.load();
+        if !rs.in_flight() {
+            return;
+        }
+        let root = self.root.load(P::ACQUIRE);
+        if rs.old != root as u64 {
+            return;
+        }
+        // SAFETY: old == root — live under the caller's pin.
+        let old = unsafe { &*root };
+        let len = old.len();
+        let (start, end) = loop {
+            if !rs.in_flight() || rs.old != root as u64 {
+                return;
+            }
+            let c = rs.cursor as usize;
+            if c >= len {
+                return;
+            }
+            let end = (c + MIGRATION_STRIPE).min(len);
+            match self.resize.compare_exchange(
+                rs,
+                ResizeState {
+                    cursor: end as u64,
+                    ..rs
+                },
+            ) {
+                Ok(_) => break (c, end),
+                Err(w) => rs = w,
+            }
+        };
+        // SAFETY: claimed descriptor matched the root.
+        let new = unsafe { &*(rs.new as *const CTable<K, V>) };
+        for idx in start..end {
+            self.migrate_bucket(old, idx, new);
+        }
+    }
+
+    /// Seal-and-copy one source bucket (see `CacheHash::migrate_bucket`).
+    fn migrate_bucket(&self, old: &CTable<K, V>, idx: usize, new: &CTable<K, V>) {
+        let bucket = old.bucket(idx);
+        // Ordering: ACQUIRE — the head is dereferenced during the copy.
+        let mut raw = bucket.load(P::ACQUIRE);
+        let mut bo = None;
+        loop {
+            if raw & FWD != 0 {
+                debug_assert_eq!(raw, FWD, "second copier on a frozen bucket");
+                return;
+            }
+            if raw == 0 {
+                // Empty source: seal straight to DONE.
+                // Ordering: RELEASE publishes the seal before any
+                // reader's fall-through; ACQUIRE failure — the witness
+                // is dereferenced on retry.
+                match bucket.compare_exchange(0, FWD, P::RELEASE, P::ACQUIRE) {
+                    Ok(_) => break,
+                    Err(w) => {
+                        raw = w;
+                        snooze_lazy(&mut bo);
+                    }
+                }
+                continue;
+            }
+            // Freeze the content (one-way: updates wait, finds read).
+            // Ordering: RELEASE / ACQUIRE as above.
+            match bucket.compare_exchange(raw, raw | FWD, P::RELEASE, P::ACQUIRE) {
+                Ok(_) => {
+                    let mut p = node_of::<K, V>(raw);
+                    while !p.is_null() {
+                        // SAFETY: frozen chain, region-pinned.
+                        let n = unsafe { &*p };
+                        self.copy_entry(new, n.key, n.value);
+                        p = n.next;
+                    }
+                    // Publish DONE — the generation-crossing point.
+                    // Ordering: RELEASE — the copies happen-before any
+                    // reader's fall-through to the destination.
+                    let done_ok = bucket
+                        .compare_exchange(raw | FWD, FWD, P::RELEASE, P::RELAXED)
+                        .is_ok();
+                    debug_assert!(done_ok, "frozen bucket mutated during copy");
+                    // Retire the drained chain through the region scheme.
+                    let mut p = node_of::<K, V>(raw);
+                    while !p.is_null() {
+                        // SAFETY: unlinked by the DONE transition;
+                        // lagging frozen-image readers are pinned.
+                        let nx = unsafe { (*p).next };
+                        unsafe { S::retire_box(p) };
+                        p = nx;
+                    }
+                    break;
+                }
+                Err(w) => {
+                    raw = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+        }
+        // Ordering: AcqRel — the finisher's promotion happens-after
+        // every copier's DONE publication.
+        if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
+            self.finish_resize(old);
+        }
+    }
+
+    /// Insert-if-absent into the destination (no growth trigger — the
+    /// descriptor is held; counters accumulate for the next cycle).
+    fn copy_entry(&self, new: &CTable<K, V>, key: K, value: V) {
+        let idx = bucket_for(&key, new.len());
+        let bucket = new.bucket(idx);
+        // Ordering: ACQUIRE — head dereferenced below.
+        let mut raw = bucket.load(P::ACQUIRE);
+        let mut node = Box::new(Node {
+            key,
+            value,
+            next: std::ptr::null_mut(),
+        });
+        let mut bo = None;
+        loop {
+            debug_assert_eq!(raw & FWD, 0, "destination sealed mid-migration");
+            let head = node_of::<K, V>(raw);
+            if Self::chain_find(head, &key).is_some() {
+                return; // idempotence insurance (drops `node`)
+            }
+            node.next = head;
+            let fresh = Box::into_raw(node);
+            // Ordering: RELEASE on success publishes the node's contents
+            // before its address; ACQUIRE on failure — the witness head
+            // is walked on retry.
+            match bucket.compare_exchange(raw, fresh as usize, P::RELEASE, P::ACQUIRE) {
+                Ok(_) => {
+                    // Ordering: RELAXED — estimate.
+                    new.stripe(idx).fetch_add(1, P::RELAXED);
+                    return;
+                }
+                Err(w) => {
+                    // SAFETY: never published.
+                    node = unsafe { Box::from_raw(fresh) };
+                    raw = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+        }
+    }
+
+    /// Promote the destination, clear the descriptor, retire the source
+    /// (run by the unique finishing copier).
+    fn finish_resize(&self, old: &CTable<K, V>) {
+        let rs = self.resize.load();
+        let op = old as *const CTable<K, V> as *mut CTable<K, V>;
+        debug_assert!(rs.in_flight() && rs.old == op as u64);
+        let new = rs.new as *mut CTable<K, V>;
+        // Ordering: ACQREL CAS — the release half publishes the fully
+        // populated destination to readers' ACQUIRE root loads.
+        let swung = self
+            .root
+            .compare_exchange(op, new, P::ACQREL, P::ACQUIRE)
+            .is_ok();
+        debug_assert!(swung, "root moved before the finisher");
+        let mut cur = rs;
+        while cur.in_flight() && cur.old == op as u64 {
+            match self.resize.compare_exchange(cur, ResizeState::default()) {
+                Ok(_) => break,
+                Err(w) => cur = w,
+            }
+        }
+        self.generations.fetch_add(1, Ordering::AcqRel);
+        // SAFETY: unlinked from the root and the descriptor; unique.
+        unsafe { S::retire_box(op) };
+    }
 }
 
 impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chaining<K, V, S> {
     fn find(&self, key: K) -> Option<V> {
         let _g = S::pin();
-        Self::chain_find(self.bucket(&key).load(Ordering::SeqCst), &key)
+        let mut t = self.root_table();
+        loop {
+            // Ordering: ACQUIRE — pairs with the RELEASE install CAS so
+            // node contents are visible before the walk; the pin (not
+            // this load) keeps the nodes alive.
+            let raw = t.bucket(bucket_for(&key, t.len())).load(P::ACQUIRE);
+            if raw == FWD {
+                // DONE: fall through old → new, lock-free.
+                t = self.table_after(t);
+                continue;
+            }
+            // FROZEN (`p|1`) reads its content in place — the frozen
+            // image is authoritative until the DONE transition.
+            return Self::chain_find(node_of::<K, V>(raw), &key);
+        }
     }
 
     fn insert(&self, key: K, value: V) -> bool {
+        let _g = S::pin();
+        // Updates pay the incremental-migration toll: one stripe.
+        self.help_resize();
+        let mut t = self.root_table();
+        let mut idx = bucket_for(&key, t.len());
+        let mut bucket = t.bucket(idx);
+        // Ordering: ACQUIRE — the head is dereferenced below.
+        let mut raw = bucket.load(P::ACQUIRE);
+        // The chain suffix already proven free of `key`: nodes are
+        // immutable after publish and region-pinned (no address reuse
+        // within this op), so pointer equality identifies the proven
+        // suffix and the retry walks only the new prefix.
+        let mut searched: *mut Node<K, V> = std::ptr::null_mut();
+        let mut have_searched = false;
+        // The spare box from a failed CAS is reused on retry.
+        let mut node: Option<Box<Node<K, V>>> = None;
+        let mut bo = None;
         loop {
-            let _g = S::pin();
-            let bucket = self.bucket(&key);
-            let head = bucket.load(Ordering::SeqCst);
-            if Self::chain_find(head, &key).is_some() {
-                return false;
+            if raw & FWD != 0 {
+                if raw != FWD {
+                    // FROZEN: the copier's window is chain-bounded.
+                    snooze_lazy(&mut bo);
+                    raw = bucket.load(P::ACQUIRE);
+                    continue;
+                }
+                // DONE: hop generations.
+                t = self.table_after(t);
+                idx = bucket_for(&key, t.len());
+                bucket = t.bucket(idx);
+                raw = bucket.load(P::ACQUIRE);
+                have_searched = false;
+                continue;
             }
-            let node = Box::into_raw(Box::new(Node {
-                key,
-                value,
-                next: head,
-            }));
-            if bucket
-                .compare_exchange(head, node, Ordering::SeqCst, Ordering::SeqCst)
-                .is_ok()
-            {
-                return true;
+            let head = node_of::<K, V>(raw);
+            // Duplicate check, skipping the already-proven suffix.
+            let mut p = head;
+            while !p.is_null() && !(have_searched && p == searched) {
+                // SAFETY: region-pinned traversal of immutable nodes.
+                let n = unsafe { &*p };
+                if n.key == key {
+                    return false;
+                }
+                p = n.next;
             }
-            // SAFETY: never published.
-            drop(unsafe { Box::from_raw(node) });
+            searched = head;
+            have_searched = true;
+            let mut b = node.take().unwrap_or_else(|| {
+                Box::new(Node {
+                    key,
+                    value,
+                    next: std::ptr::null_mut(),
+                })
+            });
+            b.next = head;
+            let fresh = Box::into_raw(b);
+            // Ordering: RELEASE on success publishes the node's contents
+            // before its address; ACQUIRE on failure — the witness head
+            // is walked on retry (no re-load).
+            match bucket.compare_exchange(raw, fresh as usize, P::RELEASE, P::ACQUIRE) {
+                Ok(_) => {
+                    self.note_insert(t, idx);
+                    return true;
+                }
+                Err(w) => {
+                    // SAFETY: never published.
+                    node = Some(unsafe { Box::from_raw(fresh) });
+                    raw = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
         }
     }
 
     fn remove(&self, key: K) -> bool {
+        let _g = S::pin();
+        // Updates pay the incremental-migration toll: one stripe.
+        self.help_resize();
+        let mut t = self.root_table();
+        let mut idx = bucket_for(&key, t.len());
+        let mut bucket = t.bucket(idx);
+        // Ordering: ACQUIRE — the head is dereferenced below.
+        let mut raw = bucket.load(P::ACQUIRE);
+        let mut bo = None;
         loop {
-            let _g = S::pin();
-            let bucket = self.bucket(&key);
-            let head = bucket.load(Ordering::SeqCst);
+            if raw & FWD != 0 {
+                if raw != FWD {
+                    snooze_lazy(&mut bo);
+                    raw = bucket.load(P::ACQUIRE);
+                    continue;
+                }
+                t = self.table_after(t);
+                idx = bucket_for(&key, t.len());
+                bucket = t.bucket(idx);
+                raw = bucket.load(P::ACQUIRE);
+                continue;
+            }
+            let head = node_of::<K, V>(raw);
             // Find the victim, collecting the prefix to path-copy.
             let mut prefix: Vec<(K, V)> = Vec::new();
             let mut p = head;
@@ -122,27 +555,33 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                     next: new_head,
                 }));
             }
-            if bucket
-                .compare_exchange(head, new_head, Ordering::SeqCst, Ordering::SeqCst)
-                .is_ok()
-            {
-                // SAFETY: victim + original prefix unlinked by the CAS.
-                unsafe {
-                    S::retire_box(victim);
-                    let mut q = head;
-                    while q != victim {
-                        let nx = (*q).next;
-                        S::retire_box(q);
-                        q = nx;
+            // Ordering: RELEASE on success publishes the path copies;
+            // ACQUIRE on failure — the witness head is walked on retry.
+            match bucket.compare_exchange(raw, new_head as usize, P::RELEASE, P::ACQUIRE) {
+                Ok(_) => {
+                    // SAFETY: victim + original prefix unlinked by the CAS.
+                    unsafe {
+                        S::retire_box(victim);
+                        let mut q = head;
+                        while q != victim {
+                            let nx = (*q).next;
+                            S::retire_box(q);
+                            q = nx;
+                        }
                     }
+                    self.note_remove(t, idx);
+                    return true;
                 }
-                return true;
-            }
-            let mut q = new_head;
-            while q != suffix {
-                // SAFETY: never published.
-                let b = unsafe { Box::from_raw(q) };
-                q = b.next;
+                Err(w) => {
+                    let mut q = new_head;
+                    while q != suffix {
+                        // SAFETY: never published.
+                        let b = unsafe { Box::from_raw(q) };
+                        q = b.next;
+                    }
+                    raw = w;
+                    snooze_lazy(&mut bo);
+                }
             }
         }
     }
@@ -150,17 +589,35 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
     fn map_name(&self) -> &'static str {
         "Chaining(no-inline)"
     }
+
+    fn capacity(&self) -> usize {
+        let _g = S::pin();
+        self.root_table().len()
+    }
+
+    fn occupancy(&self) -> usize {
+        let _g = S::pin();
+        self.root_table()
+            .stripes
+            .iter()
+            // Ordering: RELAXED — estimate.
+            .map(|s| s.load(P::RELAXED))
+            .sum::<isize>()
+            .max(0) as usize
+    }
 }
 
 impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Drop for Chaining<K, V, S> {
     fn drop(&mut self) {
-        for b in self.buckets.iter() {
-            let mut p = b.load(Ordering::Relaxed);
-            while !p.is_null() {
-                // SAFETY: exclusive in Drop.
-                let n = unsafe { Box::from_raw(p) };
-                p = n.next;
+        let root = *self.root.get_mut();
+        let rs = self.resize.load();
+        // Exclusive (&mut self) — see CacheHash::drop.
+        unsafe {
+            if rs.in_flight() {
+                debug_assert_eq!(rs.old, root as u64, "descriptor of a foreign root at drop");
+                drop_ctable(rs.new as *mut CTable<K, V>);
             }
+            drop_ctable(root);
         }
         S::flush_thread_bag();
     }
@@ -205,6 +662,27 @@ mod tests {
         for k in 0..50u64 {
             let want = if k % 2 == 0 { None } else { Some(k + 100) };
             assert_eq!(t.find(k), want);
+        }
+    }
+
+    #[test]
+    fn test_grow_from_tiny_capacity_single_thread() {
+        // Deterministic growth mirror of the CacheHash case: a
+        // capacity-2 baseline table absorbing 5k inserts must double
+        // repeatedly with no lost or duplicated keys.
+        let t: Chaining = Chaining::new(2);
+        assert_eq!(t.capacity(), 2);
+        for k in 0..5_000u64 {
+            assert!(t.insert(k, !k));
+        }
+        t.finish_resizes();
+        assert!(!t.resize_in_flight());
+        assert!(t.capacity() >= 1024, "capacity stuck at {}", t.capacity());
+        assert!(t.generation() >= 9, "only {} doublings", t.generation());
+        for k in 0..5_000u64 {
+            assert_eq!(t.find(k), Some(!k), "key {k}");
+            assert!(t.remove(k), "lost key {k}");
+            assert!(!t.remove(k), "duplicated key {k}");
         }
     }
 

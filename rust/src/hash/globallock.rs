@@ -41,6 +41,14 @@ impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for GlobalLockMap<K, V>
     fn map_name(&self) -> &'static str {
         "GlobalLock(floor)"
     }
+
+    fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().capacity()
+    }
+
+    fn occupancy(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
 }
 
 #[cfg(test)]

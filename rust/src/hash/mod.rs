@@ -10,6 +10,16 @@
 //! * [`ShardedLockMap`], [`GlobalLockMap`] — comparator stand-ins for the
 //!   §5.3 open-source tables (DESIGN.md §Substitutions).
 //!
+//! `CacheHash` and `Chaining` **grow online**: when a per-stripe
+//! occupancy estimate crosses the growth load factor, a double-size
+//! table is published through a [`ResizeState`] big atomic and updaters
+//! migrate the old buckets stripe by stripe (sealing each source bucket
+//! with a FORWARDED mark and re-hashing its inlined link plus chain into
+//! the destination), while `find` stays lock-free throughout — it reads
+//! sealed-but-uncopied buckets in place and falls through fully-migrated
+//! seal marks old→new.  Drained tables and migrated chain links are
+//! reclaimed through the epoch scheme (`S: RegionSmr`).
+//!
 //! All expose [`ConcurrentMap<K, V>`] for any
 //! [`AtomicValue`](crate::atomics::AtomicValue) key/value — `u64 → u64`
 //! (what §5.2 measures) is the default instantiation, and
@@ -52,6 +62,44 @@ pub trait ConcurrentMap<K: AtomicValue = u64, V: AtomicValue = u64>: Send + Sync
     fn remove(&self, key: K) -> bool;
     /// Implementation label for report rows.
     fn map_name(&self) -> &'static str;
+    /// Bucket count of the live table — grows across online resizes for
+    /// [`CacheHash`]/[`Chaining`], fixed for the lock-based stand-ins.
+    fn capacity(&self) -> usize;
+    /// Estimated live-entry count: the stripe-counter sum on the
+    /// lock-free tables (approximate under concurrent updates and
+    /// mid-migration), exact for the lock-based stand-ins.
+    fn occupancy(&self) -> usize;
+}
+
+/// Descriptor of an in-flight incremental table resize, published
+/// through a big atomic (the tables use a [`SeqLock`](crate::atomics::SeqLock)
+/// over it): the old (source) and new (destination) table addresses plus
+/// the stripe-claim cursor.  All-zero ⇔ idle.  Helpers claim migration
+/// stripes by advancing `cursor` with the witnessing
+/// `compare_exchange`; a descriptor is only acted on while `old` equals
+/// the map's live root table (a stale descriptor — possible in the
+/// publish/retract window of a lost growth race — matches no root and is
+/// therefore inert).
+#[repr(C, align(8))]
+#[derive(Copy, Clone, PartialEq, Default, Debug)]
+pub struct ResizeState {
+    /// Address of the table being drained (0 when idle).
+    pub old: u64,
+    /// Address of the destination table (0 when idle).
+    pub new: u64,
+    /// Next unclaimed source-bucket index.
+    pub cursor: u64,
+}
+
+// SAFETY: repr(C), three u64 words — no padding, align 8, bitwise Eq.
+unsafe impl AtomicValue for ResizeState {}
+
+impl ResizeState {
+    /// Is a migration in flight?
+    #[inline]
+    pub fn in_flight(&self) -> bool {
+        self.new != 0
+    }
 }
 
 /// Word-fold hash of any [`AtomicValue`]: mixes each 64-bit word of the

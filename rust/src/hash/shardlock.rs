@@ -57,6 +57,14 @@ impl<K: AtomicValue, V: AtomicValue> ConcurrentMap<K, V> for ShardedLockMap<K, V
     fn map_name(&self) -> &'static str {
         "ShardedLock(os-standin)"
     }
+
+    fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().capacity()).sum()
+    }
+
+    fn occupancy(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
 }
 
 #[cfg(test)]

@@ -4,7 +4,7 @@
 //! repro fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all   regenerate paper exhibits + ablations
 //!       [--panel u|z|n|w|p|ordering|smr] [--oversub] [--secs S] [--n N]
 //!       [--artifact] [--reports DIR]
-//! repro kv [--workers W] [--secs S] [--n N] [--u PCT] [--z Z] [--artifact]
+//! repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z] [--artifact]
 //! repro validate [--count C]        cross-check AOT artifact vs Rust generator
 //! repro smoke                       PJRT + artifact load check
 //! ```
@@ -28,6 +28,7 @@ struct Args {
     artifact: bool,
     reports: String,
     workers: usize,
+    cap: usize,
     update_pct: u32,
     theta: f64,
     count: usize,
@@ -43,6 +44,7 @@ fn parse_args() -> Result<Args> {
         artifact: false,
         reports: "reports".into(),
         workers: 4,
+        cap: 0,
         update_pct: 30,
         theta: 0.5,
         count: 1 << 14,
@@ -61,6 +63,7 @@ fn parse_args() -> Result<Args> {
             "--artifact" => args.artifact = true,
             "--reports" => args.reports = next("--reports")?,
             "--workers" => args.workers = next("--workers")?.parse()?,
+            "--cap" => args.cap = next("--cap")?.parse()?,
             "--u" => args.update_pct = next("--u")?.parse()?,
             "--z" => args.theta = next("--z")?.parse()?,
             "--count" => args.count = next("--count")?.parse()?,
@@ -85,16 +88,18 @@ repro — Big Atomics (Anderson, Blelloch, Jayanti 2025) reproduction
 
 USAGE:
   repro <fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all> [options]
-  repro kv [--workers W] [--secs S] [--n N] [--u PCT] [--z Z] [--artifact]
+  repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z] [--artifact]
   repro validate [--count C]
   repro smoke
 
 OPTIONS:
   --panel PANEL       figure panel (fig2: u|z|n|w|p|fu; fig3: u|z|n|wide;
-                      ablate: ordering|smr; default: all panels)
+                      ablate: ordering|smr|resize; default: all panels)
   --oversub           run the 4x-oversubscribed variant of the panel
   --secs S            seconds per measured point      [0.3]
   --n N               elements / key-space size       [65536]
+  --cap C             kv: initial table buckets (0 = sized for N; set
+                      small, e.g. 64, to exercise online growth)
   --artifact          generate op streams via the AOT HLO artifact
   --reports DIR       CSV output directory            [reports]
 ";
@@ -136,6 +141,7 @@ fn main() -> Result<()> {
                 update_pct: args.update_pct,
                 theta: args.theta,
                 seed: 0x4B56,
+                initial_capacity: args.cap,
             };
             let rep = kv_service::run(&cfg, rt.as_ref())?;
             println!(
@@ -147,6 +153,16 @@ fn main() -> Result<()> {
                 rep.inserts,
                 rep.deletes
             );
+            println!(
+                "kv workers: batches per worker {:?}, peak concurrent {}",
+                rep.worker_batches, rep.peak_concurrent_workers
+            );
+            if rep.final_buckets != rep.initial_buckets {
+                println!(
+                    "kv table grew online: {} -> {} buckets",
+                    rep.initial_buckets, rep.final_buckets
+                );
+            }
             if let Some(lat) = rep.latency {
                 println!("kv latency ({} batch samples): {}", rep.sample_count, lat);
             }

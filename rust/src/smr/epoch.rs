@@ -52,7 +52,7 @@ use std::marker::PhantomData;
 use std::sync::atomic::{fence, AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use super::{RegionSmr, Smr, SmrGuard};
+use super::{RegionSmr, RetireBag, Smr, SmrGuard};
 use crate::util::ordering::{DefaultPolicy, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::MAX_THREADS;
@@ -94,23 +94,10 @@ unsafe impl Send for Retired {}
 
 static ORPHANS: Mutex<Vec<Retired>> = Mutex::new(Vec::new());
 
-/// The per-thread bag, self-flushing: TLS destructor order is
-/// unspecified, so relying on the registry exit hook alone could run
-/// after this bag is already gone and leak its garbage — instead the
-/// bag's own destructor hands everything to the orphan list.
-struct LocalBag(RefCell<Vec<Retired>>);
-
-impl Drop for LocalBag {
-    fn drop(&mut self) {
-        let items = std::mem::take(&mut *self.0.borrow_mut());
-        if !items.is_empty() {
-            ORPHANS.lock().unwrap().extend(items);
-        }
-    }
-}
-
 thread_local! {
-    static BAG: LocalBag = const { LocalBag(RefCell::new(Vec::new())) };
+    // The shared self-flushing bag (smr::RetireBag): its own TLS
+    // destructor hands leftovers to ORPHANS in any destructor order.
+    static BAG: RetireBag<Retired> = RetireBag::new(&ORPHANS);
     static PIN_DEPTH: RefCell<usize> = const { RefCell::new(0) };
 }
 
@@ -188,13 +175,11 @@ impl<P: OrderingPolicy> Epoch<P> {
         // epoch in FREE_DISTANCE absorbs exactly that.
         let e = GLOBAL_EPOCH.load(P::ACQUIRE);
         let len = BAG.with(|b| {
-            let mut b = b.0.borrow_mut();
             b.push(Retired {
                 epoch: e,
                 ptr: ptr as usize,
                 drop_fn: dropper::<T>,
-            });
-            b.len()
+            })
         });
         if len >= ADVANCE_THRESHOLD {
             Self::try_advance_and_collect();
@@ -255,7 +240,7 @@ impl<P: OrderingPolicy> Epoch<P> {
                 }
             });
         };
-        let _ = BAG.try_with(|b| free(&mut b.0.borrow_mut()));
+        let _ = BAG.try_with(|b| b.with_items(&free));
         if let Ok(mut orphans) = ORPHANS.try_lock() {
             free(&mut orphans);
         }
@@ -385,12 +370,7 @@ pub fn global_epoch() -> u64 {
 /// borrowed threads). Thread *exit* needs no call: the bag's own TLS
 /// destructor performs the handoff regardless of destructor order.
 pub fn flush_thread_bag() {
-    let _ = BAG.try_with(|b| {
-        let mut b = b.0.borrow_mut();
-        if !b.is_empty() {
-            ORPHANS.lock().unwrap().append(&mut b);
-        }
-    });
+    let _ = BAG.try_with(|b| b.flush());
 }
 
 /// Registry hook: a thread is exiting; park its garbage on the orphan
@@ -405,7 +385,7 @@ pub(crate) fn on_thread_exit(t: usize) {
 
 /// Outstanding (retired, unfreed) node count — §5.5 memory census.
 pub fn pending_reclaims() -> usize {
-    let local = BAG.try_with(|b| b.0.borrow().len()).unwrap_or(0);
+    let local = BAG.try_with(|b| b.len()).unwrap_or(0);
     let orphaned = ORPHANS.try_lock().map(|o| o.len()).unwrap_or(0);
     local + orphaned
 }
@@ -497,6 +477,34 @@ mod tests {
         for _ in 0..4 {
             try_advance_and_collect();
         }
+    }
+
+    #[test]
+    fn test_retire_boxed_slice_defers_array_free() {
+        // Array retirement (resized tables' bucket arrays): the whole
+        // boxed slice must travel through the epoch deferral, each
+        // element dropped exactly once.
+        use std::sync::Arc;
+        let drops = Arc::new(AtomicUsize::new(0));
+        struct El(Arc<AtomicUsize>);
+        impl Drop for El {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        let slice: Box<[El]> = (0..10).map(|_| El(Arc::clone(&drops))).collect();
+        unsafe { <Epoch as Smr>::retire_boxed_slice(slice) };
+        for _ in 0..10_000 {
+            try_advance_and_collect();
+            if drops.load(Ordering::Acquire) == 10 {
+                return;
+            }
+            std::thread::yield_now();
+        }
+        panic!(
+            "retired slice never fully freed ({}/10)",
+            drops.load(Ordering::Acquire)
+        );
     }
 
     #[test]

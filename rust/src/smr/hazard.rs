@@ -1,9 +1,11 @@
 //! Hazard pointers (Michael, 2004) — the paper's SMR for indirect nodes.
 //!
 //! A single process-wide domain: a fixed announcement array with
-//! [`SLOTS_PER_THREAD`] slots per registered thread, per-thread retire
-//! lists with threshold-triggered scans, and an orphan list absorbing the
-//! garbage of exiting threads.
+//! [`SLOTS_PER_THREAD`] slots per registered thread (plus a grow-only
+//! overflow list for guard nesting beyond the fixed budget — see
+//! [`HazardPointer::new`]), per-thread retire lists with
+//! threshold-triggered scans, and an orphan list absorbing the garbage
+//! of exiting threads.
 //!
 //! The paper's fast path (§3.1) never dereferences the backup pointer, so
 //! loads that hit the cache never touch this module; only slow-path reads
@@ -53,11 +55,11 @@
 //! are visible before any free), and slot clears are `RELEASE` (the
 //! protected reads happen-before the slot release).
 
-use std::cell::{Cell, RefCell};
-use std::sync::atomic::{fence, AtomicPtr, AtomicUsize, Ordering};
+use std::cell::Cell;
+use std::sync::atomic::{fence, AtomicBool, AtomicPtr, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use super::{Smr, SmrGuard};
+use super::{RetireBag, Smr, SmrGuard};
 use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::MAX_THREADS;
@@ -92,21 +94,6 @@ unsafe impl Send for Retired {}
 
 static ORPHANS: Mutex<Vec<Retired>> = Mutex::new(Vec::new());
 
-/// The per-thread retire list, self-flushing: TLS destructor order is
-/// unspecified, so relying on the registry exit hook alone could run
-/// after this list is already gone and leak its garbage — instead the
-/// list's own destructor hands everything to the orphan list.
-struct RetireList(RefCell<Vec<Retired>>);
-
-impl Drop for RetireList {
-    fn drop(&mut self) {
-        let items = std::mem::take(&mut *self.0.borrow_mut());
-        if !items.is_empty() {
-            ORPHANS.lock().unwrap().extend(items);
-        }
-    }
-}
-
 /// The per-thread slot cache: base index into [`SLOTS`] plus the in-use
 /// bitmap, resolved through a *single* TLS access per guard acquisition.
 struct SlotCache {
@@ -115,13 +102,92 @@ struct SlotCache {
 }
 
 thread_local! {
-    static RETIRED: RetireList = const { RetireList(RefCell::new(Vec::new())) };
+    // The shared self-flushing bag (smr::RetireBag): its own TLS
+    // destructor hands leftovers to ORPHANS in any destructor order.
+    static RETIRED: RetireBag<Retired> = RetireBag::new(&ORPHANS);
     // One TLS struct for the whole claim path (tid is resolved once, at
     // first use, not per operation).
     static SLOT_CACHE: SlotCache = SlotCache {
         base: tid() * SLOTS_PER_THREAD,
         bitmap: Cell::new(0),
     };
+}
+
+/// Overflow hazard slot: leased when a thread's [`SLOTS_PER_THREAD`]
+/// fixed slots are all held (nesting deeper than the fixed budget
+/// anticipated).  Nodes live on a grow-only lock-free list — allocated
+/// once, leaked, and recycled through `in_use` — so the list's length is
+/// the high-water mark of simultaneous overflow guards, and reclaimers
+/// scan it exactly like the fixed array.
+struct OverflowSlot {
+    cell: AtomicUsize,
+    in_use: AtomicBool,
+    next: *const OverflowSlot,
+}
+
+// SAFETY: shared state is the two atomics; `next` is written only before
+// the node is published and immutable afterwards.
+unsafe impl Send for OverflowSlot {}
+unsafe impl Sync for OverflowSlot {}
+
+static OVERFLOW_HEAD: AtomicPtr<OverflowSlot> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Lease an overflow slot: recycle a free node or publish a fresh one.
+fn acquire_overflow_slot() -> &'static OverflowSlot {
+    // Ordering: ACQUIRE — pairs with the RELEASE push below so a node's
+    // initialized fields (and its `next` chain) are visible.
+    let mut p = OVERFLOW_HEAD.load(P::ACQUIRE);
+    while !p.is_null() {
+        // SAFETY: overflow nodes are leaked — 'static once published.
+        let s = unsafe { &*p };
+        // Ordering: RELAXED probe + ACQUIRE claim-CAS — the claim pairs
+        // with the RELEASE lease-return in HazardPointer::drop, so the
+        // previous holder's slot clear is visible before reuse.
+        if !s.in_use.load(P::RELAXED)
+            && s.in_use
+                .compare_exchange(false, true, P::ACQUIRE, P::RELAXED)
+                .is_ok()
+        {
+            return s;
+        }
+        p = s.next as *mut OverflowSlot;
+    }
+    let raw = Box::into_raw(Box::new(OverflowSlot {
+        cell: AtomicUsize::new(0),
+        in_use: AtomicBool::new(true),
+        next: std::ptr::null(),
+    }));
+    // Ordering: RELAXED initial read + RELEASE publish-CAS (the node's
+    // fields happen-before its address); RELAXED on failure — we only
+    // re-link and retry.
+    let mut head = OVERFLOW_HEAD.load(P::RELAXED);
+    loop {
+        // SAFETY: not yet published — exclusive.
+        unsafe { (*raw).next = head };
+        match OVERFLOW_HEAD.compare_exchange(head, raw, P::RELEASE, P::RELAXED) {
+            // SAFETY: leaked — 'static.
+            Ok(_) => return unsafe { &*raw },
+            Err(h) => head = h,
+        }
+    }
+}
+
+/// Append every announced overflow address to `protected` (the overflow
+/// leg of the reclaimers' announcement scans).
+fn collect_overflow(protected: &mut Vec<usize>) {
+    // Ordering: ACQUIRE — as in acquire_overflow_slot.
+    let mut p = OVERFLOW_HEAD.load(P::ACQUIRE);
+    while !p.is_null() {
+        // SAFETY: leaked nodes.
+        let s = unsafe { &*p };
+        // Ordering: ACQUIRE — pairs with the RELEASE clear, as for the
+        // fixed slots in `scan`.
+        let v = s.cell.load(P::ACQUIRE);
+        if v != 0 {
+            protected.push(v);
+        }
+        p = s.next as *mut OverflowSlot;
+    }
 }
 
 const SLOT_MASK: u8 = (1 << SLOTS_PER_THREAD) - 1;
@@ -131,7 +197,10 @@ const SLOT_MASK: u8 = (1 << SLOTS_PER_THREAD) - 1;
 /// thread's cached slot set — see the module docs.
 pub struct HazardPointer {
     slot: &'static AtomicUsize,
+    /// Fixed-slot bitmap bit; 0 for an overflow lease.
     bit: u8,
+    /// The overflow node's recycle flag (`None` for fixed slots).
+    lease: Option<&'static AtomicBool>,
 }
 
 /// Alias emphasizing the cached-slot acquisition path.
@@ -141,21 +210,30 @@ impl HazardPointer {
     /// Claim one of this thread's hazard slots (one TLS access + a
     /// trailing-zeros pick — no bitmap walk).
     ///
-    /// Panics if all [`SLOTS_PER_THREAD`] slots are in use (a structural
-    /// bug — operations hold at most a constant number).
+    /// When all [`SLOTS_PER_THREAD`] fixed slots are held, the guard
+    /// spills to a registry-tracked overflow slot (scanned by the
+    /// reclaimers like the fixed array) instead of panicking, so
+    /// unusually deep guard nesting degrades to a slower claim rather
+    /// than aborting the process.
     #[inline]
     pub fn new() -> Self {
         SLOT_CACHE.with(|c| {
             let bm = c.bitmap.get();
             let free = !bm & SLOT_MASK;
             if free == 0 {
-                panic!("all {SLOTS_PER_THREAD} hazard slots of this thread in use");
+                let s = acquire_overflow_slot();
+                return HazardPointer {
+                    slot: &s.cell,
+                    bit: 0,
+                    lease: Some(&s.in_use),
+                };
             }
             let j = free.trailing_zeros() as usize;
             c.bitmap.set(bm | (1 << j));
             HazardPointer {
                 slot: &SLOTS[c.base + j],
                 bit: 1 << j,
+                lease: None,
             }
         })
     }
@@ -296,7 +374,14 @@ impl Drop for HazardPointer {
         // Ordering: RELEASE — as in `clear`: protected reads
         // happen-before a scanner observes the slot free.
         self.slot.store(0, P::RELEASE);
-        let _ = SLOT_CACHE.try_with(|c| c.bitmap.set(c.bitmap.get() & !self.bit));
+        match self.lease {
+            // Ordering: RELEASE — the slot clear above happens-before
+            // the next lessee's ACQUIRE claim sees the node free.
+            Some(flag) => flag.store(false, P::RELEASE),
+            None => {
+                let _ = SLOT_CACHE.try_with(|c| c.bitmap.set(c.bitmap.get() & !self.bit));
+            }
+        }
     }
 }
 
@@ -315,11 +400,7 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
         ptr: ptr as usize,
         drop_fn: dropper::<T>,
     };
-    let len = RETIRED.with(|r| {
-        let mut r = r.0.borrow_mut();
-        r.push(item);
-        r.len()
-    });
+    let len = RETIRED.with(|r| r.push(item));
     if len >= RETIRE_THRESHOLD {
         scan();
     }
@@ -344,6 +425,7 @@ pub fn scan() {
         .map(|s| s.load(P::ACQUIRE))
         .filter(|&p| p != 0)
         .collect();
+    collect_overflow(&mut protected);
     protected.sort_unstable();
 
     let free = |list: &mut Vec<Retired>| {
@@ -362,7 +444,7 @@ pub fn scan() {
         *list = kept;
     };
 
-    let _ = RETIRED.try_with(|r| free(&mut r.0.borrow_mut()));
+    let _ = RETIRED.try_with(|r| r.with_items(&free));
     if let Ok(mut orphans) = ORPHANS.try_lock() {
         free(&mut orphans);
     }
@@ -385,6 +467,7 @@ pub fn protected_snapshot(buf: &mut Vec<usize>) {
             buf.push(p);
         }
     }
+    collect_overflow(buf);
 }
 
 /// Hand this thread's retire list to the process-wide orphan list now
@@ -392,12 +475,7 @@ pub fn protected_snapshot(buf: &mut Vec<usize>) {
 /// list's own TLS destructor performs the handoff regardless of
 /// destructor order.
 pub fn flush_thread_bag() {
-    let _ = RETIRED.try_with(|r| {
-        let mut r = r.0.borrow_mut();
-        if !r.is_empty() {
-            ORPHANS.lock().unwrap().append(&mut r);
-        }
-    });
+    let _ = RETIRED.try_with(|r| r.flush());
 }
 
 /// Registry hook: a thread is exiting; park its garbage on the orphan
@@ -414,7 +492,7 @@ pub(crate) fn on_thread_exit(t: usize) {
 /// Number of retired-but-not-yet-freed nodes owned by this thread
 /// (plus orphans if the lock is free) — used by the §5.5 memory census.
 pub fn pending_reclaims() -> usize {
-    let local = RETIRED.try_with(|r| r.0.borrow().len()).unwrap_or(0);
+    let local = RETIRED.try_with(|r| r.len()).unwrap_or(0);
     let orphaned = ORPHANS.try_lock().map(|o| o.len()).unwrap_or(0);
     local + orphaned
 }
@@ -524,6 +602,48 @@ mod tests {
             h.join().unwrap();
         }
         unsafe { retire_box(src.load(Ordering::SeqCst)) };
+    }
+
+    #[test]
+    fn test_overflow_slots_beyond_fixed_budget() {
+        // Regression: the seed panicked when a thread's slot bitmap was
+        // full. Over-acquiring must spill to overflow slots that protect
+        // exactly like fixed ones and are recycled after release.
+        struct LocalCounted(Arc<AU>);
+        impl Drop for LocalCounted {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::AcqRel);
+            }
+        }
+        let drops = Arc::new(AU::new(0));
+        let guards: Vec<HazardPointer> = (0..SLOTS_PER_THREAD + 2)
+            .map(|_| HazardPointer::new())
+            .collect();
+        // The last two guards hold overflow leases.
+        assert!(guards[SLOTS_PER_THREAD].lease.is_some());
+        assert!(guards[SLOTS_PER_THREAD + 1].lease.is_some());
+        // An overflow guard's announcement shows up in snapshots...
+        let node = Box::into_raw(Box::new(LocalCounted(Arc::clone(&drops))));
+        let src = AtomicPtr::new(node);
+        let h = guards.last().unwrap();
+        let p = h.protect(&src);
+        let mut buf = Vec::new();
+        protected_snapshot(&mut buf);
+        assert!(buf.contains(&(p as usize)));
+        // ...and protects against the scan.
+        src.store(std::ptr::null_mut(), Ordering::SeqCst);
+        unsafe { retire_box(p) };
+        scan();
+        assert_eq!(drops.load(Ordering::Acquire), 0, "freed while protected");
+        drop(guards);
+        scan();
+        assert_eq!(drops.load(Ordering::Acquire), 1, "not freed after release");
+        // Released leases are recycled — a second over-acquisition must
+        // reuse the leaked nodes, not panic.
+        let again: Vec<HazardPointer> = (0..SLOTS_PER_THREAD + 2)
+            .map(|_| HazardPointer::new())
+            .collect();
+        assert!(again.last().unwrap().lease.is_some());
     }
 
     #[test]

@@ -79,7 +79,64 @@ pub mod hazard;
 pub use epoch::Epoch;
 pub use hazard::Hazard;
 
+use std::cell::RefCell;
 use std::sync::atomic::AtomicPtr;
+use std::sync::Mutex;
+
+/// The self-flushing per-thread retire bag both schemes share (one
+/// generic instead of the former `epoch::LocalBag` / `hazard::RetireList`
+/// twins): TLS destructor order is unspecified, so relying on the
+/// registry exit hook alone could run after the bag is already gone and
+/// leak its garbage — instead the bag's own destructor hands everything
+/// to the scheme's orphan list.
+pub(crate) struct RetireBag<T: 'static> {
+    items: RefCell<Vec<T>>,
+    orphans: &'static Mutex<Vec<T>>,
+}
+
+impl<T: 'static> RetireBag<T> {
+    pub(crate) fn new(orphans: &'static Mutex<Vec<T>>) -> Self {
+        Self {
+            items: RefCell::new(Vec::new()),
+            orphans,
+        }
+    }
+
+    /// Append one retired item; returns the bag length (the schemes'
+    /// collection-threshold check).
+    pub(crate) fn push(&self, item: T) -> usize {
+        let mut items = self.items.borrow_mut();
+        items.push(item);
+        items.len()
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.items.borrow().len()
+    }
+
+    /// Run a scheme's free pass over the bag's contents in place.
+    pub(crate) fn with_items<R>(&self, f: impl FnOnce(&mut Vec<T>) -> R) -> R {
+        f(&mut self.items.borrow_mut())
+    }
+
+    /// Hand everything to the orphan list now (table drops on borrowed
+    /// threads); thread exit needs no call — `Drop` below covers it.
+    pub(crate) fn flush(&self) {
+        let mut items = self.items.borrow_mut();
+        if !items.is_empty() {
+            self.orphans.lock().unwrap().append(&mut items);
+        }
+    }
+}
+
+impl<T: 'static> Drop for RetireBag<T> {
+    fn drop(&mut self) {
+        let items = std::mem::take(&mut *self.items.borrow_mut());
+        if !items.is_empty() {
+            self.orphans.lock().unwrap().extend(items);
+        }
+    }
+}
 
 /// A pinned guard's protection interface.
 ///
@@ -123,6 +180,44 @@ pub trait Smr: Send + Sync + 'static {
     /// references may be created after retirement (only readers that
     /// protected it before the unlink may still dereference it).
     unsafe fn retire_box<T>(ptr: *mut T);
+
+    /// Defer-destroy a boxed slice (array retirement — how a resized
+    /// hash table's drained bucket array travels to the allocator).
+    ///
+    /// `Box<[T]>` is a fat pointer, which [`retire_box`](Self::retire_box)'s
+    /// thin-pointer `drop_fn` cannot carry; a small heap holder
+    /// re-fattens the pointer at free time, so the slice inherits the
+    /// scheme's full deferral guarantee.
+    ///
+    /// # Safety
+    /// Same contract as [`retire_box`](Self::retire_box): the slice must
+    /// be unlinked, and only readers that protected it (or, under a
+    /// region scheme, pinned) before the unlink may still reference it.
+    unsafe fn retire_boxed_slice<T>(slice: Box<[T]>)
+    where
+        Self: Sized,
+    {
+        struct FatBox<T> {
+            ptr: *mut T,
+            len: usize,
+        }
+        impl<T> Drop for FatBox<T> {
+            fn drop(&mut self) {
+                // SAFETY: (ptr, len) came from Box::<[T]>::into_raw
+                // below; the retire contract runs this exactly once.
+                unsafe {
+                    drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(
+                        self.ptr, self.len,
+                    )))
+                }
+            }
+        }
+        let len = slice.len();
+        let ptr = Box::into_raw(slice) as *mut T;
+        // SAFETY: fresh unique holder; the slice's own safety is the
+        // caller's contract.
+        unsafe { Self::retire_box(Box::into_raw(Box::new(FatBox { ptr, len }))) }
+    }
 
     /// Attempt to reclaim retired allocations now (hazard: scan; epoch:
     /// advance + free sufficiently old bags).

@@ -222,7 +222,7 @@ fn test_driver_all_impls_under_oversubscription() {
         seed: 77,
     };
     for imp in AtomicImpl::ALL {
-        let r = run_atomics(imp, 3, &spec, 8, Duration::from_millis(60), &OpSource::Rust);
+        let r = run_atomics(imp, 3, &spec, 8, Duration::from_millis(60), &OpSource::Rust).unwrap();
         assert!(
             r.total_ops > 500,
             "{} made no progress oversubscribed: {} ops",
@@ -282,7 +282,8 @@ fn test_driver_wide_map_and_fetch_update_workloads() {
         3,
         Duration::from_millis(40),
         &OpSource::Rust,
-    );
+    )
+    .unwrap();
     assert!(r.total_ops > 100, "fetch_update: {} ops", r.total_ops);
 }
 

@@ -26,7 +26,7 @@ use big_atomics::atomics::{
     BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
     SimpLock, Words,
 };
-use big_atomics::hash::{CacheHash, ConcurrentMap, Link};
+use big_atomics::hash::{CacheHash, Chaining, ConcurrentMap, Link};
 
 const K: usize = 4;
 type V = Words<K>;
@@ -329,6 +329,162 @@ fn test_wide_map_same_key_accounting() {
     let rem = removes.load(Ordering::SeqCst);
     let present = t.find(key).is_some() as u64;
     assert_eq!(ins, rem + present, "ins={ins} rem={rem} present={present}");
+}
+
+// ---------------------------------------------------------------------
+// Online-resize linearizability (the resize PR's tentpole): concurrent
+// insert/find/remove racing the stripe migration must lose nothing,
+// duplicate nothing, and never surface a foreign value — across many
+// doublings from a deliberately tiny table.
+// ---------------------------------------------------------------------
+
+/// The acceptance bar: a capacity-64 `CacheHash` absorbs 100k concurrent
+/// inserts (plus find/remove churn racing the migration) and still
+/// answers every `find` correctly during and after the growth, with no
+/// lost or duplicated keys after ~10 doublings.
+#[test]
+fn test_cachehash_resize_100k_inserts_from_capacity_64() {
+    let t: Arc<CacheHash<CachedMemEff<Link<u64, u64>>>> = Arc::new(CacheHash::new(64));
+    assert_eq!(t.capacity(), 64);
+    let threads = 4u64;
+    let per = 25_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = tix * per;
+                for i in 0..per {
+                    let k = base + i;
+                    assert!(t.insert(k, k.wrapping_mul(7) ^ 0xA5), "lost insert {k}");
+                    // Reads racing migration: earlier keys of this
+                    // thread must stay visible with their exact values.
+                    if i % 17 == 0 {
+                        let probe = base + i / 2;
+                        assert_eq!(
+                            t.find(probe),
+                            Some(probe.wrapping_mul(7) ^ 0xA5),
+                            "stale/foreign read of {probe} mid-growth"
+                        );
+                    }
+                    // Remove/re-insert churn exercises seal-vs-update
+                    // races on both generations.
+                    if i % 13 == 3 {
+                        assert!(t.remove(k), "remove lost {k}");
+                        assert!(t.insert(k, k.wrapping_mul(7) ^ 0xA5), "re-insert lost {k}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t.finish_resizes();
+    assert!(!t.resize_in_flight());
+    assert!(
+        t.capacity() >= 8192,
+        "100k keys left capacity at {}",
+        t.capacity()
+    );
+    assert!(t.generation() >= 7, "only {} doublings", t.generation());
+    // Nothing lost, nothing duplicated: every key present exactly once.
+    for k in 0..threads * per {
+        assert_eq!(t.find(k), Some(k.wrapping_mul(7) ^ 0xA5), "key {k}");
+    }
+    for k in (0..threads * per).step_by(97) {
+        assert!(t.remove(k), "key {k} vanished");
+        assert!(!t.remove(k), "key {k} was duplicated across generations");
+        assert_eq!(t.find(k), None);
+    }
+}
+
+/// Checksummed `Words<4>` values across a forced grow: a reader thread
+/// validates every observed value against its key-derived checksum while
+/// writers push the wide table through repeated doublings (a torn or
+/// cross-generation-mixed value fails the checksum).
+#[test]
+fn test_wide_resize_checksummed_values_under_growth() {
+    fn wval(i: u64) -> WK {
+        Words([i, i.wrapping_mul(0x9E3779B97F4A7C15), !i, i ^ 0xC0FFEE])
+    }
+    let t: Arc<CacheHash<CachedMemEff<Link<WK, WK>>, WK, WK>> = Arc::new(CacheHash::new(4));
+    let per = 4_000u64;
+    let stop = Arc::new(AtomicU64::new(0));
+    let mut handles = Vec::new();
+    for tix in 0..2u64 {
+        let t = Arc::clone(&t);
+        handles.push(std::thread::spawn(move || {
+            let base = (tix + 1) << 32;
+            for i in 0..per {
+                assert!(t.insert(wkey(base + i), wval(base + i)));
+            }
+        }));
+    }
+    {
+        let t = Arc::clone(&t);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut probes = 0u64;
+            while stop.load(Ordering::Acquire) == 0 {
+                for tix in 0..2u64 {
+                    let base = (tix + 1) << 32;
+                    let i = probes % per;
+                    if let Some(v) = t.find(wkey(base + i)) {
+                        assert_eq!(v, wval(base + i), "checksum broke mid-growth");
+                    }
+                    probes += 1;
+                }
+            }
+        }));
+    }
+    for h in handles.drain(..2) {
+        h.join().unwrap();
+    }
+    stop.store(1, Ordering::Release);
+    for h in handles {
+        h.join().unwrap();
+    }
+    t.finish_resizes();
+    assert!(t.capacity() > 4, "wide table never grew");
+    for tix in 0..2u64 {
+        let base = (tix + 1) << 32;
+        for i in 0..per {
+            assert_eq!(t.find(wkey(base + i)), Some(wval(base + i)));
+        }
+    }
+}
+
+/// The no-inline baseline grows through the same protocol: concurrent
+/// mixed ops from a capacity-16 `Chaining` table.
+#[test]
+fn test_chaining_resize_concurrent_mixed() {
+    let t: Arc<Chaining> = Arc::new(Chaining::new(16));
+    let threads = 4u64;
+    let per = 5_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = tix * 1_000_000;
+                for i in 0..per {
+                    assert!(t.insert(base + i, i ^ 0x33));
+                    if i % 3 == 0 {
+                        assert!(t.remove(base + i));
+                    }
+                }
+                for i in 0..per {
+                    let want = if i % 3 == 0 { None } else { Some(i ^ 0x33) };
+                    assert_eq!(t.find(base + i), want, "key {}", base + i);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t.finish_resizes();
+    assert!(t.capacity() > 16, "chaining table never grew");
+    assert!(t.generation() >= 1);
 }
 
 /// Stores interleaved with CASes: the writable implementations must keep

@@ -80,7 +80,8 @@ fn test_artifact_driven_benchmark_runs() {
         2,
         std::time::Duration::from_millis(50),
         &OpSource::Artifact(&engine),
-    );
+    )
+    .unwrap();
     assert!(r.total_ops > 1000, "{} ops", r.total_ops);
 }
 
