@@ -586,11 +586,13 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> CachedMemEff<T, P, S> {
                         return; // consistency restored by someone else
                     }
                     // Help the newer writer: protect + read their value
-                    // and loop to cache it.
+                    // and loop to cache it. One bump per helped writer —
+                    // the counter is a help-chain-length proxy.
                     let raw2 = self.protect_backup(g);
                     if is_null(raw2) {
                         return;
                     }
+                    crate::counter!(HelpRecache);
                     desired = Self::node_value(raw2);
                     raw_p = raw2;
                 }
@@ -623,9 +625,11 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedMemEff<T,
         fence(P::FENCE_ACQUIRE);
         // Ordering: RELAXED — ordered by the fence above.
         if is_null(raw) && ver == self.version.load(P::RELAXED) {
+            crate::counter!(FastPathHit);
             return val; // fast path: no indirection, no SMR
         }
         // Lock-free slow path: each retry implies an update completed.
+        crate::counter!(FastPathMiss);
         let g = S::pin();
         let mut bo = Backoff::new();
         loop {
@@ -677,6 +681,7 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedMemEff<T,
                 // update is mid-flight (global progress); back off and
                 // retry for a definite witness.
                 Tli::Fail => {
+                    crate::counter!(CasRetry);
                     snooze_lazy(&mut bo);
                     continue;
                 }
@@ -703,6 +708,7 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedMemEff<T,
                 .compare_exchange(raw, new_raw, P::RELEASE, P::RELAXED)
             {
                 Ok(_) => {
+                    crate::counter!(SlowPathInstall);
                     if !is_null(raw) {
                         // SAFETY: protected node unlinked by our install
                         // CAS; stamp + uninstall signal for its owner.
@@ -712,6 +718,7 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedMemEff<T,
                     return Ok(val);
                 }
                 Err(_) => {
+                    crate::counter!(CasRetry);
                     // A competing update won the install (or cached our
                     // node's predecessor and nulled the backup). Return
                     // the node, back off (the line is hot — Dice et al.)

@@ -130,10 +130,12 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<
         // Ordering: RELAXED — ordered by the fence above.
         if !is_marked(raw) && ver == self.version.load(P::RELAXED) {
             // Fast path: cache was valid and untouched through the window.
+            crate::counter!(FastPathHit);
             return val;
         }
         // Slow path: one protected indirect read. The backup always holds
         // the current value, so no loop — wait-free.
+        crate::counter!(FastPathMiss);
         let g = S::pin();
         let raw = self.protect_backup(&g);
         Self::node_value(raw)
@@ -213,6 +215,7 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<
         if !installed {
             // CAS failed: the value changed (linearize at the competing
             // update). The node was never published.
+            crate::counter!(CasRetry);
             // SAFETY: unpublished, uniquely owned.
             drop(unsafe { Box::from_raw(new_node) });
             // Witness: one protected read of the node the winner
@@ -225,6 +228,7 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<
 
         // Linearized at the install. Retire the old node (still
         // guard-protected by us, so it outlives this call).
+        crate::counter!(SlowPathInstall);
         // SAFETY: unlinked by the successful install.
         unsafe { S::retire_box(unmark(raw) as *mut Node<T>) };
 
@@ -254,12 +258,15 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<
             // version happen-before the unmarked pointer a fast-path
             // reader pairs with them; RELAXED on failure (a newer
             // update owns the cache now).
-            let _ = self.backup.compare_exchange(
-                new_marked,
-                unmark(new_marked),
-                P::RELEASE,
-                P::RELAXED,
-            );
+            let validated = self
+                .backup
+                .compare_exchange(new_marked, unmark(new_marked), P::RELEASE, P::RELAXED)
+                .is_ok();
+            if validated {
+                // The cache copy revalidated the pointer — the re-cache
+                // half of the §3.1 help protocol.
+                crate::counter!(HelpRecache);
+            }
         }
         // If validation was skipped/failed the cache stays invalid until
         // a later uncontended CAS validates — permitted by the invariants.

@@ -95,7 +95,8 @@ impl<T: AtomicValue, S: Smr> CachedWritable<T, S> {
         let w_mark = (wr & MARK) as u64;
         if z.mark != w_mark {
             // Pending: move W's value into Z and re-match the marks.
-            self.z
+            let transferred = self
+                .z
                 .compare_exchange(
                     z,
                     ZVal {
@@ -104,7 +105,13 @@ impl<T: AtomicValue, S: Smr> CachedWritable<T, S> {
                         mark: w_mark,
                     },
                 )
-                .is_ok()
+                .is_ok();
+            if transferred {
+                // A buffered store landed via the §3.3 help protocol
+                // (by its owner or a helper — both count).
+                crate::counter!(HelpWrite);
+            }
+            transferred
         } else {
             true
         }
@@ -197,7 +204,10 @@ impl<T: AtomicValue, S: Smr> BigAtomic<T> for CachedWritable<T, S> {
                 },
             ) {
                 Ok(_) => return Ok(expected),
-                Err(w) => z = w,
+                Err(w) => {
+                    crate::counter!(CasRetry);
+                    z = w;
+                }
             }
             // Failure may be a same-value transfer bumping seq; Z.value
             // can have stayed == expected at most once (§3.3), so retry

@@ -155,6 +155,7 @@ impl<T: AtomicValue> HtmSim<T> {
         let mut bo = None;
         for _ in 0..MAX_TX_RETRIES {
             let Some(v) = self.tx_begin() else {
+                crate::counter!(TxRetry);
                 snooze_lazy(&mut bo);
                 continue;
             };
@@ -162,6 +163,7 @@ impl<T: AtomicValue> HtmSim<T> {
                 // compare_exchange_weak-style failure: no conflict, but
                 // the attempt dies anyway (interrupt/capacity in real
                 // RTM). Costs one backoff step like any abort.
+                crate::counter!(TxRetry);
                 snooze_lazy(&mut bo);
                 continue;
             }
@@ -190,6 +192,7 @@ impl<T: AtomicValue> HtmSim<T> {
                             // but the even version must not be reordered
                             // before the CAS above.
                             self.version.store(v, P::RELEASE);
+                            crate::counter!(TxRetry);
                             snooze_lazy(&mut bo);
                             continue;
                         }
@@ -208,9 +211,11 @@ impl<T: AtomicValue> HtmSim<T> {
             // Abort: back off before retrying (Dice et al. — the seed
             // retried bare, which is RTM-faithful but collapses under
             // contention; disable backoff to measure that).
+            crate::counter!(TxRetry);
             snooze_lazy(&mut bo);
         }
         // Fallback path.
+        crate::counter!(TxFallback);
         let v = self.fallback_enter();
         let cur = self.data.read_p::<P>();
         if let Some(next) = op(cur) {

@@ -74,6 +74,7 @@ impl<T: AtomicValue, S: Smr> BigAtomic<T> for Indirect<T, S> {
         // the old node's memory must happen-after its initializing
         // writes.
         let old = self.ptr.swap(new, P::ACQREL);
+        crate::counter!(SlowPathInstall);
         // SAFETY: old is unlinked and was uniquely owned by this atomic.
         unsafe { S::retire_box(old) };
     }
@@ -107,11 +108,13 @@ impl<T: AtomicValue, S: Smr> BigAtomic<T> for Indirect<T, S> {
             // load re-synchronizes.
             match self.ptr.compare_exchange(p, new, P::RELEASE, P::RELAXED) {
                 Ok(_) => {
+                    crate::counter!(SlowPathInstall);
                     // SAFETY: p is now unlinked.
                     unsafe { S::retire_box(p) };
                     return Ok(cur);
                 }
                 Err(_) => {
+                    crate::counter!(CasRetry);
                     // SAFETY: new was never published.
                     drop(unsafe { Box::from_raw(new) });
                     // A competing update owns the line; back off before
@@ -136,6 +139,7 @@ impl<T: AtomicValue, S: Smr> BigAtomic<T> for Indirect<T, S> {
         // ACQUIRE pairs with the previous installer's RELEASE so the old
         // node's value read below is sound.
         let old = self.ptr.swap(new, P::ACQREL);
+        crate::counter!(SlowPathInstall);
         // SAFETY: old is unlinked by us and not yet retired; nodes are
         // immutable after publish.
         let prev = unsafe { (*old).value };

@@ -214,6 +214,7 @@ pub trait BigAtomic<T: AtomicValue>: Send + Sync {
                 Err(w) => {
                     // Witness-fed retry: no re-load, and back off before
                     // re-touching the contended line (Dice et al.).
+                    crate::counter!(CasRetry);
                     cur = w;
                     crate::util::backoff::snooze_lazy(&mut bo);
                 }
@@ -244,6 +245,7 @@ pub trait BigAtomic<T: AtomicValue>: Send + Sync {
                     Err(w) => {
                         // Witness-fed retry with adaptive backoff — the
                         // canonical Dice-et-al. CAS retry loop.
+                        crate::counter!(CasRetry);
                         prev = w;
                         crate::util::backoff::snooze_lazy(&mut bo);
                     }

@@ -71,8 +71,10 @@ impl<T: AtomicValue, P: OrderingPolicy> SeqLock<T, P> {
                 // returns a torn value (pairs with the reader's
                 // FENCE_ACQUIRE).
                 fence(P::FENCE_RELEASE);
+                crate::counter!(LockAcquire);
                 return v;
             }
+            crate::counter!(CasRetry);
             snooze_lazy(&mut bo);
         }
     }
@@ -114,9 +116,12 @@ impl<T: AtomicValue, P: OrderingPolicy> BigAtomic<T> for SeqLock<T, P> {
                 // the fence above.
                 let v2 = self.version.load(P::RELAXED);
                 if v1 == v2 {
+                    crate::counter!(FastPathHit);
                     return val;
                 }
             }
+            // A writer held (or took) the lock during the read window.
+            crate::counter!(FastPathMiss);
             snooze_lazy(&mut bo);
         }
     }

@@ -58,8 +58,12 @@ impl SpinLock {
         let mut bo = None;
         loop {
             if self.try_lock() {
+                // Counts SimpLock, LockPool, and HtmSim-fallback
+                // acquisitions alike (the callers share this lock).
+                crate::counter!(LockAcquire);
                 return;
             }
+            crate::counter!(CasRetry);
             // Ordering: RELAXED wait-test — purely advisory; the
             // acquiring CAS in try_lock re-validates.
             while self.locked.load(P::RELAXED) {

@@ -54,6 +54,10 @@ pub struct Report {
     id: String,
     header: Vec<String>,
     rows: Vec<Vec<String>>,
+    /// Telemetry baseline, captured at construction when the runtime
+    /// reporting switch ([`crate::obs::set_enabled`]) is on; `save`
+    /// writes the run's delta as `<id>.obs.json` beside the CSV.
+    obs_start: Option<crate::obs::ObsSnapshot>,
 }
 
 impl Report {
@@ -64,6 +68,11 @@ impl Report {
             id: id.to_string(),
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            obs_start: if crate::obs::enabled() {
+                Some(crate::obs::ObsSnapshot::capture())
+            } else {
+                None
+            },
         }
     }
 
@@ -81,6 +90,11 @@ impl Report {
             writeln!(out, "{}", r.join(",")).unwrap();
         }
         fs::write(&path, out)?;
+        if let Some(start) = &self.obs_start {
+            let delta = crate::obs::ObsSnapshot::capture().delta_since(start);
+            let obs_path = Path::new(dir).join(format!("{}.obs.json", self.id));
+            fs::write(&obs_path, delta.to_json())?;
+        }
         Ok(path.display().to_string())
     }
 

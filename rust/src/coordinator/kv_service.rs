@@ -35,8 +35,10 @@ use crate::apps::stats::{Snapshot, StatsCell};
 use crate::atomics::CachedMemEff;
 use crate::bench::workload::{generate_rust, GenOp, Op, WorkloadSpec};
 use crate::hash::{CacheHash, ConcurrentMap, LinkVal};
+use crate::obs::Histogram;
 use crate::runtime::{LatencySummary, Runtime};
 use crate::util::error::Result;
+use crate::util::rng::Xoshiro256;
 
 #[derive(Clone, Debug)]
 pub struct KvConfig {
@@ -55,7 +57,16 @@ pub struct KvConfig {
     /// to serve from a deliberately undersized table and exercise
     /// online growth under live traffic.
     pub initial_capacity: usize,
+    /// Bound on the raw latency samples retained for offline analysis
+    /// (reservoir-sampled across the run; 0 ⇒ the default bound). The
+    /// exact per-batch summary ([`KvReport::latency_stats`] and the
+    /// histogram-backed quantiles) always sees every sample — only the
+    /// raw-sample vector is bounded.
+    pub reservoir: usize,
 }
+
+/// Default [`KvConfig::reservoir`] bound.
+pub const DEFAULT_RESERVOIR: usize = 4096;
 
 impl Default for KvConfig {
     fn default() -> Self {
@@ -68,6 +79,43 @@ impl Default for KvConfig {
             theta: 0.5,
             seed: 0x4B56, // "KV"
             initial_capacity: 0,
+            reservoir: DEFAULT_RESERVOIR,
+        }
+    }
+}
+
+/// Bounded uniform sample of a stream (Vitter's Algorithm R): the
+/// first `cap` values fill the buffer; the `t`-th value thereafter
+/// replaces a random slot with probability `cap/t`. Memory is O(cap)
+/// regardless of run length — the fix for the old unbounded per-request
+/// `Vec` that grew with duration.
+struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f32>,
+    rng: Xoshiro256,
+}
+
+impl Reservoir {
+    fn new(cap: usize, seed: u64) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            seen: 0,
+            samples: Vec::with_capacity(cap.min(DEFAULT_RESERVOIR)),
+            rng: Xoshiro256::seeded(seed),
+        }
+    }
+
+    fn push(&mut self, v: f32) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.next_below(self.seen as usize);
+            if j < self.cap {
+                self.samples[j] = v;
+            }
         }
     }
 }
@@ -80,8 +128,18 @@ pub struct KvReport {
     pub inserts: u64,
     pub deletes: u64,
     pub latency: Option<LatencySummary>,
-    /// Raw per-request latency samples (ns), for offline analysis.
+    /// p99.9 of the per-request latency (ns), from the lock-free
+    /// log-linear histogram that sees every sample (not the bounded
+    /// reservoir); `None` only when no batch completed.
+    pub latency_p999_ns: Option<u64>,
+    /// Exact number of per-batch latency samples observed (== batches
+    /// served). The *retained* raw-sample vector is reservoir-bounded
+    /// ([`KvConfig::reservoir`]), but this count, `latency_stats`, and
+    /// the histogram quantiles are computed over every sample.
     pub sample_count: usize,
+    /// Raw samples actually retained after reservoir sampling
+    /// (≤ ~[`KvConfig::reservoir`], and < `sample_count` on long runs).
+    pub retained_samples: usize,
     /// Always-consistent (count, sum, min, max) of the per-request
     /// latency (ns), accumulated by every worker through one big-atomic
     /// `fetch_update` cell — no lock, no torn snapshot, no artifacts
@@ -135,6 +193,10 @@ impl Mailbox {
             q = self.space.wait(q).unwrap();
         }
         q.push_back(item);
+        // Leader-side gauge: mailbox depth right after the enqueue (the
+        // global histogram is always-on; one fetch_add, off the worker
+        // hot path).
+        crate::obs::KV_QUEUE_DEPTH.record(q.len() as u64);
         drop(q);
         self.ready.notify_one();
     }
@@ -162,6 +224,7 @@ impl Mailbox {
     fn steal(&self) -> Option<Batch> {
         let item = self.q.lock().unwrap().pop_front();
         if item.is_some() {
+            crate::counter!(KvSteal);
             self.space.notify_one();
         }
         item
@@ -219,7 +282,16 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
     let inserts = AtomicU64::new(0);
     let deletes = AtomicU64::new(0);
     let served = AtomicU64::new(0);
+    // Bounded raw-sample retention: each worker reservoir-samples its
+    // own share of the stream (the leader round-robins batches, so the
+    // shares are near-equal and the concatenation approximates one
+    // uniform sample of the whole run), merged here at shutdown.
+    let per_worker_cap = ((cfg.reservoir.max(1)) + workers - 1) / workers;
     let latencies: Mutex<Vec<f32>> = Mutex::new(Vec::new());
+    // Run-local latency histogram: sees *every* per-request sample
+    // (unlike the reservoir) and backs the native quantile summary in
+    // runs without the PJRT stats artifact.
+    let lat_hist = Histogram::new();
     let mailboxes: Vec<Mailbox> = (0..workers).map(|_| Mailbox::new()).collect();
     let done = AtomicBool::new(false);
     let active = AtomicU64::new(0);
@@ -240,8 +312,9 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
             let served = &served;
             let latencies = &latencies;
             let lat_stats = &lat_stats;
+            let lat_hist = &lat_hist;
             s.spawn(move || {
-                let mut local_lat: Vec<f32> = Vec::new();
+                let mut local_lat = Reservoir::new(per_worker_cap, cfg.seed ^ (w as u64 + 1));
                 let mut serve = |(enqueued, batch): Batch| {
                     // Concurrency gauge: how many workers are mid-batch.
                     let now = active.fetch_add(1, Ordering::AcqRel) + 1;
@@ -264,11 +337,16 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
                     }
                     served.fetch_add(batch.len() as u64, Ordering::Relaxed);
                     batch_counts[w].fetch_add(1, Ordering::Relaxed);
+                    crate::counter!(KvBatch);
+                    crate::counter!(KvRequest, batch.len() as u64);
+                    crate::obs::KV_BATCH.record(batch.len() as u64);
                     // Per-request latency ≈ (queueing + service) / batch.
                     let total_ns = enqueued.elapsed().as_nanos() as f32;
                     let per_req = total_ns / batch.len() as f32;
                     local_lat.push(per_req);
                     lat_stats.record(per_req as u64);
+                    lat_hist.record(per_req as u64);
+                    crate::obs::KV_LATENCY_NS.record(per_req as u64);
                     active.fetch_sub(1, Ordering::AcqRel);
                 };
                 // Serve the own mailbox until shutdown...
@@ -288,7 +366,7 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
                         break;
                     }
                 }
-                latencies.lock().unwrap().extend(local_lat);
+                latencies.lock().unwrap().extend(local_lat.samples);
             });
         }
 
@@ -317,8 +395,18 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
     });
 
     let lat_samples = latencies.into_inner().unwrap();
+    let hist = lat_hist.snapshot();
     let latency = match runtime {
         Some(rt) if !lat_samples.is_empty() => Some(rt.stats_engine()?.summarize(&lat_samples)?),
+        // No stats artifact: summarize natively from the histogram,
+        // which saw every sample (quantile error ≤ one sub-bucket).
+        _ if hist.count > 0 => Some(LatencySummary {
+            mean: hist.mean() as f32,
+            p50: hist.p50() as f32,
+            p90: hist.p90() as f32,
+            p99: hist.p99() as f32,
+            max: hist.max as f32,
+        }),
         _ => None,
     };
 
@@ -329,7 +417,9 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
         inserts: inserts.load(Ordering::SeqCst),
         deletes: deletes.load(Ordering::SeqCst),
         latency,
-        sample_count: lat_samples.len(),
+        latency_p999_ns: if hist.count > 0 { Some(hist.p999()) } else { None },
+        sample_count: hist.count as usize,
+        retained_samples: lat_samples.len(),
         latency_stats: lat_stats.snapshot(),
         worker_batches: batch_counts.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
         peak_concurrent_workers: peak_active.load(Ordering::SeqCst),
@@ -353,9 +443,16 @@ mod tests {
             theta: 0.5,
             seed: 7,
             initial_capacity: 0,
+            reservoir: DEFAULT_RESERVOIR,
         };
         let rep = run(&cfg, None).unwrap();
         assert!(rep.total_requests > 100, "{rep:?}");
+        // Satellite: without the PJRT stats artifact the summary must
+        // still be present, computed natively from the histogram.
+        let lat = rep.latency.as_ref().expect("native latency summary");
+        assert!(lat.p50 <= lat.p90 && lat.p90 <= lat.p99);
+        assert!(lat.p99 as u64 <= rep.latency_p999_ns.unwrap());
+        assert!(lat.max >= lat.p99);
         assert_eq!(
             rep.total_requests,
             rep.finds + rep.inserts + rep.deletes
@@ -392,6 +489,9 @@ mod tests {
             theta: 0.0,
             seed: 9,
             initial_capacity: 64,
+            // Tiny bound: the retained raw samples must be capped while
+            // sample_count stays exact.
+            reservoir: 8,
         };
         let rep = run(&cfg, None).unwrap();
         assert_eq!(rep.worker_batches.len(), 4);
@@ -405,6 +505,16 @@ mod tests {
             "workers serialized: peak {}",
             rep.peak_concurrent_workers
         );
+        // The reservoir bound holds (per-worker caps round up, so allow
+        // up to one extra slot per worker) while the exact sample count
+        // keeps counting every batch.
+        assert!(
+            rep.retained_samples <= 8 + 4,
+            "reservoir overflowed: {} retained",
+            rep.retained_samples
+        );
+        assert!(rep.sample_count >= rep.retained_samples);
+        assert_eq!(rep.latency_stats.count as usize, rep.sample_count);
         assert_eq!(rep.initial_buckets, 64);
         assert!(
             rep.final_buckets > rep.initial_buckets,

@@ -441,6 +441,8 @@ where
             }
             return;
         }
+        // Descriptor published and still rooted: this grow is real.
+        crate::counter!(ResizeGrowBegin);
         // Kick-start: migrate the first stripe ourselves.
         self.help_resize();
     }
@@ -476,7 +478,10 @@ where
                     ..rs
                 },
             ) {
-                Ok(_) => break (c, end),
+                Ok(_) => {
+                    crate::counter!(ResizeStripeClaim);
+                    break (c, end);
+                }
                 Err(w) => rs = w,
             }
         };
@@ -553,6 +558,7 @@ where
             }
         }
         // Exactly one DONE transition per bucket reports it migrated.
+        crate::counter!(ResizeBucketMigrate);
         // Ordering: AcqRel — the finisher's promotion happens-after
         // every copier's DONE publication.
         if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
@@ -637,6 +643,7 @@ where
         }
         // Ordering: AcqRel — generation reads observe a promoted root.
         self.generations.fetch_add(1, Ordering::AcqRel);
+        crate::counter!(ResizeFinish);
         // Retire the drained generation — bucket array and all (every
         // bucket holds a DONE seal; chains were retired at their DONE
         // transitions). Pinned readers mid-fall-through keep it alive:
@@ -698,6 +705,7 @@ where
                 if head.frozen() {
                     // The stripe owner is copying this bucket out; the
                     // window is bounded by the chain length.
+                    crate::counter!(ResizeFrozenWait);
                     snooze_lazy(&mut bo);
                     head = bucket.load();
                     continue;
@@ -770,6 +778,7 @@ where
         loop {
             if head.forwarded() {
                 if head.frozen() {
+                    crate::counter!(ResizeFrozenWait);
                     snooze_lazy(&mut bo);
                     head = bucket.load();
                     continue;

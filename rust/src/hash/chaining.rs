@@ -232,6 +232,8 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             }
             return;
         }
+        // Descriptor published and still rooted: this grow is real.
+        crate::counter!(ResizeGrowBegin);
         self.help_resize();
     }
 
@@ -264,7 +266,10 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
                     ..rs
                 },
             ) {
-                Ok(_) => break (c, end),
+                Ok(_) => {
+                    crate::counter!(ResizeStripeClaim);
+                    break (c, end);
+                }
                 Err(w) => rs = w,
             }
         };
@@ -335,6 +340,8 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
                 }
             }
         }
+        // Exactly one DONE transition per bucket reports it migrated.
+        crate::counter!(ResizeBucketMigrate);
         // Ordering: AcqRel — the finisher's promotion happens-after
         // every copier's DONE publication.
         if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
@@ -404,6 +411,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             }
         }
         self.generations.fetch_add(1, Ordering::AcqRel);
+        crate::counter!(ResizeFinish);
         // SAFETY: unlinked from the root and the descriptor; unique.
         unsafe { S::retire_box(op) };
     }
@@ -451,6 +459,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
             if raw & FWD != 0 {
                 if raw != FWD {
                     // FROZEN: the copier's window is chain-bounded.
+                    crate::counter!(ResizeFrozenWait);
                     snooze_lazy(&mut bo);
                     raw = bucket.load(P::ACQUIRE);
                     continue;
@@ -516,6 +525,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
         loop {
             if raw & FWD != 0 {
                 if raw != FWD {
+                    crate::counter!(ResizeFrozenWait);
                     snooze_lazy(&mut bo);
                     raw = bucket.load(P::ACQUIRE);
                     continue;

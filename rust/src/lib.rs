@@ -36,6 +36,9 @@
 //! ## Layout of this crate (three-layer architecture)
 //!
 //! * [`atomics`], [`smr`], [`hash`] — the paper's systems (L3).
+//! * [`obs`] — crate-native telemetry: per-thread sharded event counters
+//!   (behind the `telemetry` feature's [`counter!`] macro) + lock-free
+//!   log-linear latency histograms + JSON [`obs::ObsSnapshot`] dumps.
 //! * [`bench`] — workload generators + the harness regenerating every
 //!   figure/table of the paper's §5.
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
@@ -48,6 +51,7 @@ pub mod atomics;
 pub mod bench;
 pub mod coordinator;
 pub mod hash;
+pub mod obs;
 pub mod runtime;
 pub mod smr;
 pub mod util;

@@ -4,7 +4,9 @@
 //! repro fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all   regenerate paper exhibits + ablations
 //!       [--panel u|z|n|w|p|ordering|smr] [--oversub] [--secs S] [--n N]
 //!       [--artifact] [--reports DIR]
-//! repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z] [--artifact]
+//! repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z]
+//!          [--reservoir R] [--artifact] [--telemetry]
+//! repro stats                       exercise the stack, print telemetry JSON
 //! repro validate [--count C]        cross-check AOT artifact vs Rust generator
 //! repro smoke                       PJRT + artifact load check
 //! ```
@@ -32,6 +34,8 @@ struct Args {
     update_pct: u32,
     theta: f64,
     count: usize,
+    telemetry: bool,
+    reservoir: usize,
 }
 
 fn parse_args() -> Result<Args> {
@@ -48,6 +52,8 @@ fn parse_args() -> Result<Args> {
         update_pct: 30,
         theta: 0.5,
         count: 1 << 14,
+        telemetry: false,
+        reservoir: kv_service::DEFAULT_RESERVOIR,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -67,6 +73,8 @@ fn parse_args() -> Result<Args> {
             "--u" => args.update_pct = next("--u")?.parse()?,
             "--z" => args.theta = next("--z")?.parse()?,
             "--count" => args.count = next("--count")?.parse()?,
+            "--telemetry" => args.telemetry = true,
+            "--reservoir" => args.reservoir = next("--reservoir")?.parse()?,
             "--help" | "-h" => {
                 args.command = "help".into();
                 return Ok(args);
@@ -88,7 +96,9 @@ repro — Big Atomics (Anderson, Blelloch, Jayanti 2025) reproduction
 
 USAGE:
   repro <fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all> [options]
-  repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z] [--artifact]
+  repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z]
+           [--reservoir R] [--artifact] [--telemetry]
+  repro stats                       exercise each subsystem, print telemetry JSON
   repro validate [--count C]
   repro smoke
 
@@ -100,7 +110,11 @@ OPTIONS:
   --n N               elements / key-space size       [65536]
   --cap C             kv: initial table buckets (0 = sized for N; set
                       small, e.g. 64, to exercise online growth)
+  --reservoir R       kv: max raw latency samples retained [4096]
   --artifact          generate op streams via the AOT HLO artifact
+  --telemetry         capture an event-counter/histogram snapshot per run
+                      and write it as JSON next to the exhibits (full
+                      counter coverage needs `--features telemetry`)
   --reports DIR       CSV output directory            [reports]
 ";
 
@@ -127,9 +141,25 @@ fn main() -> Result<()> {
             println!("workload cross-validation OK: {compared} ops bit-exact (HLO == Rust)");
             Ok(())
         }
+        "stats" => {
+            big_atomics::obs::set_enabled(true);
+            let before = big_atomics::obs::ObsSnapshot::capture();
+            exercise_subsystems(args.n.min(1 << 14));
+            let delta = big_atomics::obs::ObsSnapshot::capture().delta_since(&before);
+            println!("{}", delta.to_json());
+            Ok(())
+        }
         "kv" => {
             let rt = if args.artifact {
                 Some(Runtime::new(default_artifact_dir())?)
+            } else {
+                None
+            };
+            if args.telemetry {
+                big_atomics::obs::set_enabled(true);
+            }
+            let obs_before = if args.telemetry {
+                Some(big_atomics::obs::ObsSnapshot::capture())
             } else {
                 None
             };
@@ -142,6 +172,7 @@ fn main() -> Result<()> {
                 theta: args.theta,
                 seed: 0x4B56,
                 initial_capacity: args.cap,
+                reservoir: args.reservoir,
             };
             let rep = kv_service::run(&cfg, rt.as_ref())?;
             println!(
@@ -164,11 +195,29 @@ fn main() -> Result<()> {
                 );
             }
             if let Some(lat) = rep.latency {
-                println!("kv latency ({} batch samples): {}", rep.sample_count, lat);
+                println!(
+                    "kv latency ({} batch samples, {} retained): {}",
+                    rep.sample_count, rep.retained_samples, lat
+                );
+            }
+            if let Some(p999) = rep.latency_p999_ns {
+                println!("kv latency p999: {p999} ns");
+            }
+            if let Some(before) = obs_before {
+                let delta = big_atomics::obs::ObsSnapshot::capture().delta_since(&before);
+                std::fs::create_dir_all(&args.reports)?;
+                let path = format!("{}/kv.obs.json", args.reports);
+                std::fs::write(&path, delta.to_json())?;
+                eprintln!("telemetry snapshot: {path}");
             }
             Ok(())
         }
         fig => {
+            // With --telemetry each figure Report folds an ObsSnapshot
+            // delta in and saves it as `<id>.obs.json` beside the CSV.
+            if args.telemetry {
+                big_atomics::obs::set_enabled(true);
+            }
             let coord = Coordinator::new(args.artifact)?;
             let cfg = FigureCfg {
                 secs_per_point: args.secs,
@@ -179,6 +228,42 @@ fn main() -> Result<()> {
             let saved = coord.run_figure(fig, &cfg, &args.panel, args.oversub)?;
             eprintln!("\nsaved: {}", saved.join(" "));
             Ok(())
+        }
+    }
+}
+
+/// Drive every instrumented subsystem briefly so `repro stats` has
+/// non-zero counters to print even outside a benchmark run: contended
+/// big-atomic traffic (fast/slow paths, CAS retries, hazard SMR), then
+/// an undersized hash table grown online under mixed operations (resize
+/// machinery + epoch SMR).
+fn exercise_subsystems(n: usize) {
+    use big_atomics::atomics::{BigAtomic, CachedWaitFree, SeqLock, Words};
+    use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
+
+    let a: CachedWaitFree<Words<4>> = CachedWaitFree::new(Words([0; 4]));
+    let b: SeqLock<Words<4>> = SeqLock::new(Words([0; 4]));
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for i in 0..2_000u64 {
+                    let cur = a.load();
+                    let _ = a.compare_exchange(cur, Words([i; 4]));
+                    b.store(Words([i; 4]));
+                    std::hint::black_box(b.load());
+                }
+            });
+        }
+    });
+
+    let t: CacheHash<big_atomics::atomics::CachedMemEff<LinkVal>> = CacheHash::new(64);
+    for rank in 0..n.max(1 << 10) {
+        let k = big_atomics::util::rng::mix64(rank as u64);
+        t.insert(k, rank as u64);
+        if rank % 3 == 0 {
+            t.remove(k);
+        } else {
+            std::hint::black_box(t.find(k));
         }
     }
 }

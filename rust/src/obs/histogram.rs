@@ -1,0 +1,338 @@
+//! Lock-free log-linear histogram (HdrHistogram-shaped, dependency-free).
+//!
+//! Values are bucketed into power-of-two **major** buckets, each split
+//! into [`SUB_BUCKETS`] = 16 linear **sub**-buckets, so the relative
+//! quantization error is bounded by one sub-bucket: `width / lower <=
+//! 1/16` for every value ≥ 16 (values below 16 get exact unit buckets).
+//! That is the same shape HdrHistogram uses with a significant-figures
+//! setting of ~1.2 decimal digits — plenty for p50/p90/p99/p999 latency
+//! reporting, and small enough (976 buckets, ~7.6 KiB) to sit in a
+//! `static`.
+//!
+//! Recording is one `Relaxed` `fetch_add` on the bucket plus the
+//! count/sum/min/max bookkeeping — wait-free, no locks, safe from any
+//! thread including the kv_service hot loop. Reading happens through
+//! [`Histogram::snapshot`], which takes an unsynchronized (racy but
+//! monotone) copy; per-run numbers are computed as snapshot *deltas*
+//! (see [`HistogramSnapshot::delta_since`]), so concurrent recording
+//! during a snapshot can only shift a sample between adjacent reports,
+//! never lose it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the linear sub-buckets per power-of-two major bucket.
+pub const SUB_BITS: u32 = 4;
+/// Linear sub-buckets per major bucket (16).
+pub const SUB_BUCKETS: usize = 1 << SUB_BITS;
+/// Total buckets: 16 exact unit buckets for `0..16`, then 60 major
+/// buckets (`msb` 4..=63) × 16 sub-buckets.
+pub const N_BUCKETS: usize = SUB_BUCKETS + (64 - SUB_BITS as usize) * SUB_BUCKETS;
+
+/// Bucket index for `v` — monotone in `v`, contiguous across the
+/// unit/log boundary (15 → 15, 16 → 16, 31 → 31, 32 → 32).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros(); // >= SUB_BITS
+    let sub = ((v >> (msb - SUB_BITS)) & (SUB_BUCKETS as u64 - 1)) as usize;
+    let major = (msb - SUB_BITS + 1) as usize;
+    major * SUB_BUCKETS + sub
+}
+
+/// Smallest value mapping to bucket `i` (inverse of [`bucket_index`]).
+#[inline]
+pub fn bucket_lower(i: usize) -> u64 {
+    debug_assert!(i < N_BUCKETS);
+    let major = i / SUB_BUCKETS;
+    let sub = (i % SUB_BUCKETS) as u64;
+    if major == 0 {
+        return sub;
+    }
+    (SUB_BUCKETS as u64 + sub) << (major - 1)
+}
+
+/// A concurrent log-linear histogram over `AtomicU64` buckets.
+///
+/// `const`-constructible, so it can live in a `static` (the obs layer's
+/// named global histograms) or on the heap for per-run instances.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Self {
+            buckets: [Z; N_BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Wait-free; a handful of `Relaxed` RMWs.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        // Ordering: RELAXED throughout — counters are commutative and
+        // read only through racy snapshots whose consumers tolerate a
+        // sample landing in either of two adjacent reports.
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Racy-but-monotone copy of the current state.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        HistogramSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            min: self.min.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A plain (non-atomic) copy of a [`Histogram`], supporting merges,
+/// deltas, and quantile extraction.
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Fold `other` into `self` (exact: bucket-wise sum).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The samples recorded between `earlier` and `self` (both taken
+    /// from the same growing [`Histogram`]). min/max cannot be
+    /// differenced, so the delta keeps `self`'s cumulative min/max —
+    /// correct whenever the earlier snapshot was empty, conservative
+    /// otherwise.
+    pub fn delta_since(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let counts = self
+            .counts
+            .iter()
+            .zip(&earlier.counts)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        HistogramSnapshot {
+            counts,
+            count: self.count.saturating_sub(earlier.count),
+            sum: self.sum.saturating_sub(earlier.sum),
+            min: self.min,
+            max: self.max,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) as the lower bound of the bucket
+    /// holding the sample of that rank — within one sub-bucket
+    /// (≤ 1/16 relative error) of the true order statistic. Returns 0 on
+    /// an empty snapshot.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                // Clamp into the recorded range: the top bucket's lower
+                // bound can undershoot min when all samples share one
+                // bucket.
+                return bucket_lower(i).max(self.min.min(self.max));
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_bucket_index_monotone_and_contiguous() {
+        // Unit buckets below 16, then contiguous across every power of
+        // two boundary.
+        let mut prev = bucket_index(0);
+        assert_eq!(prev, 0);
+        for v in 1..100_000u64 {
+            let i = bucket_index(v);
+            assert!(i == prev || i == prev + 1, "gap at {v}: {prev} -> {i}");
+            prev = i;
+        }
+        assert_eq!(bucket_index(15), 15);
+        assert_eq!(bucket_index(16), 16);
+        assert_eq!(bucket_index(31), 31);
+        assert_eq!(bucket_index(32), 32);
+        assert!(bucket_index(u64::MAX) < N_BUCKETS);
+    }
+
+    #[test]
+    fn test_bucket_lower_inverts_index() {
+        for i in 0..N_BUCKETS {
+            let lo = bucket_lower(i);
+            assert_eq!(bucket_index(lo), i, "lower({i}) = {lo} maps back wrong");
+            if lo > 0 {
+                assert!(bucket_index(lo - 1) == i - 1, "lower({i}) not minimal");
+            }
+        }
+    }
+
+    #[test]
+    fn test_relative_error_bounded() {
+        // Every value's bucket lower bound is within 1/16 of the value.
+        for v in [17u64, 100, 1_000, 123_456, 1 << 40, u64::MAX / 3] {
+            let lo = bucket_lower(bucket_index(v));
+            assert!(lo <= v);
+            let width = v - lo;
+            assert!(
+                (width as f64) <= (v as f64) / 16.0 + 1.0,
+                "v={v} lo={lo} width={width}"
+            );
+        }
+    }
+
+    #[test]
+    fn test_record_and_exact_small_quantiles() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            // 1..=15 are exact unit buckets; larger values quantized.
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.sum, 5050);
+        // p50 of 1..=100 is 50; bucket for 50 is [48, 51].
+        let p50 = s.p50();
+        assert!((48..=50).contains(&p50), "p50={p50}");
+        let p99 = s.p99();
+        assert!((96..=99).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn test_merge_and_delta() {
+        let h = Histogram::new();
+        h.record(10);
+        h.record(20);
+        let early = h.snapshot();
+        h.record(30);
+        h.record(40);
+        let late = h.snapshot();
+        let delta = late.delta_since(&early);
+        assert_eq!(delta.count, 2);
+        assert_eq!(delta.sum, 70);
+        let mut merged = early.clone();
+        merged.merge(&delta);
+        assert_eq!(merged.count, late.count);
+        assert_eq!(merged.sum, late.sum);
+    }
+
+    #[test]
+    fn test_empty_snapshot_quantiles_zero() {
+        let s = HistogramSnapshot::empty();
+        assert!(s.is_empty());
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p999(), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn test_concurrent_record_counts_exact() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads = 8;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        h.record(t * 1_000 + (i % 97));
+                    }
+                })
+            })
+            .collect();
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, threads * per);
+        assert_eq!(s.counts.iter().sum::<u64>(), threads * per);
+    }
+}

@@ -1,0 +1,65 @@
+//! Crate-native observability: sharded event counters, lock-free
+//! latency histograms, and JSON snapshots.
+//!
+//! Three pieces:
+//!
+//! * [`telemetry`] — named per-thread event counters behind the
+//!   [`counter!`](crate::counter) macro. The macro is real only under
+//!   the `telemetry` cargo feature; default builds compile it to
+//!   nothing, so the hot paths (and the PR 3 ordering-diet numbers)
+//!   are untouched.
+//! * [`histogram`] — a log-linear (power-of-two majors × 16 linear
+//!   sub-buckets) concurrent histogram with p50/p90/p99/p999
+//!   extraction. Always compiled: `repro kv` uses it for native
+//!   latency quantiles even in default builds.
+//! * [`snapshot`] — [`ObsSnapshot`]: capture counters + histograms,
+//!   difference two captures for per-run numbers, dump JSON
+//!   (`repro stats`, `--telemetry` runs' `*.obs.json` exhibits).
+//!
+//! The module-level [`set_enabled`]/[`enabled`] flag is the *reporting*
+//! switch (set by `--telemetry`): it decides whether runs capture and
+//! dump snapshots, not whether counters count — counting is a
+//! compile-time decision (the cargo feature), reporting a runtime one.
+
+pub mod histogram;
+pub mod snapshot;
+pub mod telemetry;
+
+pub use histogram::{Histogram, HistogramSnapshot};
+pub use snapshot::ObsSnapshot;
+pub use telemetry::Event;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Per-batch service latency in nanoseconds (kv_service; per-request =
+/// batch total / batch len, recorded once per batch to keep the serve
+/// loop cheap). Always recorded — this feeds the native `repro kv`
+/// p50/p99/p999 report in default builds.
+pub static KV_LATENCY_NS: Histogram = Histogram::new();
+/// Batch sizes drained by kv workers.
+pub static KV_BATCH: Histogram = Histogram::new();
+/// Mailbox depth observed at each enqueue (before the push).
+pub static KV_QUEUE_DEPTH: Histogram = Histogram::new();
+
+/// Every named global histogram, in snapshot order.
+pub fn global_histograms() -> [(&'static str, &'static Histogram); 3] {
+    [
+        ("kv_latency_ns", &KV_LATENCY_NS),
+        ("kv_batch", &KV_BATCH),
+        ("kv_queue_depth", &KV_QUEUE_DEPTH),
+    ]
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn snapshot reporting on/off for this process (the `--telemetry`
+/// CLI flag). Counters/histograms record regardless; this only gates
+/// whether reports capture deltas and write `*.obs.json`.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether snapshot reporting is on.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}

@@ -1,0 +1,157 @@
+//! Point-in-time telemetry snapshots + the machine-readable JSON dump.
+//!
+//! An [`ObsSnapshot`] captures every event counter ([`telemetry`]) and
+//! every named global histogram in one racy-but-monotone pass. Per-run
+//! numbers are always **deltas** between a snapshot taken before the
+//! run and one taken after ([`ObsSnapshot::delta_since`]) — the
+//! underlying cells are cumulative for the process (thread ids are
+//! reused, counters never reset).
+//!
+//! [`ObsSnapshot::to_json`] hand-rolls the JSON (the crate is
+//! dependency-free — no serde): all keys are static identifiers and all
+//! values are numbers, so no escaping is needed. This is the payload
+//! `repro stats` prints and `--telemetry` runs dump next to their
+//! exhibits (`*.obs.json`).
+
+use super::histogram::HistogramSnapshot;
+use super::telemetry::{self, NUM_EVENTS};
+
+/// A point-in-time copy of all counters + named histograms.
+#[derive(Clone, Debug)]
+pub struct ObsSnapshot {
+    /// Cell order matches [`telemetry::ALL`].
+    pub counters: [u64; NUM_EVENTS],
+    /// Named global histograms (currently the kv_service trio).
+    pub hists: Vec<(&'static str, HistogramSnapshot)>,
+}
+
+impl ObsSnapshot {
+    /// Capture the current process-cumulative state.
+    pub fn capture() -> Self {
+        Self {
+            counters: telemetry::totals(),
+            hists: super::global_histograms()
+                .iter()
+                .map(|(name, h)| (*name, h.snapshot()))
+                .collect(),
+        }
+    }
+
+    /// Everything recorded between `earlier` and `self`.
+    pub fn delta_since(&self, earlier: &ObsSnapshot) -> ObsSnapshot {
+        let mut counters = [0u64; NUM_EVENTS];
+        for (i, c) in counters.iter_mut().enumerate() {
+            *c = self.counters[i].saturating_sub(earlier.counters[i]);
+        }
+        let hists = self
+            .hists
+            .iter()
+            .map(|(name, h)| {
+                let base = earlier
+                    .hists
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, b)| b.clone())
+                    .unwrap_or_else(HistogramSnapshot::empty);
+                (*name, h.delta_since(&base))
+            })
+            .collect();
+        ObsSnapshot { counters, hists }
+    }
+
+    /// The counter for `e`.
+    pub fn counter(&self, e: telemetry::Event) -> u64 {
+        self.counters[e as usize]
+    }
+
+    /// The named histogram, if captured.
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.hists.iter().find(|(n, _)| *n == name).map(|(_, h)| h)
+    }
+
+    /// True when nothing at all was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.iter().all(|&c| c == 0) && self.hists.iter().all(|(_, h)| h.is_empty())
+    }
+
+    /// Pretty-printed JSON:
+    /// `{"counters": {...}, "histograms": {name: {count, sum, min, max,
+    /// mean, p50, p90, p99, p999}}}`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(2048);
+        s.push_str("{\n  \"counters\": {\n");
+        for (i, e) in telemetry::ALL.iter().enumerate() {
+            s.push_str(&format!("    \"{}\": {}", e.name(), self.counters[i]));
+            s.push_str(if i + 1 < NUM_EVENTS { ",\n" } else { "\n" });
+        }
+        s.push_str("  },\n  \"histograms\": {\n");
+        for (i, (name, h)) in self.hists.iter().enumerate() {
+            let min = if h.count == 0 { 0 } else { h.min };
+            s.push_str(&format!(
+                "    \"{}\": {{\"count\": {}, \"sum\": {}, \"min\": {}, \"max\": {}, \
+                 \"mean\": {:.1}, \"p50\": {}, \"p90\": {}, \"p99\": {}, \"p999\": {}}}",
+                name,
+                h.count,
+                h.sum,
+                min,
+                h.max,
+                h.mean(),
+                h.p50(),
+                h.p90(),
+                h.p99(),
+                h.p999(),
+            ));
+            s.push_str(if i + 1 < self.hists.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  }\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::telemetry::Event;
+
+    #[test]
+    fn test_capture_delta_and_lookup() {
+        let before = ObsSnapshot::capture();
+        telemetry::incr_by(Event::ResizeFinish, 7);
+        crate::obs::KV_LATENCY_NS.record(1000);
+        let after = ObsSnapshot::capture();
+        let d = after.delta_since(&before);
+        // Other tests may run concurrently; deltas are lower bounds.
+        assert!(d.counter(Event::ResizeFinish) >= 7);
+        assert!(d.histogram("kv_latency_ns").unwrap().count >= 1);
+        assert!(d.histogram("no_such_histogram").is_none());
+        assert!(!d.is_empty());
+    }
+
+    #[test]
+    fn test_json_shape() {
+        let snap = ObsSnapshot::capture();
+        let j = snap.to_json();
+        // Structurally valid for the CI smoke: balanced braces, both
+        // top-level keys, one entry per event.
+        assert_eq!(
+            j.matches('{').count(),
+            j.matches('}').count(),
+            "unbalanced braces"
+        );
+        assert!(j.contains("\"counters\""));
+        assert!(j.contains("\"histograms\""));
+        for e in telemetry::ALL.iter() {
+            assert!(j.contains(&format!("\"{}\":", e.name())), "{} missing", e.name());
+        }
+        assert!(j.contains("\"kv_latency_ns\""));
+        assert!(!j.contains("NaN") && !j.contains("inf"));
+    }
+
+    #[test]
+    fn test_empty_delta_is_empty() {
+        let a = ObsSnapshot::capture();
+        let d = a.delta_since(&a);
+        assert!(d.counters.iter().all(|&c| c == 0));
+        assert!(d.hists.iter().all(|(_, h)| h.count == 0));
+    }
+}

@@ -119,6 +119,9 @@ impl<P: OrderingPolicy> Epoch<P> {
         PIN_DEPTH.with(|d| {
             let mut d = d.borrow_mut();
             if *d == 0 {
+                // Outermost pins only — nested re-pins are a depth bump
+                // and pay no announce/fence, so they don't count.
+                crate::counter!(EpochPin);
                 // Ordering: RELAXED — the announcement below re-derives
                 // from whatever we read; staleness only costs one loop
                 // iteration.
@@ -174,6 +177,7 @@ impl<P: OrderingPolicy> Epoch<P> {
         // stamp lags the true unlink epoch by at most one — the slack
         // epoch in FREE_DISTANCE absorbs exactly that.
         let e = GLOBAL_EPOCH.load(P::ACQUIRE);
+        crate::counter!(EpochRetire);
         let len = BAG.with(|b| {
             b.push(Retired {
                 epoch: e,
@@ -189,6 +193,7 @@ impl<P: OrderingPolicy> Epoch<P> {
     /// Attempt to advance the global epoch, then free sufficiently old
     /// garbage from this thread's bag (and orphans, opportunistically).
     pub fn try_advance_and_collect() {
+        crate::counter!(EpochScan);
         // Ordering: mandatory store-load fence (module docs, point 2) —
         // pairs with the pinners' fences: every unlink/retire that
         // happened-before this call is ordered before the announcement
@@ -219,7 +224,12 @@ impl<P: OrderingPolicy> Epoch<P> {
             // the acquire half pairs with previous advancers so the +2
             // arithmetic below reads a coherent history. RELAXED on
             // failure: a loser changes nothing.
-            let _ = GLOBAL_EPOCH.compare_exchange(global, global + 1, P::ACQREL, P::RELAXED);
+            if GLOBAL_EPOCH
+                .compare_exchange(global, global + 1, P::ACQREL, P::RELAXED)
+                .is_ok()
+            {
+                crate::counter!(EpochAdvance);
+            }
         }
         // Ordering: ACQUIRE — pairs with the ACQREL advance CAS (ours or
         // a concurrent winner's): bags are freed against an epoch that
@@ -228,6 +238,7 @@ impl<P: OrderingPolicy> Epoch<P> {
         let free = |bag: &mut Vec<Retired>| {
             bag.retain(|item| {
                 if item.epoch + FREE_DISTANCE <= now {
+                    crate::counter!(EpochFree);
                     // SAFETY: stamped e under a pin (unlink epoch <=
                     // e+1); every reader that can still hold the
                     // pointer announced <= e+2 < now, and such
@@ -370,6 +381,9 @@ pub fn global_epoch() -> u64 {
 /// borrowed threads). Thread *exit* needs no call: the bag's own TLS
 /// destructor performs the handoff regardless of destructor order.
 pub fn flush_thread_bag() {
+    // One spill event per explicit handoff to ORPHANS (thread-exit
+    // handoffs route through here from on_thread_exit).
+    crate::counter!(EpochOrphanSpill);
     let _ = BAG.try_with(|b| b.flush());
 }
 

@@ -217,10 +217,14 @@ impl HazardPointer {
     /// than aborting the process.
     #[inline]
     pub fn new() -> Self {
+        // Counts every guard acquisition (fixed or overflow) — the
+        // hazard-side "pin" analog for the SMR traffic comparison.
+        crate::counter!(HazardPin);
         SLOT_CACHE.with(|c| {
             let bm = c.bitmap.get();
             let free = !bm & SLOT_MASK;
             if free == 0 {
+                crate::counter!(HazardOverflow);
                 let s = acquire_overflow_slot();
                 return HazardPointer {
                     slot: &s.cell,
@@ -400,6 +404,7 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
         ptr: ptr as usize,
         drop_fn: dropper::<T>,
     };
+    crate::counter!(HazardRetire);
     let len = RETIRED.with(|r| r.push(item));
     if len >= RETIRE_THRESHOLD {
         scan();
@@ -409,6 +414,7 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
 /// Scan announcements and free every retired node not protected.
 /// Also opportunistically drains the orphan list of exited threads.
 pub fn scan() {
+    crate::counter!(HazardScan);
     // Ordering: mandatory store-load fence (module docs, point 2) —
     // pairs with the announcers' fences: every unlink that
     // happened-before this scan is ordered before the slot reads, so an
@@ -434,6 +440,7 @@ pub fn scan() {
             if protected.binary_search(&item.ptr).is_ok() {
                 kept.push(item);
             } else {
+                crate::counter!(HazardFree);
                 // SAFETY: unlinked before retirement and proven
                 // unprotected by the snapshot above; announcements made
                 // after unlinking cannot reference it (protect()
@@ -453,6 +460,9 @@ pub fn scan() {
 /// Snapshot of all currently announced (non-zero) pointers.
 /// Used by Algorithm 2's slab recycler (§3.2, "get_protected_ptrs").
 pub fn protected_snapshot(buf: &mut Vec<usize>) {
+    // Announcement-array walks by Algorithm 2's slab recycler count as
+    // scans too — they pay the same fence + O(threads) cost.
+    crate::counter!(HazardScan);
     buf.clear();
     // Ordering: mandatory store-load fence — same retire→scan edge as
     // `scan` (the slab recycler's uninstall store must be ordered before
@@ -475,6 +485,10 @@ pub fn protected_snapshot(buf: &mut Vec<usize>) {
 /// list's own TLS destructor performs the handoff regardless of
 /// destructor order.
 pub fn flush_thread_bag() {
+    // One spill event per explicit handoff to ORPHANS (thread-exit
+    // handoffs via the TLS destructor route through here too, from
+    // on_thread_exit).
+    crate::counter!(HazardOrphanSpill);
     let _ = RETIRED.try_with(|r| r.flush());
 }
 

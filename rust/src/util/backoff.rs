@@ -134,6 +134,9 @@ impl Backoff {
                 std::hint::spin_loop();
             }
         } else {
+            // The spin→yield escalation the oversubscription figures care
+            // about: each bump is one ceded scheduler quantum.
+            crate::counter!(BackoffYield);
             std::thread::yield_now();
         }
         if self.step < YIELD_LIMIT {

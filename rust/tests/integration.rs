@@ -313,9 +313,16 @@ fn test_kv_service_end_to_end_no_artifacts() {
         update_pct: 40,
         theta: 0.7,
         seed: 99,
+        ..KvConfig::default()
     };
     let rep = kv_service::run(&cfg, None).unwrap();
     assert!(rep.total_requests > 500);
     assert_eq!(rep.total_requests, rep.finds + rep.inserts + rep.deletes);
     assert!(rep.sample_count > 0);
+    // Native (histogram-backed) latency summary in artifact-less builds.
+    let lat = rep.latency.expect("native latency summary");
+    assert!(lat.p99 >= lat.p50 && lat.max >= lat.p99);
+    assert!(rep.latency_p999_ns.unwrap() >= lat.p99 as u64);
+    // The bounded reservoir never outgrows its config.
+    assert!(rep.retained_samples <= KvConfig::default().reservoir + cfg.workers);
 }

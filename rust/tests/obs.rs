@@ -1,0 +1,115 @@
+//! Telemetry contract tests, run in their own process so counter
+//! arithmetic can be *exact* (the lib's unit tests run concurrently
+//! with instrumented code and can only assert lower bounds).
+//!
+//! This binary deliberately never drives the atomics/hash/SMR layers:
+//! the only counter writers here are the explicit `counter!` calls
+//! below, so with `--features telemetry` the multithreaded totals must
+//! match the increment count exactly, and without the feature every
+//! total must stay zero (the macro compiles to nothing).
+
+use big_atomics::obs::{telemetry, Event, Histogram, ObsSnapshot};
+
+const TELEMETRY_ON: bool = cfg!(feature = "telemetry");
+
+#[test]
+fn test_counter_snapshot_equals_total_increments_multithreaded() {
+    let threads = 8u64;
+    let per = 25_000u64;
+    let before = telemetry::total(Event::HelpRecache);
+    assert_eq!(before, 0, "no other writer exists in this binary");
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                for _ in 0..per {
+                    big_atomics::counter!(HelpRecache);
+                }
+            });
+        }
+    });
+    let after = telemetry::total(Event::HelpRecache);
+    if TELEMETRY_ON {
+        assert_eq!(after, threads * per, "sharded cells lost increments");
+        assert_eq!(telemetry::totals()[Event::HelpRecache as usize], threads * per);
+    } else {
+        assert_eq!(after, 0, "telemetry-off build recorded an event");
+    }
+}
+
+#[test]
+fn test_counter_macro_count_form_and_lazy_count_expr() {
+    let before = telemetry::total(Event::LockAcquire);
+    let mut evaluated = false;
+    big_atomics::counter!(LockAcquire, {
+        evaluated = true;
+        7u64
+    });
+    let after = telemetry::total(Event::LockAcquire);
+    if TELEMETRY_ON {
+        assert!(evaluated, "count expression must run with the feature on");
+        assert!(after >= before + 7);
+    } else {
+        // No-op expansion: zero instructions, count expression captured
+        // but never evaluated.
+        assert!(!evaluated, "no-op macro evaluated its count expression");
+        assert_eq!(after, 0);
+    }
+}
+
+#[test]
+fn test_histogram_quantiles_within_one_sub_bucket() {
+    // Uniform 1..=N: the true q-quantile is ceil(q*N); the histogram
+    // answers with its bucket's lower bound, so the estimate may only
+    // undershoot, by at most one sub-bucket (1/16 relative).
+    let h = Histogram::new();
+    let n = 10_000u64;
+    for v in 1..=n {
+        h.record(v);
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.count, n);
+    assert_eq!(snap.min, 1);
+    assert_eq!(snap.max, n);
+    for (q, p) in [
+        (0.50, snap.p50()),
+        (0.90, snap.p90()),
+        (0.99, snap.p99()),
+        (0.999, snap.p999()),
+    ] {
+        let truth = (q * n as f64).ceil() as u64;
+        assert!(p <= truth, "q={q}: estimate {p} overshoots {truth}");
+        assert!(
+            truth as f64 <= p as f64 * (1.0 + 1.0 / 16.0) + 1.0,
+            "q={q}: estimate {p} more than a sub-bucket below {truth}"
+        );
+    }
+    // A heavy-tailed shape exercises the log buckets the same way.
+    let h2 = Histogram::new();
+    for i in 0..64u32 {
+        h2.record(1u64 << (i % 40));
+    }
+    let s2 = h2.snapshot();
+    assert_eq!(s2.count, 64);
+    assert!(s2.p999() <= s2.max);
+}
+
+#[test]
+fn test_obs_snapshot_json_well_formed() {
+    let snap = ObsSnapshot::capture();
+    let json = snap.to_json();
+    assert!(json.contains("\"counters\""));
+    assert!(json.contains("\"histograms\""));
+    // Every event name and global histogram appears as a key.
+    for e in telemetry::ALL {
+        assert!(json.contains(&format!("\"{}\"", e.name())), "missing {}", e.name());
+    }
+    for name in ["kv_latency_ns", "kv_batch", "kv_queue_depth"] {
+        assert!(json.contains(&format!("\"{name}\"")), "missing {name}");
+    }
+    let opens = json.matches('{').count();
+    let closes = json.matches('}').count();
+    assert_eq!(opens, closes, "unbalanced JSON braces");
+    assert!(!json.contains("NaN") && !json.contains("inf"));
+    // A snapshot differenced with itself is empty.
+    assert!(snap.delta_since(&snap).is_empty());
+}

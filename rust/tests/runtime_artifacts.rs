@@ -118,6 +118,7 @@ fn test_kv_service_with_artifacts() {
         update_pct: 30,
         theta: 0.5,
         seed: 44,
+        ..big_atomics::coordinator::kv_service::KvConfig::default()
     };
     let rep = big_atomics::coordinator::kv_service::run(&cfg, Some(&rt)).unwrap();
     assert!(rep.total_requests > 200);
