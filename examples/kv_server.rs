@@ -41,10 +41,17 @@ fn main() -> big_atomics::util::error::Result<()> {
             theta: 0.9,
             seed: 0x4B56,
             initial_capacity: 0,
+            ..KvConfig::default()
         };
         println!(
-            "\nkv_server: n={} {} batch={} u={}% z={} for {:?}",
-            cfg.n, label, cfg.batch, cfg.update_pct, cfg.theta, cfg.duration
+            "\nkv_server: n={} {} batch={} u={}% z={} ingress={} for {:?}",
+            cfg.n,
+            label,
+            cfg.batch,
+            cfg.update_pct,
+            cfg.theta,
+            cfg.ingress.name(),
+            cfg.duration
         );
         let rep = run(&cfg, Some(&rt))?;
         println!(
@@ -52,6 +59,10 @@ fn main() -> big_atomics::util::error::Result<()> {
             rep.total_requests,
             rep.elapsed.as_secs_f64(),
             rep.mops()
+        );
+        println!(
+            "  ingress: {} offered = {} served + {} shed (claim_runs={} steal_runs={})",
+            rep.enqueued_batches, rep.sample_count, rep.shed_batches, rep.claim_runs, rep.steal_runs
         );
         println!(
             "  mix: {} finds / {} inserts / {} deletes",

@@ -24,8 +24,15 @@
 //!    vs pre-sized, driven update-heavy from empty — the cost of online
 //!    resizing is a number, and the growth itself is reported (final
 //!    bucket count + live-entry estimate per row).
+//! 7. **Ingress arm** (`--panel ingress`): the KV service driven
+//!    end-to-end through the lock-free sharded claim-queue front door
+//!    vs the mailbox baseline, at worker counts from 1× up to 4× the
+//!    hardware parallelism (the paper's oversubscription regime) —
+//!    throughput plus p50/p99/p999 per-request latency and the shed
+//!    count per row; the peak sustained ops/s of an arm is the max of
+//!    its rows.
 //!
-//! Run with `repro ablate [--panel ordering|smr|resize]`.
+//! Run with `repro ablate [--panel ordering|smr|resize|ingress]`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
@@ -315,6 +322,60 @@ pub fn run_resize_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
     rep
 }
 
+/// Ablation 7 (`repro ablate --panel ingress`): lock-free claim-queue
+/// ingress vs the mailbox baseline on the end-to-end KV service, at
+/// 1×/2×/4× hardware-parallelism worker counts (the 4× point is the
+/// oversubscribed regime the claim pattern is built for: a preempted
+/// drainer never wedges producers, they just tally onto the head).
+/// Each row reports throughput, histogram-exact latency quantiles, and
+/// the shed count (zero here — admission waits, so the arms serve
+/// identical offered load).
+pub fn run_ingress_ablation(cfg: &FigureCfg) -> Report {
+    use crate::coordinator::kv_service::{self, IngressMode, KvConfig};
+
+    let base = hw_threads().max(2);
+    let mut rep = Report::new(
+        "ablation_ingress",
+        &["ingress", "workers", "clients", "mops", "p50_ns", "p99_ns", "p999_ns", "shed"],
+    );
+    for mode in [IngressMode::Lockfree, IngressMode::Mailbox] {
+        for mult in [1usize, 2, 4] {
+            // Clamped to keep workers + clients well inside the thread
+            // registry (MAX_THREADS = 256) even on very wide machines —
+            // the shape test shares the registry with other parallel
+            // tests in the same binary.
+            let workers = (base * mult).min(96);
+            let clients = (workers / 2).clamp(2, 12);
+            let kv = KvConfig {
+                n: cfg.n.max(1024),
+                workers,
+                clients,
+                batch: 256,
+                duration: cfg.dur(),
+                theta: 0.0,
+                ingress: mode,
+                ..KvConfig::default()
+            };
+            let r = kv_service::run(&kv, None).expect("kv ingress ablation run");
+            let (p50, p99) = match &r.latency {
+                Some(l) => (l.p50, l.p99),
+                None => (0.0, 0.0),
+            };
+            rep.row(vec![
+                mode.name().into(),
+                workers.to_string(),
+                clients.to_string(),
+                format!("{:.3}", r.mops()),
+                format!("{p50:.0}"),
+                format!("{p99:.0}"),
+                r.latency_p999_ns.unwrap_or(0).to_string(),
+                r.shed_batches.to_string(),
+            ]);
+        }
+    }
+    rep
+}
+
 /// Run all ablations; returns the report (saved by the coordinator).
 pub fn run_ablations(cfg: &FigureCfg, source: &OpSource) -> Report {
     let mut rep = Report::new(
@@ -456,6 +517,33 @@ mod tests {
                 assert_eq!(initial, 64, "{row:?}");
                 assert!(fin > 64, "undersized table never grew: {row:?}");
             }
+        }
+    }
+
+    #[test]
+    fn test_ingress_ablation_shape() {
+        let cfg = FigureCfg {
+            secs_per_point: 0.05,
+            n: 1024,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_ingress_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_ingress_ablation(&cfg);
+        // 2 arms x 3 worker multipliers.
+        assert_eq!(rep.rows().len(), 6);
+        let arms: Vec<&str> = rep.rows().iter().map(|r| r[0].as_str()).collect();
+        for a in ["lockfree", "mailbox"] {
+            assert_eq!(arms.iter().filter(|x| **x == a).count(), 3, "{a}");
+        }
+        for row in rep.rows() {
+            assert!(row[1].parse::<usize>().unwrap() >= 2, "{row:?}");
+            assert!(row[2].parse::<usize>().unwrap() >= 2, "{row:?}");
+            assert!(row[3].parse::<f64>().unwrap() > 0.0, "{row:?}");
+            // Wait admission: nothing shed in either arm.
+            assert_eq!(row[7], "0", "{row:?}");
         }
     }
 

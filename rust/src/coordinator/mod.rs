@@ -113,15 +113,19 @@ impl Coordinator {
                     save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
                 }
                 "resize" => save(crate::bench::ablation::run_resize_ablation(cfg, &source))?,
+                "ingress" => save(crate::bench::ablation::run_ingress_ablation(cfg))?,
                 "" | "all" => {
                     save(crate::bench::ablation::run_ablations(cfg, &source))?;
                     save(crate::bench::ablation::run_ordering_ablation(cfg))?;
                     save(crate::bench::ablation::run_smr_ablation(cfg))?;
                     save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
                     save(crate::bench::ablation::run_resize_ablation(cfg, &source))?;
+                    save(crate::bench::ablation::run_ingress_ablation(cfg))?;
                 }
                 other => {
-                    crate::bail!("ablate panel {other}: use ordering|smr|resize (or omit for all)")
+                    crate::bail!(
+                        "ablate panel {other}: use ordering|smr|resize|ingress (or omit for all)"
+                    )
                 }
             },
             "all" => {
@@ -142,6 +146,9 @@ impl Coordinator {
                 saved.push(
                     crate::bench::ablation::run_resize_ablation(cfg, &source)
                         .save(&cfg.report_dir)?,
+                );
+                saved.push(
+                    crate::bench::ablation::run_ingress_ablation(cfg).save(&cfg.report_dir)?,
                 );
             }
             other => crate::bail!("unknown figure {other}"),

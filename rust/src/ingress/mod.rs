@@ -1,0 +1,54 @@
+//! Lock-free sharded ingress — the claim-pattern front door of the KV
+//! service, built entirely from the crate's own primitives.
+//!
+//! The paper's headline claim is robustness under oversubscription, and
+//! a `Mutex`+`Condvar` request queue is exactly what collapses there: a
+//! descheduled lock holder wedges every producer behind it. This
+//! subsystem replaces that layer with big-atomic machinery end to end:
+//!
+//! * [`queue::ClaimQueue`] — a multi-producer batch queue whose entire
+//!   state is one `SeqLock<QueueState>` big atomic (`head | tally |
+//!   claim-epoch`). Producers *enqueue-and-tally* with one witnessing
+//!   `compare_exchange`; a worker *claims* the whole accumulated run —
+//!   detach plus exactly-one-drainer handoff — with one more.
+//! * [`shard::ShardRouter`] — N power-of-two shards by
+//!   [`hash_value`](crate::hash::hash_value), per-shard queue, worker
+//!   affinity with steal-on-idle, so hot Zipfian keys serialize one
+//!   shard instead of the service.
+//! * [`admission`] — the bounded-tally backpressure layer: a full shard
+//!   sheds the batch back to the producer or makes it wait
+//!   (spin/yield), per [`admission::AdmissionPolicy`].
+//!
+//! ## Linearization points (the claim protocol)
+//!
+//! All three are successful operations on the one queue descriptor, so
+//! the per-queue history is the descriptor's modification order:
+//!
+//! 1. **Enqueue** — the CAS installing `{head: node, tally+1, claim}`.
+//!    Batches of one producer appear in its program order (each CAS
+//!    consumes the witness of the previous state).
+//! 2. **Claim** — the CAS installing `{0, 0, claim+1}` (odd): the run
+//!    transfers to exactly one drainer; every other `try_claim`
+//!    observes the odd claim word and fails until release.
+//! 3. **Release** — the `fetch_update` bumping the claim word back to
+//!    even when the drainer drops its [`queue::Run`].
+//!
+//! Because runs are detached whole, served in reversed (push) order,
+//! and serialized by the claim word, batches are served in claim-run
+//! order with per-producer FIFO preserved across runs — the property
+//! `tests/linearizability.rs` checks under concurrent enqueue +
+//! claim-drain + shed.
+//!
+//! No `Mutex`/`Condvar` anywhere in this module: producers and drainers
+//! use only the witnessing CAS, [`crate::util::backoff`], and
+//! [`crate::smr::epoch`] (node reclamation). The only blocking is the
+//! *explicit* `Wait` admission policy, and it blocks just the producer
+//! that chose backpressure.
+
+pub mod admission;
+pub mod queue;
+pub mod shard;
+
+pub use admission::{admit, Admitted, AdmissionPolicy};
+pub use queue::{ClaimQueue, QueueState, Run};
+pub use shard::ShardRouter;

@@ -1,0 +1,414 @@
+//! `ClaimQueue<T>` — the multi-producer claim-pattern batch queue.
+//!
+//! The whole queue is one [`BigAtomic`]: a [`SeqLock`]`<`[`QueueState`]`>`
+//! descriptor packing `{head, tally, claim}` into three words. Producers
+//! push heap nodes onto the intrusive `head` list and bump `tally` with
+//! **one witnessing `compare_exchange`** (enqueue-and-tally); a worker
+//! becomes the queue's *exactly-one drainer* by CASing the whole
+//! accumulated run out (`head/tally → 0`) while flipping the claim word
+//! odd — claim-and-detach is also a single CAS. Retry loops continue
+//! from the `Err` witness (never re-load) under the adaptive
+//! [`Backoff`](crate::util::backoff::Backoff); detached nodes are
+//! reclaimed through [`smr::epoch`](crate::smr::epoch).
+//!
+//! ## Linearization points
+//!
+//! * **enqueue** — the successful `compare_exchange` installing
+//!   `{head: node, tally+1, claim}` (inside the seqlock writer's
+//!   critical section; the version-word `RELEASE` unlock publishes the
+//!   node's `next`/`stamp`/payload writes, which precede the CAS in
+//!   program order, to any later `ACQUIRE` of the descriptor).
+//! * **claim** — the successful `compare_exchange` installing
+//!   `{head: 0, tally: 0, claim|1}`: the entire run transfers to the
+//!   winning drainer at this instant, and every later `try_claim`
+//!   observes the odd claim word and fails until release.
+//! * **release** — the `fetch_update` bumping the odd claim word to the
+//!   next even value ([`Run`]'s drop): the next successful claim's CAS
+//!   is ordered after it by the witness contract.
+//!
+//! ## Why the claim word is an epoch, not a flag
+//!
+//! `claim` advances by one on every claim and every release (odd while
+//! a drainer holds the run). Because it only ever grows, the
+//! full-descriptor CAS is ABA-proof: a head pointer that was detached,
+//! freed, reallocated, and re-pushed at the same address can never
+//! reappear with the same `(tally, claim)` pair — any intervening
+//! detach bumped `claim`. `claim >> 1` is also a free statistic: the
+//! number of runs ever claimed (plus one while a drainer is active).
+//!
+//! ## Reclamation
+//!
+//! After the claim CAS the chain is unreachable from the descriptor,
+//! but a probing reader ([`ClaimQueue::peek_stamp`]) may have loaded the
+//! old head under an epoch pin and still dereference it — so detached
+//! nodes are retired through [`smr::epoch`](crate::smr::epoch), never
+//! freed in place. Payloads move out at detach time; the node boxes ride
+//! the epoch bags (`FREE_DISTANCE` behind the pinning front).
+
+use std::marker::PhantomData;
+use std::mem::ManuallyDrop;
+
+use crate::atomics::{BigAtomic, SeqLock};
+use crate::impl_atomic_value;
+use crate::smr::epoch;
+use crate::util::backoff::snooze_lazy;
+
+/// The queue descriptor: one 3-word big-atomic value.
+///
+/// `head` is the newest node's address (0 = empty), `tally` the number
+/// of queued-but-unclaimed batches, `claim` the drainer epoch (odd ⇔ a
+/// drainer holds the current run; see the module docs for why this is a
+/// counter rather than a flag).
+#[repr(C, align(8))]
+#[derive(Copy, Clone, PartialEq, Eq, Default, Debug)]
+pub struct QueueState {
+    /// Newest node (`*mut Node<T>` as u64); 0 when empty.
+    pub head: u64,
+    /// Batches enqueued and not yet claimed (the admission bound's
+    /// currency).
+    pub tally: u64,
+    /// Drainer epoch: odd ⇔ claimed; bumps on claim *and* release.
+    pub claim: u64,
+}
+impl_atomic_value!(QueueState);
+
+impl QueueState {
+    /// Whether a drainer currently holds a claimed run.
+    #[inline]
+    pub fn drainer_active(self) -> bool {
+        self.claim & 1 == 1
+    }
+
+    /// Runs claimed so far (counting an in-flight one).
+    #[inline]
+    pub fn claim_runs(self) -> u64 {
+        self.claim.div_ceil(2)
+    }
+}
+
+/// Intrusive list node. `next`/`stamp` are plain fields: they are
+/// written only while the node is thread-private (before the publishing
+/// CAS) and read only by the exclusive drainer or by pinned peekers,
+/// both ordered after the publication (module docs, "enqueue").
+struct Node<T> {
+    next: u64,
+    /// Tally right after this node's enqueue — what
+    /// [`ClaimQueue::peek_stamp`] probes.
+    stamp: u64,
+    item: ManuallyDrop<T>,
+}
+
+/// Multi-producer / exactly-one-drainer batch queue (see module docs).
+///
+/// `bound` caps `tally` (0 = unbounded): a full queue rejects pushes in
+/// [`try_push`](Self::try_push), and the admission layer turns that into
+/// shed-or-wait policy. No `Mutex`/`Condvar` anywhere — producers and
+/// drainers use only the witnessing CAS, `util::backoff`, and the epoch
+/// scheme.
+pub struct ClaimQueue<T: Send + 'static> {
+    state: SeqLock<QueueState>,
+    bound: u64,
+    _owns: PhantomData<T>,
+}
+
+// SAFETY: the queue moves `T` values across threads (producer → drainer)
+// but never shares a `&T`; `T: Send` is exactly the requirement. The
+// descriptor itself is a big atomic.
+unsafe impl<T: Send + 'static> Send for ClaimQueue<T> {}
+unsafe impl<T: Send + 'static> Sync for ClaimQueue<T> {}
+
+impl<T: Send + 'static> ClaimQueue<T> {
+    /// An empty queue admitting at most `bound` queued batches
+    /// (0 = unbounded).
+    pub fn new(bound: u64) -> Self {
+        Self {
+            state: SeqLock::new(QueueState::default()),
+            bound,
+            _owns: PhantomData,
+        }
+    }
+
+    /// The descriptor right now (one seqlock read).
+    #[inline]
+    pub fn state(&self) -> QueueState {
+        self.state.load()
+    }
+
+    /// Queued-but-unclaimed batches.
+    #[inline]
+    pub fn depth(&self) -> u64 {
+        self.state().tally
+    }
+
+    /// Empty *and* no drainer mid-run — the shutdown-drain condition:
+    /// once producers stop, `is_idle` for every shard means every
+    /// admitted batch has been handed to (and finished by) a drainer.
+    #[inline]
+    pub fn is_idle(&self) -> bool {
+        let s = self.state();
+        s.head == 0 && !s.drainer_active()
+    }
+
+    /// Enqueue-and-tally: push `item` with one witnessing CAS, returning
+    /// `Ok(tally after the push)`. A full queue (`tally >= bound`)
+    /// returns `Err((item, tally))` — the caller owns the shed-or-wait
+    /// decision (see [`super::admission`]).
+    pub fn try_push(&self, item: T) -> Result<u64, (T, u64)> {
+        let mut cur = self.state.load();
+        if self.bound != 0 && cur.tally >= self.bound {
+            return Err((item, cur.tally));
+        }
+        let node = Box::into_raw(Box::new(Node {
+            next: cur.head,
+            stamp: cur.tally + 1,
+            item: ManuallyDrop::new(item),
+        }));
+        let mut bo = None;
+        loop {
+            // SAFETY: `node` is thread-private until the CAS below
+            // succeeds; these writes are published by the descriptor
+            // CAS (module docs, "enqueue").
+            unsafe {
+                (*node).next = cur.head;
+                (*node).stamp = cur.tally + 1;
+            }
+            let next = QueueState {
+                head: node as u64,
+                tally: cur.tally + 1,
+                claim: cur.claim,
+            };
+            match self.state.compare_exchange(cur, next) {
+                Ok(_) => {
+                    crate::counter!(KvEnqueue);
+                    return Ok(next.tally);
+                }
+                Err(w) => {
+                    if self.bound != 0 && w.tally >= self.bound {
+                        // Reclaim the unpublished node and hand the item
+                        // back with the witnessed depth.
+                        // SAFETY: the CAS failed, so `node` was never
+                        // published; we still own it exclusively.
+                        let mut n = unsafe { Box::from_raw(node) };
+                        let item = unsafe { ManuallyDrop::take(&mut n.item) };
+                        return Err((item, w.tally));
+                    }
+                    // Witness-fed retry (Dice et al.): continue from the
+                    // witness, no re-load, back off the contended line.
+                    crate::counter!(CasRetry);
+                    cur = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+        }
+    }
+
+    /// Claim-and-detach: become the queue's exactly-one drainer and take
+    /// the whole accumulated run. Returns `None` when the queue is empty
+    /// or another drainer's claim word is odd — **at most one [`Run`]
+    /// exists per queue at any time**. Dropping the `Run` releases the
+    /// claim.
+    pub fn try_claim(&self) -> Option<Run<'_, T>> {
+        let mut cur = self.state.load();
+        let mut bo = None;
+        loop {
+            if cur.head == 0 || cur.drainer_active() {
+                return None;
+            }
+            let next = QueueState {
+                head: 0,
+                tally: 0,
+                claim: cur.claim + 1, // even → odd: drainer active
+            };
+            match self.state.compare_exchange(cur, next) {
+                Ok(prev) => {
+                    crate::counter!(KvClaim);
+                    // SAFETY: the claim CAS unlinked the whole chain at
+                    // `prev.head`; we are its unique owner (pinned
+                    // peekers only read, and the nodes are epoch-retired
+                    // below, not freed).
+                    let items = unsafe { self.detach(prev.head) };
+                    return Some(Run { queue: self, items });
+                }
+                Err(w) => {
+                    crate::counter!(CasRetry);
+                    cur = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+        }
+    }
+
+    /// Move every payload out of the detached chain (reversing into
+    /// FIFO/push order) and epoch-retire the node boxes.
+    ///
+    /// # Safety
+    /// `head` must be a chain this caller exclusively owns (the winning
+    /// claim CAS's `prev.head`).
+    unsafe fn detach(&self, head: u64) -> Vec<T> {
+        let mut items = Vec::new();
+        let mut p = head as *mut Node<T>;
+        while !p.is_null() {
+            let next = unsafe { (*p).next } as *mut Node<T>;
+            items.push(unsafe { ManuallyDrop::take(&mut (*p).item) });
+            // SAFETY: unlinked by the claim CAS, unique (we just took
+            // the payload); pinned peekers may still read `stamp`, so
+            // the box must outlive their pins — the epoch scheme's job.
+            unsafe { epoch::retire_box(p) };
+            p = next;
+        }
+        // The chain links newest→oldest; serve in push order so each
+        // producer's batches stay FIFO within the run.
+        items.reverse();
+        items
+    }
+
+    /// Probe the newest queued batch's enqueue stamp (its 1-based
+    /// position in the accumulating run), or `None` when empty.
+    ///
+    /// This is the read that makes epoch reclamation load-bearing: the
+    /// head node may be claimed and retired by a drainer at any moment
+    /// after our descriptor read, so the dereference is only sound
+    /// because the pin taken *before* that read blocks the epoch from
+    /// advancing `FREE_DISTANCE` past the retirement stamp.
+    pub fn peek_stamp(&self) -> Option<u64> {
+        let _g = epoch::pin();
+        let s = self.state.load();
+        if s.head == 0 {
+            return None;
+        }
+        // SAFETY: pinned before the descriptor read, so a node reachable
+        // from it cannot have been epoch-freed yet; `stamp` was
+        // published by the enqueue CAS (module docs).
+        Some(unsafe { (*(s.head as *const Node<T>)).stamp })
+    }
+}
+
+impl<T: Send + 'static> Drop for ClaimQueue<T> {
+    fn drop(&mut self) {
+        // Exclusive access (`&mut self`): free any never-claimed chain
+        // directly, payloads included.
+        let s = self.state.load();
+        let mut p = s.head as *mut Node<T>;
+        while !p.is_null() {
+            // SAFETY: we own the whole chain; each node is dropped once.
+            let mut n = unsafe { Box::from_raw(p) };
+            p = n.next as *mut Node<T>;
+            unsafe { ManuallyDrop::drop(&mut n.item) };
+        }
+    }
+}
+
+/// A claimed run: the entire batch backlog of one queue, owned by
+/// exactly one drainer. Serve the batches (in push order) via
+/// [`drain`](Self::drain); dropping the run releases the claim word
+/// (odd → next even), letting the next drainer in. Holding the run while
+/// serving is what keeps each producer's batches in order *across* runs:
+/// batches pushed mid-service wait for the release.
+pub struct Run<'a, T: Send + 'static> {
+    queue: &'a ClaimQueue<T>,
+    items: Vec<T>,
+}
+
+impl<T: Send + 'static> Run<'_, T> {
+    /// Batches in this run (≥ 1: empty queues are never claimed).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The run's batches in push (per-producer FIFO) order.
+    pub fn drain(&mut self) -> std::vec::Drain<'_, T> {
+        self.items.drain(..)
+    }
+}
+
+impl<T: Send + 'static> Drop for Run<'_, T> {
+    fn drop(&mut self) {
+        // Release: odd → even, bumping the claim epoch. fetch_update's
+        // closure is total, so the Err arm is unreachable.
+        let _ = self.queue.state.fetch_update(|mut s| {
+            debug_assert!(s.drainer_active(), "release without a claim");
+            s.claim += 1;
+            Some(s)
+        });
+        // Opportunistic epoch housekeeping off the enqueue path: one
+        // advance/collect attempt per run bounds the node backlog.
+        epoch::try_advance_and_collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_push_claim_fifo_roundtrip() {
+        let q: ClaimQueue<u64> = ClaimQueue::new(0);
+        assert!(q.is_idle());
+        assert!(q.try_claim().is_none(), "claimed an empty queue");
+        for i in 0..5u64 {
+            assert_eq!(q.try_push(i), Ok(i + 1));
+        }
+        assert_eq!(q.depth(), 5);
+        assert_eq!(q.peek_stamp(), Some(5));
+        let mut run = q.try_claim().expect("run");
+        assert_eq!(run.len(), 5);
+        // Claimed: empty tally, drainer active, not idle.
+        assert_eq!(q.depth(), 0);
+        assert!(q.state().drainer_active());
+        assert!(!q.is_idle());
+        assert!(q.try_claim().is_none(), "second drainer got in");
+        let got: Vec<u64> = run.drain().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4], "not push order");
+        drop(run);
+        assert!(q.is_idle());
+        assert_eq!(q.state().claim_runs(), 1);
+    }
+
+    #[test]
+    fn test_bound_sheds_and_returns_item() {
+        let q: ClaimQueue<u64> = ClaimQueue::new(2);
+        assert_eq!(q.try_push(1), Ok(1));
+        assert_eq!(q.try_push(2), Ok(2));
+        let (back, depth) = q.try_push(3).unwrap_err();
+        assert_eq!((back, depth), (3, 2));
+        // Draining reopens admission.
+        drop(q.try_claim().expect("run"));
+        assert_eq!(q.try_push(3), Ok(1));
+    }
+
+    #[test]
+    fn test_new_pushes_during_run_wait_for_release() {
+        let q: ClaimQueue<u64> = ClaimQueue::new(0);
+        q.try_push(1).unwrap();
+        let run = q.try_claim().expect("run");
+        q.try_push(2).unwrap();
+        assert_eq!(q.depth(), 1);
+        assert!(q.try_claim().is_none(), "run 2 claimed while run 1 live");
+        drop(run);
+        let mut r2 = q.try_claim().expect("run 2");
+        assert_eq!(r2.drain().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn test_drop_frees_unclaimed_chain() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        struct D(Arc<AtomicUsize>);
+        impl Drop for D {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let q: ClaimQueue<D> = ClaimQueue::new(0);
+        for _ in 0..4 {
+            assert!(q.try_push(D(Arc::clone(&drops))).is_ok());
+        }
+        drop(q);
+        assert_eq!(drops.load(Ordering::SeqCst), 4, "leaked queued items");
+    }
+}

@@ -1,0 +1,118 @@
+//! Shard router: N independent [`ClaimQueue`]s keyed by
+//! [`hash_value`](crate::hash::hash_value).
+//!
+//! Hot Zipfian keys all land in one shard, but the *other* shards keep
+//! flowing — the router is what keeps a skewed key mix from serializing
+//! the whole ingress behind one drainer. Workers have an affinity shard
+//! (`worker % shards`) and steal a whole run from a sibling shard only
+//! when their own queue has nothing claimable
+//! ([`claim_from`](ShardRouter::claim_from)), so the common case keeps
+//! each shard's batches on one core while idle workers still make
+//! progress on any backlog.
+
+use crate::hash::hash_value;
+use crate::util::CachePadded;
+
+use super::queue::{ClaimQueue, Run};
+
+/// A power-of-two array of cache-padded claim queues.
+pub struct ShardRouter<T: Send + 'static> {
+    shards: Box<[CachePadded<ClaimQueue<T>>]>,
+    mask: u64,
+}
+
+impl<T: Send + 'static> ShardRouter<T> {
+    /// `shards` rounded up to a power of two (min 1), each queue bounded
+    /// to `bound` queued batches (0 = unbounded).
+    pub fn new(shards: usize, bound: u64) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..n).map(|_| CachePadded::new(ClaimQueue::new(bound))).collect(),
+            mask: (n - 1) as u64,
+        }
+    }
+
+    /// Number of shards (a power of two).
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning `key` — same word-fold hash as the tables, so a
+    /// key's ingress shard is stable across the stack.
+    #[inline]
+    pub fn shard_of_key(&self, key: u64) -> usize {
+        (hash_value(&key) & self.mask) as usize
+    }
+
+    /// Direct access to one shard's queue (producers route here).
+    #[inline]
+    pub fn queue(&self, shard: usize) -> &ClaimQueue<T> {
+        &self.shards[shard]
+    }
+
+    /// Worker-side claim with affinity + steal-on-idle: try the home
+    /// shard first, then scan siblings for a claimable run. Returns the
+    /// shard served, whether it was a steal, and the run.
+    pub fn claim_from(&self, home: usize) -> Option<(usize, bool, Run<'_, T>)> {
+        let n = self.shards.len();
+        for i in 0..n {
+            let s = (home + i) & self.mask as usize;
+            if let Some(run) = self.shards[s].try_claim() {
+                if i != 0 {
+                    crate::counter!(KvStealRun);
+                }
+                return Some((s, i != 0, run));
+            }
+        }
+        None
+    }
+
+    /// Every shard empty with no drainer mid-run — with producers
+    /// stopped, this is the "all admitted batches served" condition the
+    /// shutdown drain spins on.
+    pub fn all_idle(&self) -> bool {
+        self.shards.iter().all(|q| q.is_idle())
+    }
+
+    /// Per-shard queued-batch depths (diagnostics).
+    pub fn depths(&self) -> Vec<u64> {
+        self.shards.iter().map(|q| q.depth()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_router_shape_and_stable_routing() {
+        let r: ShardRouter<u64> = ShardRouter::new(3, 0);
+        assert_eq!(r.shards(), 4, "not rounded to a power of two");
+        for key in [0u64, 1, 42, u64::MAX] {
+            let s = r.shard_of_key(key);
+            assert!(s < 4);
+            assert_eq!(s, r.shard_of_key(key), "routing not stable");
+        }
+        assert!(r.all_idle());
+        assert_eq!(r.depths(), vec![0; 4]);
+    }
+
+    #[test]
+    fn test_claim_from_prefers_home_then_steals() {
+        let r: ShardRouter<u64> = ShardRouter::new(2, 0);
+        r.queue(0).try_push(10).unwrap();
+        r.queue(1).try_push(11).unwrap();
+        // Home shard first.
+        let (s, stolen, run) = r.claim_from(1).expect("run");
+        assert_eq!((s, stolen), (1, false));
+        drop(run);
+        // Home empty: steal the sibling's run.
+        let (s, stolen, mut run) = r.claim_from(1).expect("stolen run");
+        assert_eq!((s, stolen), (0, true));
+        assert_eq!(run.drain().collect::<Vec<_>>(), vec![10]);
+        drop(run);
+        assert!(r.all_idle());
+        assert!(r.claim_from(0).is_none());
+    }
+}

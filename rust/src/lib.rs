@@ -36,6 +36,9 @@
 //! ## Layout of this crate (three-layer architecture)
 //!
 //! * [`atomics`], [`smr`], [`hash`] — the paper's systems (L3).
+//! * [`ingress`] — the lock-free sharded claim-queue front door of the
+//!   KV service (multi-producer enqueue-and-tally on one big atomic,
+//!   exactly-one-drainer runs, admission backpressure).
 //! * [`obs`] — crate-native telemetry: per-thread sharded event counters
 //!   (behind the `telemetry` feature's [`counter!`] macro) + lock-free
 //!   log-linear latency histograms + JSON [`obs::ObsSnapshot`] dumps.
@@ -51,6 +54,7 @@ pub mod atomics;
 pub mod bench;
 pub mod coordinator;
 pub mod hash;
+pub mod ingress;
 pub mod obs;
 pub mod runtime;
 pub mod smr;

@@ -2,10 +2,11 @@
 //!
 //! ```text
 //! repro fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all   regenerate paper exhibits + ablations
-//!       [--panel u|z|n|w|p|ordering|smr] [--oversub] [--secs S] [--n N]
-//!       [--artifact] [--reports DIR]
-//! repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z]
-//!          [--reservoir R] [--artifact] [--telemetry]
+//!       [--panel u|z|n|w|p|ordering|smr|resize|ingress] [--oversub] [--secs S]
+//!       [--n N] [--artifact] [--reports DIR]
+//! repro kv [--workers W] [--clients C] [--secs S] [--n N] [--cap C] [--u PCT]
+//!          [--z Z] [--ingress lockfree|mailbox] [--shards S]
+//!          [--admission wait|shed] [--reservoir R] [--artifact] [--telemetry]
 //! repro stats                       exercise the stack, print telemetry JSON
 //! repro validate [--count C]        cross-check AOT artifact vs Rust generator
 //! repro smoke                       PJRT + artifact load check
@@ -36,6 +37,10 @@ struct Args {
     count: usize,
     telemetry: bool,
     reservoir: usize,
+    ingress: String,
+    shards: usize,
+    clients: usize,
+    admission: String,
 }
 
 fn parse_args() -> Result<Args> {
@@ -54,6 +59,10 @@ fn parse_args() -> Result<Args> {
         count: 1 << 14,
         telemetry: false,
         reservoir: kv_service::DEFAULT_RESERVOIR,
+        ingress: "lockfree".into(),
+        shards: 0,
+        clients: 0,
+        admission: "wait".into(),
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -75,6 +84,10 @@ fn parse_args() -> Result<Args> {
             "--count" => args.count = next("--count")?.parse()?,
             "--telemetry" => args.telemetry = true,
             "--reservoir" => args.reservoir = next("--reservoir")?.parse()?,
+            "--ingress" => args.ingress = next("--ingress")?,
+            "--shards" => args.shards = next("--shards")?.parse()?,
+            "--clients" => args.clients = next("--clients")?.parse()?,
+            "--admission" => args.admission = next("--admission")?,
             "--help" | "-h" => {
                 args.command = "help".into();
                 return Ok(args);
@@ -96,20 +109,26 @@ repro — Big Atomics (Anderson, Blelloch, Jayanti 2025) reproduction
 
 USAGE:
   repro <fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all> [options]
-  repro kv [--workers W] [--secs S] [--n N] [--cap C] [--u PCT] [--z Z]
-           [--reservoir R] [--artifact] [--telemetry]
+  repro kv [--workers W] [--clients C] [--secs S] [--n N] [--cap C] [--u PCT]
+           [--z Z] [--ingress lockfree|mailbox] [--shards S]
+           [--admission wait|shed] [--reservoir R] [--artifact] [--telemetry]
   repro stats                       exercise each subsystem, print telemetry JSON
   repro validate [--count C]
   repro smoke
 
 OPTIONS:
   --panel PANEL       figure panel (fig2: u|z|n|w|p|fu; fig3: u|z|n|wide;
-                      ablate: ordering|smr|resize; default: all panels)
+                      ablate: ordering|smr|resize|ingress; default: all panels)
   --oversub           run the 4x-oversubscribed variant of the panel
   --secs S            seconds per measured point      [0.3]
   --n N               elements / key-space size       [65536]
   --cap C             kv: initial table buckets (0 = sized for N; set
                       small, e.g. 64, to exercise online growth)
+  --ingress MODE      kv: front door — lockfree (sharded claim queues,
+                      the default) or mailbox (the Mutex+Condvar baseline)
+  --shards S          kv: ingress shards (lockfree; 0 = one per worker)
+  --clients C         kv: producer threads             [1]
+  --admission POLICY  kv: full-shard policy — wait (backpressure) | shed
   --reservoir R       kv: max raw latency samples retained [4096]
   --artifact          generate op streams via the AOT HLO artifact
   --telemetry         capture an event-counter/histogram snapshot per run
@@ -173,6 +192,10 @@ fn main() -> Result<()> {
                 seed: 0x4B56,
                 initial_capacity: args.cap,
                 reservoir: args.reservoir,
+                ingress: kv_service::IngressMode::parse(&args.ingress)?,
+                shards: args.shards,
+                clients: args.clients,
+                admission: big_atomics::ingress::AdmissionPolicy::parse(&args.admission)?,
             };
             let rep = kv_service::run(&cfg, rt.as_ref())?;
             println!(
@@ -184,6 +207,30 @@ fn main() -> Result<()> {
                 rep.inserts,
                 rep.deletes
             );
+            println!(
+                "kv ingress [{}]: {} batches offered = {} served + {} shed \
+                 (waits={} claim_runs={} steal_runs={})",
+                rep.ingress,
+                rep.enqueued_batches,
+                rep.sample_count,
+                rep.shed_batches,
+                rep.admit_waits,
+                rep.claim_runs,
+                rep.steal_runs,
+            );
+            if !rep.shard_batches.is_empty() {
+                println!("kv shards: batches per shard {:?}", rep.shard_batches);
+                let depth = big_atomics::obs::KV_SHARD_DEPTH.snapshot();
+                if depth.count > 0 {
+                    println!(
+                        "kv shard depth: mean {:.1}, p50 {}, p99 {}, max {}",
+                        depth.mean(),
+                        depth.p50(),
+                        depth.p99(),
+                        depth.max
+                    );
+                }
+            }
             println!(
                 "kv workers: batches per worker {:?}, peak concurrent {}",
                 rep.worker_batches, rep.peak_concurrent_workers

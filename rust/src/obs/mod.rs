@@ -40,13 +40,18 @@ pub static KV_LATENCY_NS: Histogram = Histogram::new();
 pub static KV_BATCH: Histogram = Histogram::new();
 /// Mailbox depth observed at each enqueue (before the push).
 pub static KV_QUEUE_DEPTH: Histogram = Histogram::new();
+/// Lock-free ingress: shard queue tally right after each admitted batch
+/// (always-on — records in default builds like the rest of the
+/// histograms; `repro kv` folds its quantiles into the report).
+pub static KV_SHARD_DEPTH: Histogram = Histogram::new();
 
 /// Every named global histogram, in snapshot order.
-pub fn global_histograms() -> [(&'static str, &'static Histogram); 3] {
+pub fn global_histograms() -> [(&'static str, &'static Histogram); 4] {
     [
         ("kv_latency_ns", &KV_LATENCY_NS),
         ("kv_batch", &KV_BATCH),
         ("kv_queue_depth", &KV_QUEUE_DEPTH),
+        ("kv_shard_depth", &KV_SHARD_DEPTH),
     ]
 }
 

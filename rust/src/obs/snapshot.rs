@@ -21,7 +21,7 @@ use super::telemetry::{self, NUM_EVENTS};
 pub struct ObsSnapshot {
     /// Cell order matches [`telemetry::ALL`].
     pub counters: [u64; NUM_EVENTS],
-    /// Named global histograms (currently the kv_service trio).
+    /// Named global histograms (currently the kv_service set).
     pub hists: Vec<(&'static str, HistogramSnapshot)>,
 }
 

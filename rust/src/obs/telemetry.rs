@@ -100,10 +100,21 @@ pub enum Event {
     KvBatch,
     /// Shutdown-phase steal of another worker's leftover mailbox.
     KvSteal,
+    // -- ingress/ (lock-free claim-queue front door) -----------------------
+    /// Batch admitted to a shard queue (the enqueue-and-tally CAS won).
+    KvEnqueue,
+    /// A drainer claimed a whole run (the claim-and-detach CAS won).
+    KvClaim,
+    /// Batch rejected by a full shard under the Shed admission policy.
+    KvShed,
+    /// A producer entered the Wait admission backoff on a full shard.
+    KvAdmitWait,
+    /// A worker claimed a run from a non-affinity shard (steal-on-idle).
+    KvStealRun,
 }
 
 /// Number of events (cells per thread row).
-pub const NUM_EVENTS: usize = Event::KvSteal as usize + 1;
+pub const NUM_EVENTS: usize = Event::KvStealRun as usize + 1;
 
 /// All events in cell order — drives snapshot naming; `test_all_dense`
 /// pins the `ALL[i] as usize == i` invariant.
@@ -138,6 +149,11 @@ pub const ALL: [Event; NUM_EVENTS] = [
     Event::KvRequest,
     Event::KvBatch,
     Event::KvSteal,
+    Event::KvEnqueue,
+    Event::KvClaim,
+    Event::KvShed,
+    Event::KvAdmitWait,
+    Event::KvStealRun,
 ];
 
 impl Event {
@@ -174,6 +190,11 @@ impl Event {
             Event::KvRequest => "kv_request",
             Event::KvBatch => "kv_batch",
             Event::KvSteal => "kv_steal",
+            Event::KvEnqueue => "kv_enqueue",
+            Event::KvClaim => "kv_claim",
+            Event::KvShed => "kv_shed",
+            Event::KvAdmitWait => "kv_admit_wait",
+            Event::KvStealRun => "kv_steal_run",
         }
     }
 }

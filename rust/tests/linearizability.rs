@@ -527,3 +527,202 @@ fn test_store_cas_mix_writable_impls() {
     run::<CachedWritable<V>>("Cached-Writable");
     run::<HtmSim<V>>("HTM(sim)");
 }
+
+// ---------------------------------------------------------------------------
+// Claim-queue (ingress) linearizability: the batch front door of the KV
+// service. Items are tagged (producer, seq); producers enqueue batches
+// concurrently with drainers claiming runs. The claim word serializes
+// drains (exactly one odd-claim holder at a time), so appending each
+// drained run to a shared log while holding the `Run` yields a single
+// global service order to check against:
+//
+//   1. no batch lost, none served twice (multiset equality with pushes);
+//   2. per-producer order: each producer's seqs appear strictly
+//      increasing in the global service order (enqueue linearizes at
+//      one witnessing CAS, claim detaches a whole chain, runs are
+//      served one-at-a-time — FIFO per producer end to end);
+//   3. under Shed admission, accepted + shed == attempted and only
+//      accepted items are ever served.
+// ---------------------------------------------------------------------------
+
+use big_atomics::ingress::{admit, Admitted, AdmissionPolicy, ClaimQueue};
+
+/// A tagged batch: (producer id, per-producer sequence number).
+type Tagged = (usize, u64);
+
+#[test]
+fn test_claim_queue_no_loss_no_dup_per_producer_fifo() {
+    const PRODUCERS: usize = 4;
+    const PER_PRODUCER: u64 = 2_000;
+    const DRAINERS: usize = 3;
+
+    let q: Arc<ClaimQueue<Tagged>> = Arc::new(ClaimQueue::new(0)); // unbounded
+    let served: Arc<std::sync::Mutex<Vec<Tagged>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let live_producers = Arc::new(AtomicU64::new(PRODUCERS as u64));
+    let barrier = Arc::new(std::sync::Barrier::new(PRODUCERS + DRAINERS));
+
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let q = Arc::clone(&q);
+        let live = Arc::clone(&live_producers);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            for seq in 0..PER_PRODUCER {
+                q.try_push((p, seq)).expect("unbounded push failed");
+            }
+            live.fetch_sub(1, Ordering::AcqRel);
+        }));
+    }
+    for _ in 0..DRAINERS {
+        let q = Arc::clone(&q);
+        let served = Arc::clone(&served);
+        let live = Arc::clone(&live_producers);
+        let barrier = Arc::clone(&barrier);
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            loop {
+                match q.try_claim() {
+                    Some(mut run) => {
+                        // Append while holding the Run: the claim word
+                        // makes this the unique active drainer, so the
+                        // log order is the service order.
+                        let mut log = served.lock().unwrap();
+                        log.extend(run.drain());
+                    }
+                    None => {
+                        if live.load(Ordering::Acquire) == 0 && q.is_idle() {
+                            break;
+                        }
+                        std::hint::spin_loop();
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let log = served.lock().unwrap();
+    // 1. Conservation: every pushed item served exactly once.
+    assert_eq!(log.len(), PRODUCERS * PER_PRODUCER as usize, "lost/duplicated items");
+    let mut seen = std::collections::HashSet::new();
+    for &(p, seq) in log.iter() {
+        assert!(seen.insert((p, seq)), "duplicate service of ({p},{seq})");
+    }
+    // 2. Per-producer FIFO in the global service order.
+    let mut next_expected = [0u64; PRODUCERS];
+    for &(p, seq) in log.iter() {
+        assert_eq!(
+            seq, next_expected[p],
+            "producer {p} reordered: served {seq}, expected {}",
+            next_expected[p]
+        );
+        next_expected[p] = seq + 1;
+    }
+    assert!(q.is_idle());
+}
+
+#[test]
+fn test_claim_queue_exactly_one_drainer() {
+    const THREADS: usize = 8;
+    // Non-empty queue, THREADS concurrent claim attempts: exactly one
+    // may win while the claim word is odd.
+    let q: Arc<ClaimQueue<u64>> = Arc::new(ClaimQueue::new(0));
+    for i in 0..64 {
+        q.try_push(i).unwrap();
+    }
+    let winners = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(std::sync::Barrier::new(THREADS));
+    let handles: Vec<_> = (0..THREADS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let winners = Arc::clone(&winners);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                if let Some(run) = q.try_claim() {
+                    winners.fetch_add(1, Ordering::AcqRel);
+                    // Hold the run so no second claim can start.
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    assert_eq!(run.len(), 64);
+                    assert!(q.try_claim().is_none(), "second drainer admitted mid-run");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(winners.load(Ordering::SeqCst), 1, "claim admitted multiple drainers");
+}
+
+#[test]
+fn test_claim_queue_shed_conservation_under_concurrency() {
+    const PRODUCERS: usize = 4;
+    const ATTEMPTS: u64 = 5_000;
+    const BOUND: u64 = 8;
+
+    let q: Arc<ClaimQueue<Tagged>> = Arc::new(ClaimQueue::new(BOUND));
+    let served: Arc<std::sync::Mutex<Vec<Tagged>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let accepted = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    let live = Arc::new(AtomicU64::new(PRODUCERS as u64));
+
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let q = Arc::clone(&q);
+        let accepted = Arc::clone(&accepted);
+        let shed = Arc::clone(&shed);
+        let live = Arc::clone(&live);
+        handles.push(std::thread::spawn(move || {
+            for seq in 0..ATTEMPTS {
+                match admit(&q, AdmissionPolicy::Shed, (p, seq)) {
+                    Admitted::Enqueued { depth, .. } => {
+                        assert!(depth <= BOUND, "admitted past the bound: depth {depth}");
+                        accepted.fetch_add(1, Ordering::AcqRel);
+                    }
+                    Admitted::Shed(item) => {
+                        assert_eq!(item, (p, seq), "shed returned someone else's batch");
+                        shed.fetch_add(1, Ordering::AcqRel);
+                    }
+                }
+            }
+            live.fetch_sub(1, Ordering::AcqRel);
+        }));
+    }
+    // One drainer keeps the queue moving so some pushes are admitted.
+    {
+        let q = Arc::clone(&q);
+        let served = Arc::clone(&served);
+        let live = Arc::clone(&live);
+        handles.push(std::thread::spawn(move || loop {
+            match q.try_claim() {
+                Some(mut run) => served.lock().unwrap().extend(run.drain()),
+                None => {
+                    if live.load(Ordering::Acquire) == 0 && q.is_idle() {
+                        break;
+                    }
+                    std::hint::spin_loop();
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let log = served.lock().unwrap();
+    let acc = accepted.load(Ordering::SeqCst);
+    let sh = shed.load(Ordering::SeqCst);
+    // Conservation: attempted == accepted + shed, and exactly the
+    // accepted items were served (once each).
+    assert_eq!(acc + sh, PRODUCERS as u64 * ATTEMPTS, "an attempt vanished");
+    assert_eq!(log.len() as u64, acc, "served != accepted");
+    assert!(acc > 0, "bound shed everything — drainer never ran?");
+    let mut seen = std::collections::HashSet::new();
+    for &item in log.iter() {
+        assert!(seen.insert(item), "duplicate service of {item:?}");
+    }
+}

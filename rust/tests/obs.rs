@@ -103,7 +103,7 @@ fn test_obs_snapshot_json_well_formed() {
     for e in telemetry::ALL {
         assert!(json.contains(&format!("\"{}\"", e.name())), "missing {}", e.name());
     }
-    for name in ["kv_latency_ns", "kv_batch", "kv_queue_depth"] {
+    for name in ["kv_latency_ns", "kv_batch", "kv_queue_depth", "kv_shard_depth"] {
         assert!(json.contains(&format!("\"{name}\"")), "missing {name}");
     }
     let opens = json.matches('{').count();

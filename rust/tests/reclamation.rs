@@ -376,3 +376,124 @@ fn test_memeff_epoch_recycler_exact_under_concurrency() {
     }
     assert_eq!(a.load().0[0], wins.load(Ordering::SeqCst));
 }
+
+// ---------------------------------------------------------------------------
+// Ingress claim-queue nodes: grow-under-churn reclamation.
+//
+// Queue nodes are epoch-retired by the drainer (`detach` walks the
+// claimed chain, takes each payload, retires the node), while
+// concurrent *peekers* pin the epoch and dereference the current head
+// node's stamp (`peek_stamp`) — the exact use-after-free window the
+// epoch protocol must close: a node another thread just claimed and
+// retired must stay mapped until every pin from before the retire
+// drains. Assertions follow this file's conventions: exact counts only
+// on our own drop counter, liveness via bounded retries.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn test_claim_queue_nodes_reclaimed_under_churn() {
+    use big_atomics::ingress::ClaimQueue;
+    use std::sync::atomic::AtomicU64;
+
+    const PRODUCERS: usize = 3;
+    const PEEKERS: usize = 2;
+    const PER_PRODUCER: u64 = 3_000;
+
+    let drops = Arc::new(AtomicUsize::new(0));
+    let q: Arc<ClaimQueue<Counted>> = Arc::new(ClaimQueue::new(0));
+    let live = Arc::new(AtomicU64::new(PRODUCERS as u64));
+    let epoch_before = epoch::global_epoch();
+
+    let mut handles = Vec::new();
+    for p in 0..PRODUCERS {
+        let q = Arc::clone(&q);
+        let drops = Arc::clone(&drops);
+        let live = Arc::clone(&live);
+        handles.push(std::thread::spawn(move || {
+            for seq in 0..PER_PRODUCER {
+                let item = Counted {
+                    drops: Arc::clone(&drops),
+                    payload: (p as u64) << 32 | seq,
+                };
+                if q.try_push(item).is_err() {
+                    panic!("unbounded push failed");
+                }
+            }
+            live.fetch_sub(1, Ordering::AcqRel);
+        }));
+    }
+    // Peekers: pin + deref the head node's stamp while drainers retire
+    // nodes under them. A stamp can never come from the future.
+    let stop_peek = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    for _ in 0..PEEKERS {
+        let q = Arc::clone(&q);
+        let stop = Arc::clone(&stop_peek);
+        handles.push(std::thread::spawn(move || {
+            while !stop.load(Ordering::Acquire) {
+                if let Some(stamp) = q.peek_stamp() {
+                    assert!(
+                        stamp <= epoch::global_epoch(),
+                        "node stamp {stamp} from the future"
+                    );
+                }
+            }
+        }));
+    }
+    // Drainer (this thread): claim runs until the producers are done
+    // and the queue is empty; dropping each drained Vec drops the
+    // payloads — our exact conservation signal.
+    let mut served = 0u64;
+    loop {
+        match q.try_claim() {
+            Some(mut run) => {
+                served += run.len() as u64;
+                drop(run.drain().collect::<Vec<_>>());
+            }
+            None => {
+                if live.load(Ordering::Acquire) == 0 && q.is_idle() {
+                    break;
+                }
+                std::thread::yield_now();
+            }
+        }
+    }
+    stop_peek.store(true, Ordering::Release);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let total = PRODUCERS as u64 * PER_PRODUCER;
+    assert_eq!(served, total, "lost or duplicated queue items");
+    assert_eq!(
+        drops.load(Ordering::SeqCst) as u64,
+        total,
+        "payload drop conservation broke under churn"
+    );
+    // Liveness: the run-release hook (`Run::drop` →
+    // try_advance_and_collect) must have kept the epoch turning under
+    // churn — pinned peekers may stall one advance, never all of them.
+    // Retry: a parallel test's pin can hold the epoch briefly.
+    let mut advanced = false;
+    for _ in 0..100_000 {
+        epoch::try_advance_and_collect();
+        if epoch::global_epoch() > epoch_before {
+            advanced = true;
+            break;
+        }
+        std::thread::yield_now();
+    }
+    assert!(advanced, "global epoch never advanced across the churn");
+
+    // The not-claimed path: items still chained when the queue drops are
+    // freed (and their payloads dropped) by ClaimQueue::drop, exactly.
+    let tail_drops = Arc::new(AtomicUsize::new(0));
+    let q2: ClaimQueue<Counted> = ClaimQueue::new(0);
+    for i in 0..50u64 {
+        let _ = q2.try_push(Counted {
+            drops: Arc::clone(&tail_drops),
+            payload: i,
+        });
+    }
+    drop(q2);
+    assert_eq!(tail_drops.load(Ordering::SeqCst), 50, "queue drop leaked payloads");
+}
