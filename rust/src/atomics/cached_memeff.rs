@@ -537,6 +537,11 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> CachedMemEff<T, P, S> {
     /// writer installed meanwhile, help cache *their* value, looping
     /// until the backup is null or someone else holds the lock.
     fn try_seqlock(&self, mut ver: u64, mut desired: T, mut raw_p: usize, g: &S::Guard) {
+        // Fault window: about to re-cache — skipping (or dawdling) here
+        // leaves the backup non-null, which only costs readers the
+        // indirect path until a later writer helps ("re-caching until
+        // success" makes this crash-tolerant by design).
+        crate::failpoint!(Alg2Recache);
         loop {
             // Ordering: RELAXED pre-check — advisory only; the lock CAS
             // below re-validates against the same version.
@@ -696,6 +701,11 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedMemEff<T,
             let new_node = self.domain.get_free_node(desired);
             let new_raw = new_node as usize;
             debug_assert!(!is_null(new_raw));
+            // Fault window: slab node taken + value written, install CAS
+            // next — a kill here strands the node installed-but-unlinked
+            // until its owner's next reclamation scan; a stall forces
+            // rivals to back off against a hot backup line.
+            crate::failpoint!(Alg2Install);
 
             match self
                 .backup

@@ -189,6 +189,10 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<
 
         let new_node = Box::into_raw(Box::new(Node { value: desired }));
         let new_marked = new_node as usize | MARK; // cache invalid until copied
+        // Fault window: marked node built, install CAS next — a kill
+        // here leaks only the unpublished node; a stall forces rivals
+        // onto the slow path until the cache is recached.
+        crate::failpoint!(Alg1Install);
         // Ordering: RELEASE on success — the new node's contents must
         // happen-before its address is observable (readers ACQUIRE it);
         // RELAXED on failure — `actual` is only compared, and the retry
@@ -238,6 +242,10 @@ impl<T: AtomicValue, P: OrderingPolicy, S: Smr> BigAtomic<T> for CachedWaitFree<
         // Ordering: ACQUIRE re-check + ACQUIRE lock-CAS (RELAXED on
         // failure: we simply skip the copy) — the seqlock writer
         // protocol, as in SeqLock::lock.
+        // Fault window: about to bid for the recache lock — skipping
+        // (or dawdling) here just leaves the cache invalid, which the
+        // invariants permit.
+        crate::failpoint!(Alg1Recache);
         if ver % 2 == 0
             && ver == self.version.load(P::ACQUIRE)
             && self

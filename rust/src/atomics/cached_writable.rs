@@ -89,6 +89,10 @@ impl<T: AtomicValue, S: Smr> CachedWritable<T, S> {
     /// a write was pending — which can happen at most once per pending
     /// write, hence callers try twice.
     fn help_write(&self) -> bool {
+        // Fault window: a helper about to transfer W into Z — dying or
+        // dawdling here is harmless because every store and cas helps
+        // (a pending write lands within two attempts by *someone*).
+        crate::failpoint!(Alg3Transfer);
         let z = self.z.load();
         let g = S::pin();
         let wr = self.protect_w(&g);

@@ -154,6 +154,10 @@ impl<T: AtomicValue> HtmSim<T> {
         // Lazy: a first-attempt commit pays no backoff/TLS cost.
         let mut bo = None;
         for _ in 0..MAX_TX_RETRIES {
+            // Fault window: attempt about to begin — a yield/delay here
+            // widens the conflict window (more aborts, more fallback
+            // takes); kill-safe because no version state is held yet.
+            crate::failpoint!(HtmTxCommit);
             let Some(v) = self.tx_begin() else {
                 crate::counter!(TxRetry);
                 snooze_lazy(&mut bo);

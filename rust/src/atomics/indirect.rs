@@ -96,6 +96,9 @@ impl<T: AtomicValue, S: Smr> BigAtomic<T> for Indirect<T, S> {
                 return Ok(cur);
             }
             let new = Box::into_raw(Box::new(Node { value: desired }));
+            // Fault window: fresh node built, install CAS next — a kill
+            // here leaks only the unpublished node.
+            crate::failpoint!(IndirectInstall);
             // The guard's protection of p prevents its address being
             // recycled (hazard: announced; epoch: retired-under-pin
             // garbage is never freed while we stay pinned), so this CAS

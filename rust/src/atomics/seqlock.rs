@@ -72,6 +72,9 @@ impl<T: AtomicValue, P: OrderingPolicy> SeqLock<T, P> {
                 // FENCE_ACQUIRE).
                 fence(P::FENCE_RELEASE);
                 crate::counter!(LockAcquire);
+                // Fault window: the version word is odd — every reader
+                // and writer is blocked on this thread (NOT kill-safe).
+                crate::failpoint!(SeqLockWriteLocked);
                 return v;
             }
             crate::counter!(CasRetry);

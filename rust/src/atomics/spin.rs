@@ -61,6 +61,10 @@ impl SpinLock {
                 // Counts SimpLock, LockPool, and HtmSim-fallback
                 // acquisitions alike (the callers share this lock).
                 crate::counter!(LockAcquire);
+                // Fault window: critical section entered — a stall here
+                // models the descheduled-holder pathology (NOT
+                // kill-safe: the lock has no owner-death recovery).
+                crate::failpoint!(SpinLockAcquired);
                 return;
             }
             crate::counter!(CasRetry);

@@ -20,9 +20,18 @@
 //! Both arms share the serve loop, the latency pipeline, and the
 //! **conservation contract**: every batch offered to the ingress is
 //! either admitted or shed, and every admitted batch is served exactly
-//! once — `enqueued_batches == sample_count + shed_batches` in every
-//! [`KvReport`]. `repro ablate --panel ingress` compares the arms
-//! across thread counts up to 4× cores.
+//! once or (if a fault kills the serving worker mid-batch) counted
+//! abandoned — `enqueued_batches == sample_count + shed_batches +
+//! abandoned_batches` in every [`KvReport`] (`abandoned_batches` is
+//! zero outside `--features fault` chaos runs). `repro ablate --panel
+//! ingress` compares the arms across thread counts up to 4× cores.
+//!
+//! Workers are **panic-isolated**: each loop iteration runs under
+//! `catch_unwind`, so a panicking worker (an injected kill, or a real
+//! bug) is counted in [`KvReport::worker_panics`] and the thread
+//! resumes serving in place instead of poisoning the run. All mailbox
+//! and reservoir mutexes take their guards poison-tolerantly — a
+//! panicked sibling never wedges the service.
 //!
 //! The table may be constructed deliberately undersized
 //! ([`KvConfig::initial_capacity`]) to exercise the online-resize path
@@ -40,8 +49,9 @@
 //! report (recorded in EXPERIMENTS.md §End-to-end).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::apps::stats::{Snapshot, StatsCell};
@@ -121,6 +131,11 @@ pub struct KvConfig {
     /// arm): wait (backpressure) or shed. The mailbox arm always waits
     /// (its bounded push blocks).
     pub admission: AdmissionPolicy,
+    /// Drainer-lease bound in milliseconds for the lock-free arm's
+    /// shard queues (0 ⇒ leases off, the default). With a lease, a
+    /// claim held past the bound may be taken over by another worker —
+    /// the crash-tolerance knob the chaos scenarios turn on.
+    pub lease_ms: u64,
 }
 
 /// Default [`KvConfig::reservoir`] bound.
@@ -157,8 +172,16 @@ impl Default for KvConfig {
             shards: 0,
             clients: 0,
             admission: AdmissionPolicy::Wait,
+            lease_ms: 0,
         }
     }
+}
+
+/// Poison-tolerant lock acquisition: a panicking worker is already
+/// counted ([`KvReport::worker_panics`]) and isolated — its poison bit
+/// must not cascade into every sibling that shares the mutex.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Bounded uniform sample of a stream (Vitter's Algorithm R): the
@@ -262,8 +285,8 @@ pub struct KvReport {
     /// Which ingress arm ran (`lockfree` | `mailbox`).
     pub ingress: &'static str,
     /// Batches offered to the ingress (admitted **plus** shed).
-    /// Conservation: `enqueued_batches == sample_count + shed_batches`
-    /// — nothing lost, nothing double-served.
+    /// Conservation: `enqueued_batches == sample_count + shed_batches
+    /// + abandoned_batches` — nothing lost, nothing double-served.
     pub enqueued_batches: u64,
     /// Batches rejected by full shards under the Shed policy.
     pub shed_batches: u64,
@@ -276,6 +299,20 @@ pub struct KvReport {
     /// Batches served per ingress shard (lock-free arm; empty for the
     /// mailbox baseline). All > 0 ⇔ every shard made progress.
     pub shard_batches: Vec<u64>,
+    /// Worker/producer thread panics caught by the supervisor (injected
+    /// kills under `--features fault`, or real bugs). The thread keeps
+    /// serving — a panic costs at most the batch it was holding.
+    pub worker_panics: u64,
+    /// Batches a panicking (or displaced) drainer handed back to its
+    /// shard queue on unwind. These re-enter the queue and are served
+    /// later, so they are a delay, not a conservation term.
+    pub requeued_batches: u64,
+    /// Batches lost mid-serve to a worker panic (counted, not silently
+    /// dropped — the third conservation term). Zero without faults.
+    pub abandoned_batches: u64,
+    /// Expired drainer claims taken over by another worker (lock-free
+    /// arm with [`KvConfig::lease_ms`] > 0).
+    pub lease_takeovers: u64,
 }
 
 impl KvReport {
@@ -312,7 +349,7 @@ impl Mailbox {
     /// Producer side: non-blocking bounded push; a full mailbox hands
     /// the batch back so the producer can try a sibling.
     fn try_push(&self, item: Batch) -> std::result::Result<(), Batch> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = lock_ignore_poison(&self.q);
         if q.len() >= MAILBOX_CAP {
             return Err(item);
         }
@@ -329,9 +366,9 @@ impl Mailbox {
     /// Producer side: blocking bounded push (the last resort once every
     /// sibling is full too — see [`push_to_first_free`]).
     fn push(&self, item: Batch) {
-        let mut q = self.q.lock().unwrap();
+        let mut q = lock_ignore_poison(&self.q);
         while q.len() >= MAILBOX_CAP {
-            q = self.space.wait(q).unwrap();
+            q = self.space.wait(q).unwrap_or_else(PoisonError::into_inner);
         }
         q.push_back(item);
         crate::obs::KV_QUEUE_DEPTH.record(q.len() as u64);
@@ -342,7 +379,7 @@ impl Mailbox {
     /// Owner side: pop, blocking until a batch arrives; `None` once the
     /// mailbox is empty and shutdown is flagged.
     fn pop(&self, done: &AtomicBool) -> Option<Batch> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = lock_ignore_poison(&self.q);
         loop {
             if let Some(item) = q.pop_front() {
                 drop(q);
@@ -355,13 +392,13 @@ impl Mailbox {
             if done.load(Ordering::Acquire) {
                 return None;
             }
-            q = self.ready.wait(q).unwrap();
+            q = self.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Shutdown drain: non-blocking steal by a sibling.
     fn steal(&self) -> Option<Batch> {
-        let item = self.q.lock().unwrap().pop_front();
+        let item = lock_ignore_poison(&self.q).pop_front();
         if item.is_some() {
             crate::counter!(KvSteal);
             self.space.notify_one();
@@ -375,7 +412,7 @@ impl Mailbox {
     /// land between a worker's `done` check and its park and be lost
     /// forever — the classic lost-wakeup deadlock.
     fn wake_all(&self) {
-        let _q = self.q.lock().unwrap();
+        let _q = lock_ignore_poison(&self.q);
         self.ready.notify_all();
     }
 }
@@ -418,8 +455,31 @@ struct Shared<'a> {
     admit_waits: AtomicU64,
     claim_runs: AtomicU64,
     steal_runs: AtomicU64,
+    worker_panics: AtomicU64,
+    abandoned: AtomicU64,
+    requeued: AtomicU64,
+    lease_takeovers: AtomicU64,
     reservoirs: Mutex<Vec<Reservoir>>,
     done: AtomicBool,
+}
+
+/// Unwind accounting for one in-flight batch: arms at serve entry,
+/// disarms once the batch's latency sample is recorded. If the worker
+/// panics in between, the drop (during unwind) books the batch as
+/// abandoned — the conservation ledger stays balanced — and releases
+/// the concurrency gauge either way.
+struct ServeGuard<'a, 'b> {
+    sh: &'a Shared<'b>,
+    abandoned: bool,
+}
+
+impl Drop for ServeGuard<'_, '_> {
+    fn drop(&mut self) {
+        if self.abandoned {
+            self.sh.abandoned.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sh.active.fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 impl Shared<'_> {
@@ -429,6 +489,10 @@ impl Shared<'_> {
         // Concurrency gauge: how many workers are mid-batch.
         let now = self.active.fetch_add(1, Ordering::AcqRel) + 1;
         self.peak_active.fetch_max(now, Ordering::AcqRel);
+        // Armed before the first fallible step: a panic anywhere below
+        // (until the sample is recorded) books this batch abandoned.
+        let mut guard = ServeGuard { sh: self, abandoned: true };
+        crate::failpoint!(KvServeBatch);
         for req in &batch {
             match req.op {
                 Op::Find => {
@@ -457,7 +521,14 @@ impl Shared<'_> {
         self.lat_stats.record(per_req as u64);
         self.lat_hist.record(per_req as u64);
         crate::obs::KV_LATENCY_NS.record(per_req as u64);
-        self.active.fetch_sub(1, Ordering::AcqRel);
+        // Sampled: the batch is in the ledger as served, not abandoned.
+        guard.abandoned = false;
+    }
+
+    /// Record one caught worker panic (supervision — both arms).
+    fn note_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        crate::counter!(KvWorkerPanic);
     }
 }
 
@@ -476,8 +547,9 @@ fn next_batch(stream: &[GenOp], cursor: &mut usize, batch: usize) -> Vec<GenOp> 
 /// The lock-free arm: clients route per-shard sub-batches through the
 /// claim queues; workers claim runs (affinity first, then steal).
 fn run_lockfree(sh: &Shared<'_>, workers: usize, clients: usize, nshards: usize) -> Duration {
-    let router: ShardRouter<Batch> = ShardRouter::new(nshards, SHARD_BOUND);
-    std::thread::scope(|s| {
+    let router: ShardRouter<Batch> =
+        ShardRouter::with_lease(nshards, SHARD_BOUND, sh.cfg.lease_ms.saturating_mul(1_000_000));
+    let elapsed = std::thread::scope(|s| {
         for w in 0..workers {
             let router = &router;
             s.spawn(move || {
@@ -486,34 +558,50 @@ fn run_lockfree(sh: &Shared<'_>, workers: usize, clients: usize, nshards: usize)
                 let home = w % router.shards();
                 let mut bo = None;
                 loop {
-                    match router.claim_from(home) {
-                        Some((shard, stolen, mut run)) => {
-                            bo = None; // contention cleared; restart adaptation
-                            sh.claim_runs.fetch_add(1, Ordering::Relaxed);
-                            if stolen {
-                                sh.steal_runs.fetch_add(1, Ordering::Relaxed);
+                    // Supervision: one claim-and-serve round per
+                    // catch_unwind, so a panic (injected kill or real
+                    // bug) costs at most the batch in flight — the run
+                    // guard requeues the rest — and the worker resumes
+                    // in place.
+                    let round = catch_unwind(AssertUnwindSafe(|| {
+                        crate::failpoint!(KvWorkerLoop);
+                        match router.claim_from(home) {
+                            Some((shard, stolen, mut run)) => {
+                                bo = None; // contention cleared; restart adaptation
+                                sh.claim_runs.fetch_add(1, Ordering::Relaxed);
+                                if stolen {
+                                    sh.steal_runs.fetch_add(1, Ordering::Relaxed);
+                                }
+                                sh.shard_batches[shard]
+                                    .fetch_add(run.len() as u64, Ordering::Relaxed);
+                                // Serve the whole run while holding the
+                                // claim: per-producer order across runs
+                                // depends on run-at-a-time service.
+                                for batch in run.drain() {
+                                    sh.serve(w, &mut local_lat, batch);
+                                }
+                                false
                             }
-                            sh.shard_batches[shard].fetch_add(run.len() as u64, Ordering::Relaxed);
-                            // Serve the whole run while holding the
-                            // claim: per-producer order across runs
-                            // depends on run-at-a-time service.
-                            for batch in run.drain() {
-                                sh.serve(w, &mut local_lat, batch);
+                            None => {
+                                // Ordering: Acquire — pairs with the
+                                // coordinator's Release store: every
+                                // admitted batch happens-before `done`, so
+                                // done + all-idle means all served.
+                                if sh.done.load(Ordering::Acquire) && router.all_idle() {
+                                    return true;
+                                }
+                                snooze_lazy(&mut bo);
+                                false
                             }
                         }
-                        None => {
-                            // Ordering: Acquire — pairs with the
-                            // coordinator's Release store: every
-                            // admitted batch happens-before `done`, so
-                            // done + all-idle means all served.
-                            if sh.done.load(Ordering::Acquire) && router.all_idle() {
-                                break;
-                            }
-                            snooze_lazy(&mut bo);
-                        }
+                    }));
+                    match round {
+                        Ok(true) => break,
+                        Ok(false) => {}
+                        Err(_) => sh.note_panic(),
                     }
                 }
-                sh.reservoirs.lock().unwrap().push(local_lat);
+                lock_ignore_poison(&sh.reservoirs).push(local_lat);
             });
         }
 
@@ -553,13 +641,22 @@ fn run_lockfree(sh: &Shared<'_>, workers: usize, clients: usize, nshards: usize)
             })
             .collect();
         for p in producers {
-            p.join().unwrap();
+            // A producer panic is reported, not propagated: the workers
+            // still drain everything the producer did admit.
+            if p.join().is_err() {
+                sh.note_panic();
+            }
         }
         // Ordering: Release — every admitted push above happens-before a
         // worker observes the shutdown flag.
         sh.done.store(true, Ordering::Release);
         t0.elapsed()
-    })
+    });
+    // Workers have joined (scope end): the requeue/takeover tallies are
+    // final. Flushed here because the router dies with this frame.
+    sh.requeued.store(router.requeued(), Ordering::Relaxed);
+    sh.lease_takeovers.store(router.lease_takeovers(), Ordering::Relaxed);
+    elapsed
 }
 
 /// The mailbox baseline arm: bounded per-worker mailboxes fed
@@ -573,24 +670,45 @@ fn run_mailbox(sh: &Shared<'_>, workers: usize, clients: usize) -> Duration {
             s.spawn(move || {
                 let mut local_lat =
                     Reservoir::new(sh.per_worker_cap, sh.cfg.seed ^ (w as u64 + 1));
-                // Serve the own mailbox until shutdown...
-                while let Some(batch) = mailboxes[w].pop(&sh.done) {
-                    sh.serve(w, &mut local_lat, batch);
-                }
-                // ...then drain-and-steal so no sibling strands work.
+                // Serve the own mailbox until shutdown... (supervised:
+                // a panic mid-batch is counted and the worker resumes).
                 loop {
-                    let mut got = false;
-                    for mb in mailboxes.iter() {
-                        while let Some(batch) = mb.steal() {
-                            sh.serve(w, &mut local_lat, batch);
-                            got = true;
+                    let round = catch_unwind(AssertUnwindSafe(|| {
+                        crate::failpoint!(KvWorkerLoop);
+                        match mailboxes[w].pop(&sh.done) {
+                            Some(batch) => {
+                                sh.serve(w, &mut local_lat, batch);
+                                false
+                            }
+                            None => true,
                         }
-                    }
-                    if !got {
-                        break;
+                    }));
+                    match round {
+                        Ok(true) => break,
+                        Ok(false) => {}
+                        Err(_) => sh.note_panic(),
                     }
                 }
-                sh.reservoirs.lock().unwrap().push(local_lat);
+                // ...then drain-and-steal so no sibling strands work
+                // (same supervision: a panicking steal round retries).
+                loop {
+                    let round = catch_unwind(AssertUnwindSafe(|| {
+                        let mut got = false;
+                        for mb in mailboxes.iter() {
+                            while let Some(batch) = mb.steal() {
+                                sh.serve(w, &mut local_lat, batch);
+                                got = true;
+                            }
+                        }
+                        got
+                    }));
+                    match round {
+                        Ok(false) => break,
+                        Ok(true) => {}
+                        Err(_) => sh.note_panic(),
+                    }
+                }
+                lock_ignore_poison(&sh.reservoirs).push(local_lat);
             });
         }
 
@@ -614,7 +732,9 @@ fn run_mailbox(sh: &Shared<'_>, workers: usize, clients: usize) -> Duration {
             })
             .collect();
         for p in producers {
-            p.join().unwrap();
+            if p.join().is_err() {
+                sh.note_panic();
+            }
         }
         // Ordering: Release — every push above happens-before a worker
         // observes the shutdown flag.
@@ -699,6 +819,10 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
         admit_waits: AtomicU64::new(0),
         claim_runs: AtomicU64::new(0),
         steal_runs: AtomicU64::new(0),
+        worker_panics: AtomicU64::new(0),
+        abandoned: AtomicU64::new(0),
+        requeued: AtomicU64::new(0),
+        lease_takeovers: AtomicU64::new(0),
         reservoirs: Mutex::new(Vec::new()),
         done: AtomicBool::new(false),
     };
@@ -709,7 +833,9 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
     };
 
     let (_seen, lat_samples) = merge_reservoirs(
-        sh.reservoirs.into_inner().unwrap(),
+        sh.reservoirs
+            .into_inner()
+            .unwrap_or_else(PoisonError::into_inner),
         cfg.reservoir.max(1),
         cfg.seed,
     );
@@ -750,6 +876,10 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
         claim_runs: sh.claim_runs.load(Ordering::SeqCst),
         steal_runs: sh.steal_runs.load(Ordering::SeqCst),
         shard_batches: sh.shard_batches.iter().map(|c| c.load(Ordering::SeqCst)).collect(),
+        worker_panics: sh.worker_panics.load(Ordering::SeqCst),
+        requeued_batches: sh.requeued.load(Ordering::SeqCst),
+        abandoned_batches: sh.abandoned.load(Ordering::SeqCst),
+        lease_takeovers: sh.lease_takeovers.load(Ordering::SeqCst),
     })
 }
 
@@ -757,14 +887,21 @@ pub fn run(cfg: &KvConfig, runtime: Option<&Runtime>) -> Result<KvReport> {
 mod tests {
     use super::*;
 
-    /// Conservation: every offered batch is exactly one of served or
-    /// shed, in every report of every arm.
+    /// Conservation: every offered batch is exactly one of served,
+    /// shed, or abandoned-to-a-fault, in every report of every arm.
+    /// Without `--features fault` abandonment is impossible, and these
+    /// tests also pin that no worker panicked.
     fn assert_conservation(rep: &KvReport) {
         assert_eq!(
             rep.enqueued_batches,
-            rep.sample_count as u64 + rep.shed_batches,
+            rep.sample_count as u64 + rep.shed_batches + rep.abandoned_batches,
             "lost or duplicated batches: {rep:?}"
         );
+        #[cfg(not(feature = "fault"))]
+        {
+            assert_eq!(rep.worker_panics, 0, "worker panicked without faults: {rep:?}");
+            assert_eq!(rep.abandoned_batches, 0, "abandoned without faults: {rep:?}");
+        }
     }
 
     #[test]
@@ -890,6 +1027,7 @@ mod tests {
             shards: 4,
             clients: 3,
             admission: AdmissionPolicy::Wait,
+            lease_ms: 0,
         };
         let rep = run(&cfg, None).unwrap();
         assert!(rep.total_requests > 500, "{rep:?}");
@@ -928,6 +1066,7 @@ mod tests {
             shards: 1,
             clients: 4,
             admission: AdmissionPolicy::Shed,
+            lease_ms: 0,
         };
         let rep = run(&cfg, None).unwrap();
         assert_eq!(rep.ingress, "lockfree");
@@ -935,6 +1074,30 @@ mod tests {
         // how many were shed at the door.
         assert_conservation(&rep);
         assert_eq!(rep.admit_waits, 0, "Shed policy waited: {rep:?}");
+        assert_eq!(rep.total_requests, rep.finds + rep.inserts + rep.deletes);
+    }
+
+    #[test]
+    fn test_kv_lockfree_with_lease_conserves() {
+        // Drainer leases on, aggressive bound: even if a slow drainer's
+        // claim is taken over mid-run, nothing is double-served (the
+        // displaced run's items were detached at claim time) and the
+        // ledger still balances.
+        let cfg = KvConfig {
+            n: 1 << 10,
+            workers: 2,
+            batch: 128,
+            duration: Duration::from_millis(150),
+            seed: 19,
+            reservoir: 32,
+            ingress: IngressMode::Lockfree,
+            shards: 2,
+            clients: 2,
+            lease_ms: 1,
+            ..KvConfig::default()
+        };
+        let rep = run(&cfg, None).unwrap();
+        assert_conservation(&rep);
         assert_eq!(rep.total_requests, rep.finds + rep.inserts + rep.deletes);
     }
 
@@ -962,6 +1125,7 @@ mod tests {
             shards: 8,
             clients: 4,
             admission: AdmissionPolicy::Wait,
+            lease_ms: 0,
         };
         let rep = run(&cfg, None).unwrap();
         assert_eq!(rep.worker_batches.len(), workers);

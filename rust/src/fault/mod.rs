@@ -1,0 +1,572 @@
+//! Deterministic fault injection for crash-tolerance testing.
+//!
+//! The paper's headline robustness claim — lock-free big atomics keep the
+//! system live when the scheduler misbehaves — is only testable if we can
+//! *make* the scheduler misbehave on demand. This module plants ~24 named
+//! [`Point`]s at the narrowest windows of every protocol in the crate (the
+//! atomics backends' install/recache windows, SMR pin/retire/scan, both
+//! resize engines' seal/copy/publish phases, the `ClaimQueue`
+//! enqueue/claim/drain/release windows, and the KV worker loop) and lets a
+//! seeded [`FaultPlan`] fire a [`FaultAction`] at any of them: an extra
+//! delay, a forced yield, a long stall, a spurious CAS failure, or an
+//! outright kill (a panic that unwinds the thread mid-protocol).
+//!
+//! Everything is deterministic given `(seed, plan, schedule)`: the decision
+//! whether hit number `i` at point `p` fires is a pure function of the plan
+//! seed, so a failing chaos run replays from its seed. The invariants the
+//! chaos suites assert (linearizability, conservation, progress) must hold
+//! on *every* schedule, so scheduling noise cannot turn a passing seed into
+//! a false failure — only into a different interleaving that must also pass.
+//!
+//! # Overhead expectations
+//!
+//! Mirrors `obs/`'s contract: in default builds (no `--features fault`) the
+//! [`failpoint!`] and [`failcas!`] macros expand to `()` and `false`
+//! respectively — zero instructions, zero branches, bit-for-bit identical
+//! codegen to a tree without the hooks. With the feature enabled but no
+//! plan installed, each hit is one `Acquire` load of a null pointer and a
+//! predictable branch. With a plan installed, each hit adds one relaxed
+//! `fetch_add` and a `mix64` — still cheap enough to leave armed through a
+//! full workload.
+//!
+//! # Kill safety
+//!
+//! Not every window tolerates a thread dying in it: the seqlock and spin
+//! locks are explicitly not panic-safe (a kill while holding one would wedge
+//! every other thread — a *harness* artifact, not a protocol bug), and a
+//! kill between a `ClaimQueue` claim CAS and the `Run` taking ownership
+//! would leak the detached chain. [`Point::kill_safe`] encodes the
+//! distinction and [`FaultPlan::with_rule`] refuses `Kill` rules at unsafe
+//! points, so every kill the harness performs models a real preemption-
+//! or-crash the protocols are required to survive.
+
+use core::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
+
+use crate::util::rng::mix64;
+
+pub mod chaos;
+
+/// Named protocol points a [`FaultPlan`] can target.
+///
+/// Dense `repr(usize)` in declaration order, like `obs::telemetry::Event`;
+/// [`Point::ALL`] and [`NUM_POINTS`] must move together with the enum.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Point {
+    /// SeqLock writer holds the odd version word (NOT kill-safe).
+    SeqLockWriteLocked = 0,
+    /// A `SpinLock` critical section has been entered (NOT kill-safe).
+    /// Covers `SimpLock`, `LockPool`, and the HtmSim fallback path.
+    SpinLockAcquired,
+    /// `Indirect` is about to CAS its fresh boxed value into the root.
+    IndirectInstall,
+    /// Alg 1 (`CachedWaitFree`) is about to install a descriptor.
+    Alg1Install,
+    /// Alg 1 is about to bid for the recache version lock.
+    Alg1Recache,
+    /// Alg 2 (`CachedMemEff`) is about to take a slab node for install.
+    Alg2Install,
+    /// Alg 2 is about to bid for the recache seqlock.
+    Alg2Recache,
+    /// Alg 3 (`CachedWritable`) is about to help a pending transfer.
+    Alg3Transfer,
+    /// HtmSim is at the top of a transaction attempt, before tx_begin.
+    HtmTxCommit,
+    /// A hazard slot announcement has been published, pre-revalidation.
+    HazardAnnounce,
+    /// A node is about to join the hazard retire list.
+    HazardRetire,
+    /// A hazard scan is about to snapshot the announcement table.
+    HazardScan,
+    /// An epoch pin announcement is being revalidated (NOT kill-safe:
+    /// the announcement is published but the RAII guard not yet built).
+    EpochPin,
+    /// A node is about to join the epoch retire bag.
+    EpochRetire,
+    /// `try_advance_and_collect` is about to scan announcements.
+    EpochAdvance,
+    /// A resize copier just won a stripe-claim CAS on the cursor.
+    ResizeStripeClaim,
+    /// A resize copier just sealed a bucket FROZEN.
+    ResizeSealFrozen,
+    /// A resize copier is between per-entry copies of a frozen bucket.
+    ResizeCopyEntry,
+    /// A resize copier is about to CAS a frozen bucket to DONE.
+    ResizePublishDone,
+    /// `ClaimQueue::try_push` is about to box and link a node.
+    IngressEnqueue,
+    /// `ClaimQueue::try_claim` is about to bid for the claim word.
+    IngressClaim,
+    /// A drainer just won the claim CAS and owns the detached chain
+    /// (NOT kill-safe: dying here would leak the chain from the ledger).
+    IngressDrain,
+    /// `Run::drop` is about to release the claim word (NOT kill-safe:
+    /// a panic during unwind aborts the process).
+    IngressRelease,
+    /// Top of a KV worker's claim/serve loop.
+    KvWorkerLoop,
+    /// A KV worker is about to serve a claimed batch.
+    KvServeBatch,
+}
+
+/// Number of named points; `Point::KvServeBatch` is the anchor.
+pub const NUM_POINTS: usize = Point::KvServeBatch as usize + 1;
+
+impl Point {
+    /// Every point, in discriminant order (pinned by `test_points_dense`).
+    pub const ALL: [Point; NUM_POINTS] = [
+        Point::SeqLockWriteLocked,
+        Point::SpinLockAcquired,
+        Point::IndirectInstall,
+        Point::Alg1Install,
+        Point::Alg1Recache,
+        Point::Alg2Install,
+        Point::Alg2Recache,
+        Point::Alg3Transfer,
+        Point::HtmTxCommit,
+        Point::HazardAnnounce,
+        Point::HazardRetire,
+        Point::HazardScan,
+        Point::EpochPin,
+        Point::EpochRetire,
+        Point::EpochAdvance,
+        Point::ResizeStripeClaim,
+        Point::ResizeSealFrozen,
+        Point::ResizeCopyEntry,
+        Point::ResizePublishDone,
+        Point::IngressEnqueue,
+        Point::IngressClaim,
+        Point::IngressDrain,
+        Point::IngressRelease,
+        Point::KvWorkerLoop,
+        Point::KvServeBatch,
+    ];
+
+    /// Stable snake_case name, for plan parsing and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Point::SeqLockWriteLocked => "seqlock_write_locked",
+            Point::SpinLockAcquired => "spinlock_acquired",
+            Point::IndirectInstall => "indirect_install",
+            Point::Alg1Install => "alg1_install",
+            Point::Alg1Recache => "alg1_recache",
+            Point::Alg2Install => "alg2_install",
+            Point::Alg2Recache => "alg2_recache",
+            Point::Alg3Transfer => "alg3_transfer",
+            Point::HtmTxCommit => "htm_tx_commit",
+            Point::HazardAnnounce => "hazard_announce",
+            Point::HazardRetire => "hazard_retire",
+            Point::HazardScan => "hazard_scan",
+            Point::EpochPin => "epoch_pin",
+            Point::EpochRetire => "epoch_retire",
+            Point::EpochAdvance => "epoch_advance",
+            Point::ResizeStripeClaim => "resize_stripe_claim",
+            Point::ResizeSealFrozen => "resize_seal_frozen",
+            Point::ResizeCopyEntry => "resize_copy_entry",
+            Point::ResizePublishDone => "resize_publish_done",
+            Point::IngressEnqueue => "ingress_enqueue",
+            Point::IngressClaim => "ingress_claim",
+            Point::IngressDrain => "ingress_drain",
+            Point::IngressRelease => "ingress_release",
+            Point::KvWorkerLoop => "kv_worker_loop",
+            Point::KvServeBatch => "kv_serve_batch",
+        }
+    }
+
+    /// Whether a thread may die (panic) at this point without wedging
+    /// other threads or corrupting a conservation ledger. `Kill` rules
+    /// are only accepted at kill-safe points; everywhere else the
+    /// harness is limited to delays, yields, stalls, and spurious CAS
+    /// failures — which is exactly what a real preemption can do there.
+    pub fn kill_safe(self) -> bool {
+        !matches!(
+            self,
+            Point::SeqLockWriteLocked
+                | Point::SpinLockAcquired
+                | Point::EpochPin
+                | Point::IngressDrain
+                | Point::IngressRelease
+        )
+    }
+}
+
+/// What a matched [`Rule`] does to the hitting thread.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultAction {
+    /// Busy-spin for roughly `n * 64` `spin_loop` hints.
+    Delay(u32),
+    /// One `thread::yield_now`, handing the core to a rival.
+    Yield,
+    /// `n` consecutive `thread::yield_now`s — a long preemption.
+    Stall(u32),
+    /// Report a CAS failure that never happened (only observed at
+    /// [`failcas!`] points; plain [`failpoint!`]s treat it as a no-op).
+    SpuriousCasFail,
+    /// Unwind the thread here via `panic_any(`[`FaultKill`]`)`.
+    Kill,
+}
+
+/// One plan entry: at `point`, fire `action` on roughly 1-in-`one_in`
+/// hits, at most `max` times (`max == 0` means unlimited).
+#[derive(Clone, Copy, Debug)]
+pub struct Rule {
+    pub point: Point,
+    pub action: FaultAction,
+    pub one_in: u64,
+    pub max: u32,
+}
+
+/// Panic payload carried by [`FaultAction::Kill`]; chaos scenarios
+/// downcast it to tell an injected death from a genuine bug.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultKill {
+    pub point: Point,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO64: AtomicU64 = AtomicU64::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO32: AtomicU32 = AtomicU32::new(0);
+
+/// A seeded, installable set of fault [`Rule`]s plus per-point hit and
+/// fired accounting. Build with [`FaultPlan::new`] + [`FaultPlan::with_rule`]
+/// (or a named preset), then [`FaultPlan::install`] to arm it globally.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: Vec<Rule>,
+    hits: [AtomicU64; NUM_POINTS],
+    fired: [AtomicU32; NUM_POINTS],
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            rules: Vec::new(),
+            hits: [ZERO64; NUM_POINTS],
+            fired: [ZERO32; NUM_POINTS],
+        }
+    }
+
+    /// Add a rule. Panics if a `Kill` targets a non-kill-safe point —
+    /// that would model a fault no schedule can produce (threads don't
+    /// evaporate inside a spinlock) and would wedge the harness itself.
+    pub fn with_rule(mut self, rule: Rule) -> Self {
+        if matches!(rule.action, FaultAction::Kill) {
+            assert!(
+                rule.point.kill_safe(),
+                "Kill rule at non-kill-safe point {}",
+                rule.point.name()
+            );
+        }
+        self.rules.push(rule);
+        self
+    }
+
+    /// Named presets, the vocabulary of `repro chaos --plan`:
+    ///
+    /// - `kill-copier`: kill a resize copier once right after it seals a
+    ///   bucket FROZEN, and once right after it wins a stripe claim.
+    /// - `stall-drainer`: long stalls on a drainer that just won the
+    ///   claim word, so the shard's lease expires while it holds runs.
+    /// - `kill-worker`: kill a KV worker mid-serve, once.
+    /// - `jitter`: no kills — broad delays/yields/spurious CAS failures
+    ///   across every retry-loop point, shaking out interleavings.
+    pub fn named(name: &str, seed: u64) -> Option<Self> {
+        let plan = match name {
+            "kill-copier" => Self::new(seed)
+                .with_rule(Rule {
+                    point: Point::ResizeSealFrozen,
+                    action: FaultAction::Kill,
+                    one_in: 1,
+                    max: 1,
+                })
+                .with_rule(Rule {
+                    point: Point::ResizeStripeClaim,
+                    action: FaultAction::Kill,
+                    one_in: 2,
+                    max: 1,
+                }),
+            "stall-drainer" => Self::new(seed).with_rule(Rule {
+                point: Point::IngressDrain,
+                action: FaultAction::Stall(64),
+                one_in: 2,
+                max: 0,
+            }),
+            "kill-worker" => Self::new(seed).with_rule(Rule {
+                point: Point::KvServeBatch,
+                action: FaultAction::Kill,
+                one_in: 1,
+                max: 1,
+            }),
+            "jitter" => {
+                let mut plan = Self::new(seed);
+                for p in Point::ALL {
+                    plan = plan.with_rule(Rule {
+                        point: p,
+                        action: FaultAction::Yield,
+                        one_in: 7,
+                        max: 0,
+                    });
+                }
+                plan.with_rule(Rule {
+                    point: Point::IngressEnqueue,
+                    action: FaultAction::SpuriousCasFail,
+                    one_in: 5,
+                    max: 0,
+                })
+                .with_rule(Rule {
+                    point: Point::IngressClaim,
+                    action: FaultAction::Delay(8),
+                    one_in: 3,
+                    max: 0,
+                })
+            }
+            _ => return None,
+        };
+        Some(plan)
+    }
+
+    /// Hits observed at `point` (fired or not) since install.
+    pub fn hits_at(&self, point: Point) -> u64 {
+        self.hits[point as usize].load(Ordering::Relaxed)
+    }
+
+    /// Faults actually fired at `point` since install.
+    pub fn fired_at(&self, point: Point) -> u32 {
+        self.fired[point as usize].load(Ordering::Relaxed)
+    }
+
+    /// Arm this plan globally and return a handle to its accounting.
+    ///
+    /// The previous plan (if any) is intentionally leaked: a racing
+    /// thread may be mid-`hit` in it, and the harness is test-only, so
+    /// a few hundred bytes per install beats a use-after-free.
+    pub fn install(self) -> &'static FaultPlan {
+        let fresh = Box::leak(Box::new(self));
+        PLAN.store(fresh as *const FaultPlan as *mut FaultPlan, Ordering::Release);
+        fresh
+    }
+
+    /// The 1-in-`one_in` coin for hit number `idx` at `point`: a pure
+    /// function of the plan seed, so runs replay from their seed.
+    fn decides(&self, rule: &Rule, point: Point, idx: u64) -> bool {
+        if rule.one_in <= 1 {
+            return true;
+        }
+        mix64(self.seed ^ ((point as u64 + 1) << 40) ^ idx) % rule.one_in == 0
+    }
+
+    /// Consult the plan at `point`; returns the action to perform, if any.
+    fn draw(&self, point: Point) -> Option<FaultAction> {
+        let idx = self.hits[point as usize].fetch_add(1, Ordering::Relaxed);
+        let rule = self.rules.iter().find(|r| r.point == point)?;
+        if rule.max != 0 && self.fired[point as usize].load(Ordering::Relaxed) >= rule.max {
+            return None;
+        }
+        if !self.decides(rule, point, idx) {
+            return None;
+        }
+        if rule.max != 0 {
+            // Claim one of the bounded firings; a racing loser backs off.
+            if self.fired[point as usize].fetch_add(1, Ordering::Relaxed) >= rule.max {
+                return None;
+            }
+        } else {
+            self.fired[point as usize].fetch_add(1, Ordering::Relaxed);
+        }
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        crate::counter!(FaultInject);
+        Some(rule.action)
+    }
+}
+
+/// The armed plan; null when disarmed. Swapped-out plans leak (see
+/// [`FaultPlan::install`]).
+static PLAN: AtomicPtr<FaultPlan> = AtomicPtr::new(core::ptr::null_mut());
+
+/// Total faults fired process-wide, across all plans ever installed.
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+
+/// Disarm fault injection (hits become a null-check again).
+pub fn clear_plan() {
+    PLAN.store(core::ptr::null_mut(), Ordering::Release);
+}
+
+/// Total faults fired process-wide since start.
+pub fn injected() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+#[inline]
+fn active() -> Option<&'static FaultPlan> {
+    let p = PLAN.load(Ordering::Acquire);
+    if p.is_null() {
+        None
+    } else {
+        Some(unsafe { &*p })
+    }
+}
+
+fn perform(action: FaultAction, point: Point) {
+    match action {
+        FaultAction::Delay(n) => {
+            for _ in 0..(n as u64 * 64) {
+                core::hint::spin_loop();
+            }
+        }
+        FaultAction::Yield => std::thread::yield_now(),
+        FaultAction::Stall(n) => {
+            for _ in 0..n {
+                std::thread::yield_now();
+            }
+        }
+        // A spurious CAS failure is meaningless at a unit failpoint;
+        // treat it as the preemption blip it models.
+        FaultAction::SpuriousCasFail => std::thread::yield_now(),
+        FaultAction::Kill => std::panic::panic_any(FaultKill { point }),
+    }
+}
+
+/// Runtime behind [`failpoint!`]: consult the armed plan and perform
+/// whatever action it draws for this hit.
+#[inline]
+pub fn hit(point: Point) {
+    if let Some(plan) = active() {
+        if let Some(action) = plan.draw(point) {
+            perform(action, point);
+        }
+    }
+}
+
+/// Runtime behind [`failcas!`]: like [`hit`], but `SpuriousCasFail`
+/// returns `true` ("pretend your CAS just failed") instead of yielding.
+#[inline]
+pub fn hit_cas(point: Point) -> bool {
+    if let Some(plan) = active() {
+        if let Some(action) = plan.draw(point) {
+            if matches!(action, FaultAction::SpuriousCasFail) {
+                return true;
+            }
+            perform(action, point);
+        }
+    }
+    false
+}
+
+/// Fire a named failpoint. Expands to `()` without `--features fault`.
+///
+/// ```ignore
+/// crate::failpoint!(ResizeSealFrozen);
+/// ```
+#[cfg(feature = "fault")]
+#[macro_export]
+macro_rules! failpoint {
+    ($p:ident) => {
+        $crate::fault::hit($crate::fault::Point::$p)
+    };
+}
+
+/// Fire a named failpoint. Expands to `()` without `--features fault`.
+#[cfg(not(feature = "fault"))]
+#[macro_export]
+macro_rules! failpoint {
+    ($p:ident) => {
+        ()
+    };
+}
+
+/// Fire a named failpoint that can report a spurious CAS failure:
+/// evaluates to `true` when the plan says "pretend the CAS failed".
+/// Expands to the constant `false` without `--features fault`, so the
+/// guarded branch folds away entirely.
+#[cfg(feature = "fault")]
+#[macro_export]
+macro_rules! failcas {
+    ($p:ident) => {
+        $crate::fault::hit_cas($crate::fault::Point::$p)
+    };
+}
+
+/// Fire a named failpoint that can report a spurious CAS failure.
+/// Expands to the constant `false` without `--features fault`.
+#[cfg(not(feature = "fault"))]
+#[macro_export]
+macro_rules! failcas {
+    ($p:ident) => {
+        false
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_points_dense() {
+        for (i, p) in Point::ALL.iter().enumerate() {
+            assert_eq!(*p as usize, i, "{} out of order", p.name());
+        }
+        let mut names = std::collections::HashSet::new();
+        for p in Point::ALL {
+            assert!(names.insert(p.name()), "duplicate name {}", p.name());
+        }
+        assert_eq!(NUM_POINTS, Point::ALL.len());
+    }
+
+    #[test]
+    fn test_kill_safety_split() {
+        // The non-kill-safe set is exactly the lock-held / mid-handoff
+        // windows; everything else must accept Kill rules.
+        let unsafe_points = [
+            Point::SeqLockWriteLocked,
+            Point::SpinLockAcquired,
+            Point::EpochPin,
+            Point::IngressDrain,
+            Point::IngressRelease,
+        ];
+        for p in Point::ALL {
+            assert_eq!(p.kill_safe(), !unsafe_points.contains(&p), "{}", p.name());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-kill-safe")]
+    fn test_kill_rule_rejected_at_unsafe_point() {
+        let _ = FaultPlan::new(1).with_rule(Rule {
+            point: Point::SeqLockWriteLocked,
+            action: FaultAction::Kill,
+            one_in: 1,
+            max: 0,
+        });
+    }
+
+    #[test]
+    fn test_decides_is_deterministic_and_roughly_fair() {
+        let plan = FaultPlan::new(0xC0FFEE);
+        let rule = Rule {
+            point: Point::IngressEnqueue,
+            action: FaultAction::Yield,
+            one_in: 8,
+            max: 0,
+        };
+        let mut fired = 0u64;
+        for idx in 0..8000 {
+            let a = plan.decides(&rule, Point::IngressEnqueue, idx);
+            let b = plan.decides(&rule, Point::IngressEnqueue, idx);
+            assert_eq!(a, b, "decision not deterministic at idx {idx}");
+            fired += a as u64;
+        }
+        // ~1000 expected; generous bounds, it's a hash not a dice table.
+        assert!((500..2000).contains(&fired), "fired={fired}");
+    }
+
+    #[test]
+    fn test_named_plans_exist_and_unknown_rejected() {
+        for name in ["kill-copier", "stall-drainer", "kill-worker", "jitter"] {
+            assert!(FaultPlan::named(name, 7).is_some(), "{name} missing");
+        }
+        assert!(FaultPlan::named("no-such-plan", 7).is_none());
+    }
+}

@@ -27,17 +27,28 @@
 //! the witnessing `compare_exchange` on the cursor and migrates it:
 //!
 //! 1. **seal** — CAS the source bucket to its FROZEN image (same key /
-//!    value / chain, FORWARDED tag set).  The seal winner is the single
-//!    copier; updates that land on a FROZEN bucket wait out the (chain-
-//!    length-bounded) copy window, `find`s read the frozen content in
-//!    place — the frozen image *is* the current state, because no
-//!    mutation of those keys can complete before the DONE transition.
+//!    value / chain, FORWARDED tag set).  The seal winner is the
+//!    *preferred* copier — but not a single point of failure: updates
+//!    that land on a FROZEN bucket wait a bounded number of beats and
+//!    then re-run the copy themselves (takeover), so a copier that
+//!    stalls or dies delays the bucket, never wedges it.  `find`s read
+//!    the frozen content in place — the frozen image *is* the current
+//!    state, because no mutation of those keys can complete before the
+//!    DONE transition.
 //! 2. **copy** — re-hash the inlined pair and every chain node into the
-//!    destination (fresh allocations; insert-if-absent).
-//! 3. **DONE** — CAS FROZEN → the empty-forwarded sentinel.  From this
+//!    destination (fresh allocations; insert-if-absent, so concurrent
+//!    copiers of the same immutable image are idempotent). Copiers
+//!    announce themselves through the [`census`](super::census)
+//!    (announce → re-validate FROZEN → copy, RAII-cleared on unwind).
+//! 3. **CLOSING** — CAS FROZEN → the same image with the CLOSING mark:
+//!    no new copier joins past this point (the census validation
+//!    rejects it), and the publisher waits until no rival copier is
+//!    still announced — the fence that keeps every destination write
+//!    pre-DONE.
+//! 4. **DONE** — CAS CLOSING → the empty-forwarded sentinel.  From this
 //!    (big-atomic, hence linearizable) transition on, readers and
 //!    updaters fall through old → new, and the drained chain is retired
-//!    through the epoch scheme.
+//!    through the epoch scheme — by the unique transition winner.
 //!
 //! `find` therefore stays lock-free throughout: it never helps, never
 //! waits, and crosses generations only over DONE seal marks.  The
@@ -58,7 +69,7 @@ use std::marker::PhantomData;
 use std::ptr::null_mut;
 use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
 
-use super::{bucket_for, table_capacity, ConcurrentMap, ResizeState};
+use super::{bucket_for, census, table_capacity, ConcurrentMap, ResizeState};
 use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
 use crate::smr::{Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
@@ -66,11 +77,13 @@ use crate::util::CachePadded;
 
 /// The inlined first link: key, value, and a tagged next pointer.
 /// Bit 0 of `next` is the occupied flag, bit 1 the resize FORWARDED
-/// seal — `0x0` = empty bucket, `0x1` = single inline entry (null
-/// next), `ptr|1` = inline entry with a chain, `ptr|1|2` = FROZEN
-/// (content intact, migration copy in progress), `0x2` = DONE (contents
-/// live in the next table). "Null and empty have distinct meanings"
-/// (§4), and so do the two seal states.
+/// seal, bit 2 the CLOSING mark — `0x0` = empty bucket, `0x1` = single
+/// inline entry (null next), `ptr|1` = inline entry with a chain,
+/// `ptr|1|2` = FROZEN (content intact, migration copy in progress),
+/// `ptr|1|2|4` = CLOSING (copy complete; the publisher is waiting out
+/// straggling copiers — see [`census`](super::census)), `0x2` = DONE
+/// (contents live in the next table). "Null and empty have distinct
+/// meanings" (§4), and so do the seal states.
 #[repr(C, align(8))]
 #[derive(Copy, Clone, PartialEq, Debug, Default)]
 pub struct Link<K: AtomicValue, V: AtomicValue> {
@@ -96,10 +109,18 @@ impl Link<u64, u64> {
 
 const OCCUPIED: u64 = 1;
 const FORWARDED: u64 = 2;
-const TAG_MASK: u64 = OCCUPIED | FORWARDED;
+/// Copier window closed: set on a FROZEN image once a completed copy
+/// starts draining rival copiers before the DONE transition. Chain
+/// nodes are 8-byte aligned, so bit 2 of the pointer is free.
+const CLOSING: u64 = 4;
+const TAG_MASK: u64 = OCCUPIED | FORWARDED | CLOSING;
 
 /// Source buckets migrated per helper claim (one stripe).
 const MIGRATION_STRIPE: usize = 64;
+
+/// Snoozes an update grants a FROZEN bucket's copier before copying the
+/// bucket out itself (the copier may be preempted — or dead).
+const FROZEN_PATIENCE: u32 = 16;
 
 /// Buckets covered by one occupancy counter (the growth estimator's
 /// grain — matches the migration stripe).
@@ -122,16 +143,33 @@ impl<K: AtomicValue, V: AtomicValue> Link<K, V> {
         self.next & OCCUPIED == OCCUPIED
     }
 
-    /// Any seal tag set (FROZEN or DONE).
+    /// Any seal tag set (FROZEN, CLOSING, or DONE).
     #[inline]
     fn forwarded(&self) -> bool {
         self.next & FORWARDED == FORWARDED
     }
 
-    /// Sealed with content: the single copier is mid-copy.
+    /// Sealed with content, copier window open: helpers may still join
+    /// the copy (after the census announce/validate handshake).
     #[inline]
     fn frozen(&self) -> bool {
-        self.next & TAG_MASK == TAG_MASK
+        self.next & TAG_MASK == OCCUPIED | FORWARDED
+    }
+
+    /// Sealed with content, copier window closed: the frozen image is
+    /// fully copied and a publisher is draining rival copiers before
+    /// the DONE transition. No new copier may join.
+    #[inline]
+    fn closing(&self) -> bool {
+        self.next & TAG_MASK == OCCUPIED | FORWARDED | CLOSING
+    }
+
+    /// This FROZEN image with the CLOSING mark added.
+    #[inline]
+    fn closing_image(mut self) -> Self {
+        debug_assert!(self.frozen(), "closing an unsealed bucket");
+        self.next |= CLOSING;
+        self
     }
 
     /// Sealed empty: contents (if any) live in the next generation.
@@ -378,11 +416,39 @@ where
     /// Drive any in-flight migration to completion — a cooperative
     /// helper for maintenance threads, drops, and tests; normal updates
     /// migrate one stripe at a time.
+    ///
+    /// Stall-proof: once the cursor is exhausted, this does not merely
+    /// wait for stragglers — it *sweeps* every not-yet-DONE bucket
+    /// itself. A claimant that died after advancing the cursor (so its
+    /// stripe was claimed but never copied) would otherwise leave
+    /// `migrated < len` forever with no helper able to reach the gap;
+    /// `migrate_bucket` is idempotent (FROZEN takeover + DONE election),
+    /// so re-covering a live straggler's stripe is harmless.
     pub fn finish_resizes(&self) {
         let _g = S::pin();
         let mut bo = None;
-        while self.resize.load().in_flight() {
+        loop {
+            let rs = self.resize.load();
+            if !rs.in_flight() {
+                return;
+            }
             self.help_resize();
+            let root = self.root.load(Ordering::Acquire);
+            if rs.old == root as u64 {
+                // SAFETY: old == root — live under our pin.
+                let old = unsafe { &*root };
+                if rs.cursor as usize >= old.len() {
+                    // Cursor exhausted but descriptor still published:
+                    // re-cover any stripe whose claimant went missing.
+                    // SAFETY: the descriptor matched the root when
+                    // loaded; `new` is the live destination under our
+                    // pin (it cannot be retired while `old` is root).
+                    let new = unsafe { &*(rs.new as *const Table<A, K, V>) };
+                    for idx in 0..old.len() {
+                        self.migrate_bucket(old, idx, new);
+                    }
+                }
+            }
             snooze_lazy(&mut bo);
         }
     }
@@ -480,6 +546,10 @@ where
             ) {
                 Ok(_) => {
                     crate::counter!(ResizeStripeClaim);
+                    // A kill here is the dead-claimant scenario: the
+                    // cursor has advanced past a stripe nobody will
+                    // copy. `finish_resizes`'s sweep re-covers it.
+                    crate::failpoint!(ResizeStripeClaim);
                     break (c, end);
                 }
                 Err(w) => rs = w,
@@ -494,18 +564,39 @@ where
     }
 
     /// Seal-and-copy one source bucket into `new`. The seal-CAS winner
-    /// is the single copier (updates landing on the FROZEN window wait;
-    /// finds read the frozen content in place).
+    /// is the *preferred* copier (updates landing on the FROZEN window
+    /// wait briefly; finds read the frozen content in place) — but not
+    /// the only one allowed: a FROZEN bucket whose copier stalled or
+    /// died is copied again by any helper. The copy is idempotent
+    /// ([`copy_entry`](Self::copy_entry) is CAS-if-absent over the
+    /// immutable frozen image), the census handshake keeps every copy
+    /// write pre-DONE, and the CLOSING→DONE CAS elects exactly one
+    /// winner, which alone retires the chain and accounts the bucket —
+    /// so a dead copier delays this bucket, never wedges it.
     fn migrate_bucket(&self, old: &Table<A, K, V>, idx: usize, new: &Table<A, K, V>) {
         let bucket = old.bucket(idx);
         let mut head = bucket.load();
         let mut bo = None;
         loop {
-            if head.forwarded() {
-                // Only the stripe owner seals, and stripes are claimed
-                // exclusively — a pre-existing seal means this bucket is
-                // already migrated (re-entry via finish_resizes).
-                debug_assert!(head.done(), "second copier on a frozen bucket");
+            if head.done() {
+                // Already migrated and accounted (re-entry via
+                // finish_resizes or the sweep).
+                return;
+            }
+            if head.frozen() {
+                // Takeover: the sealing copier may be stalled or dead.
+                if self.copy_frozen(bucket, head, new) {
+                    break; // our DONE transition: account below
+                }
+                return; // a rival's DONE transition accounted already
+            }
+            if head.closing() {
+                // Copy complete; a publisher died (or is racing us)
+                // between CLOSING and DONE. Drain stragglers and race
+                // the transition ourselves.
+                if self.publish_done(bucket, head) {
+                    break;
+                }
                 return;
             }
             if !head.occupied() {
@@ -523,33 +614,13 @@ where
             // still read the (authoritative, immutable) frozen image.
             match bucket.compare_exchange(head, head.sealed()) {
                 Ok(_) => {
-                    // We own the copy: re-hash the inlined pair and
-                    // every chain node into the destination.
-                    self.copy_entry(new, head.key, head.value);
-                    let mut p = head.next_ptr();
-                    while !p.is_null() {
-                        // SAFETY: chain reachable from the frozen head;
-                        // region-pinned.
-                        let n = unsafe { &*p };
-                        self.copy_entry(new, n.key, n.value);
-                        p = n.next;
+                    // A kill here leaves the bucket FROZEN with no
+                    // copier — the takeover arm above must recover it.
+                    crate::failpoint!(ResizeSealFrozen);
+                    if self.copy_frozen(bucket, head.sealed(), new) {
+                        break;
                     }
-                    // Publish DONE — the linearization point after which
-                    // this bucket's keys live in the destination.
-                    let done_ok = bucket
-                        .compare_exchange(head.sealed(), Link::done_link())
-                        .is_ok();
-                    debug_assert!(done_ok, "frozen bucket mutated during copy");
-                    // Retire the drained chain through the region scheme.
-                    let mut p = head.next_ptr();
-                    while !p.is_null() {
-                        // SAFETY: unlinked by the DONE transition;
-                        // lagging readers of the frozen image are pinned.
-                        let nx = unsafe { (*p).next };
-                        unsafe { S::retire_box(p) };
-                        p = nx;
-                    }
-                    break;
+                    return; // a takeover helper beat us to DONE
                 }
                 Err(w) => {
                     head = w;
@@ -564,6 +635,112 @@ where
         if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
             self.finish_resize(old);
         }
+    }
+
+    /// An update ran out of patience with a FROZEN bucket: locate the
+    /// in-flight descriptor and help copy that one bucket out
+    /// (idempotent takeover via [`migrate_bucket`](Self::migrate_bucket)).
+    /// No-op when the descriptor moved on — the bucket's DONE transition
+    /// is then already imminent or published.
+    fn help_frozen_bucket(&self, t: &Table<A, K, V>, idx: usize) {
+        let rs = self.resize.load();
+        let tp = t as *const Table<A, K, V> as u64;
+        if !rs.in_flight() || rs.old != tp || self.root.load(Ordering::Acquire) as u64 != tp {
+            return;
+        }
+        crate::counter!(ResizeTakeover);
+        // SAFETY: the descriptor matches the live root — `new` is the
+        // live destination under the caller's pin.
+        let new = unsafe { &*(rs.new as *const Table<A, K, V>) };
+        self.migrate_bucket(t, idx, new);
+    }
+
+    /// Copy a FROZEN bucket's (immutable) image into the destination and
+    /// race it through CLOSING to DONE. Returns whether *we* won the
+    /// DONE transition — the winner alone retires the drained chain and
+    /// must account the bucket.
+    ///
+    /// Safe to run concurrently with the sealing copier or any number
+    /// of takeover helpers: `copy_entry` is CAS-if-absent over the same
+    /// immutable image, and the [`census`](super::census) handshake
+    /// guarantees no copier's destination write can land after DONE —
+    /// we announce, re-validate the bucket is still exactly FROZEN
+    /// (standing down if the window closed), copy, and clear the
+    /// announcement before anyone may publish DONE.
+    fn copy_frozen(&self, bucket: &A, frozen: Link<K, V>, new: &Table<A, K, V>) -> bool {
+        debug_assert!(frozen.frozen(), "copy_frozen on an unsealed bucket");
+        let addr = bucket as *const A as usize;
+        {
+            let _census = census::announce(addr);
+            // Re-validate post-announce (the Dekker edge — see the
+            // census module docs): if the bucket left FROZEN after our
+            // announcement, the publisher's scan may have missed us, so
+            // we must not write. The image is immutable, so any change
+            // means CLOSING or DONE.
+            if bucket.load() != frozen {
+                // `_census` clears on this early exit path too.
+            } else {
+                self.copy_entry(new, frozen.key, frozen.value);
+                // A kill here unwinds the census guard — the publisher
+                // stops waiting for us and the copy is re-run by a
+                // rival (idempotently).
+                crate::failpoint!(ResizeCopyEntry);
+                let mut p = frozen.next_ptr();
+                while !p.is_null() {
+                    // SAFETY: chain reachable from the frozen head
+                    // (DONE not published, nothing retired yet);
+                    // region-pinned.
+                    let n = unsafe { &*p };
+                    self.copy_entry(new, n.key, n.value);
+                    crate::failpoint!(ResizeCopyEntry);
+                    p = n.next;
+                }
+            }
+            // Guard dropped here: our destination writes are complete
+            // and visible before any publisher's scan can miss us.
+        }
+        // Close the copier window. One CAS winner; losers fall through
+        // to the publish race on the same (deterministic) image.
+        let closing = frozen.closing_image();
+        let _ = bucket.compare_exchange(frozen, closing);
+        self.publish_done(bucket, closing)
+    }
+
+    /// Drain straggling copiers off a CLOSING bucket, then race its
+    /// CLOSING→DONE transition. Returns whether *we* won — the winner
+    /// alone retires the drained chain.
+    fn publish_done(&self, bucket: &A, closing: Link<K, V>) -> bool {
+        debug_assert!(closing.closing(), "publish_done on a non-CLOSING image");
+        let addr = bucket as *const A as usize;
+        // Wait until no rival copier still announces this bucket: a
+        // live one finishes its (chain-length-bounded) copy and clears;
+        // a killed one's guard cleared on unwind. This wait is the
+        // fence that keeps every copy write pre-DONE.
+        let mut bo = None;
+        while census::rivals(addr) {
+            snooze_lazy(&mut bo);
+        }
+        // Publish DONE — the linearization point after which this
+        // bucket's keys live in the destination. A kill *before* the
+        // CAS re-opens the publish window (any helper re-runs this
+        // phase); after a successful CAS the accounting in
+        // `migrate_bucket` is fault-free by construction (no failpoints
+        // between the transition and the migrated increment).
+        crate::failpoint!(ResizePublishDone);
+        if bucket.compare_exchange(closing, Link::done_link()).is_err() {
+            return false; // a rival published DONE (the image is immutable)
+        }
+        // Retire the drained chain through the region scheme — winner
+        // only, exactly once per bucket.
+        let mut p = closing.next_ptr();
+        while !p.is_null() {
+            // SAFETY: unlinked by the DONE transition; lagging readers
+            // of the frozen image are pinned.
+            let nx = unsafe { (*p).next };
+            unsafe { S::retire_box(p) };
+            p = nx;
+        }
+        true
     }
 
     /// Insert-if-absent into the destination table (no growth trigger:
@@ -689,6 +866,8 @@ where
         let mut idx = bucket_for(&key, t.len());
         let mut bucket = t.bucket(idx);
         let mut head = bucket.load();
+        // Bounded patience with a FROZEN bucket before helping copy it.
+        let mut frozen_waits = 0u32;
         // The chain pointer we last walked and proved free of `key`.
         // Chain nodes are immutable after publish and we hold the region
         // pin for the whole operation, so no node reachable from a head
@@ -702,11 +881,20 @@ where
         let mut bo = None;
         loop {
             if head.forwarded() {
-                if head.frozen() {
+                if head.frozen() || head.closing() {
                     // The stripe owner is copying this bucket out; the
-                    // window is bounded by the chain length.
+                    // window is bounded by the chain length — unless the
+                    // copier died in it. Wait a bounded number of beats,
+                    // then help: copy the frozen image ourselves and
+                    // race its DONE transition (idempotent takeover).
                     crate::counter!(ResizeFrozenWait);
-                    snooze_lazy(&mut bo);
+                    frozen_waits += 1;
+                    if frozen_waits > FROZEN_PATIENCE {
+                        frozen_waits = 0;
+                        self.help_frozen_bucket(t, idx);
+                    } else {
+                        snooze_lazy(&mut bo);
+                    }
                     head = bucket.load();
                     continue;
                 }
@@ -775,11 +963,19 @@ where
         let mut head = bucket.load();
         // Lazy: an uncontended remove pays no backoff/TLS cost.
         let mut bo = None;
+        // Bounded patience with a FROZEN bucket before helping copy it.
+        let mut frozen_waits = 0u32;
         loop {
             if head.forwarded() {
-                if head.frozen() {
+                if head.frozen() || head.closing() {
                     crate::counter!(ResizeFrozenWait);
-                    snooze_lazy(&mut bo);
+                    frozen_waits += 1;
+                    if frozen_waits > FROZEN_PATIENCE {
+                        frozen_waits = 0;
+                        self.help_frozen_bucket(t, idx);
+                    } else {
+                        snooze_lazy(&mut bo);
+                    }
                     head = bucket.load();
                     continue;
                 }

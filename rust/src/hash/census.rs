@@ -1,0 +1,144 @@
+//! Copier census: per-thread announcements of "I am copying bucket X".
+//!
+//! Both growable tables allow *any* helper to re-copy a FROZEN bucket
+//! whose sealing copier stalled or died (the copy is idempotent over
+//! the immutable frozen image). That takeover creates one hazard the
+//! idempotence argument alone does not cover: a straggling copier's
+//! destination CAS landing *after* the bucket's DONE transition — at
+//! that point users are already mutating the destination, and a stale
+//! insert-if-absent could resurrect a key a user just removed.
+//!
+//! The census fences those writes out with the hazard-pointer protocol
+//! turned around:
+//!
+//! * a copier **announces** the bucket address, fences (SeqCst), then
+//!   **re-validates** that the bucket is still exactly FROZEN before
+//!   writing anything — standing down if it moved on;
+//! * the DONE publisher first seals the bucket CLOSING (no new copier
+//!   joins a CLOSING bucket — the validation rejects it), fences
+//!   (SeqCst) and **scans** the announcements, waiting until no rival
+//!   still claims this bucket, and only then publishes DONE.
+//!
+//! The store→fence→load pattern on both sides gives the Dekker
+//! guarantee: either the publisher's scan sees the copier's
+//! announcement (and waits out its writes), or the copier's validation
+//! sees CLOSING (and never writes). Every destination write therefore
+//! happens-before DONE.
+//!
+//! Announcements are RAII ([`CopyGuard`]): a copier killed mid-copy
+//! unwinds, the guard clears its slot, and the publisher proceeds — a
+//! dead copier delays a bucket by one scan, never wedges it. A merely
+//! *stalled* copier holds the publisher up until it resumes; that wait
+//! is not an implementation weakness but the correctness fence itself
+//! (the straggler's pending writes must land pre-DONE).
+//!
+//! One slot per thread suffices: the copy path never nests (a copier
+//! never helps another migration while mid-copy), and bucket addresses
+//! are unique across tables and engines while their migration is in
+//! flight (the source table is epoch-protected until every bucket is
+//! DONE, so no address can be recycled under a live announcement).
+
+use std::sync::atomic::{fence, AtomicUsize, Ordering};
+
+use crate::util::registry;
+use crate::MAX_THREADS;
+
+static SLOTS: [AtomicUsize; MAX_THREADS] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const Z: AtomicUsize = AtomicUsize::new(0);
+    [Z; MAX_THREADS]
+};
+
+/// RAII copy announcement; clears the slot on drop (including unwind —
+/// this is what makes a killed copier invisible to the publisher).
+pub(crate) struct CopyGuard {
+    slot: &'static AtomicUsize,
+}
+
+impl Drop for CopyGuard {
+    #[inline]
+    fn drop(&mut self) {
+        // Ordering: Release — the publisher's Acquire scan load sees the
+        // copier's destination writes before it sees the cleared slot.
+        self.slot.store(0, Ordering::Release);
+    }
+}
+
+/// Announce this thread as a copier of the bucket at `addr`.
+///
+/// The caller MUST re-validate the bucket state *after* this returns
+/// and before writing to the destination (see the module docs for the
+/// fence pairing).
+#[inline]
+pub(crate) fn announce(addr: usize) -> CopyGuard {
+    debug_assert!(addr != 0, "announcing the null bucket");
+    let slot = &SLOTS[registry::tid()];
+    debug_assert_eq!(slot.load(Ordering::Relaxed), 0, "nested copy announcement");
+    // Ordering: Relaxed store + mandatory SeqCst fence — the announce
+    // must be ordered before the caller's re-validating bucket load,
+    // pairing with the publisher's fence in `rivals`.
+    slot.store(addr, Ordering::Relaxed);
+    fence(Ordering::SeqCst);
+    CopyGuard { slot }
+}
+
+/// Does any *other* thread currently announce the bucket at `addr`?
+///
+/// The publisher calls this after its CLOSING transition and spins
+/// until it returns false; each call re-fences so a fresh scan pairs
+/// with any announce that could still validate FROZEN.
+#[inline]
+pub(crate) fn rivals(addr: usize) -> bool {
+    // Ordering: mandatory store-load fence — orders the publisher's
+    // CLOSING write before the scan loads, pairing with `announce`.
+    fence(Ordering::SeqCst);
+    let me = registry::tid();
+    SLOTS[..registry::high_water()]
+        .iter()
+        .enumerate()
+        // Ordering: Acquire — pairs with the guard's Release clear, so
+        // a cleared rival's destination writes are visible to us (and
+        // ordered before our DONE CAS).
+        .any(|(t, s)| t != me && s.load(Ordering::Acquire) == addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_guard_clears_on_drop_and_unwind() {
+        let addr = 0x1000usize;
+        {
+            let _g = announce(addr);
+            assert_eq!(SLOTS[registry::tid()].load(Ordering::Relaxed), addr);
+        }
+        assert_eq!(SLOTS[registry::tid()].load(Ordering::Relaxed), 0);
+        // Unwind path: the announcement must not survive a panic.
+        let r = std::panic::catch_unwind(|| {
+            let _g = announce(addr);
+            panic!("copier dies mid-copy");
+        });
+        assert!(r.is_err());
+        assert_eq!(SLOTS[registry::tid()].load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn test_rivals_ignores_own_slot_and_sees_others() {
+        let addr = 0x2000usize;
+        let _g = announce(addr);
+        // Our own announcement is not a rival.
+        assert!(!rivals(addr));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g2 = announce(addr);
+                assert!(rivals(addr), "peer announcement not seen");
+            })
+            .join()
+            .unwrap();
+        });
+        // Peer exited (guard dropped): no rivals again.
+        assert!(!rivals(addr));
+        assert!(!rivals(0x3000), "phantom rival on an unannounced address");
+    }
+}

@@ -8,9 +8,10 @@
 //!
 //! Grows online exactly like `CacheHash` (see its module docs): a
 //! [`ResizeState`](super::ResizeState) descriptor, stripe-claimed
-//! migration, FROZEN (`ptr|1`, content intact) → DONE (`0|1`) bucket
-//! seals, lock-free finds falling through DONE marks, and epoch-retired
-//! drained tables.
+//! migration, FROZEN (`ptr|1`, content intact) → CLOSING (`ptr|1|2`,
+//! copy complete, rival copiers draining) → DONE (`1`) bucket seals,
+//! lock-free finds falling through DONE marks, census-fenced copier
+//! takeover of stalled/dead copiers, and epoch-retired drained tables.
 //!
 //! The bucket protocol is on the memory-ordering diet (PR 3/4 house
 //! style): every access runs at the weakest sound ordering under the
@@ -25,7 +26,7 @@
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 
-use super::{bucket_for, table_capacity, ConcurrentMap, ResizeState};
+use super::{bucket_for, census, table_capacity, ConcurrentMap, ResizeState};
 use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
 use crate::smr::{Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
@@ -38,14 +39,30 @@ struct Node<K, V> {
     next: *mut Node<K, V>,
 }
 
-/// Bucket tag bit (nodes are ≥ 8-byte aligned, so bit 0 is free):
-/// `0` = empty, `p` = chain head, `p|1` = FROZEN (copy in progress),
-/// `1` = DONE (contents live in the next generation).
+/// Bucket tag bits (nodes are ≥ 8-byte aligned, so bits 0–2 are free):
+/// `0` = empty, `p` = chain head, `p|1` = FROZEN (copy in progress,
+/// helpers may join), `p|1|2` = CLOSING (copy complete, publisher
+/// draining rival copiers — see [`census`](super::census)), `1` = DONE
+/// (contents live in the next generation).
 const FWD: usize = 1;
+/// Copier window closed (set only on a FROZEN image).
+const CLOSING: usize = 2;
 
 #[inline]
 fn node_of<K, V>(raw: usize) -> *mut Node<K, V> {
-    (raw & !FWD) as *mut Node<K, V>
+    (raw & !(FWD | CLOSING)) as *mut Node<K, V>
+}
+
+/// Sealed with content, copier window open.
+#[inline]
+fn is_frozen(raw: usize) -> bool {
+    raw & FWD != 0 && raw & CLOSING == 0 && raw != FWD
+}
+
+/// Sealed with content, copier window closed.
+#[inline]
+fn is_closing(raw: usize) -> bool {
+    raw & CLOSING != 0
 }
 
 /// Source buckets migrated per helper claim / occupancy-counter grain /
@@ -53,6 +70,10 @@ fn node_of<K, V>(raw: usize) -> *mut Node<K, V> {
 const MIGRATION_STRIPE: usize = 64;
 const OCCUPANCY_STRIPE: usize = 64;
 const GROW_LOAD_FACTOR: usize = 2;
+
+/// Snoozes an update grants a FROZEN bucket's copier before copying the
+/// bucket out itself (the copier may be preempted — or dead).
+const FROZEN_PATIENCE: u32 = 16;
 
 /// One generation of the bucket array (see `CacheHash`'s `Table`).
 struct CTable<K, V> {
@@ -181,11 +202,36 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
     }
 
     /// Drive any in-flight migration to completion (tests, maintenance).
+    ///
+    /// Stall-proof like `CacheHash::finish_resizes`: once the cursor is
+    /// exhausted this *sweeps* every not-yet-DONE bucket itself, so a
+    /// claimant that died after advancing the cursor cannot leave
+    /// `migrated < len` forever (`migrate_bucket` is idempotent).
     pub fn finish_resizes(&self) {
         let _g = S::pin();
         let mut bo = None;
-        while self.resize.load().in_flight() {
+        loop {
+            let rs = self.resize.load();
+            if !rs.in_flight() {
+                return;
+            }
             self.help_resize();
+            let root = self.root.load(P::ACQUIRE);
+            if rs.old == root as u64 {
+                // SAFETY: old == root — live under our pin.
+                let old = unsafe { &*root };
+                if rs.cursor as usize >= old.len() {
+                    // Cursor exhausted but descriptor still published:
+                    // re-cover any stripe whose claimant went missing.
+                    // SAFETY: the descriptor matched the root when
+                    // loaded; `new` is the live destination under our
+                    // pin (it cannot be retired while `old` is root).
+                    let new = unsafe { &*(rs.new as *const CTable<K, V>) };
+                    for idx in 0..old.len() {
+                        self.migrate_bucket(old, idx, new);
+                    }
+                }
+            }
             snooze_lazy(&mut bo);
         }
     }
@@ -268,6 +314,10 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             ) {
                 Ok(_) => {
                     crate::counter!(ResizeStripeClaim);
+                    // A kill here is the dead-claimant scenario: the
+                    // cursor has advanced past a stripe nobody will
+                    // copy. `finish_resizes`'s sweep re-covers it.
+                    crate::failpoint!(ResizeStripeClaim);
                     break (c, end);
                 }
                 Err(w) => rs = w,
@@ -280,15 +330,33 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
         }
     }
 
-    /// Seal-and-copy one source bucket (see `CacheHash::migrate_bucket`).
+    /// Seal-and-copy one source bucket (see `CacheHash::migrate_bucket`
+    /// for the takeover/census argument — identical protocol on the
+    /// tagged-word representation).
     fn migrate_bucket(&self, old: &CTable<K, V>, idx: usize, new: &CTable<K, V>) {
         let bucket = old.bucket(idx);
         // Ordering: ACQUIRE — the head is dereferenced during the copy.
         let mut raw = bucket.load(P::ACQUIRE);
         let mut bo = None;
         loop {
-            if raw & FWD != 0 {
-                debug_assert_eq!(raw, FWD, "second copier on a frozen bucket");
+            if raw == FWD {
+                // Already migrated and accounted (re-entry via
+                // finish_resizes or the sweep).
+                return;
+            }
+            if is_frozen(raw) {
+                // Takeover: the sealing copier may be stalled or dead.
+                if self.copy_frozen(bucket, raw, new) {
+                    break; // our DONE transition: account below
+                }
+                return; // a rival's DONE transition accounted already
+            }
+            if is_closing(raw) {
+                // Copy complete; a publisher died (or is racing us)
+                // between CLOSING and DONE.
+                if self.publish_done(bucket, raw) {
+                    break;
+                }
                 return;
             }
             if raw == 0 {
@@ -309,30 +377,13 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             // Ordering: RELEASE / ACQUIRE as above.
             match bucket.compare_exchange(raw, raw | FWD, P::RELEASE, P::ACQUIRE) {
                 Ok(_) => {
-                    let mut p = node_of::<K, V>(raw);
-                    while !p.is_null() {
-                        // SAFETY: frozen chain, region-pinned.
-                        let n = unsafe { &*p };
-                        self.copy_entry(new, n.key, n.value);
-                        p = n.next;
+                    // A kill here leaves the bucket FROZEN with no
+                    // copier — the takeover arm above must recover it.
+                    crate::failpoint!(ResizeSealFrozen);
+                    if self.copy_frozen(bucket, raw | FWD, new) {
+                        break;
                     }
-                    // Publish DONE — the generation-crossing point.
-                    // Ordering: RELEASE — the copies happen-before any
-                    // reader's fall-through to the destination.
-                    let done_ok = bucket
-                        .compare_exchange(raw | FWD, FWD, P::RELEASE, P::RELAXED)
-                        .is_ok();
-                    debug_assert!(done_ok, "frozen bucket mutated during copy");
-                    // Retire the drained chain through the region scheme.
-                    let mut p = node_of::<K, V>(raw);
-                    while !p.is_null() {
-                        // SAFETY: unlinked by the DONE transition;
-                        // lagging frozen-image readers are pinned.
-                        let nx = unsafe { (*p).next };
-                        unsafe { S::retire_box(p) };
-                        p = nx;
-                    }
-                    break;
+                    return; // a takeover helper beat us to DONE
                 }
                 Err(w) => {
                     raw = w;
@@ -347,6 +398,96 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
         if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
             self.finish_resize(old);
         }
+    }
+
+    /// An update ran out of patience with a FROZEN bucket: locate the
+    /// in-flight descriptor and help copy that one bucket out. No-op
+    /// when the descriptor moved on.
+    fn help_frozen_bucket(&self, t: &CTable<K, V>, idx: usize) {
+        let rs = self.resize.load();
+        let tp = t as *const CTable<K, V> as u64;
+        if !rs.in_flight() || rs.old != tp || self.root.load(P::ACQUIRE) as u64 != tp {
+            return;
+        }
+        crate::counter!(ResizeTakeover);
+        // SAFETY: the descriptor matches the live root — `new` is the
+        // live destination under the caller's pin.
+        let new = unsafe { &*(rs.new as *const CTable<K, V>) };
+        self.migrate_bucket(t, idx, new);
+    }
+
+    /// Copy a FROZEN bucket's (immutable) chain into the destination and
+    /// race it through CLOSING to DONE — the census-fenced concurrent
+    /// copy of `CacheHash::copy_frozen`. Returns whether *we* won DONE.
+    fn copy_frozen(&self, bucket: &AtomicUsize, frozen: usize, new: &CTable<K, V>) -> bool {
+        debug_assert!(is_frozen(frozen), "copy_frozen on an unsealed bucket");
+        let addr = bucket as *const AtomicUsize as usize;
+        {
+            let _census = census::announce(addr);
+            // Re-validate post-announce (the Dekker edge — see the
+            // census module docs): any change means CLOSING or DONE,
+            // and we must not write.
+            // Ordering: ACQUIRE — the chain is dereferenced below; the
+            // announce's SeqCst fence provides the store-load edge.
+            if bucket.load(P::ACQUIRE) == frozen {
+                let mut p = node_of::<K, V>(frozen);
+                while !p.is_null() {
+                    // SAFETY: frozen chain, region-pinned.
+                    let n = unsafe { &*p };
+                    self.copy_entry(new, n.key, n.value);
+                    // A kill here unwinds the census guard — a rival
+                    // re-runs the copy idempotently.
+                    crate::failpoint!(ResizeCopyEntry);
+                    p = n.next;
+                }
+            }
+            // Guard dropped here: our destination writes are complete.
+        }
+        // Close the copier window. One CAS winner; losers fall through
+        // to the publish race on the same (deterministic) value.
+        // Ordering: RELEASE — orders the copies before the state change;
+        // RELAXED failure (the witness is not dereferenced).
+        let closing = frozen | CLOSING;
+        let _ = bucket.compare_exchange(frozen, closing, P::RELEASE, P::RELAXED);
+        self.publish_done(bucket, closing)
+    }
+
+    /// Drain straggling copiers off a CLOSING bucket, then race its
+    /// CLOSING→DONE transition. Returns whether *we* won — the winner
+    /// alone retires the drained chain.
+    fn publish_done(&self, bucket: &AtomicUsize, closing: usize) -> bool {
+        debug_assert!(is_closing(closing), "publish_done on a non-CLOSING word");
+        let addr = bucket as *const AtomicUsize as usize;
+        // Wait until no rival copier still announces this bucket (a
+        // killed one's guard cleared on unwind) — the fence that keeps
+        // every copy write pre-DONE.
+        let mut bo = None;
+        while census::rivals(addr) {
+            snooze_lazy(&mut bo);
+        }
+        // Publish DONE — the generation-crossing point. A kill *before*
+        // the CAS re-opens the publish window; after it, the accounting
+        // in `migrate_bucket` is fault-free by construction.
+        crate::failpoint!(ResizePublishDone);
+        // Ordering: RELEASE — the copies happen-before any reader's
+        // fall-through to the destination; RELAXED failure.
+        if bucket
+            .compare_exchange(closing, FWD, P::RELEASE, P::RELAXED)
+            .is_err()
+        {
+            return false; // a rival published DONE (the image is immutable)
+        }
+        // Retire the drained chain through the region scheme — winner
+        // only, exactly once per bucket.
+        let mut p = node_of::<K, V>(closing);
+        while !p.is_null() {
+            // SAFETY: unlinked by the DONE transition; lagging
+            // frozen-image readers are pinned.
+            let nx = unsafe { (*p).next };
+            unsafe { S::retire_box(p) };
+            p = nx;
+        }
+        true
     }
 
     /// Insert-if-absent into the destination (no growth trigger — the
@@ -455,12 +596,23 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
         // The spare box from a failed CAS is reused on retry.
         let mut node: Option<Box<Node<K, V>>> = None;
         let mut bo = None;
+        // Bounded patience with a FROZEN bucket before helping copy it.
+        let mut frozen_waits = 0u32;
         loop {
             if raw & FWD != 0 {
                 if raw != FWD {
-                    // FROZEN: the copier's window is chain-bounded.
+                    // FROZEN/CLOSING: the copier's window is chain-
+                    // bounded — unless the copier died in it. Wait a
+                    // bounded number of beats, then help (idempotent
+                    // takeover via `help_frozen_bucket`).
                     crate::counter!(ResizeFrozenWait);
-                    snooze_lazy(&mut bo);
+                    frozen_waits += 1;
+                    if frozen_waits > FROZEN_PATIENCE {
+                        frozen_waits = 0;
+                        self.help_frozen_bucket(t, idx);
+                    } else {
+                        snooze_lazy(&mut bo);
+                    }
                     raw = bucket.load(P::ACQUIRE);
                     continue;
                 }
@@ -522,11 +674,19 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
         // Ordering: ACQUIRE — the head is dereferenced below.
         let mut raw = bucket.load(P::ACQUIRE);
         let mut bo = None;
+        // Bounded patience with a FROZEN bucket before helping copy it.
+        let mut frozen_waits = 0u32;
         loop {
             if raw & FWD != 0 {
                 if raw != FWD {
                     crate::counter!(ResizeFrozenWait);
-                    snooze_lazy(&mut bo);
+                    frozen_waits += 1;
+                    if frozen_waits > FROZEN_PATIENCE {
+                        frozen_waits = 0;
+                        self.help_frozen_bucket(t, idx);
+                    } else {
+                        snooze_lazy(&mut bo);
+                    }
                     raw = bucket.load(P::ACQUIRE);
                     continue;
                 }

@@ -38,6 +38,7 @@
 //! ```
 
 pub mod cachehash;
+pub(crate) mod census;
 pub mod chaining;
 pub mod globallock;
 pub mod shardlock;

@@ -144,7 +144,11 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(20));
             // Ordering: Release — pairs with the waiter's Acquire above.
             released.store(true, Ordering::Release);
-            drop(q.try_claim().expect("run"));
+            // Serve (drain) the run — an undrained drop would requeue
+            // the batches and leave the queue full forever.
+            let mut run = q.try_claim().expect("run");
+            assert_eq!(run.drain().count(), 2);
+            drop(run);
         });
     }
 }

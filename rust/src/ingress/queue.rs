@@ -36,6 +36,24 @@
 //! detach bumped `claim`. `claim >> 1` is also a free statistic: the
 //! number of runs ever claimed (plus one while a drainer is active).
 //!
+//! ## Drainer leases (stall tolerance)
+//!
+//! A queue built with [`ClaimQueue::with_lease`] bounds how long a
+//! drainer may sit on the claim word: the descriptor's fourth word
+//! (`since`) records when the current claim was taken, and a
+//! `try_claim` that finds the claim word odd *and expired* CASes it
+//! away — `claim + 2` if there are fresh batches to drain (the caller
+//! becomes the new drainer), `claim + 1` if not (a release on the dead
+//! drainer's behalf). Both keep `claim` strictly growing, so the
+//! ABA-proofing above is untouched. The displaced [`Run`] remembers the
+//! odd claim value it installed and releases **only if it still
+//! matches** at drop time; its undrained batches are re-pushed (bound
+//! exempt — they were already admitted once), so a stalled or killed
+//! drainer delays its backlog but never loses it, and never
+//! double-releases a claim it no longer holds. [`ClaimQueue::new`]
+//! disables the lease (`lease_ns = 0`): exactly-one-drainer then holds
+//! unconditionally, as the linearizability suite pins.
+//!
 //! ## Reclamation
 //!
 //! After the claim CAS the chain is unreachable from the descriptor,
@@ -47,18 +65,32 @@
 
 use std::marker::PhantomData;
 use std::mem::ManuallyDrop;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 use crate::atomics::{BigAtomic, SeqLock};
 use crate::impl_atomic_value;
 use crate::smr::epoch;
 use crate::util::backoff::snooze_lazy;
 
-/// The queue descriptor: one 3-word big-atomic value.
+/// Monotonic nanoseconds since the first lease-bearing operation in the
+/// process — the clock the drainer lease is measured against. A plain
+/// `Instant` can't ride inside the big-atomic descriptor; an offset
+/// from a process-global origin can.
+fn now_ns() -> u64 {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// The queue descriptor: one 4-word big-atomic value.
 ///
 /// `head` is the newest node's address (0 = empty), `tally` the number
 /// of queued-but-unclaimed batches, `claim` the drainer epoch (odd ⇔ a
 /// drainer holds the current run; see the module docs for why this is a
-/// counter rather than a flag).
+/// counter rather than a flag), `since` the [`now_ns`] timestamp of the
+/// current claim (meaningful only while `claim` is odd; drives the
+/// drainer lease).
 #[repr(C, align(8))]
 #[derive(Copy, Clone, PartialEq, Eq, Default, Debug)]
 pub struct QueueState {
@@ -69,6 +101,8 @@ pub struct QueueState {
     pub tally: u64,
     /// Drainer epoch: odd ⇔ claimed; bumps on claim *and* release.
     pub claim: u64,
+    /// [`now_ns`] when the current claim was installed (lease anchor).
+    pub since: u64,
 }
 impl_atomic_value!(QueueState);
 
@@ -108,6 +142,14 @@ struct Node<T> {
 pub struct ClaimQueue<T: Send + 'static> {
     state: SeqLock<QueueState>,
     bound: u64,
+    /// Max nanoseconds a drainer may hold the claim word before any
+    /// `try_claim` may take it over (0 = no lease, claims are held
+    /// unconditionally).
+    lease_ns: u64,
+    /// Expired claims CASed away from a stalled drainer.
+    takeovers: AtomicU64,
+    /// Batches re-pushed by a displaced or aborted [`Run`]'s drop.
+    requeued: AtomicU64,
     _owns: PhantomData<T>,
 }
 
@@ -119,13 +161,38 @@ unsafe impl<T: Send + 'static> Sync for ClaimQueue<T> {}
 
 impl<T: Send + 'static> ClaimQueue<T> {
     /// An empty queue admitting at most `bound` queued batches
-    /// (0 = unbounded).
+    /// (0 = unbounded). No drainer lease: a claimed run is held until
+    /// its `Run` drops, however long that takes.
     pub fn new(bound: u64) -> Self {
+        Self::with_lease(bound, 0)
+    }
+
+    /// Like [`new`](Self::new), but a drainer holding the claim word
+    /// longer than `lease_ns` nanoseconds may be displaced by any later
+    /// `try_claim` (0 = no lease). See the module docs, "Drainer
+    /// leases".
+    pub fn with_lease(bound: u64, lease_ns: u64) -> Self {
         Self {
             state: SeqLock::new(QueueState::default()),
             bound,
+            lease_ns,
+            takeovers: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
             _owns: PhantomData,
         }
+    }
+
+    /// Expired claims this queue has CASed away from stalled drainers.
+    #[inline]
+    pub fn lease_takeovers(&self) -> u64 {
+        self.takeovers.load(Ordering::Relaxed)
+    }
+
+    /// Batches re-pushed by displaced or aborted runs (each is still
+    /// served exactly once — requeue is a delay, not a ledger event).
+    #[inline]
+    pub fn requeued(&self) -> u64 {
+        self.requeued.load(Ordering::Relaxed)
     }
 
     /// The descriptor right now (one seqlock read).
@@ -154,8 +221,26 @@ impl<T: Send + 'static> ClaimQueue<T> {
     /// returns `Err((item, tally))` — the caller owns the shed-or-wait
     /// decision (see [`super::admission`]).
     pub fn try_push(&self, item: T) -> Result<u64, (T, u64)> {
+        self.link(item, true)
+    }
+
+    /// The shared push loop. `enforce_bound: false` is the requeue path
+    /// ([`Run`]'s drop returning already-admitted batches): the bound
+    /// governs *admission*, and these batches were admitted once — a
+    /// full queue must not turn a requeue into a silent drop.
+    ///
+    /// The failpoint sits *before* the node is boxed: a kill here loses
+    /// nothing the caller still owns, and a spurious-CAS draw models
+    /// losing the descriptor race once (one extra reload). It fires only
+    /// on the admission path — the requeue path runs during `Run`'s
+    /// drop, possibly mid-unwind, where a kill would abort the process.
+    fn link(&self, item: T, enforce_bound: bool) -> Result<u64, (T, u64)> {
         let mut cur = self.state.load();
-        if self.bound != 0 && cur.tally >= self.bound {
+        if enforce_bound && crate::failcas!(IngressEnqueue) {
+            cur = self.state.load();
+        }
+        let enforce = enforce_bound && self.bound != 0;
+        if enforce && cur.tally >= self.bound {
             return Err((item, cur.tally));
         }
         let node = Box::into_raw(Box::new(Node {
@@ -176,6 +261,7 @@ impl<T: Send + 'static> ClaimQueue<T> {
                 head: node as u64,
                 tally: cur.tally + 1,
                 claim: cur.claim,
+                since: cur.since,
             };
             match self.state.compare_exchange(cur, next) {
                 Ok(_) => {
@@ -183,7 +269,7 @@ impl<T: Send + 'static> ClaimQueue<T> {
                     return Ok(next.tally);
                 }
                 Err(w) => {
-                    if self.bound != 0 && w.tally >= self.bound {
+                    if enforce && w.tally >= self.bound {
                         // Reclaim the unpublished node and hand the item
                         // back with the witnessed depth.
                         // SAFETY: the CAS failed, so `node` was never
@@ -204,30 +290,84 @@ impl<T: Send + 'static> ClaimQueue<T> {
 
     /// Claim-and-detach: become the queue's exactly-one drainer and take
     /// the whole accumulated run. Returns `None` when the queue is empty
-    /// or another drainer's claim word is odd — **at most one [`Run`]
-    /// exists per queue at any time**. Dropping the `Run` releases the
-    /// claim.
+    /// or another drainer's claim word is odd and unexpired — **at most
+    /// one *live* [`Run`] claim exists per queue at any time** (a
+    /// displaced run still holds its batches, but its claim epoch is
+    /// spent; see the module docs, "Drainer leases"). Dropping the `Run`
+    /// releases the claim iff it still holds it.
     pub fn try_claim(&self) -> Option<Run<'_, T>> {
+        crate::failpoint!(IngressClaim);
         let mut cur = self.state.load();
         let mut bo = None;
         loop {
-            if cur.head == 0 || cur.drainer_active() {
+            if cur.drainer_active() {
+                if !self.lease_expired(cur) {
+                    return None;
+                }
+                // Expired lease: CAS the dead claim away. With fresh
+                // batches we take over as the new drainer (claim + 2
+                // stays odd); with none we just release on the stalled
+                // drainer's behalf (claim + 1, even). Both grow `claim`.
+                let takeover = cur.head != 0;
+                let next = QueueState {
+                    head: 0,
+                    tally: 0,
+                    claim: cur.claim + if takeover { 2 } else { 1 },
+                    since: now_ns(),
+                };
+                match self.state.compare_exchange(cur, next) {
+                    Ok(prev) => {
+                        self.takeovers.fetch_add(1, Ordering::Relaxed);
+                        crate::counter!(KvLeaseTakeover);
+                        if !takeover {
+                            return None;
+                        }
+                        crate::counter!(KvClaim);
+                        // SAFETY: as below — the winning CAS unlinked
+                        // the chain at `prev.head`.
+                        let items = unsafe { self.detach(prev.head) };
+                        return Some(Run {
+                            queue: self,
+                            epoch: next.claim,
+                            items,
+                        });
+                    }
+                    Err(w) => {
+                        crate::counter!(CasRetry);
+                        cur = w;
+                        snooze_lazy(&mut bo);
+                        continue;
+                    }
+                }
+            }
+            if cur.head == 0 {
                 return None;
             }
             let next = QueueState {
                 head: 0,
                 tally: 0,
                 claim: cur.claim + 1, // even → odd: drainer active
+                since: now_ns(),      // lease anchor for this claim
             };
             match self.state.compare_exchange(cur, next) {
                 Ok(prev) => {
                     crate::counter!(KvClaim);
+                    // The stall-a-drainer window: we hold the (odd)
+                    // claim word but haven't served anything yet. A
+                    // stall longer than the lease lets a rival take the
+                    // claim — and any batches pushed after our CAS —
+                    // away; the chain below stays exclusively ours.
+                    crate::failpoint!(IngressDrain);
                     // SAFETY: the claim CAS unlinked the whole chain at
                     // `prev.head`; we are its unique owner (pinned
                     // peekers only read, and the nodes are epoch-retired
                     // below, not freed).
                     let items = unsafe { self.detach(prev.head) };
-                    return Some(Run { queue: self, items });
+                    return Some(Run {
+                        queue: self,
+                        epoch: next.claim,
+                        items,
+                    });
                 }
                 Err(w) => {
                     crate::counter!(CasRetry);
@@ -236,6 +376,15 @@ impl<T: Send + 'static> ClaimQueue<T> {
                 }
             }
         }
+    }
+
+    /// Whether `s`'s odd claim has outlived the lease (always false on
+    /// lease-less queues).
+    #[inline]
+    fn lease_expired(&self, s: QueueState) -> bool {
+        self.lease_ns != 0
+            && s.drainer_active()
+            && now_ns().saturating_sub(s.since) > self.lease_ns
     }
 
     /// Move every payload out of the detached chain (reversing into
@@ -306,6 +455,10 @@ impl<T: Send + 'static> Drop for ClaimQueue<T> {
 /// batches pushed mid-service wait for the release.
 pub struct Run<'a, T: Send + 'static> {
     queue: &'a ClaimQueue<T>,
+    /// The odd claim value this run's winning CAS installed. Release
+    /// only happens if the descriptor still carries it — a displaced
+    /// run (lease takeover) must not bump an epoch it no longer owns.
+    epoch: u64,
     items: Vec<T>,
 }
 
@@ -327,9 +480,32 @@ impl<T: Send + 'static> Run<'_, T> {
 
 impl<T: Send + 'static> Drop for Run<'_, T> {
     fn drop(&mut self) {
-        // Release: odd → even, bumping the claim epoch. fetch_update's
-        // closure is total, so the Err arm is unreachable.
+        // This drop is the conservation backstop and runs on *every*
+        // exit — normal completion, early drop, and a panicking
+        // drainer's unwind alike. Two duties, in order:
+        //
+        // 1. Requeue anything not drained. The batches were admitted
+        //    (tallied) once; dropping them here would silently break
+        //    `offered == served + shed`, so they go back on the queue
+        //    (bound exempt) for the next drainer.
+        if !self.items.is_empty() {
+            let n = self.items.len() as u64;
+            for item in self.items.drain(..) {
+                // `link` with the bound waived cannot fail.
+                let _ = self.queue.link(item, false);
+            }
+            self.queue.requeued.fetch_add(n, Ordering::Relaxed);
+            crate::counter!(KvRequeue, n);
+        }
+        // 2. Release the claim — odd → even — but only if the
+        //    descriptor still carries *our* claim epoch. After a lease
+        //    takeover the epoch has moved on and the release (or the
+        //    whole queue's claim cycle) belongs to someone else.
+        crate::failpoint!(IngressRelease);
         let _ = self.queue.state.fetch_update(|mut s| {
+            if s.claim != self.epoch {
+                return None;
+            }
             debug_assert!(s.drainer_active(), "release without a claim");
             s.claim += 1;
             Some(s)
@@ -375,8 +551,11 @@ mod tests {
         assert_eq!(q.try_push(2), Ok(2));
         let (back, depth) = q.try_push(3).unwrap_err();
         assert_eq!((back, depth), (3, 2));
-        // Draining reopens admission.
-        drop(q.try_claim().expect("run"));
+        // Draining reopens admission (the run must be served, not just
+        // dropped — an undrained drop requeues, keeping the queue full).
+        let mut run = q.try_claim().expect("run");
+        assert_eq!(run.drain().count(), 2);
+        drop(run);
         assert_eq!(q.try_push(3), Ok(1));
     }
 
@@ -384,13 +563,83 @@ mod tests {
     fn test_new_pushes_during_run_wait_for_release() {
         let q: ClaimQueue<u64> = ClaimQueue::new(0);
         q.try_push(1).unwrap();
-        let run = q.try_claim().expect("run");
+        let mut run = q.try_claim().expect("run");
         q.try_push(2).unwrap();
         assert_eq!(q.depth(), 1);
         assert!(q.try_claim().is_none(), "run 2 claimed while run 1 live");
+        assert_eq!(run.drain().collect::<Vec<_>>(), vec![1]);
         drop(run);
         let mut r2 = q.try_claim().expect("run 2");
         assert_eq!(r2.drain().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn test_lease_takeover_displaced_run_requeues_and_skips_release() {
+        let q: ClaimQueue<u64> = ClaimQueue::with_lease(0, 1_000_000); // 1ms
+        q.try_push(10).unwrap();
+        q.try_push(11).unwrap();
+        let run1 = q.try_claim().expect("run1");
+        assert_eq!(run1.len(), 2);
+        // The drainer stalls past its lease while new batches arrive.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.try_push(12).unwrap();
+        let mut run2 = q.try_claim().expect("takeover run");
+        assert_eq!(q.lease_takeovers(), 1);
+        assert_eq!(run2.drain().collect::<Vec<_>>(), vec![12]);
+        drop(run2);
+        assert!(q.is_idle(), "new drainer's release didn't land");
+        // The displaced drainer finally drops: its undrained batches go
+        // back on the queue, and it must NOT release an epoch it lost.
+        drop(run1);
+        assert_eq!(q.requeued(), 2);
+        assert_eq!(q.depth(), 2);
+        assert!(!q.state().drainer_active(), "stale release double-bumped");
+        let mut run3 = q.try_claim().expect("requeued run");
+        assert_eq!(run3.drain().collect::<Vec<_>>(), vec![10, 11]);
+    }
+
+    #[test]
+    fn test_lease_expired_idle_claim_force_released() {
+        let q: ClaimQueue<u64> = ClaimQueue::with_lease(0, 1_000_000); // 1ms
+        q.try_push(7).unwrap();
+        let run = q.try_claim().expect("run");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        // Nothing new to drain: the expired claim is released on the
+        // stalled drainer's behalf, no run handed out.
+        assert!(q.try_claim().is_none());
+        assert_eq!(q.lease_takeovers(), 1);
+        assert!(!q.state().drainer_active());
+        // The stalled drainer never served its batch; drop requeues it.
+        drop(run);
+        assert_eq!(q.requeued(), 1);
+        let mut r2 = q.try_claim().expect("requeued batch");
+        assert_eq!(r2.drain().collect::<Vec<_>>(), vec![7]);
+    }
+
+    #[test]
+    fn test_no_lease_claim_held_indefinitely() {
+        let q: ClaimQueue<u64> = ClaimQueue::new(0);
+        q.try_push(1).unwrap();
+        let _run = q.try_claim().expect("run");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        q.try_push(2).unwrap();
+        assert!(q.try_claim().is_none(), "lease-less claim was taken over");
+        assert_eq!(q.lease_takeovers(), 0);
+    }
+
+    #[test]
+    fn test_early_dropped_run_requeues_leftovers() {
+        let q: ClaimQueue<u64> = ClaimQueue::new(0);
+        for i in 0..4u64 {
+            q.try_push(i).unwrap();
+        }
+        let run = q.try_claim().expect("run");
+        // Dropped without draining: every batch must survive.
+        drop(run);
+        assert_eq!(q.requeued(), 4);
+        assert_eq!(q.depth(), 4);
+        let mut r2 = q.try_claim().expect("run 2");
+        assert_eq!(r2.drain().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -25,11 +25,32 @@ impl<T: Send + 'static> ShardRouter<T> {
     /// `shards` rounded up to a power of two (min 1), each queue bounded
     /// to `bound` queued batches (0 = unbounded).
     pub fn new(shards: usize, bound: u64) -> Self {
+        Self::with_lease(shards, bound, 0)
+    }
+
+    /// Like [`new`](Self::new), but every shard queue carries a drainer
+    /// lease of `lease_ns` nanoseconds (0 = no lease): a worker that
+    /// stalls or dies holding a run delays only until the lease expires,
+    /// then any sibling's claim takes the shard over (see
+    /// [`ClaimQueue::with_lease`]).
+    pub fn with_lease(shards: usize, bound: u64, lease_ns: u64) -> Self {
         let n = shards.max(1).next_power_of_two();
         Self {
-            shards: (0..n).map(|_| CachePadded::new(ClaimQueue::new(bound))).collect(),
+            shards: (0..n)
+                .map(|_| CachePadded::new(ClaimQueue::with_lease(bound, lease_ns)))
+                .collect(),
             mask: (n - 1) as u64,
         }
+    }
+
+    /// Expired drainer claims CASed away, summed over all shards.
+    pub fn lease_takeovers(&self) -> u64 {
+        self.shards.iter().map(|q| q.lease_takeovers()).sum()
+    }
+
+    /// Batches re-pushed by displaced/aborted runs, summed over shards.
+    pub fn requeued(&self) -> u64 {
+        self.shards.iter().map(|q| q.requeued()).sum()
     }
 
     /// Number of shards (a power of two).
@@ -104,8 +125,9 @@ mod tests {
         r.queue(0).try_push(10).unwrap();
         r.queue(1).try_push(11).unwrap();
         // Home shard first.
-        let (s, stolen, run) = r.claim_from(1).expect("run");
+        let (s, stolen, mut run) = r.claim_from(1).expect("run");
         assert_eq!((s, stolen), (1, false));
+        assert_eq!(run.drain().collect::<Vec<_>>(), vec![11]);
         drop(run);
         // Home empty: steal the sibling's run.
         let (s, stolen, mut run) = r.claim_from(1).expect("stolen run");

@@ -42,6 +42,10 @@
 //! * [`obs`] — crate-native telemetry: per-thread sharded event counters
 //!   (behind the `telemetry` feature's [`counter!`] macro) + lock-free
 //!   log-linear latency histograms + JSON [`obs::ObsSnapshot`] dumps.
+//! * [`fault`] — deterministic fault injection (behind the `fault`
+//!   feature's [`failpoint!`]/[`failcas!`] macros): seeded plans that
+//!   delay, stall, fail, or kill threads at named protocol points, plus
+//!   the chaos scenarios proving the protocols survive.
 //! * [`bench`] — workload generators + the harness regenerating every
 //!   figure/table of the paper's §5.
 //! * [`runtime`] — PJRT client executing the AOT-compiled JAX/Pallas
@@ -53,6 +57,7 @@ pub mod apps;
 pub mod atomics;
 pub mod bench;
 pub mod coordinator;
+pub mod fault;
 pub mod hash;
 pub mod ingress;
 pub mod obs;

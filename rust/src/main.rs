@@ -5,8 +5,9 @@
 //!       [--panel u|z|n|w|p|ordering|smr|resize|ingress] [--oversub] [--secs S]
 //!       [--n N] [--artifact] [--reports DIR]
 //! repro kv [--workers W] [--clients C] [--secs S] [--n N] [--cap C] [--u PCT]
-//!          [--z Z] [--ingress lockfree|mailbox] [--shards S]
+//!          [--z Z] [--ingress lockfree|mailbox] [--shards S] [--lease-ms MS]
 //!          [--admission wait|shed] [--reservoir R] [--artifact] [--telemetry]
+//! repro chaos [--seed S] [--plan P] [--secs S]   fault-injection campaigns
 //! repro stats                       exercise the stack, print telemetry JSON
 //! repro validate [--count C]        cross-check AOT artifact vs Rust generator
 //! repro smoke                       PJRT + artifact load check
@@ -41,6 +42,9 @@ struct Args {
     shards: usize,
     clients: usize,
     admission: String,
+    seed: u64,
+    plan: String,
+    lease_ms: u64,
 }
 
 fn parse_args() -> Result<Args> {
@@ -63,6 +67,9 @@ fn parse_args() -> Result<Args> {
         shards: 0,
         clients: 0,
         admission: "wait".into(),
+        seed: 0xC4A0_5,
+        plan: String::new(),
+        lease_ms: 0,
     };
     let mut it = std::env::args().skip(1);
     while let Some(a) = it.next() {
@@ -88,6 +95,9 @@ fn parse_args() -> Result<Args> {
             "--shards" => args.shards = next("--shards")?.parse()?,
             "--clients" => args.clients = next("--clients")?.parse()?,
             "--admission" => args.admission = next("--admission")?,
+            "--seed" => args.seed = next("--seed")?.parse()?,
+            "--plan" => args.plan = next("--plan")?,
+            "--lease-ms" => args.lease_ms = next("--lease-ms")?.parse()?,
             "--help" | "-h" => {
                 args.command = "help".into();
                 return Ok(args);
@@ -110,8 +120,9 @@ repro — Big Atomics (Anderson, Blelloch, Jayanti 2025) reproduction
 USAGE:
   repro <fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all> [options]
   repro kv [--workers W] [--clients C] [--secs S] [--n N] [--cap C] [--u PCT]
-           [--z Z] [--ingress lockfree|mailbox] [--shards S]
+           [--z Z] [--ingress lockfree|mailbox] [--shards S] [--lease-ms MS]
            [--admission wait|shed] [--reservoir R] [--artifact] [--telemetry]
+  repro chaos [--seed S] [--plan P] [--secs S]
   repro stats                       exercise each subsystem, print telemetry JSON
   repro validate [--count C]
   repro smoke
@@ -129,7 +140,14 @@ OPTIONS:
   --shards S          kv: ingress shards (lockfree; 0 = one per worker)
   --clients C         kv: producer threads             [1]
   --admission POLICY  kv: full-shard policy — wait (backpressure) | shed
+  --lease-ms MS       kv: drainer-lease bound for the lockfree shards
+                      (0 = leases off; expired claims are taken over)
   --reservoir R       kv: max raw latency samples retained [4096]
+  --seed S            chaos: plan seed (decisions replay from it)
+  --plan P            chaos: kill-copier|stall-drainer|kill-worker|jitter
+                      (default: run all scenarios)
+                      fault injection needs `--features fault`; without
+                      it the scenarios run as a plain stress pass
   --artifact          generate op streams via the AOT HLO artifact
   --telemetry         capture an event-counter/histogram snapshot per run
                       and write it as JSON next to the exhibits (full
@@ -158,6 +176,30 @@ fn main() -> Result<()> {
             let coord = Coordinator::new(true)?;
             let compared = coord.validate_workload(args.count)?;
             println!("workload cross-validation OK: {compared} ops bit-exact (HLO == Rust)");
+            Ok(())
+        }
+        "chaos" => {
+            let reports = big_atomics::fault::chaos::run(args.seed, &args.plan, args.secs)?;
+            let mut failed = false;
+            let mut injected_total = 0u64;
+            for rep in &reports {
+                print!("{rep}");
+                failed |= !rep.ok();
+                injected_total += rep.injected;
+            }
+            if cfg!(feature = "fault") && injected_total == 0 {
+                bail!("fault feature is on but no fault ever fired — harness broken");
+            }
+            if !cfg!(feature = "fault") {
+                eprintln!(
+                    "note: built without --features fault; scenarios ran as a \
+                     stress pass with zero injections"
+                );
+            }
+            if failed {
+                bail!("chaos invariant violations (see above)");
+            }
+            println!("chaos OK: {} scenario(s) survived", reports.len());
             Ok(())
         }
         "stats" => {
@@ -196,6 +238,7 @@ fn main() -> Result<()> {
                 shards: args.shards,
                 clients: args.clients,
                 admission: big_atomics::ingress::AdmissionPolicy::parse(&args.admission)?,
+                lease_ms: args.lease_ms,
             };
             let rep = kv_service::run(&cfg, rt.as_ref())?;
             println!(
@@ -218,6 +261,19 @@ fn main() -> Result<()> {
                 rep.claim_runs,
                 rep.steal_runs,
             );
+            if rep.worker_panics + rep.abandoned_batches + rep.requeued_batches
+                + rep.lease_takeovers
+                > 0
+            {
+                println!(
+                    "kv faults: {} worker panic(s), {} abandoned, {} requeued, \
+                     {} lease takeover(s)",
+                    rep.worker_panics,
+                    rep.abandoned_batches,
+                    rep.requeued_batches,
+                    rep.lease_takeovers
+                );
+            }
             if !rep.shard_batches.is_empty() {
                 println!("kv shards: batches per shard {:?}", rep.shard_batches);
                 let depth = big_atomics::obs::KV_SHARD_DEPTH.snapshot();

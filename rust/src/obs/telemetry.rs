@@ -111,10 +111,21 @@ pub enum Event {
     KvAdmitWait,
     /// A worker claimed a run from a non-affinity shard (steal-on-idle).
     KvStealRun,
+    // -- fault tolerance / chaos -------------------------------------------
+    /// An update helped copy a FROZEN bucket instead of waiting it out.
+    ResizeTakeover,
+    /// A KV worker panicked and was respawned by the supervisor.
+    KvWorkerPanic,
+    /// A dropped run re-pushed undrained batches back to its shard.
+    KvRequeue,
+    /// An expired drainer lease was CASed away by a second worker.
+    KvLeaseTakeover,
+    /// A fault plan fired an injected fault (`--features fault` only).
+    FaultInject,
 }
 
 /// Number of events (cells per thread row).
-pub const NUM_EVENTS: usize = Event::KvStealRun as usize + 1;
+pub const NUM_EVENTS: usize = Event::FaultInject as usize + 1;
 
 /// All events in cell order — drives snapshot naming; `test_all_dense`
 /// pins the `ALL[i] as usize == i` invariant.
@@ -154,6 +165,11 @@ pub const ALL: [Event; NUM_EVENTS] = [
     Event::KvShed,
     Event::KvAdmitWait,
     Event::KvStealRun,
+    Event::ResizeTakeover,
+    Event::KvWorkerPanic,
+    Event::KvRequeue,
+    Event::KvLeaseTakeover,
+    Event::FaultInject,
 ];
 
 impl Event {
@@ -195,6 +211,11 @@ impl Event {
             Event::KvShed => "kv_shed",
             Event::KvAdmitWait => "kv_admit_wait",
             Event::KvStealRun => "kv_steal_run",
+            Event::ResizeTakeover => "resize_takeover",
+            Event::KvWorkerPanic => "kv_worker_panic",
+            Event::KvRequeue => "kv_requeue",
+            Event::KvLeaseTakeover => "kv_lease_takeover",
+            Event::FaultInject => "fault_inject",
         }
     }
 }

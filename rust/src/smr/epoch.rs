@@ -136,6 +136,11 @@ impl<P: OrderingPolicy> Epoch<P> {
                     // global epoch is re-read, pairing with the
                     // advancer's fence in `try_advance_and_collect`.
                     fence(Ordering::SeqCst);
+                    // Fault window: announced but not yet validated — a
+                    // stall here blocks every epoch advance (NOT
+                    // kill-safe: a dead pinned thread wedges the epoch
+                    // until on_thread_exit clears its slot).
+                    crate::failpoint!(EpochPin);
                     // Ordering: RELAXED — ordered after the announce by
                     // the fence; on disagreement we re-announce, and on
                     // agreement the announcement is at most one advance
@@ -178,6 +183,11 @@ impl<P: OrderingPolicy> Epoch<P> {
         // epoch in FREE_DISTANCE absorbs exactly that.
         let e = GLOBAL_EPOCH.load(P::ACQUIRE);
         crate::counter!(EpochRetire);
+        // Fault window: node unlinked, stamp taken, not yet bagged — a
+        // kill here (under the pin guard, which unwinds cleanly) leaks
+        // the node; already-bagged items still flush via the TLS
+        // destructor.
+        crate::failpoint!(EpochRetire);
         let len = BAG.with(|b| {
             b.push(Retired {
                 epoch: e,
@@ -194,6 +204,10 @@ impl<P: OrderingPolicy> Epoch<P> {
     /// garbage from this thread's bag (and orphans, opportunistically).
     pub fn try_advance_and_collect() {
         crate::counter!(EpochScan);
+        // Fault window: advance attempt starting — dying or dawdling
+        // here only defers reclamation; any other thread's next advance
+        // makes the same progress.
+        crate::failpoint!(EpochAdvance);
         // Ordering: mandatory store-load fence (module docs, point 2) —
         // pairs with the pinners' fences: every unlink/retire that
         // happened-before this call is ordered before the announcement

@@ -258,6 +258,10 @@ impl HazardPointer {
             // announce must be visible before `src` is re-read, pairing
             // with the reclaimer's fence in `scan`.
             fence(Ordering::SeqCst);
+            // Fault window: announced but not yet revalidated — a stall
+            // here pins the node indefinitely (scans must keep it), a
+            // yield widens the announce/unlink race the fence resolves.
+            crate::failpoint!(HazardAnnounce);
             // Ordering: ACQUIRE — on success this load pairs with the
             // Release publication of `p`, so the node's contents are
             // visible before the caller dereferences it.
@@ -405,6 +409,10 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
         drop_fn: dropper::<T>,
     };
     crate::counter!(HazardRetire);
+    // Fault window: node unlinked, not yet on the retire list — a kill
+    // here leaks the node (never double-frees); the RetireBag's TLS
+    // destructor still hands already-pushed items to ORPHANS.
+    crate::failpoint!(HazardRetire);
     let len = RETIRED.with(|r| r.push(item));
     if len >= RETIRE_THRESHOLD {
         scan();
@@ -415,6 +423,9 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
 /// Also opportunistically drains the orphan list of exited threads.
 pub fn scan() {
     crate::counter!(HazardScan);
+    // Fault window: scan about to snapshot announcements — dying here
+    // only defers reclamation (the retire list survives in TLS/orphans).
+    crate::failpoint!(HazardScan);
     // Ordering: mandatory store-load fence (module docs, point 2) —
     // pairs with the announcers' fences: every unlink that
     // happened-before this scan is ordered before the slot reads, so an

@@ -1,0 +1,69 @@
+//! Chaos linearizability suite: the fault-injection scenarios from
+//! `fault::chaos`, run as pinned-seed regression tests.
+//!
+//! This lives in its **own** integration binary on purpose: the armed
+//! [`FaultPlan`](big_atomics::fault::FaultPlan) is process-global, so a
+//! kill plan would panic unrelated tests running concurrently in the
+//! same process. Here every test serializes on the scenario lock inside
+//! `fault::chaos` and the only threads in the process are the
+//! scenario's own.
+//!
+//! Without `--features fault` the scenarios still run — no fault ever
+//! fires, so they degrade to plain concurrency tests of the same
+//! invariants (and the injected-count assertions are gated off).
+
+use big_atomics::fault::chaos::{self, jitter, kill_copier, kill_worker, stall_drainer};
+
+/// Fail with the full report (notes + violations) — `assert!(rep.ok())`
+/// alone would hide the violation list.
+fn assert_survived(rep: &chaos::ChaosReport) {
+    assert!(rep.ok(), "{rep}");
+}
+
+#[test]
+fn test_chaos_kill_copier_pinned_seeds() {
+    for seed in [0xC4A0_5u64, 7, 0xDEAD_BEEF] {
+        let rep = kill_copier(seed);
+        assert_survived(&rep);
+        // The plan kills the first copier to seal a FROZEN bucket; with
+        // 4 inserter threads forcing resizes, at least one injection is
+        // guaranteed when the feature is on.
+        #[cfg(feature = "fault")]
+        assert!(rep.injected > 0, "kill-copier plan never fired: {rep}");
+    }
+}
+
+#[test]
+fn test_chaos_stall_drainer_pinned_seeds() {
+    for seed in [0xC4A0_5u64, 11] {
+        let rep = stall_drainer(seed);
+        assert_survived(&rep);
+        // Phase 1 engineers a lease takeover deterministically, feature
+        // or not — the takeover assertion lives inside the scenario.
+    }
+}
+
+#[test]
+fn test_chaos_kill_worker_pinned_seed() {
+    let rep = kill_worker(0xC4A0_5, 0.3);
+    assert_survived(&rep);
+    // The scenario itself asserts conservation and, when the plan
+    // fired, that worker_panics recorded the kill.
+}
+
+#[test]
+fn test_chaos_jitter_pinned_seed() {
+    let rep = jitter(0xC4A0_5, 0.3);
+    assert_survived(&rep);
+    #[cfg(feature = "fault")]
+    assert!(rep.injected > 0, "jitter plan never fired: {rep}");
+}
+
+#[test]
+fn test_chaos_run_all_dispatch() {
+    let reports = chaos::run(3, "all", 0.2).expect("'all' is a valid plan name");
+    assert_eq!(reports.len(), 4, "all = every scenario");
+    for rep in &reports {
+        assert_survived(rep);
+    }
+}

@@ -497,3 +497,79 @@ fn test_claim_queue_nodes_reclaimed_under_churn() {
     drop(q2);
     assert_eq!(tail_drops.load(Ordering::SeqCst), 50, "queue drop leaked payloads");
 }
+
+// ---------------------------------------------------------------------------
+// Guard panic-safety audit: an unwinding operation must release its
+// hazard slot / epoch pin through the RAII drops, or the survivor
+// threads inherit a process wedged forever (hazard: a leaked
+// announcement pins one address and leaks one of the four fixed slots
+// per panic until the thread exits; epoch: a leaked pin blocks every
+// advance — and therefore every free — process-wide).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn test_hazard_slot_released_on_unwind() {
+    use big_atomics::smr::hazard::{protected_snapshot, HazardPointer, SLOTS_PER_THREAD};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // Far more panics than fixed slots: any leaked bitmap bit or stale
+    // announcement accumulates and the later assertions catch it.
+    for round in 0..3 * SLOTS_PER_THREAD {
+        let sentinel = 0xBAD_0000 + round;
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let h = HazardPointer::new();
+            h.announce(sentinel);
+            panic!("die while announcing");
+        }));
+        assert!(r.is_err());
+        let mut buf = Vec::new();
+        protected_snapshot(&mut buf);
+        assert!(
+            !buf.contains(&sentinel),
+            "announcement {sentinel:#x} survived the guard's unwind"
+        );
+    }
+    // All fixed slots must still be claimable — none leaked to panics.
+    // (An overflow lease here would mean a fixed slot's bitmap bit was
+    // never returned; overflow guards work, but they are the spill
+    // path, not the steady state.)
+    let guards: Vec<HazardPointer> = (0..SLOTS_PER_THREAD).map(|_| HazardPointer::new()).collect();
+    let mut buf = Vec::new();
+    for (i, g) in guards.iter().enumerate() {
+        g.announce(0xF00D_0 + i);
+    }
+    protected_snapshot(&mut buf);
+    for i in 0..SLOTS_PER_THREAD {
+        assert!(buf.contains(&(0xF00D_0 + i)), "slot {i} lost after panics");
+    }
+}
+
+#[test]
+fn test_epoch_pin_released_on_unwind() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // Panic under a pin (nested, to exercise the depth bookkeeping) on
+    // a scoped thread, then prove the epoch still advances: a leaked
+    // announcement from the dead frame would block it forever.
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                let _outer = epoch::pin();
+                let _inner = epoch::pin();
+                panic!("die while pinned");
+            }));
+            assert!(r.is_err());
+            // Same thread, post-unwind: a fresh pin/unpin must behave
+            // (depth back to zero, slot quiescent afterwards).
+            drop(epoch::pin());
+        })
+        .join()
+        .unwrap();
+    });
+
+    let drops = Arc::new(AtomicUsize::new(0));
+    unsafe { Epoch::<DefaultPolicy>::retire_box(counted(&drops, 1)) };
+    // Eventually freed ⇒ the epoch advanced FREE_DISTANCE times past
+    // the stamp ⇒ no announcement from the panicked frames remains.
+    collect_until::<Epoch<DefaultPolicy>>(&drops, 1, "post-panic epoch advance");
+}
