@@ -31,8 +31,16 @@
 //!    throughput plus p50/p99/p999 per-request latency and the shed
 //!    count per row; the peak sustained ops/s of an arm is the max of
 //!    its rows.
+//! 8. **Page-pool allocation** (`--panel alloc`): both hash tables
+//!    driven update-heavy (pure churn — the allocator-bound regime)
+//!    with chain nodes served by the `smr::pool` page pool vs the
+//!    headered boxed fallback, at 1×/2×/4× hardware parallelism. Each
+//!    row reports throughput plus the orphan-lock-acquisition and
+//!    retire-batch counter deltas (telemetry builds), so the batching
+//!    claim — page-wise retirement amortizes the orphan traffic — is a
+//!    number per row, not an assertion.
 //!
-//! Run with `repro ablate [--panel ordering|smr|resize|ingress]`.
+//! Run with `repro ablate [--panel ordering|smr|resize|ingress|alloc]`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
@@ -376,6 +384,62 @@ pub fn run_ingress_ablation(cfg: &FigureCfg) -> Report {
     rep
 }
 
+/// Ablation 8 (`repro ablate --panel alloc`): pooled vs boxed chain-node
+/// allocation under pure churn. The boxed arm flips the pool's runtime
+/// toggle off (the per-slot provenance header keeps mixed populations
+/// safe across the flip, exactly like the backoff switch in the
+/// ordering panel), so both arms run identical table code — the only
+/// variable is the allocation discipline. Counter columns are telemetry
+/// deltas (zero without the feature): `orphan_locks` is the amortization
+/// target, `retire_batches` proves page-wise retirement actually ran in
+/// the pooled arm.
+pub fn run_alloc_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
+    use crate::obs::telemetry::{self, Event};
+
+    let base = hw_threads().max(2);
+    let spec = WorkloadSpec {
+        n: cfg.n,
+        theta: 0.0,
+        update_pct: 100,
+        seed: 0xA110C, // "ALLOC"
+    };
+    let mut rep = Report::new(
+        "ablation_alloc",
+        &["alloc", "map", "threads", "mops", "orphan_locks", "retire_batches"],
+    );
+    let prev = crate::smr::pool::enabled();
+    for (arm, pooled) in [("pooled", true), ("boxed", false)] {
+        crate::smr::pool::set_enabled(pooled);
+        let mut point = |label: &str, threads: usize, map: Box<dyn ConcurrentMap>| {
+            let target = MapTarget::new_unfilled(map);
+            let locks0 = telemetry::total(Event::OrphanLock);
+            let batches0 = telemetry::total(Event::RetireBatch);
+            let r = run_throughput(&target, &spec, threads, cfg.dur(), source);
+            let locks = telemetry::total(Event::OrphanLock) - locks0;
+            let batches = telemetry::total(Event::RetireBatch) - batches0;
+            rep.row(vec![
+                arm.into(),
+                label.into(),
+                threads.to_string(),
+                format!("{:.3}", r.mops()),
+                locks.to_string(),
+                batches.to_string(),
+            ]);
+        };
+        for mult in [1usize, 2, 4] {
+            let threads = base * mult;
+            point(
+                "CacheHash(MemEff)",
+                threads,
+                Box::new(CacheHash::<CachedMemEff<LinkVal>>::new(cfg.n)),
+            );
+            point("Chaining(no-inline)", threads, Box::new(Chaining::new(cfg.n)));
+        }
+    }
+    crate::smr::pool::set_enabled(prev);
+    rep
+}
+
 /// Run all ablations; returns the report (saved by the coordinator).
 pub fn run_ablations(cfg: &FigureCfg, source: &OpSource) -> Report {
     let mut rep = Report::new(
@@ -545,6 +609,40 @@ mod tests {
             // Wait admission: nothing shed in either arm.
             assert_eq!(row[7], "0", "{row:?}");
         }
+    }
+
+    #[test]
+    fn test_alloc_ablation_shape() {
+        // The boxed arm disables the pool process-wide; serialize
+        // against lib tests whose assertions need it live throughout.
+        let _toggle = crate::smr::pool::TOGGLE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let cfg = FigureCfg {
+            secs_per_point: 0.05,
+            n: 1024,
+            report_dir: std::env::temp_dir()
+                .join("big_atomics_ablate_alloc_test")
+                .display()
+                .to_string(),
+            use_artifact: false,
+        };
+        let rep = run_alloc_ablation(&cfg, &OpSource::Rust);
+        // 2 arms x 2 maps x 3 thread multipliers.
+        assert_eq!(rep.rows().len(), 12);
+        let arms: Vec<&str> = rep.rows().iter().map(|r| r[0].as_str()).collect();
+        for a in ["pooled", "boxed"] {
+            assert_eq!(arms.iter().filter(|x| **x == a).count(), 6, "{a}");
+        }
+        for row in rep.rows() {
+            assert!(row[2].parse::<usize>().unwrap() >= 2, "{row:?}");
+            assert!(row[3].parse::<f64>().unwrap() > 0.0, "{row:?}");
+            // Counter columns parse even when telemetry is off (zeros).
+            let _locks: u64 = row[4].parse().unwrap();
+            let _batches: u64 = row[5].parse().unwrap();
+        }
+        // The toggle must be restored for the rest of the suite.
+        assert!(crate::smr::pool::enabled());
     }
 
     #[test]

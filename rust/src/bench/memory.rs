@@ -7,6 +7,11 @@
 //! Cached-MemEff `n(k+2) + c_h·p(p+k)`.  We measure the three
 //! components we can observe directly: inline slot bytes, live indirect
 //! node bytes, and pool/retire bytes.
+//!
+//! Each row also reports the `smr::pool` delta its workload generated:
+//! fresh pages claimed from the system allocator (the allocation rate),
+//! page batches handed to an SMR scheme via `Smr::retire_page`, and the
+//! mean slots per batch (the amortization factor per scheme).
 
 use std::sync::Arc;
 
@@ -15,8 +20,8 @@ use crate::atomics::{
     AtomicArray, BigAtomic, CachedMemEff, CachedWaitFree, Indirect, MemEffDomain, SeqLock,
     SimpLock, Words,
 };
-use crate::hash::{CacheHash, ConcurrentMap, LinkVal};
-use crate::smr::{epoch, hazard};
+use crate::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal};
+use crate::smr::{epoch, hazard, pool};
 
 const K: usize = 4; // census element size (words)
 
@@ -52,34 +57,57 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
             "pool_bytes",
             "retired_hazard",
             "retired_epoch",
+            "alloc_pages",
+            "retire_batches",
+            "batch_avg_slots",
         ],
     );
-    let mut row = |imp: &str, k: usize, inline: usize, indirect: usize, pool: usize| {
+    let mut row = |imp: &str,
+                   k: usize,
+                   inline: usize,
+                   indirect: usize,
+                   pool_bytes: usize,
+                   p0: pool::PoolStats| {
+        // Pool delta over this row's workload. The counters are global
+        // and monotonic, so a concurrent test can only inflate them —
+        // never hide a page or batch this row produced.
+        let p1 = pool::stats();
+        let batches = p1.batches - p0.batches;
+        let slots = p1.batch_slots - p0.batch_slots;
+        let avg = if batches > 0 { slots as f64 / batches as f64 } else { 0.0 };
         rep.row(vec![
             imp.into(),
             n.to_string(),
             k.to_string(),
             inline.to_string(),
             indirect.to_string(),
-            pool.to_string(),
+            pool_bytes.to_string(),
             hazard::pending_reclaims().to_string(),
             epoch::pending_reclaims().to_string(),
+            (p1.pages - p0.pages).to_string(),
+            batches.to_string(),
+            format!("{avg:.1}"),
         ]);
     };
 
+    let p0 = pool::stats();
     let (inline, ind) = census_one::<SeqLock<Words<K>>>(n);
-    row("SeqLock", K, inline, ind, 0);
+    row("SeqLock", K, inline, ind, 0, p0);
 
+    let p0 = pool::stats();
     let (inline, ind) = census_one::<SimpLock<Words<K>>>(n);
-    row("SimpLock", K, inline, ind, 0);
+    row("SimpLock", K, inline, ind, 0, p0);
 
+    let p0 = pool::stats();
     let (inline, ind) = census_one::<Indirect<Words<K>>>(n);
-    row("Indirect", K, inline, ind, 0);
+    row("Indirect", K, inline, ind, 0, p0);
 
+    let p0 = pool::stats();
     let (inline, ind) = census_one::<CachedWaitFree<Words<K>>>(n);
-    row("Cached-WaitFree", K, inline, ind, 0);
+    row("Cached-WaitFree", K, inline, ind, 0, p0);
 
     // MemEff: use a private domain so the pool is attributable.
+    let p0 = pool::stats();
     let domain: Arc<MemEffDomain<Words<K>>> = Arc::new(MemEffDomain::new());
     let arr: Vec<CachedMemEff<Words<K>>> = (0..n)
         .map(|_| CachedMemEff::with_domain(Words([7; K]), Arc::clone(&domain)))
@@ -93,13 +121,16 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
     // Node overhead: four flag bytes padded to words + the uninstall
     // stamp (see atomics::cached_memeff::Node).
     let pool_bytes = pool_nodes * (std::mem::size_of::<Words<K>>() + 40);
-    row("Cached-MemEff", K, inline, 0, pool_bytes);
+    row("Cached-MemEff", K, inline, 0, pool_bytes, p0);
 
     // The epoch-backed configuration (§4: chain links protected by
-    // epochs): insert n keys, delete half — the path-copied prefixes and
-    // promoted heads become epoch garbage that the hazard column cannot
-    // see. LinkVal is 3 words (the k column).
-    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(n);
+    // epochs): start the table undersized so the n inserts force online
+    // growth — each drained chain becomes one `retire_page` batch — then
+    // delete half so the path-copied prefixes and promoted heads become
+    // epoch garbage the hazard column cannot see. LinkVal is 3 words
+    // (the k column).
+    let p0 = pool::stats();
+    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(64);
     for i in 0..n as u64 {
         table.insert(crate::util::rng::mix64(i), i);
     }
@@ -107,7 +138,21 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
         table.remove(crate::util::rng::mix64(i));
     }
     let inline = table.capacity() * std::mem::size_of::<CachedMemEff<LinkVal>>();
-    row("CacheHash(MemEff)", 3, inline, 0, 0);
+    row("CacheHash(MemEff)", 3, inline, 0, 0, p0);
+
+    // The no-inline chaining table under the same churn: every entry
+    // lives in a pooled chain node, so its allocation-rate and batch
+    // columns isolate the pool's behavior without the inline-slot tier.
+    let p0 = pool::stats();
+    let table: Chaining = Chaining::new(64);
+    for i in 0..n as u64 {
+        table.insert(crate::util::rng::mix64(i), i);
+    }
+    for i in 0..n as u64 / 2 {
+        table.remove(crate::util::rng::mix64(i));
+    }
+    let inline = table.capacity() * std::mem::size_of::<usize>();
+    row("Chaining(no-inline)", 3, inline, 0, 0, p0);
 
     rep
 }
@@ -118,14 +163,34 @@ mod tests {
 
     #[test]
     fn test_census_runs_and_memeff_pool_tiny() {
+        // The batch-count assertions below need the pool live for the
+        // whole census; serialize against the alloc-ablation test's
+        // boxed arm, which disables it process-wide.
+        let _toggle = pool::TOGGLE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         let rep = memory_census(&FigureCfg::default());
         let rows = rep.rows();
-        assert_eq!(rows.len(), 6);
-        // Both reclamation columns must be present and parseable on
-        // every row (the epoch column was silently missing pre-fix).
+        assert_eq!(rows.len(), 7);
+        // Both reclamation columns and the pool-delta columns must be
+        // present and parseable on every row (the epoch column was
+        // silently missing pre-fix).
         for r in rows {
             let _hazard: usize = r[6].parse().unwrap();
             let _epoch: usize = r[7].parse().unwrap();
+            let _pages: u64 = r[8].parse().unwrap();
+            let _batches: u64 = r[9].parse().unwrap();
+            let _avg: f64 = r[10].parse().unwrap();
+        }
+        // Both hash-table rows start undersized, so growth is forced and
+        // every drained chain rides a retire_page batch: pages claimed
+        // and batches retired must both be visible in the census.
+        for imp in ["CacheHash(MemEff)", "Chaining(no-inline)"] {
+            let r = rows.iter().find(|r| r[0] == imp).unwrap();
+            let pages: u64 = r[8].parse().unwrap();
+            let batches: u64 = r[9].parse().unwrap();
+            assert!(pages > 0, "{imp}: no pool page claimed");
+            assert!(batches > 0, "{imp}: no retire_page batch recorded");
         }
         // Cached-MemEff's pool bytes must be tiny vs inline (§3.2's
         // n-independence).

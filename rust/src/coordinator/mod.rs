@@ -114,6 +114,7 @@ impl Coordinator {
                 }
                 "resize" => save(crate::bench::ablation::run_resize_ablation(cfg, &source))?,
                 "ingress" => save(crate::bench::ablation::run_ingress_ablation(cfg))?,
+                "alloc" => save(crate::bench::ablation::run_alloc_ablation(cfg, &source))?,
                 "" | "all" => {
                     save(crate::bench::ablation::run_ablations(cfg, &source))?;
                     save(crate::bench::ablation::run_ordering_ablation(cfg))?;
@@ -121,10 +122,11 @@ impl Coordinator {
                     save(crate::bench::ablation::run_smr_table_ablation(cfg, &source))?;
                     save(crate::bench::ablation::run_resize_ablation(cfg, &source))?;
                     save(crate::bench::ablation::run_ingress_ablation(cfg))?;
+                    save(crate::bench::ablation::run_alloc_ablation(cfg, &source))?;
                 }
                 other => {
                     crate::bail!(
-                        "ablate panel {other}: use ordering|smr|resize|ingress (or omit for all)"
+                        "ablate panel {other}: use ordering|smr|resize|ingress|alloc (or omit for all)"
                     )
                 }
             },
@@ -149,6 +151,10 @@ impl Coordinator {
                 );
                 saved.push(
                     crate::bench::ablation::run_ingress_ablation(cfg).save(&cfg.report_dir)?,
+                );
+                saved.push(
+                    crate::bench::ablation::run_alloc_ablation(cfg, &source)
+                        .save(&cfg.report_dir)?,
                 );
             }
             other => crate::bail!("unknown figure {other}"),

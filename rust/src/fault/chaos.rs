@@ -15,6 +15,9 @@
 //! * [`kill_worker`] — kill a KV worker mid-batch; the supervisor must
 //!   catch it, the conservation ledger must balance with the abandoned
 //!   batch counted, and the run must finish.
+//! * [`kill_allocator`] — kill a thread at the top of the page pool's
+//!   claim path during chain-heavy churn; the pool must stay live (no
+//!   lock or page leaked by the dying claimant) and the table exact.
 //! * [`jitter`] — no kills, broad delays/yields/spurious CAS failures
 //!   over a full KV run; pure schedule-shaking, same ledger checks.
 //!
@@ -38,6 +41,7 @@ use crate::atomics::CachedMemEff;
 use crate::coordinator::kv_service::{self, IngressMode, KvConfig};
 use crate::hash::{CacheHash, ConcurrentMap, LinkVal};
 use crate::ingress::ClaimQueue;
+use crate::smr::pool;
 use crate::util::error::Result;
 use crate::util::rng::mix64;
 
@@ -460,6 +464,142 @@ pub fn kill_worker(seed: u64, secs: f64) -> ChaosReport {
     }
 }
 
+/// Kill-the-allocator: page-pool churn under a claim-path death.
+///
+/// Arms `kill-allocator` (one kill at `PoolClaimPage` — the very top of
+/// the pool's page-claim path, before any lock is taken or memory
+/// allocated) and drives chain-heavy insert/remove churn on an
+/// undersized [`CacheHash`]. Every spawned thread starts with empty
+/// free lists, so its first chain-node allocation walks the claim path
+/// and the kill is guaranteed a window. Each op runs under
+/// `catch_unwind`: the killed op leaves its key ambiguous; every other
+/// key must be exact (kept keys found, churned keys gone). Afterwards
+/// the pool must still hand out slots — the dying claimant leaked
+/// nothing — and page/batch accounting must have moved.
+pub fn kill_allocator(seed: u64) -> ChaosReport {
+    let _serial = scenario_lock();
+    let _disarm = ClearGuard;
+    let injected0 = injected();
+    let pool0 = pool::stats();
+    if let Some(plan) = FaultPlan::named("kill-allocator", seed) {
+        plan.install();
+    }
+
+    const THREADS: u64 = 4;
+    const PER: u64 = 1024;
+    let value_of = |k: u64| k ^ 0x5EED_F00D;
+    // Tiny table: most inserts chain, so every op leans on the pool.
+    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(8);
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+
+    // (kept, churned, ambiguous, duplicate-violations) per thread.
+    let per_thread: Vec<(Vec<u64>, Vec<u64>, Vec<u64>, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let table = &table;
+                s.spawn(move || {
+                    let mut kept = Vec::new();
+                    let mut churned = Vec::new();
+                    let mut ambiguous = Vec::new();
+                    let mut dups = 0u64;
+                    for i in 0..PER {
+                        let key = mix64(t * PER + i + 1);
+                        // Half the keys churn straight back out, feeding
+                        // their slots to the free lists mid-run.
+                        let churn = i % 2 == 0;
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            if !table.insert(key, value_of(key)) {
+                                return Err(());
+                            }
+                            if churn && !table.remove(key) {
+                                return Err(());
+                            }
+                            Ok(())
+                        })) {
+                            Ok(Ok(())) => {
+                                if churn {
+                                    churned.push(key);
+                                } else {
+                                    kept.push(key);
+                                }
+                            }
+                            Ok(Err(())) => dups += 1,
+                            Err(_) => ambiguous.push(key),
+                        }
+                    }
+                    (kept, churned, ambiguous, dups)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Disarm before verification: the checks below must not be killed.
+    clear_plan();
+    table.finish_resizes();
+
+    let mut ambiguous_total = 0u64;
+    for (kept, churned, ambiguous, dups) in &per_thread {
+        if *dups > 0 {
+            violations.push(format!(
+                "{dups} fresh key(s) misbehaved (duplicate insert or failed remove)"
+            ));
+        }
+        ambiguous_total += ambiguous.len() as u64;
+        for &key in kept {
+            match table.find(key) {
+                Some(v) if v == value_of(key) => {}
+                Some(v) => violations.push(format!("kept key {key:#x}: wrong value {v:#x}")),
+                None => violations.push(format!("kept key {key:#x} lost across allocator death")),
+            }
+        }
+        for &key in churned {
+            if table.find(key).is_some() {
+                violations.push(format!("churned key {key:#x} resurrected after remove"));
+            }
+        }
+        for &key in ambiguous {
+            // Killed mid insert-or-remove: presence is ambiguous, but a
+            // present value must be untorn.
+            if let Some(v) = table.find(key) {
+                if v != value_of(key) {
+                    violations.push(format!("ambiguous key {key:#x}: torn value {v:#x}"));
+                }
+            }
+        }
+    }
+
+    // Pool liveness across the kill: fresh chain-heavy inserts must
+    // still claim slots (nothing wedged, no page or lock leaked).
+    for i in 0..(2 * pool::PAGE_SLOTS as u64) {
+        let key = mix64(0xF00D_0000 + i + 1);
+        if !table.insert(key, value_of(key)) || table.find(key) != Some(value_of(key)) {
+            violations.push(format!("post-kill alloc {i}: pool claim path wedged"));
+            break;
+        }
+    }
+
+    let pool1 = pool::stats();
+    if pool1.pages == pool0.pages && pool0.pages == 0 {
+        violations.push("churn allocated from the pool without ever claiming a page".into());
+    }
+    notes.push(format!(
+        "{ambiguous_total} op(s) killed mid-flight; pool Δ: {} page(s), {} batch(es), {} batched slot(s)",
+        pool1.pages - pool0.pages,
+        pool1.batches - pool0.batches,
+        pool1.batch_slots - pool0.batch_slots
+    ));
+
+    ChaosReport {
+        scenario: "kill-allocator",
+        seed,
+        injected: injected() - injected0,
+        violations,
+        notes,
+    }
+}
+
 /// Jitter: no kills — broad delays/yields/spurious CAS failures across
 /// every protocol point during a full KV run. Shakes out interleavings;
 /// the ledger and accounting checks are the same as [`kill_worker`]'s.
@@ -524,21 +664,24 @@ pub fn jitter(seed: u64, secs: f64) -> ChaosReport {
 }
 
 /// Run one named scenario (`plan` = `kill-copier` | `stall-drainer` |
-/// `kill-worker` | `jitter`), or all of them when `plan` is empty.
+/// `kill-worker` | `kill-allocator` | `jitter`), or all of them when
+/// `plan` is empty.
 pub fn run(seed: u64, plan: &str, secs: f64) -> Result<Vec<ChaosReport>> {
     let reports = match plan {
         "" | "all" => vec![
             kill_copier(seed),
             stall_drainer(seed),
             kill_worker(seed, secs),
+            kill_allocator(seed),
             jitter(seed, secs),
         ],
         "kill-copier" => vec![kill_copier(seed)],
         "stall-drainer" => vec![stall_drainer(seed)],
         "kill-worker" => vec![kill_worker(seed, secs)],
+        "kill-allocator" => vec![kill_allocator(seed)],
         "jitter" => vec![jitter(seed, secs)],
         other => crate::bail!(
-            "chaos plan {other}: use kill-copier|stall-drainer|kill-worker|jitter|all"
+            "chaos plan {other}: use kill-copier|stall-drainer|kill-worker|kill-allocator|jitter|all"
         ),
     };
     Ok(reports)

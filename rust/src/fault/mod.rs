@@ -107,10 +107,13 @@ pub enum Point {
     KvWorkerLoop,
     /// A KV worker is about to serve a claimed batch.
     KvServeBatch,
+    /// `smr::pool` is about to claim a fresh page (before any lock or
+    /// allocation, so a kill here leaks nothing).
+    PoolClaimPage,
 }
 
-/// Number of named points; `Point::KvServeBatch` is the anchor.
-pub const NUM_POINTS: usize = Point::KvServeBatch as usize + 1;
+/// Number of named points; `Point::PoolClaimPage` is the anchor.
+pub const NUM_POINTS: usize = Point::PoolClaimPage as usize + 1;
 
 impl Point {
     /// Every point, in discriminant order (pinned by `test_points_dense`).
@@ -140,6 +143,7 @@ impl Point {
         Point::IngressRelease,
         Point::KvWorkerLoop,
         Point::KvServeBatch,
+        Point::PoolClaimPage,
     ];
 
     /// Stable snake_case name, for plan parsing and reports.
@@ -170,6 +174,7 @@ impl Point {
             Point::IngressRelease => "ingress_release",
             Point::KvWorkerLoop => "kv_worker_loop",
             Point::KvServeBatch => "kv_serve_batch",
+            Point::PoolClaimPage => "pool_claim_page",
         }
     }
 
@@ -271,6 +276,8 @@ impl FaultPlan {
     /// - `stall-drainer`: long stalls on a drainer that just won the
     ///   claim word, so the shard's lease expires while it holds runs.
     /// - `kill-worker`: kill a KV worker mid-serve, once.
+    /// - `kill-allocator`: kill a thread at the top of the pool's
+    ///   page-claim path, once — modeling a crash at an allocation miss.
     /// - `jitter`: no kills — broad delays/yields/spurious CAS failures
     ///   across every retry-loop point, shaking out interleavings.
     pub fn named(name: &str, seed: u64) -> Option<Self> {
@@ -296,6 +303,12 @@ impl FaultPlan {
             }),
             "kill-worker" => Self::new(seed).with_rule(Rule {
                 point: Point::KvServeBatch,
+                action: FaultAction::Kill,
+                one_in: 1,
+                max: 1,
+            }),
+            "kill-allocator" => Self::new(seed).with_rule(Rule {
+                point: Point::PoolClaimPage,
                 action: FaultAction::Kill,
                 one_in: 1,
                 max: 1,
@@ -564,7 +577,13 @@ mod tests {
 
     #[test]
     fn test_named_plans_exist_and_unknown_rejected() {
-        for name in ["kill-copier", "stall-drainer", "kill-worker", "jitter"] {
+        for name in [
+            "kill-copier",
+            "stall-drainer",
+            "kill-worker",
+            "kill-allocator",
+            "jitter",
+        ] {
             assert!(FaultPlan::named(name, 7).is_some(), "{name} missing");
         }
         assert!(FaultPlan::named("no-such-plan", 7).is_none());

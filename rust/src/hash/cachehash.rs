@@ -71,7 +71,7 @@ use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
 
 use super::{bucket_for, census, table_capacity, ConcurrentMap, ResizeState};
 use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
-use crate::smr::{Epoch, RegionSmr};
+use crate::smr::{pool, Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
 use crate::util::CachePadded;
 
@@ -285,9 +285,10 @@ where
         if head.occupied() {
             let mut p = head.next_ptr();
             while !p.is_null() {
-                // SAFETY: exclusive in Drop.
-                let n = unsafe { Box::from_raw(p) };
-                p = n.next;
+                // SAFETY: exclusive in Drop; nodes come from the page pool.
+                let nx = unsafe { (*p).next };
+                unsafe { pool::free_node_now(p) };
+                p = nx;
             }
         }
     }
@@ -731,15 +732,20 @@ where
             return false; // a rival published DONE (the image is immutable)
         }
         // Retire the drained chain through the region scheme — winner
-        // only, exactly once per bucket.
+        // only, exactly once per bucket, as ONE page batch (one retire
+        // entry and one eventual orphan-lock acquisition per chain).
+        let mut batch = pool::PageBatch::new();
         let mut p = closing.next_ptr();
         while !p.is_null() {
             // SAFETY: unlinked by the DONE transition; lagging readers
-            // of the frozen image are pinned.
+            // of the frozen image are pinned, which keeps the whole
+            // batch unrecycled until they unpin.
             let nx = unsafe { (*p).next };
-            unsafe { S::retire_box(p) };
+            unsafe { batch.push(p) };
             p = nx;
         }
+        // SAFETY: every pushed node is unlinked and unique.
+        unsafe { S::retire_page(batch) };
         true
     }
 
@@ -773,11 +779,11 @@ where
                 // here pre-DONE, so this is idempotence insurance only.
                 return;
             }
-            let spill = Box::into_raw(Box::new(ChainNode {
+            let spill = pool::alloc_node(ChainNode {
                 key: head.key,
                 value: head.value,
                 next: head.next_ptr(),
-            }));
+            });
             match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
                 Ok(_) => {
                     // Ordering: Relaxed — estimate.
@@ -786,7 +792,7 @@ where
                 }
                 Err(w) => {
                     // SAFETY: never published.
-                    drop(unsafe { Box::from_raw(spill) });
+                    unsafe { pool::free_node_now(spill) };
                     head = w;
                     snooze_lazy(&mut bo);
                 }
@@ -932,12 +938,12 @@ where
                 searched = Some(chain);
             }
             // Push-front: the new pair goes inline; the old inline pair
-            // moves out to a heap link pointing at the existing chain.
-            let spill = Box::into_raw(Box::new(ChainNode {
+            // moves out to a pooled link pointing at the existing chain.
+            let spill = pool::alloc_node(ChainNode {
                 key: head.key,
                 value: head.value,
                 next: chain,
-            }));
+            });
             match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
                 Ok(_) => {
                     self.note_insert(t, idx);
@@ -945,7 +951,7 @@ where
                 }
                 Err(w) => {
                     // SAFETY: never published.
-                    drop(unsafe { Box::from_raw(spill) });
+                    unsafe { pool::free_node_now(spill) };
                     head = w;
                     snooze_lazy(&mut bo);
                 }
@@ -1011,7 +1017,7 @@ where
                 match bucket.compare_exchange(head, promoted) {
                     Ok(_) => {
                         // SAFETY: p unlinked by the successful CAS.
-                        unsafe { S::retire_box(p) };
+                        unsafe { pool::retire_node::<S, _>(p) };
                         self.note_remove(t, idx);
                         return true;
                     }
@@ -1045,23 +1051,25 @@ where
             // Rebuild the prefix copies back-to-front onto the suffix.
             let mut new_chain = suffix;
             for &(k, v) in prefix.iter().rev() {
-                new_chain = Box::into_raw(Box::new(ChainNode {
+                new_chain = pool::alloc_node(ChainNode {
                     key: k,
                     value: v,
                     next: new_chain,
-                }));
+                });
             }
             let new_head = Link::with_chain(head.key, head.value, new_chain);
             match bucket.compare_exchange(head, new_head) {
                 Ok(_) => {
                     // Retire the victim and the replaced original prefix.
-                    // SAFETY: all unlinked by the successful CAS.
+                    // SAFETY: all unlinked by the successful CAS;
+                    // pool-retired so slots recycle after the region
+                    // grace period.
                     unsafe {
-                        S::retire_box(victim);
+                        pool::retire_node::<S, _>(victim);
                         let mut q = head.next_ptr();
                         while q != victim {
                             let nx = (*q).next;
-                            S::retire_box(q);
+                            pool::retire_node::<S, _>(q);
                             q = nx;
                         }
                     }
@@ -1074,8 +1082,9 @@ where
                     let mut q = new_chain;
                     while q != suffix {
                         // SAFETY: never published.
-                        let b = unsafe { Box::from_raw(q) };
-                        q = b.next;
+                        let nx = unsafe { (*q).next };
+                        unsafe { pool::free_node_now(q) };
+                        q = nx;
                     }
                     head = w;
                     snooze_lazy(&mut bo);

@@ -28,7 +28,7 @@ use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 
 use super::{bucket_for, census, table_capacity, ConcurrentMap, ResizeState};
 use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
-use crate::smr::{Epoch, RegionSmr};
+use crate::smr::{pool, Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
 use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::CachePadded;
@@ -121,9 +121,10 @@ unsafe fn drop_ctable<K: AtomicValue, V: AtomicValue>(ptr: *mut CTable<K, V>) {
         let raw = b.load(Ordering::Relaxed);
         let mut p = node_of::<K, V>(raw);
         while !p.is_null() {
-            // SAFETY: exclusive in Drop.
-            let n = unsafe { Box::from_raw(p) };
-            p = n.next;
+            // SAFETY: exclusive in Drop; nodes come from the page pool.
+            let nx = unsafe { (*p).next };
+            unsafe { pool::free_node_now(p) };
+            p = nx;
         }
     }
 }
@@ -478,15 +479,21 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             return false; // a rival published DONE (the image is immutable)
         }
         // Retire the drained chain through the region scheme — winner
-        // only, exactly once per bucket.
+        // only, exactly once per bucket, as ONE page batch (one retire
+        // entry and one eventual orphan-lock acquisition per chain,
+        // however long it was).
+        let mut batch = pool::PageBatch::new();
         let mut p = node_of::<K, V>(closing);
         while !p.is_null() {
             // SAFETY: unlinked by the DONE transition; lagging
-            // frozen-image readers are pinned.
+            // frozen-image readers are pinned, which keeps the whole
+            // batch unrecycled until they unpin.
             let nx = unsafe { (*p).next };
-            unsafe { S::retire_box(p) };
+            unsafe { batch.push(p) };
             p = nx;
         }
+        // SAFETY: every pushed node is unlinked and unique.
+        unsafe { S::retire_page(batch) };
         true
     }
 
@@ -497,7 +504,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
         let bucket = new.bucket(idx);
         // Ordering: ACQUIRE — head dereferenced below.
         let mut raw = bucket.load(P::ACQUIRE);
-        let mut node = Box::new(Node {
+        let fresh = pool::alloc_node(Node {
             key,
             value,
             next: std::ptr::null_mut(),
@@ -507,10 +514,12 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             debug_assert_eq!(raw & FWD, 0, "destination sealed mid-migration");
             let head = node_of::<K, V>(raw);
             if Self::chain_find(head, &key).is_some() {
-                return; // idempotence insurance (drops `node`)
+                // SAFETY: never published — idempotence insurance.
+                unsafe { pool::free_node_now(fresh) };
+                return;
             }
-            node.next = head;
-            let fresh = Box::into_raw(node);
+            // SAFETY: unpublished, exclusively ours until the CAS wins.
+            unsafe { (*fresh).next = head };
             // Ordering: RELEASE on success publishes the node's contents
             // before its address; ACQUIRE on failure — the witness head
             // is walked on retry.
@@ -521,8 +530,6 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
                     return;
                 }
                 Err(w) => {
-                    // SAFETY: never published.
-                    node = unsafe { Box::from_raw(fresh) };
                     raw = w;
                     snooze_lazy(&mut bo);
                 }
@@ -593,8 +600,9 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
         // suffix and the retry walks only the new prefix.
         let mut searched: *mut Node<K, V> = std::ptr::null_mut();
         let mut have_searched = false;
-        // The spare box from a failed CAS is reused on retry.
-        let mut node: Option<Box<Node<K, V>>> = None;
+        // The spare (never-published) pool node from a failed CAS is
+        // reused on retry and freed on a duplicate hit.
+        let mut spare: *mut Node<K, V> = std::ptr::null_mut();
         let mut bo = None;
         // Bounded patience with a FROZEN bucket before helping copy it.
         let mut frozen_waits = 0u32;
@@ -631,21 +639,29 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                 // SAFETY: region-pinned traversal of immutable nodes.
                 let n = unsafe { &*p };
                 if n.key == key {
+                    if !spare.is_null() {
+                        // SAFETY: never published.
+                        unsafe { pool::free_node_now(spare) };
+                    }
                     return false;
                 }
                 p = n.next;
             }
             searched = head;
             have_searched = true;
-            let mut b = node.take().unwrap_or_else(|| {
-                Box::new(Node {
+            let fresh = if spare.is_null() {
+                pool::alloc_node(Node {
                     key,
                     value,
-                    next: std::ptr::null_mut(),
+                    next: head,
                 })
-            });
-            b.next = head;
-            let fresh = Box::into_raw(b);
+            } else {
+                let f = spare;
+                spare = std::ptr::null_mut();
+                // SAFETY: our never-published spare — exclusive.
+                unsafe { (*f).next = head };
+                f
+            };
             // Ordering: RELEASE on success publishes the node's contents
             // before its address; ACQUIRE on failure — the witness head
             // is walked on retry (no re-load).
@@ -655,8 +671,8 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                     return true;
                 }
                 Err(w) => {
-                    // SAFETY: never published.
-                    node = Some(unsafe { Box::from_raw(fresh) });
+                    // The node stays unpublished; keep it for the retry.
+                    spare = fresh;
                     raw = w;
                     snooze_lazy(&mut bo);
                 }
@@ -719,23 +735,25 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
             let victim = p;
             let mut new_head = suffix;
             for &(k, v) in prefix.iter().rev() {
-                new_head = Box::into_raw(Box::new(Node {
+                new_head = pool::alloc_node(Node {
                     key: k,
                     value: v,
                     next: new_head,
-                }));
+                });
             }
             // Ordering: RELEASE on success publishes the path copies;
             // ACQUIRE on failure — the witness head is walked on retry.
             match bucket.compare_exchange(raw, new_head as usize, P::RELEASE, P::ACQUIRE) {
                 Ok(_) => {
-                    // SAFETY: victim + original prefix unlinked by the CAS.
+                    // SAFETY: victim + original prefix unlinked by the
+                    // CAS; pool-retired so slots recycle after the
+                    // region grace period.
                     unsafe {
-                        S::retire_box(victim);
+                        pool::retire_node::<S, _>(victim);
                         let mut q = head;
                         while q != victim {
                             let nx = (*q).next;
-                            S::retire_box(q);
+                            pool::retire_node::<S, _>(q);
                             q = nx;
                         }
                     }
@@ -746,8 +764,9 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                     let mut q = new_head;
                     while q != suffix {
                         // SAFETY: never published.
-                        let b = unsafe { Box::from_raw(q) };
-                        q = b.next;
+                        let nx = unsafe { (*q).next };
+                        unsafe { pool::free_node_now(q) };
+                        q = nx;
                     }
                     raw = w;
                     snooze_lazy(&mut bo);

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! repro fig1|fig2|fig3|fig4|fig5|table1|memory|ablate|all   regenerate paper exhibits + ablations
-//!       [--panel u|z|n|w|p|ordering|smr|resize|ingress] [--oversub] [--secs S]
+//!       [--panel u|z|n|w|p|ordering|smr|resize|ingress|alloc] [--oversub] [--secs S]
 //!       [--n N] [--artifact] [--reports DIR]
 //! repro kv [--workers W] [--clients C] [--secs S] [--n N] [--cap C] [--u PCT]
 //!          [--z Z] [--ingress lockfree|mailbox] [--shards S] [--lease-ms MS]
@@ -129,7 +129,7 @@ USAGE:
 
 OPTIONS:
   --panel PANEL       figure panel (fig2: u|z|n|w|p|fu; fig3: u|z|n|wide;
-                      ablate: ordering|smr|resize|ingress; default: all panels)
+                      ablate: ordering|smr|resize|ingress|alloc; default: all panels)
   --oversub           run the 4x-oversubscribed variant of the panel
   --secs S            seconds per measured point      [0.3]
   --n N               elements / key-space size       [65536]
@@ -144,7 +144,8 @@ OPTIONS:
                       (0 = leases off; expired claims are taken over)
   --reservoir R       kv: max raw latency samples retained [4096]
   --seed S            chaos: plan seed (decisions replay from it)
-  --plan P            chaos: kill-copier|stall-drainer|kill-worker|jitter
+  --plan P            chaos: kill-copier|stall-drainer|kill-worker|
+                      kill-allocator|jitter
                       (default: run all scenarios)
                       fault injection needs `--features fault`; without
                       it the scenarios run as a plain stress pass

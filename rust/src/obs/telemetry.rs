@@ -122,10 +122,20 @@ pub enum Event {
     KvLeaseTakeover,
     /// A fault plan fired an injected fault (`--features fault` only).
     FaultInject,
+    // -- smr::pool (page-pool node allocator) -------------------------------
+    /// A fresh page was carved from the system allocator (pool miss).
+    PoolPageAlloc,
+    /// A node slot returned to a free list (pool hit on the free path).
+    PoolRecycle,
+    /// A drained page handed to an SMR scheme in one `retire_page` call.
+    RetireBatch,
+    /// The global orphan list's mutex was acquired (spill, drain, or
+    /// census) — the traffic `retire_page` amortizes by the batch size.
+    OrphanLock,
 }
 
 /// Number of events (cells per thread row).
-pub const NUM_EVENTS: usize = Event::FaultInject as usize + 1;
+pub const NUM_EVENTS: usize = Event::OrphanLock as usize + 1;
 
 /// All events in cell order — drives snapshot naming; `test_all_dense`
 /// pins the `ALL[i] as usize == i` invariant.
@@ -170,6 +180,10 @@ pub const ALL: [Event; NUM_EVENTS] = [
     Event::KvRequeue,
     Event::KvLeaseTakeover,
     Event::FaultInject,
+    Event::PoolPageAlloc,
+    Event::PoolRecycle,
+    Event::RetireBatch,
+    Event::OrphanLock,
 ];
 
 impl Event {
@@ -216,6 +230,10 @@ impl Event {
             Event::KvRequeue => "kv_requeue",
             Event::KvLeaseTakeover => "kv_lease_takeover",
             Event::FaultInject => "fault_inject",
+            Event::PoolPageAlloc => "pool_page_alloc",
+            Event::PoolRecycle => "pool_recycle",
+            Event::RetireBatch => "retire_batch",
+            Event::OrphanLock => "orphan_lock",
         }
     }
 }

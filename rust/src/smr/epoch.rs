@@ -175,6 +175,21 @@ impl<P: OrderingPolicy> Epoch<P> {
         unsafe fn dropper<T>(addr: usize) {
             drop(unsafe { Box::from_raw(addr as *mut T) });
         }
+        // SAFETY: forwarded contract (unique, unlinked Box).
+        unsafe { Self::retire_raw(ptr as usize, dropper::<T>) }
+    }
+
+    /// Retire a raw address with a custom reclaimer — the
+    /// [`Smr::retire_raw`] entry point ([`retire_box`](Self::retire_box)
+    /// is the `Box` special case; the page pool's slot recycling and
+    /// page batches ride here). The entry is stamped with the global
+    /// epoch exactly like a boxed node — for a page batch that is the
+    /// §3.2 recycler idiom: one stamp for the whole page, recycled when
+    /// the epoch passes it by the free distance.
+    ///
+    /// # Safety
+    /// Same contract as [`Smr::retire_raw`].
+    pub unsafe fn retire_raw(ptr: usize, drop_fn: unsafe fn(usize)) {
         let _pin = Self::pin();
         // Ordering: ACQUIRE, read under the pin — coherence with the
         // pin's validated read makes the stamp at least the (outermost)
@@ -191,8 +206,8 @@ impl<P: OrderingPolicy> Epoch<P> {
         let len = BAG.with(|b| {
             b.push(Retired {
                 epoch: e,
-                ptr: ptr as usize,
-                drop_fn: dropper::<T>,
+                ptr,
+                drop_fn,
             })
         });
         if len >= ADVANCE_THRESHOLD {
@@ -266,8 +281,18 @@ impl<P: OrderingPolicy> Epoch<P> {
             });
         };
         let _ = BAG.try_with(|b| b.with_items(&free));
-        if let Ok(mut orphans) = ORPHANS.try_lock() {
-            free(&mut orphans);
+        match ORPHANS.try_lock() {
+            Ok(mut orphans) => {
+                crate::counter!(OrphanLock);
+                free(&mut orphans);
+            }
+            // Poisoned by a killed holder: the vec is still a valid
+            // retired list — drain it rather than strand the garbage.
+            Err(std::sync::TryLockError::Poisoned(p)) => {
+                crate::counter!(OrphanLock);
+                free(&mut p.into_inner());
+            }
+            Err(std::sync::TryLockError::WouldBlock) => {}
         }
     }
 }
@@ -317,6 +342,10 @@ impl<P: OrderingPolicy> Smr for Epoch<P> {
 
     unsafe fn retire_box<T>(ptr: *mut T) {
         unsafe { Epoch::<P>::retire_box(ptr) }
+    }
+
+    unsafe fn retire_raw(ptr: usize, drop_fn: unsafe fn(usize)) {
+        unsafe { Epoch::<P>::retire_raw(ptr, drop_fn) }
     }
 
     fn collect() {
@@ -414,7 +443,11 @@ pub(crate) fn on_thread_exit(t: usize) {
 /// Outstanding (retired, unfreed) node count — §5.5 memory census.
 pub fn pending_reclaims() -> usize {
     let local = BAG.try_with(|b| b.len()).unwrap_or(0);
-    let orphaned = ORPHANS.try_lock().map(|o| o.len()).unwrap_or(0);
+    // Census reads take the lock (bounded retry, then block): the old
+    // `try_lock().unwrap_or(0)` silently reported an empty orphan
+    // column whenever a concurrent collector held the lock — the §5.5
+    // census undercounted exactly when reclamation was busiest.
+    let orphaned = super::census_lock(&ORPHANS).len();
     local + orphaned
 }
 

@@ -57,9 +57,9 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{fence, AtomicBool, AtomicPtr, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, TryLockError};
 
-use super::{RetireBag, Smr, SmrGuard};
+use super::{pool, RetireBag, Smr, SmrGuard};
 use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
 use crate::util::registry::tid;
 use crate::MAX_THREADS;
@@ -82,10 +82,36 @@ static SLOTS: [AtomicUsize; NSLOTS] = {
     [Z; NSLOTS]
 };
 
-/// A raw retired allocation: pointer + type-erased destructor.
+/// A raw retired allocation: pointer + type-erased destructor + the
+/// liveness probe a scan consults ("is anything here still announced?").
 struct Retired {
     ptr: usize,
     drop_fn: unsafe fn(usize),
+    /// Returns `true` while the scan's protection snapshot still covers
+    /// this entry: exact-address membership for single nodes
+    /// ([`probe_single`]), any-slot membership for a retired page batch
+    /// ([`probe_batch`] — the whole page is live while one slot is
+    /// protected).
+    probe: unsafe fn(usize, &[usize]) -> bool,
+}
+
+/// Exact-address protection: the classic hazard check.
+fn probe_single(ptr: usize, protected: &[usize]) -> bool {
+    protected.binary_search(&ptr).is_ok()
+}
+
+/// Page-batch protection: a pooled page is live while *any* of its slot
+/// addresses is announced — exact-address search alone would free a page
+/// out from under a reader protecting an interior node.
+///
+/// # Safety
+/// `ptr` must point at the batch holder of a [`retire_page_batch`]
+/// entry, still unfreed (the scan only probes entries it has not run
+/// `drop_fn` on).
+unsafe fn probe_batch(ptr: usize, protected: &[usize]) -> bool {
+    unsafe { &*(ptr as *const pool::PageBatch) }
+        .addrs()
+        .any(|a| protected.binary_search(&a).is_ok())
 }
 
 // SAFETY: Retired is only ever consumed by calling drop_fn exactly once,
@@ -352,6 +378,27 @@ impl Smr for Hazard {
         unsafe { retire_box(ptr) }
     }
 
+    unsafe fn retire_raw(ptr: usize, drop_fn: unsafe fn(usize)) {
+        unsafe { retire_raw(ptr, drop_fn) }
+    }
+
+    unsafe fn retire_page(mut page: pool::PageBatch) {
+        if page.is_empty() {
+            return;
+        }
+        if !pool::enabled() {
+            // Disabled-pool baseline: per-node retirement, mirroring the
+            // default impl (see `Smr::retire_page`).
+            for (addr, recycle) in page.take_slots() {
+                // SAFETY: slot contracts forwarded from the caller.
+                unsafe { Self::retire_raw(addr, recycle) };
+            }
+            return;
+        }
+        pool::note_batch(page.len());
+        retire_page_batch(page);
+    }
+
     fn collect() {
         scan();
     }
@@ -404,10 +451,43 @@ pub unsafe fn retire_box<T>(ptr: *mut T) {
     unsafe fn dropper<T>(addr: usize) {
         drop(unsafe { Box::from_raw(addr as *mut T) });
     }
-    let item = Retired {
-        ptr: ptr as usize,
-        drop_fn: dropper::<T>,
-    };
+    // SAFETY: forwarded contract (unique, unlinked Box).
+    unsafe { retire_raw(ptr as usize, dropper::<T>) }
+}
+
+/// Retire a raw address with a custom reclaimer (the
+/// [`Smr::retire_raw`] entry point — pool slot recycling rides here).
+///
+/// # Safety
+/// Same contract as [`Smr::retire_raw`]: `drop_fn(ptr)` releases an
+/// unlinked allocation exactly once; no references are created after
+/// retirement.
+pub unsafe fn retire_raw(ptr: usize, drop_fn: unsafe fn(usize)) {
+    push_retired(Retired {
+        ptr,
+        drop_fn,
+        probe: probe_single,
+    });
+}
+
+/// Retire a drained page batch as **one** entry whose probe walks the
+/// batch: the page's slots recycle together, only once no announcement
+/// covers any of them (see [`probe_batch`]).
+pub(crate) fn retire_page_batch(page: pool::PageBatch) {
+    unsafe fn drop_holder(addr: usize) {
+        // SAFETY: leaked on push below; the retire contract runs this
+        // exactly once — dropping the batch recycles every slot.
+        drop(unsafe { Box::from_raw(addr as *mut pool::PageBatch) });
+    }
+    let holder = Box::into_raw(Box::new(page));
+    push_retired(Retired {
+        ptr: holder as usize,
+        drop_fn: drop_holder,
+        probe: probe_batch,
+    });
+}
+
+fn push_retired(item: Retired) {
     crate::counter!(HazardRetire);
     // Fault window: node unlinked, not yet on the retire list — a kill
     // here leaks the node (never double-frees); the RetireBag's TLS
@@ -448,14 +528,17 @@ pub fn scan() {
     let free = |list: &mut Vec<Retired>| {
         let mut kept = Vec::with_capacity(list.len());
         for item in list.drain(..) {
-            if protected.binary_search(&item.ptr).is_ok() {
+            // SAFETY (probe): page-batch probes dereference the retired
+            // holder, which stays allocated until its drop_fn below.
+            if unsafe { (item.probe)(item.ptr, &protected) } {
                 kept.push(item);
             } else {
                 crate::counter!(HazardFree);
                 // SAFETY: unlinked before retirement and proven
-                // unprotected by the snapshot above; announcements made
-                // after unlinking cannot reference it (protect()
-                // re-validates against the source).
+                // unprotected by the snapshot above (every slot of a
+                // page batch, per its probe); announcements made after
+                // unlinking cannot reference it (protect() re-validates
+                // against the source).
                 unsafe { (item.drop_fn)(item.ptr) };
             }
         }
@@ -463,8 +546,18 @@ pub fn scan() {
     };
 
     let _ = RETIRED.try_with(|r| r.with_items(&free));
-    if let Ok(mut orphans) = ORPHANS.try_lock() {
-        free(&mut orphans);
+    match ORPHANS.try_lock() {
+        Ok(mut orphans) => {
+            crate::counter!(OrphanLock);
+            free(&mut orphans);
+        }
+        // Poisoned by a killed holder: the vec is still a valid retired
+        // list — drain it rather than strand the garbage forever.
+        Err(TryLockError::Poisoned(p)) => {
+            crate::counter!(OrphanLock);
+            free(&mut p.into_inner());
+        }
+        Err(TryLockError::WouldBlock) => {}
     }
 }
 
@@ -514,11 +607,15 @@ pub(crate) fn on_thread_exit(t: usize) {
     }
 }
 
-/// Number of retired-but-not-yet-freed nodes owned by this thread
-/// (plus orphans if the lock is free) — used by the §5.5 memory census.
+/// Number of retired-but-not-yet-freed nodes owned by this thread,
+/// plus everything on the orphan list — the §5.5 memory census.
 pub fn pending_reclaims() -> usize {
     let local = RETIRED.try_with(|r| r.len()).unwrap_or(0);
-    let orphaned = ORPHANS.try_lock().map(|o| o.len()).unwrap_or(0);
+    // Census reads take the lock (bounded retry, then block): the old
+    // `try_lock().unwrap_or(0)` silently reported an empty orphan
+    // column whenever a concurrent scan held the lock — the §5.5
+    // census undercounted exactly when reclamation was busiest.
+    let orphaned = super::census_lock(&ORPHANS).len();
     local + orphaned
 }
 

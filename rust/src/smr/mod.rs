@@ -72,16 +72,26 @@
 //! once the global epoch has advanced past the stamp by the scheme's
 //! free distance (two reader epochs plus one slack epoch — see
 //! [`epoch`]) per [`reclaim_stamp_expired`](Smr::reclaim_stamp_expired).
+//!
+//! ## The page pool
+//!
+//! [`pool`] supplies the hash tables' chain nodes from per-thread pages
+//! of recycled slots and retires drained chains page-wise through
+//! [`Smr::retire_page`] — one scheme entry (and one eventual
+//! orphan-lock acquisition) per page instead of per node. See the
+//! [`pool`] module docs for the claim → carve → drain → retire →
+//! recycle lifecycle and how each scheme keeps a retired page alive.
 
 pub mod epoch;
 pub mod hazard;
+pub mod pool;
 
 pub use epoch::Epoch;
 pub use hazard::Hazard;
 
 use std::cell::RefCell;
 use std::sync::atomic::AtomicPtr;
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError, TryLockError};
 
 /// The self-flushing per-thread retire bag both schemes share (one
 /// generic instead of the former `epoch::LocalBag` / `hazard::RetireList`
@@ -114,9 +124,23 @@ impl<T: 'static> RetireBag<T> {
         self.items.borrow().len()
     }
 
-    /// Run a scheme's free pass over the bag's contents in place.
+    /// Run a scheme's free pass over the bag's contents.
+    ///
+    /// The vec is taken *out* of the `RefCell` for the duration of `f`:
+    /// freeing an item runs its destructor, and a destructor may itself
+    /// retire (a pooled page of nodes holding owned values re-enters
+    /// [`push`](Self::push)) — under a held borrow that re-entry would
+    /// panic on the `RefCell`. Survivors are merged back with anything
+    /// pushed re-entrantly while `f` ran.
     pub(crate) fn with_items<R>(&self, f: impl FnOnce(&mut Vec<T>) -> R) -> R {
-        f(&mut self.items.borrow_mut())
+        let mut taken = std::mem::take(&mut *self.items.borrow_mut());
+        let r = f(&mut taken);
+        let mut items = self.items.borrow_mut();
+        // Keep `taken` (usually the larger vec, capacity-warm) and fold
+        // the re-entrant pushes into it.
+        taken.append(&mut items);
+        *items = taken;
+        r
     }
 
     /// Hand everything to the orphan list now (table drops on borrowed
@@ -124,7 +148,15 @@ impl<T: 'static> RetireBag<T> {
     pub(crate) fn flush(&self) {
         let mut items = self.items.borrow_mut();
         if !items.is_empty() {
-            self.orphans.lock().unwrap().append(&mut items);
+            crate::counter!(OrphanLock);
+            // A poisoned orphan lock only means a panicking holder; the
+            // vec inside is still a valid list of retired items, so
+            // carry on rather than propagate — `unwrap()` here would
+            // double-panic inside the TLS destructor path and abort.
+            self.orphans
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .append(&mut items);
         }
     }
 }
@@ -133,9 +165,32 @@ impl<T: 'static> Drop for RetireBag<T> {
     fn drop(&mut self) {
         let items = std::mem::take(&mut *self.items.borrow_mut());
         if !items.is_empty() {
-            self.orphans.lock().unwrap().extend(items);
+            crate::counter!(OrphanLock);
+            // Poison-tolerant for the same reason as `flush`, and more
+            // urgently: this destructor runs during thread teardown,
+            // possibly while unwinding — a panic here aborts the
+            // process.
+            self.orphans
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .extend(items);
         }
     }
+}
+
+/// Census read of a scheme's orphan list: bounded `try_lock` retries,
+/// then a blocking (poison-tolerant) acquisition. The census is off the
+/// hot path, and `try_lock().unwrap_or(0)` silently reported an empty
+/// orphan column whenever a collector held the lock.
+pub(crate) fn census_lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    for _ in 0..64 {
+        match m.try_lock() {
+            Ok(g) => return g,
+            Err(TryLockError::Poisoned(p)) => return p.into_inner(),
+            Err(TryLockError::WouldBlock) => std::thread::yield_now(),
+        }
+    }
+    m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// A pinned guard's protection interface.
@@ -217,6 +272,59 @@ pub trait Smr: Send + Sync + 'static {
         // SAFETY: fresh unique holder; the slice's own safety is the
         // caller's contract.
         unsafe { Self::retire_box(Box::into_raw(Box::new(FatBox { ptr, len }))) }
+    }
+
+    /// Defer-run an arbitrary reclaimer on a raw address — the
+    /// generalization [`retire_box`](Self::retire_box) is a special
+    /// case of, and what the page pool's slot recycling rides on
+    /// ([`pool::retire_node`]): `drop_fn(ptr)` runs exactly once, after
+    /// the scheme's grace period proves no protected reader remains.
+    ///
+    /// # Safety
+    /// `ptr` must identify an unlinked allocation `drop_fn` releases
+    /// exactly once; no new references may be created after retirement
+    /// (only readers protected before the unlink may still use it).
+    unsafe fn retire_raw(ptr: usize, drop_fn: unsafe fn(usize));
+
+    /// Retire a whole drained page of pooled chain nodes in **one**
+    /// scheme entry — one bag push, one eventual orphan-lock
+    /// acquisition — instead of one per node. The batch's slots recycle
+    /// when its grace period expires: under [`Hazard`] the page counts
+    /// as live while *any* slot address is announced (the scheme
+    /// overrides this method with a per-slot probe); under [`Epoch`]
+    /// the batch is stamped once, like `CachedMemEff`'s §3.2 recycler
+    /// stamps nodes, and expires by the free-distance rule.
+    ///
+    /// # Safety
+    /// Every slot in `page` must satisfy [`retire_raw`](Self::retire_raw)'s
+    /// contract (unlinked, unique, no new references).
+    unsafe fn retire_page(mut page: pool::PageBatch)
+    where
+        Self: Sized,
+    {
+        if page.is_empty() {
+            return;
+        }
+        if !pool::enabled() {
+            // Disabled-pool baseline (the `ablate --panel alloc` boxed
+            // arm): retire each node individually — the per-node scheme
+            // traffic the batching amortizes away.
+            for (addr, recycle) in page.take_slots() {
+                // SAFETY: slot contracts forwarded from the caller.
+                unsafe { Self::retire_raw(addr, recycle) };
+            }
+            return;
+        }
+        pool::note_batch(page.len());
+        unsafe fn drop_holder(addr: usize) {
+            // SAFETY: leaked below; the retire contract runs this once.
+            // Dropping the batch recycles every slot.
+            drop(unsafe { Box::from_raw(addr as *mut pool::PageBatch) });
+        }
+        let holder = Box::into_raw(Box::new(page));
+        // SAFETY: slot contracts forwarded from the caller; the holder
+        // itself is a fresh unique allocation.
+        unsafe { Self::retire_raw(holder as usize, drop_holder) }
     }
 
     /// Attempt to reclaim retired allocations now (hazard: scan; epoch:

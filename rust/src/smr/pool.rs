@@ -1,0 +1,507 @@
+//! Page-pool allocation for chain nodes, with batched (page-wise)
+//! retirement through the [`Smr`](super::Smr) schemes.
+//!
+//! Under insert/remove churn the hash tables' hot path is not the CAS —
+//! it is the allocator and the orphan-list lock: every chain link used
+//! to be an individual `Box::new` and an individual `retire_box`, and
+//! every retired node eventually funnels through a global
+//! `Mutex<Vec<_>>` orphan list. This module amortizes both:
+//!
+//! * allocation is a per-thread free-list pop (no malloc on the steady
+//!   state), backed by fixed-size **pages** of node slots;
+//! * retirement of a drained chain is **one** scheme entry per page
+//!   batch ([`Smr::retire_page`](super::Smr::retire_page)) instead of
+//!   one per node, so the orphan-lock traffic drops by the batch size.
+//!
+//! ## Page lifecycle: claim → carve → drain → retire → recycle
+//!
+//! 1. **Claim.** A thread whose free list is empty claims slot capacity:
+//!    first from the global spill list (slots parked by exited threads),
+//!    else by allocating a fresh page ([`PAGE_SLOTS`] slots of one size
+//!    class). The claim path carries the `PoolClaimPage` failpoint — a
+//!    thread may die here and the pool stays live (the page is not yet
+//!    carved, no lock is held across the kill window).
+//! 2. **Carve.** The page is carved into headered slots pushed onto the
+//!    claiming thread's free list; [`alloc_node`] pops one and writes
+//!    the node in place. Each slot's header records its size class (or
+//!    the boxed-fallback marker), so every free site is provenance-free:
+//!    the slot says how it must be released.
+//! 3. **Drain.** The tables unlink nodes as usual. Unpublished copies
+//!    (a lost CAS) return immediately via [`free_node_now`]; published
+//!    nodes are unlinked and handed to SMR.
+//! 4. **Retire.** Single hot-path victims go through [`retire_node`]
+//!    (one bag entry, exact-address protection under `Hazard`, a stamp
+//!    under `Epoch`). Whole drained chains — the resize engines' bulk
+//!    case — are gathered into a [`PageBatch`] and handed to
+//!    [`Smr::retire_page`](super::Smr::retire_page): **one** retire
+//!    entry, one eventual orphan-lock acquisition, for the whole page.
+//! 5. **Recycle.** When the scheme proves the page dead it runs the
+//!    batch's destructor: every slot's node is dropped in place and the
+//!    slot returns to a free list — the pool's slots are recycled
+//!    through the *same* grace period that used to free boxes, so no
+//!    slot is ever handed out while a reader still protects it.
+//!
+//! ## Interaction with the schemes
+//!
+//! * **`Hazard`** scans compare exact announced addresses, which covers
+//!    [`retire_node`] directly. A [`PageBatch`] is kept alive while
+//!    *any* of its slots is announced: the batch's retired entry probes
+//!    every slot address against the protection snapshot (see
+//!    `hazard::retire_page_batch`), so a page is treated as live until
+//!    its last protected slot is released.
+//! * **`Epoch`** stamps the batch once at retire time — exactly how
+//!    `CachedMemEff`'s §3.2 slab recycler stamps uninstalled nodes —
+//!    and recycles all of its slots once the global epoch has advanced
+//!    `FREE_DISTANCE` past the stamp. A pinned reader mid-chain blocks
+//!    the advance, hence the whole page.
+//!
+//! Backing pages are retained at the high-water mark (slots recycle
+//! forever; page memory is never returned to the OS), which is the
+//! standard pool trade: churn throughput for a bounded, census-visible
+//! footprint ([`stats`] reports pages, batches, and batch sizes).
+//!
+//! The pool can be disabled at runtime ([`set_enabled`]) for the
+//! pooled-vs-boxed ablation (`repro ablate --panel alloc`): disabled,
+//! [`alloc_node`] degrades to a headered heap allocation, and the
+//! header keeps mixed populations safe — every node is freed the way it
+//! was allocated, whichever way the toggle points now.
+
+use std::alloc::{alloc, dealloc, handle_alloc_error, Layout};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Node slots carved from one page (and the target batch size for
+/// page-wise retirement).
+pub const PAGE_SLOTS: usize = 64;
+
+/// Bytes reserved at the head of every slot for the provenance header
+/// (one word used; the rest keeps the payload 16-aligned).
+const HEADER: usize = 16;
+
+/// Slot alignment — covers every chain-node type in the crate (the
+/// node payloads are `AtomicValue` words and raw pointers).
+const SLOT_ALIGN: usize = 16;
+
+/// Total slot footprints (header + payload), one per size class.
+const CLASS_SIZES: [usize; 3] = [64, 128, 256];
+
+const NUM_CLASSES: usize = CLASS_SIZES.len();
+
+/// Header marker for the boxed (non-pooled) fallback allocation.
+const BOXED: usize = usize::MAX;
+
+/// Runtime toggle: `true` (default) pools qualifying node types;
+/// `false` routes every [`alloc_node`] through the headered heap
+/// fallback (the boxed baseline of `repro ablate --panel alloc`).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+// Always-on pool accounting (relaxed, off the per-node hot path: pages
+// are rare, batches are amortized) — powers the §5.5 memory census
+// without the `telemetry` feature.
+static PAGES: AtomicU64 = AtomicU64::new(0);
+static BATCHES: AtomicU64 = AtomicU64::new(0);
+static BATCH_SLOTS: AtomicU64 = AtomicU64::new(0);
+
+/// Cumulative pool accounting for the §5.5 memory census.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Backing pages ever allocated (the pool's allocation rate: fresh
+    /// page claims per unit work — near zero once recycling is warm).
+    pub pages: u64,
+    /// Page batches handed to a scheme via `Smr::retire_page`.
+    pub batches: u64,
+    /// Total slots across those batches (`batch_slots / batches` is the
+    /// mean retire-batch size).
+    pub batch_slots: u64,
+}
+
+/// Snapshot the cumulative pool counters (monotonic; consumers report
+/// deltas).
+pub fn stats() -> PoolStats {
+    PoolStats {
+        pages: PAGES.load(Ordering::Relaxed),
+        batches: BATCHES.load(Ordering::Relaxed),
+        batch_slots: BATCH_SLOTS.load(Ordering::Relaxed),
+    }
+}
+
+/// Enable or disable pooled allocation; returns the previous setting.
+/// Safe to flip at any time: the per-slot header records how each live
+/// node was allocated, so frees never mismatch the toggle.
+pub fn set_enabled(on: bool) -> bool {
+    ENABLED.swap(on, Ordering::Relaxed)
+}
+
+/// Whether pooled allocation is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Whether `T` qualifies for a pool size class (alignment within
+/// [`SLOT_ALIGN`] and header + payload within the largest class).
+fn class_of<T>() -> Option<usize> {
+    if std::mem::align_of::<T>() > SLOT_ALIGN {
+        return None;
+    }
+    let need = HEADER + std::mem::size_of::<T>();
+    CLASS_SIZES.iter().position(|&s| need <= s)
+}
+
+/// Layout of the headered heap fallback for `T`.
+fn boxed_layout<T>() -> Layout {
+    Layout::from_size_align(
+        HEADER + std::mem::size_of::<T>(),
+        SLOT_ALIGN.max(std::mem::align_of::<T>()),
+    )
+    .expect("boxed fallback layout")
+}
+
+/// Poison-tolerant lock: the free lists hold plain addresses, so a
+/// panicking holder leaves nothing half-updated worth poisoning over
+/// (same discipline as the orphan-lock sites in `smr`).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Global spill lists (one per class): slots parked by exiting threads,
+/// re-claimed page-wise before any fresh page is allocated.
+static GLOBAL_FREE: [Mutex<Vec<usize>>; NUM_CLASSES] = {
+    #[allow(clippy::declare_interior_mutable_const)]
+    const L: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    [L; NUM_CLASSES]
+};
+
+/// Per-thread free lists; the destructor parks leftovers on the global
+/// spill lists so an exiting thread's slots stay claimable.
+struct LocalLists([Vec<usize>; NUM_CLASSES]);
+
+impl Drop for LocalLists {
+    fn drop(&mut self) {
+        for (class, list) in self.0.iter_mut().enumerate() {
+            if !list.is_empty() {
+                lock(&GLOBAL_FREE[class]).append(list);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalLists> =
+        RefCell::new(LocalLists([Vec::new(), Vec::new(), Vec::new()]));
+}
+
+/// Claim slot capacity for `class`: spill list first, else carve a
+/// fresh page. Returns the slot base addresses.
+fn claim_page(class: usize) -> Vec<usize> {
+    // Fault window: a thread may die claiming — nothing is carved yet
+    // and no lock is held, so rivals' claims and the pool stay live.
+    crate::failpoint!(PoolClaimPage);
+    {
+        let mut spill = lock(&GLOBAL_FREE[class]);
+        if !spill.is_empty() {
+            let take = spill.len().min(PAGE_SLOTS);
+            let at = spill.len() - take;
+            return spill.split_off(at);
+        }
+    }
+    let bytes = CLASS_SIZES[class] * PAGE_SLOTS;
+    let layout = Layout::from_size_align(bytes, SLOT_ALIGN).expect("page layout");
+    // SAFETY: non-zero, valid layout.
+    let base = unsafe { alloc(layout) };
+    if base.is_null() {
+        handle_alloc_error(layout);
+    }
+    PAGES.fetch_add(1, Ordering::Relaxed);
+    crate::counter!(PoolPageAlloc);
+    (0..PAGE_SLOTS)
+        .map(|i| base as usize + i * CLASS_SIZES[class])
+        .collect()
+}
+
+/// Pop a slot base for `class` from this thread's list, claiming a page
+/// on empty. Falls back to a direct claim when TLS is being torn down.
+fn claim_slot(class: usize) -> usize {
+    let fast = LOCAL.try_with(|l| l.borrow_mut().0[class].pop());
+    match fast {
+        Ok(Some(base)) => base,
+        Ok(None) => {
+            // Slow path outside the borrow: claim_page may yield/panic
+            // under fault injection and must not wedge the RefCell.
+            let mut carved = claim_page(class);
+            let base = carved.pop().expect("claimed page has slots");
+            if !carved.is_empty() {
+                let spilled = LOCAL
+                    .try_with(|l| l.borrow_mut().0[class].append(&mut carved))
+                    .is_err();
+                if spilled {
+                    lock(&GLOBAL_FREE[class]).append(&mut carved);
+                }
+            }
+            base
+        }
+        // TLS destructor already ran (allocation during thread exit):
+        // claim straight from the global side.
+        Err(_) => {
+            let mut carved = claim_page(class);
+            let base = carved.pop().expect("claimed page has slots");
+            if !carved.is_empty() {
+                lock(&GLOBAL_FREE[class]).append(&mut carved);
+            }
+            base
+        }
+    }
+}
+
+/// Return a slot to a free list (its node already dropped). `addr` is
+/// the payload address; the header says how the slot was allocated.
+///
+/// # Safety
+/// `addr` must be the payload address of a live [`alloc_node`]
+/// allocation of type `T` whose node has already been dropped in place,
+/// and no other reference to the slot may remain.
+unsafe fn release_slot<T>(addr: usize) {
+    let base = addr - HEADER;
+    let header = unsafe { *(base as *const usize) };
+    if header == BOXED {
+        // SAFETY: allocated by alloc_node's fallback with this layout.
+        unsafe { dealloc(base as *mut u8, boxed_layout::<T>()) };
+        return;
+    }
+    debug_assert!(header < NUM_CLASSES, "corrupt pool slot header");
+    crate::counter!(PoolRecycle);
+    let parked = LOCAL
+        .try_with(|l| l.borrow_mut().0[header].push(base))
+        .is_err();
+    if parked {
+        // TLS teardown (scheme drop_fns can run inside destructors):
+        // park on the global spill list instead.
+        lock(&GLOBAL_FREE[header]).push(base);
+    }
+}
+
+/// The type-erased "drop the node in place, then recycle its slot"
+/// reclaimer for `T` — what the schemes run when a pooled node's grace
+/// period expires.
+pub(crate) fn recycle_fn<T>() -> unsafe fn(usize) {
+    unsafe fn recycle<T>(addr: usize) {
+        // SAFETY: retire contract — run exactly once, node unreachable.
+        unsafe {
+            std::ptr::drop_in_place(addr as *mut T);
+            release_slot::<T>(addr);
+        }
+    }
+    recycle::<T>
+}
+
+/// Allocate a chain node: pool slot when `T` qualifies and the pool is
+/// enabled, headered heap fallback otherwise. Always release through
+/// [`free_node_now`], [`retire_node`], or a [`PageBatch`] — never
+/// `Box::from_raw`.
+pub fn alloc_node<T>(value: T) -> *mut T {
+    if enabled() {
+        if let Some(class) = class_of::<T>() {
+            let base = claim_slot(class);
+            // SAFETY: the slot is exclusively ours (popped off a free
+            // list), sized/aligned for the class that admitted T.
+            unsafe {
+                (base as *mut usize).write(class);
+                let p = (base + HEADER) as *mut T;
+                p.write(value);
+                return p;
+            }
+        }
+    }
+    let layout = boxed_layout::<T>();
+    // SAFETY: valid non-zero layout; header + payload writes are within
+    // the allocation.
+    unsafe {
+        let base = alloc(layout);
+        if base.is_null() {
+            handle_alloc_error(layout);
+        }
+        (base as *mut usize).write(BOXED);
+        let p = base.add(HEADER) as *mut T;
+        p.write(value);
+        p
+    }
+}
+
+/// Drop a node and release its slot immediately — for exclusive paths
+/// only (an unpublished copy after a lost CAS, exclusive table
+/// teardown), where no concurrent reader can hold the pointer.
+///
+/// # Safety
+/// `ptr` must come from [`alloc_node`], be unreachable by any other
+/// thread, and not be released again.
+pub unsafe fn free_node_now<T>(ptr: *mut T) {
+    // SAFETY: caller guarantees exclusivity and single release.
+    unsafe {
+        std::ptr::drop_in_place(ptr);
+        release_slot::<T>(ptr as usize);
+    }
+}
+
+/// Retire a single published-then-unlinked node through scheme `S`: the
+/// node is dropped and its slot recycled only after `S`'s grace period
+/// (hazard: no announcement matches the address; epoch: the global
+/// epoch passed the stamp by the free distance).
+///
+/// # Safety
+/// `ptr` must come from [`alloc_node`] and satisfy
+/// [`Smr::retire_box`](super::Smr::retire_box)'s contract: unlinked,
+/// unique, no new references after retirement.
+pub unsafe fn retire_node<S: super::Smr, T>(ptr: *mut T) {
+    // SAFETY: forwarded contract.
+    unsafe { S::retire_raw(ptr as usize, recycle_fn::<T>()) };
+}
+
+/// A drained page of retired nodes, awaiting one batched retirement
+/// through [`Smr::retire_page`](super::Smr::retire_page). Dropping the
+/// batch recycles every slot — the schemes arrange for that drop to run
+/// only after the whole page's grace period.
+pub struct PageBatch {
+    slots: Vec<(usize, unsafe fn(usize))>,
+}
+
+impl PageBatch {
+    pub fn new() -> Self {
+        Self { slots: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            slots: Vec::with_capacity(n),
+        }
+    }
+
+    /// Add an unlinked node to the batch.
+    ///
+    /// # Safety
+    /// Same contract as [`retire_node`]: `ptr` from [`alloc_node`],
+    /// unlinked, unique, no new references.
+    pub unsafe fn push<T>(&mut self, ptr: *mut T) {
+        self.slots.push((ptr as usize, recycle_fn::<T>()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Slot payload addresses — the hazard scheme's liveness probe: the
+    /// page stays retired-but-unfreed while any of these is announced.
+    pub(crate) fn addrs(&self) -> impl Iterator<Item = usize> + '_ {
+        self.slots.iter().map(|&(a, _)| a)
+    }
+
+    /// Drain the batch for per-node retirement (the disabled-pool
+    /// baseline in `Smr::retire_page`): the emptied batch's Drop
+    /// becomes a no-op and each `(addr, recycle)` pair is the caller's
+    /// to retire exactly once.
+    pub(crate) fn take_slots(&mut self) -> Vec<(usize, unsafe fn(usize))> {
+        std::mem::take(&mut self.slots)
+    }
+}
+
+/// Serializes lib tests that flip [`set_enabled`] (the alloc-ablation
+/// boxed arm) against tests whose assertions need the pool live for
+/// their whole run (slot-reuse determinism, census batch counts).
+#[cfg(test)]
+pub(crate) static TOGGLE_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+impl Default for PageBatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for PageBatch {
+    fn drop(&mut self) {
+        for &(addr, recycle) in &self.slots {
+            // SAFETY: each entry carries push()'s forwarded retire
+            // contract; the batch is consumed exactly once.
+            unsafe { recycle(addr) };
+        }
+    }
+}
+
+/// Batch accounting, called once per non-empty `retire_page`.
+pub(crate) fn note_batch(len: usize) {
+    BATCHES.fetch_add(1, Ordering::Relaxed);
+    BATCH_SLOTS.fetch_add(len as u64, Ordering::Relaxed);
+    crate::counter!(RetireBatch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_class_selection_and_oversize_fallback() {
+        // Small PODs land in the first class; an over-aligned or huge
+        // type is rejected (boxed fallback at alloc time).
+        assert_eq!(class_of::<[u64; 3]>(), Some(0));
+        assert_eq!(class_of::<[u64; 10]>(), Some(1));
+        assert_eq!(class_of::<[u64; 29]>(), Some(2));
+        assert_eq!(class_of::<[u64; 64]>(), None);
+        #[repr(align(64))]
+        struct Wide([u8; 8]);
+        assert_eq!(class_of::<Wide>(), None);
+    }
+
+    #[test]
+    fn test_alloc_free_roundtrip_reuses_slot() {
+        // Hold the toggle lock: a parallel alloc-ablation test flipping
+        // the pool off mid-roundtrip would break the reuse assertion.
+        let _toggle = TOGGLE_TEST_LOCK
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let p = alloc_node([7u64, 8, 9]);
+        assert_eq!(unsafe { (*p)[2] }, 9);
+        unsafe { free_node_now(p) };
+        // LIFO free list: the very next alloc of the same class must
+        // reuse the slot (pool enabled by default).
+        if enabled() {
+            let q = alloc_node([1u64, 2, 3]);
+            assert_eq!(q as usize, p as usize, "slot not recycled");
+            unsafe { free_node_now(q) };
+        }
+    }
+
+    #[test]
+    fn test_boxed_fallback_roundtrip() {
+        // Oversize type: always the headered heap fallback, and the
+        // header routes the free correctly.
+        let p = alloc_node([42u64; 64]);
+        assert_eq!(unsafe { (*p)[63] }, 42);
+        unsafe { free_node_now(p) };
+        // Dropping a value with a destructor through the fallback.
+        let s = alloc_node(String::from("pooled?"));
+        unsafe { free_node_now(s) };
+    }
+
+    #[test]
+    fn test_page_batch_drop_recycles_all() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        struct D(Arc<AtomicUsize>);
+        impl Drop for D {
+            fn drop(&mut self) {
+                self.0.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let drops = Arc::new(AtomicUsize::new(0));
+        let mut batch = PageBatch::with_capacity(8);
+        for _ in 0..8 {
+            let p = alloc_node(D(Arc::clone(&drops)));
+            unsafe { batch.push(p) };
+        }
+        assert_eq!(batch.len(), 8);
+        drop(batch);
+        assert_eq!(drops.load(Ordering::SeqCst), 8, "batch leaked nodes");
+    }
+}

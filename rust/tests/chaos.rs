@@ -12,7 +12,9 @@
 //! fires, so they degrade to plain concurrency tests of the same
 //! invariants (and the injected-count assertions are gated off).
 
-use big_atomics::fault::chaos::{self, jitter, kill_copier, kill_worker, stall_drainer};
+use big_atomics::fault::chaos::{
+    self, jitter, kill_allocator, kill_copier, kill_worker, stall_drainer,
+};
 
 /// Fail with the full report (notes + violations) — `assert!(rep.ok())`
 /// alone would hide the violation list.
@@ -52,6 +54,19 @@ fn test_chaos_kill_worker_pinned_seed() {
 }
 
 #[test]
+fn test_chaos_kill_allocator_pinned_seeds() {
+    for seed in [0xC4A0_5u64, 13] {
+        let rep = kill_allocator(seed);
+        assert_survived(&rep);
+        // Every scenario thread starts with empty free lists, so the
+        // first chain-node allocation walks the page-claim path and the
+        // one-shot kill is guaranteed a window under the feature.
+        #[cfg(feature = "fault")]
+        assert!(rep.injected > 0, "kill-allocator plan never fired: {rep}");
+    }
+}
+
+#[test]
 fn test_chaos_jitter_pinned_seed() {
     let rep = jitter(0xC4A0_5, 0.3);
     assert_survived(&rep);
@@ -62,7 +77,7 @@ fn test_chaos_jitter_pinned_seed() {
 #[test]
 fn test_chaos_run_all_dispatch() {
     let reports = chaos::run(3, "all", 0.2).expect("'all' is a valid plan name");
-    assert_eq!(reports.len(), 4, "all = every scenario");
+    assert_eq!(reports.len(), 5, "all = every scenario");
     for rep in &reports {
         assert_survived(rep);
     }

@@ -25,7 +25,8 @@ use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use big_atomics::atomics::{BigAtomic, CachedMemEff, Words};
-use big_atomics::hash::{CacheHash, ConcurrentMap, LinkVal};
+use big_atomics::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal};
+use big_atomics::smr::pool::{self, PageBatch};
 use big_atomics::smr::{epoch, Epoch, Hazard, Smr};
 use big_atomics::util::ordering::{DefaultPolicy, Fenced, SeqCstEverywhere};
 
@@ -572,4 +573,470 @@ fn test_epoch_pin_released_on_unwind() {
     // Eventually freed ⇒ the epoch advanced FREE_DISTANCE times past
     // the stamp ⇒ no announcement from the panicked frames remains.
     collect_until::<Epoch<DefaultPolicy>>(&drops, 1, "post-panic epoch advance");
+}
+
+// ---------------------------------------------------------------------------
+// smr::pool — the page-pool node allocator + batched retirement.
+//
+// Determinism notes: a thread's free list is TLS and LIFO, so
+// single-threaded slot-reuse assertions are exact *between* collects;
+// during a collect, orphan drains may recycle other tests' nodes onto
+// this thread's list, so reuse scans are bounded searches rather than
+// head-equality. `pool::stats()` counters are global and monotonic —
+// only lower-bound deltas are asserted.
+// ---------------------------------------------------------------------------
+
+/// Alloc→retire churn through the pool, several pages deep, generic
+/// over the scheme: every node's payload must drop exactly once.
+fn pool_alloc_retire_churn<S: Smr>() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let s0 = pool::stats();
+    let rounds = 4 * pool::PAGE_SLOTS;
+    for i in 0..rounds {
+        let p = pool::alloc_node(Counted {
+            drops: Arc::clone(&drops),
+            payload: i as u64,
+        });
+        assert_eq!(unsafe { (*p).payload }, i as u64);
+        unsafe { pool::retire_node::<S, Counted>(p) };
+    }
+    collect_until::<S>(&drops, rounds, "pool alloc/retire churn");
+    let s1 = pool::stats();
+    assert!(s1.pages >= s0.pages, "page counter went backwards");
+}
+
+#[test]
+fn test_pool_alloc_retire_churn_hazard() {
+    pool_alloc_retire_churn::<Hazard>();
+}
+
+#[test]
+fn test_pool_alloc_retire_churn_epoch() {
+    pool_alloc_retire_churn::<Epoch>();
+}
+
+/// While a hazard pointer protects a pooled node, the node is never
+/// freed and its slot is never handed back out; after release it is
+/// freed and (LIFO list) eventually re-issued.
+#[test]
+fn test_pool_protected_slot_not_reused_hazard() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let scratch = Arc::new(AtomicUsize::new(0));
+    let node = pool::alloc_node(Counted {
+        drops: Arc::clone(&drops),
+        payload: 11,
+    });
+    let addr = node as usize;
+    let src = AtomicPtr::new(node);
+    let g = Hazard::pin();
+    let p = g.protect_ptr(&src);
+    assert_eq!(p, node);
+    unsafe { pool::retire_node::<Hazard, Counted>(p) };
+    for _ in 0..64 {
+        Hazard::collect();
+    }
+    assert_eq!(drops.load(Ordering::SeqCst), 0, "freed while protected");
+    // The retired-but-protected slot is in neither the free list nor
+    // any claimable page: no same-class allocation may return it.
+    let mut held = Vec::new();
+    for i in 0..2 * pool::PAGE_SLOTS {
+        let q = pool::alloc_node(Counted {
+            drops: Arc::clone(&scratch),
+            payload: 1_000 + i as u64,
+        });
+        assert_ne!(q as usize, addr, "protected slot handed out");
+        held.push(q);
+    }
+    for q in held {
+        unsafe { pool::free_node_now(q) };
+    }
+    drop(g);
+    collect_until::<Hazard>(&drops, 1, "post-release pool free");
+    // The slot is back on this thread's LIFO list now (possibly below
+    // nodes recycled from orphan drains during the collects): a bounded
+    // scan of fresh allocations must re-issue the exact address.
+    let mut seen = Vec::new();
+    let mut reissued = false;
+    for i in 0..100_000 {
+        let q = pool::alloc_node(Counted {
+            drops: Arc::clone(&scratch),
+            payload: 2_000 + i as u64,
+        });
+        let hit = q as usize == addr;
+        seen.push(q);
+        if hit {
+            reissued = true;
+            break;
+        }
+    }
+    for q in seen {
+        unsafe { pool::free_node_now(q) };
+    }
+    assert!(reissued, "released slot never recycled");
+}
+
+/// Epoch flavor: this thread's own pin stalls the epoch, so a node
+/// retired under it can never be freed or re-issued until the unpin.
+#[test]
+fn test_pool_protected_slot_not_reused_epoch() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let scratch = Arc::new(AtomicUsize::new(0));
+    let g = epoch::pin();
+    let node = pool::alloc_node(Counted {
+        drops: Arc::clone(&drops),
+        payload: 13,
+    });
+    let addr = node as usize;
+    unsafe { pool::retire_node::<Epoch, Counted>(node) };
+    for _ in 0..64 {
+        Epoch::collect();
+    }
+    assert_eq!(drops.load(Ordering::SeqCst), 0, "freed under a live pin");
+    let mut held = Vec::new();
+    for i in 0..2 * pool::PAGE_SLOTS {
+        let q = pool::alloc_node(Counted {
+            drops: Arc::clone(&scratch),
+            payload: 3_000 + i as u64,
+        });
+        assert_ne!(q as usize, addr, "pinned-retired slot handed out");
+        held.push(q);
+    }
+    for q in held {
+        unsafe { pool::free_node_now(q) };
+    }
+    drop(g);
+    collect_until::<Epoch>(&drops, 1, "post-unpin pool free");
+}
+
+/// A `retire_page` batch is one unit under the hazard scan: one
+/// protected interior slot keeps EVERY slot of the batch live (the
+/// page-granularity `probe_batch`), and the release frees them all.
+#[test]
+fn test_retire_page_whole_batch_live_while_one_slot_protected() {
+    const N: usize = 8;
+    let drops = Arc::new(AtomicUsize::new(0));
+    let ptrs: Vec<*mut Counted> = (0..N)
+        .map(|i| {
+            pool::alloc_node(Counted {
+                drops: Arc::clone(&drops),
+                payload: i as u64,
+            })
+        })
+        .collect();
+    // Protect one interior node, then retire the whole page batch.
+    let src = AtomicPtr::new(ptrs[N / 2]);
+    let g = Hazard::pin();
+    let p = g.protect_ptr(&src);
+    assert_eq!(p, ptrs[N / 2]);
+    let mut batch = PageBatch::with_capacity(N);
+    for q in &ptrs {
+        unsafe { batch.push(*q) };
+    }
+    assert_eq!(batch.len(), N);
+    let s0 = pool::stats();
+    unsafe { Hazard::retire_page(batch) };
+    let s1 = pool::stats();
+    assert!(s1.batches > s0.batches, "batch not counted");
+    assert!(
+        s1.batch_slots - s0.batch_slots >= N as u64,
+        "batch slots not counted"
+    );
+    for _ in 0..64 {
+        Hazard::collect();
+    }
+    assert_eq!(
+        drops.load(Ordering::SeqCst),
+        0,
+        "batch slots freed while one was protected"
+    );
+    assert_eq!(unsafe { (*p).payload }, (N / 2) as u64);
+    drop(g);
+    collect_until::<Hazard>(&drops, N, "post-release batch free");
+}
+
+/// Epoch flavor: the batch carries one stamp (§3.2-style), so this
+/// thread's pin blocks the whole batch; the unpin releases all of it.
+#[test]
+fn test_retire_page_batch_blocked_by_pin_epoch() {
+    const N: usize = 8;
+    let drops = Arc::new(AtomicUsize::new(0));
+    let g = epoch::pin();
+    let mut batch = PageBatch::with_capacity(N);
+    for i in 0..N {
+        let p = pool::alloc_node(Counted {
+            drops: Arc::clone(&drops),
+            payload: i as u64,
+        });
+        unsafe { batch.push(p) };
+    }
+    unsafe { Epoch::retire_page(batch) };
+    for _ in 0..64 {
+        Epoch::collect();
+    }
+    assert_eq!(drops.load(Ordering::SeqCst), 0, "batch freed under a pin");
+    drop(g);
+    collect_until::<Epoch>(&drops, N, "post-unpin batch free");
+}
+
+/// Census: a page batch is ONE retired entry, not slot-count entries —
+/// the whole point of the batching (`pending_reclaims` counts entries
+/// in the thread bag). Orphan traffic from parallel tests can inflate a
+/// single measurement, so retry until a quiet window.
+#[test]
+fn test_retire_page_is_one_census_entry() {
+    const N: usize = 8;
+    let drops = Arc::new(AtomicUsize::new(0));
+    let mut queued = 0usize;
+    let mut quiet = false;
+    for _ in 0..100 {
+        let before = Hazard::pending_reclaims();
+        let mut batch = PageBatch::with_capacity(N);
+        for i in 0..N {
+            let p = pool::alloc_node(Counted {
+                drops: Arc::clone(&drops),
+                payload: i as u64,
+            });
+            unsafe { batch.push(p) };
+        }
+        unsafe { Hazard::retire_page(batch) };
+        queued += N;
+        let delta = Hazard::pending_reclaims().saturating_sub(before);
+        if delta < N {
+            quiet = true;
+            break;
+        }
+    }
+    assert!(quiet, "retire_page showed up as >= slot-count census entries");
+    collect_until::<Hazard>(&drops, queued, "census batch drain");
+}
+
+/// Empty chains must not inflate the batch census: retiring an empty
+/// batch is a no-op on every counter.
+#[test]
+fn test_retire_page_empty_batch_is_noop() {
+    let s0 = pool::stats();
+    unsafe { Hazard::retire_page(PageBatch::new()) };
+    unsafe { Epoch::retire_page(PageBatch::new()) };
+    let s1 = pool::stats();
+    // Monotonic global counters: other tests may add batches in
+    // parallel, but OUR empty batches added zero slots — the strongest
+    // race-free claim is that slots grew only if batches did.
+    assert!(s1.batch_slots >= s0.batch_slots);
+    if s1.batches == s0.batches {
+        assert_eq!(s1.batch_slots, s0.batch_slots, "slots counted without a batch");
+    }
+}
+
+/// The no-inline chaining table pushed through growth by concurrent
+/// churn: every migrated chain rides the pool and every drained chain
+/// rides `retire_page`, while readers validate key-derived values. A
+/// premature page recycle shows up as a corrupt read or a crash.
+#[test]
+fn test_chaining_pool_growth_under_churn() {
+    let t: Arc<Chaining> = Arc::new(Chaining::new(64));
+    let threads = 3u64;
+    let per = 8_000u64;
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let s0 = pool::stats();
+    let mut handles = Vec::new();
+    for tix in 0..threads {
+        let t = Arc::clone(&t);
+        handles.push(std::thread::spawn(move || {
+            let base = tix * 1_000_000;
+            for i in 0..per {
+                let k = base + i;
+                assert!(t.insert(k, big_atomics::util::rng::mix64(k)));
+                if i % 2 == 1 {
+                    assert!(t.remove(base + i - 1), "churned key lost");
+                }
+            }
+        }));
+    }
+    {
+        let t = Arc::clone(&t);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let k = (i % threads) * 1_000_000 + (i / threads) % per;
+                if let Some(v) = t.find(k) {
+                    assert_eq!(v, big_atomics::util::rng::mix64(k), "corrupt value for {k}");
+                }
+                i += 1;
+            }
+        }));
+    }
+    for h in handles.drain(..threads as usize) {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    for h in handles {
+        h.join().unwrap();
+    }
+    t.finish_resizes();
+    assert!(!t.resize_in_flight());
+    assert!(t.capacity() > 64, "no growth under churn");
+    // Half the keys survive with exact values.
+    for tix in 0..threads {
+        let base = tix * 1_000_000;
+        for i in (1..per).step_by(2) {
+            let k = base + i;
+            assert_eq!(t.find(k), Some(big_atomics::util::rng::mix64(k)), "key {k}");
+        }
+    }
+    // The churn had to claim pages, and the growth had to retire at
+    // least one drained chain as a batch.
+    let s1 = pool::stats();
+    assert!(s1.pages > s0.pages, "churn never claimed a pool page");
+    assert!(s1.batches > s0.batches, "growth never batch-retired a chain");
+}
+
+// ---------------------------------------------------------------------------
+// Retire-bag regression tests: the three drop-path bugs this suite pins.
+// ---------------------------------------------------------------------------
+
+/// Regression (re-entrant retire): a retired value whose own Drop
+/// retires MORE garbage. Pre-fix, `RetireBag::with_items` freed while
+/// the RefCell borrow was held, so the nested `retire` re-borrowed the
+/// same bag and panicked (`BorrowMutError`) in the middle of a free.
+#[test]
+fn test_reentrant_retire_from_drop() {
+    struct Cascade<S: Smr + 'static> {
+        drops: Arc<AtomicUsize>,
+        depth: u32,
+        _scheme: std::marker::PhantomData<S>,
+    }
+    impl<S: Smr + 'static> Drop for Cascade<S> {
+        fn drop(&mut self) {
+            self.drops.fetch_add(1, Ordering::SeqCst);
+            if self.depth > 0 {
+                // The re-entrant call: this runs INSIDE a collect's free
+                // loop, on the same thread, against the same bag.
+                unsafe {
+                    S::retire_box(Box::into_raw(Box::new(Cascade::<S> {
+                        drops: Arc::clone(&self.drops),
+                        depth: self.depth - 1,
+                        _scheme: std::marker::PhantomData,
+                    })))
+                };
+            }
+        }
+    }
+    fn run<S: Smr + 'static>() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        unsafe {
+            S::retire_box(Box::into_raw(Box::new(Cascade::<S> {
+                drops: Arc::clone(&drops),
+                depth: 3,
+                _scheme: std::marker::PhantomData,
+            })))
+        };
+        // Depth 3 cascade = 4 drops total, each freed by a later collect.
+        collect_until::<S>(&drops, 4, "re-entrant retire cascade");
+    }
+    run::<Hazard>();
+    run::<Epoch>();
+}
+
+/// Regression (§5.5 census undercount): `pending_reclaims` used
+/// `try_lock().unwrap_or(0)` for the orphan column and silently
+/// reported zero whenever a concurrent collector held the lock. Park a
+/// protected node on the orphan list (scans keep protected survivors in
+/// place), hammer the lock with collectors, and require the census to
+/// NEVER lose it — post-fix the census takes the lock; pre-fix this
+/// flaked to an undercount exactly under contention.
+#[test]
+fn test_census_counts_orphans_under_lock_contention() {
+    let drops = Arc::new(AtomicUsize::new(0));
+    let node = counted(&drops, 9);
+    let src = AtomicPtr::new(node);
+    let g = Hazard::pin();
+    let p = g.protect_ptr(&src);
+    unsafe { Hazard::retire_box(p) };
+    Hazard::flush_thread_bag(); // park it on the shared orphan list
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let hammer: Vec<_> = (0..2)
+        .map(|_| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    Hazard::collect();
+                }
+            })
+        })
+        .collect();
+    for _ in 0..5_000 {
+        assert!(
+            Hazard::pending_reclaims() >= 1,
+            "census lost a live orphan under lock contention"
+        );
+    }
+    stop.store(true, Ordering::Release);
+    for h in hammer {
+        h.join().unwrap();
+    }
+    drop(g);
+    collect_until::<Hazard>(&drops, 1, "census-contention cleanup");
+}
+
+/// Regression (poisoned drop paths): a panic unwinding out of a node's
+/// Drop mid-collect may poison the bag/orphan mutexes on this thread.
+/// Pre-fix, the next `flush`/`Drop`/census hit `unwrap()` on the
+/// poisoned lock and aborted the process; now every orphan-lock site
+/// recovers via `PoisonError::into_inner`. The bomb never leaves its
+/// own unflushed thread bag, so no other test can trip it.
+#[test]
+fn test_unwind_in_drop_does_not_wedge_reclamation() {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::AtomicBool;
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    struct Bomb {
+        drops: Arc<AtomicUsize>,
+    }
+    impl Drop for Bomb {
+        fn drop(&mut self) {
+            self.drops.fetch_add(1, Ordering::SeqCst);
+            if ARMED.swap(false, Ordering::SeqCst) {
+                panic!("armed drop: unwind through the collect path");
+            }
+        }
+    }
+    fn run<S: Smr + 'static>() {
+        let drops = Arc::new(AtomicUsize::new(0));
+        {
+            let drops = Arc::clone(&drops);
+            std::thread::spawn(move || {
+                ARMED.store(true, Ordering::SeqCst);
+                unsafe {
+                    S::retire_box(Box::into_raw(Box::new(Bomb {
+                        drops: Arc::clone(&drops),
+                    })))
+                };
+                // NO flush: the bomb stays in this thread's local bag,
+                // so only these collects can fire it.
+                let _ = catch_unwind(AssertUnwindSafe(|| {
+                    for _ in 0..100_000 {
+                        S::collect();
+                        if drops.load(Ordering::SeqCst) >= 1 {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }));
+                // Disarm before the exit hook can hand any survivor to
+                // the orphan list where another test would free it.
+                ARMED.store(false, Ordering::SeqCst);
+            })
+            .join()
+            .unwrap();
+        }
+        // Whatever the unwind poisoned, the scheme must keep working:
+        // retire + flush + free from fresh thread state must succeed.
+        let after = Arc::new(AtomicUsize::new(0));
+        unsafe { S::retire_box(counted(&after, 6)) };
+        S::flush_thread_bag();
+        collect_until::<S>(&after, 1, "post-unwind reclamation");
+    }
+    run::<Hazard>();
+    run::<Epoch>();
 }
