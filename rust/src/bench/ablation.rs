@@ -51,7 +51,8 @@ use super::workload::{WorkloadSpec, ZipfCdf};
 use crate::atomics::{
     BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, Indirect, SeqLock, SimpLock, Words,
 };
-use crate::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal};
+use crate::atomics::AtomicValue;
+use crate::hash::{CacheHash, Chaining, ConcurrentMap, Link, LinkVal, Maintain};
 use crate::smr::{Epoch, Hazard, Smr};
 use crate::util::backoff;
 use crate::util::ordering::{DefaultPolicy, Fenced, SeqCstEverywhere};
@@ -285,13 +286,58 @@ pub fn run_smr_table_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
     rep
 }
 
-/// Ablation 6 (`repro ablate --panel resize`): the growth-under-load
-/// panel. Each row drives the update-heavy workload (u=100 over the
-/// full `cfg.n` key space) against an *empty* table, once constructed
-/// undersized at 64 buckets (so the timed region absorbs every doubling
-/// up to the steady-state size) and once pre-sized for `cfg.n` — the
-/// throughput ratio is the online-resize toll, and the reported final
-/// bucket count proves the growth actually ran.
+/// One shrink arm of ablation 6: grow a deliberately undersized table
+/// to its workload peak, drain 15/16 of the keys (well below the
+/// hysteresis band), then drive maintenance until the resize engine is
+/// idle at a stable capacity. Returns (peak buckets, converged buckets,
+/// live-entry estimate, Mop/s over the whole churn, shrink generations).
+fn shrink_arm<K, V, M, FK, FV>(
+    map: M,
+    n: u64,
+    key: FK,
+    val: FV,
+) -> (usize, usize, usize, f64, usize)
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    M: ConcurrentMap<K, V> + Maintain,
+    FK: Fn(u64) -> K,
+    FV: Fn(u64) -> V,
+{
+    let t0 = std::time::Instant::now();
+    for i in 0..n {
+        map.insert(key(i), val(i));
+    }
+    let peak = map.capacity();
+    for i in 0..n * 15 / 16 {
+        map.remove(key(i));
+    }
+    let mut cap = map.capacity();
+    loop {
+        let idle = map.maintain();
+        let now = map.capacity();
+        if idle && now == cap {
+            break;
+        }
+        cap = now;
+    }
+    let ops = (n + n * 15 / 16) as f64;
+    let mops = ops / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
+    (peak, cap, map.occupancy(), mops, map.shrink_generation())
+}
+
+/// Ablation 6 (`repro ablate --panel resize`): the resize panel, both
+/// directions. The grow rows drive the update-heavy workload (u=100
+/// over the full `cfg.n` key space) against an *empty* table, once
+/// constructed undersized at 64 buckets (so the timed region absorbs
+/// every doubling up to the steady-state size) and once pre-sized for
+/// `cfg.n` — the throughput ratio is the online-resize toll, and the
+/// reported final bucket count proves the growth actually ran. The
+/// shrink rows ([`shrink_arm`]) grow, mass-drain, and converge through
+/// maintenance — their `shrink_gens` column must be ≥ 1 and
+/// `final_buckets` below `initial_buckets` (the peak), proving memory
+/// is actually returned; the wide arm runs the same cycle on
+/// `Words<4> → Words<4>` rows (§5.3's multi-word regime).
 pub fn run_resize_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
     let threads = hw_threads().max(2);
     let spec = WorkloadSpec {
@@ -302,7 +348,7 @@ pub fn run_resize_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
     };
     let mut rep = Report::new(
         "ablation_resize",
-        &["map", "initial_buckets", "final_buckets", "entries_est", "mops"],
+        &["map", "initial_buckets", "final_buckets", "entries_est", "mops", "shrink_gens"],
     );
     let mut point = |label: &str, map: Box<dyn ConcurrentMap>| {
         let initial = map.capacity();
@@ -315,6 +361,7 @@ pub fn run_resize_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
             m.capacity().to_string(),
             m.occupancy().to_string(),
             format!("{:.3}", r.mops()),
+            m.shrink_generation().to_string(),
         ]);
     };
     point(
@@ -327,6 +374,45 @@ pub fn run_resize_ablation(cfg: &FigureCfg, source: &OpSource) -> Report {
     );
     point("Chaining(no-inline)/undersized", Box::new(Chaining::new(64)));
     point("Chaining(no-inline)/presized", Box::new(Chaining::new(cfg.n)));
+
+    type ShrinkStats = (usize, usize, usize, f64, usize);
+    let mut shrink_row = |label: &str, (peak, fin, occ, mops, gens): ShrinkStats| {
+        rep.row(vec![
+            label.into(),
+            peak.to_string(),
+            fin.to_string(),
+            occ.to_string(),
+            format!("{mops:.3}"),
+            gens.to_string(),
+        ]);
+    };
+    let n = cfg.n as u64;
+    let mix = crate::util::rng::mix64;
+    shrink_row(
+        "CacheHash(MemEff)/shrink",
+        shrink_arm(
+            CacheHash::<CachedMemEff<LinkVal>>::new(64),
+            n,
+            mix,
+            |i| i,
+        ),
+    );
+    shrink_row(
+        "Chaining(no-inline)/shrink",
+        shrink_arm(Chaining::new(64), n, mix, |i| i),
+    );
+    // Wide arm: checksummed 4-word rows through the same grow → drain →
+    // converge cycle (the §5.3 k-word regime under shrink).
+    type W = Words<4>;
+    shrink_row(
+        "CacheHash(Words4)/shrink-wide",
+        shrink_arm(
+            CacheHash::<CachedMemEff<Link<W, W>>, W, W>::new(64),
+            n,
+            |i| Words([mix(i), i, 0, 0]),
+            |i| Words([i, i.wrapping_mul(3), !i, i ^ i.wrapping_mul(3) ^ !i]),
+        ),
+    );
     rep
 }
 
@@ -569,17 +655,25 @@ mod tests {
             use_artifact: false,
         };
         let rep = run_resize_ablation(&cfg, &OpSource::Rust);
-        // 2 maps x {undersized, presized}.
-        assert_eq!(rep.rows().len(), 4);
+        // 2 maps x {undersized, presized} + 2 shrink arms + 1 wide arm.
+        assert_eq!(rep.rows().len(), 7);
         for row in rep.rows() {
             let initial: usize = row[1].parse().unwrap();
             let fin: usize = row[2].parse().unwrap();
             let _entries: usize = row[3].parse().unwrap();
             assert!(row[4].parse::<f64>().unwrap() > 0.0, "{row:?}");
-            assert!(fin >= initial, "table shrank? {row:?}");
-            if row[0].ends_with("undersized") {
-                assert_eq!(initial, 64, "{row:?}");
-                assert!(fin > 64, "undersized table never grew: {row:?}");
+            let shrinks: usize = row[5].parse().unwrap();
+            if row[0].contains("/shrink") {
+                // Shrink arms: the engine must have returned memory.
+                assert!(shrinks >= 1, "no shrink generation: {row:?}");
+                assert!(fin < initial, "capacity not below peak: {row:?}");
+                assert!(initial > 64, "shrink arm never grew: {row:?}");
+            } else {
+                assert!(fin >= initial, "grow arm shrank? {row:?}");
+                if row[0].ends_with("undersized") {
+                    assert_eq!(initial, 64, "{row:?}");
+                    assert!(fin > 64, "undersized table never grew: {row:?}");
+                }
             }
         }
     }

@@ -20,7 +20,7 @@ use crate::atomics::{
     AtomicArray, BigAtomic, CachedMemEff, CachedWaitFree, Indirect, MemEffDomain, SeqLock,
     SimpLock, Words,
 };
-use crate::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal};
+use crate::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal, Maintain};
 use crate::smr::{epoch, hazard, pool};
 
 const K: usize = 4; // census element size (words)
@@ -60,6 +60,8 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
             "alloc_pages",
             "retire_batches",
             "batch_avg_slots",
+            "shrink_gens",
+            "final_buckets",
         ],
     );
     let mut row = |imp: &str,
@@ -67,7 +69,9 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
                    inline: usize,
                    indirect: usize,
                    pool_bytes: usize,
-                   p0: pool::PoolStats| {
+                   p0: pool::PoolStats,
+                   shrink_gens: usize,
+                   final_buckets: usize| {
         // Pool delta over this row's workload. The counters are global
         // and monotonic, so a concurrent test can only inflate them —
         // never hide a page or batch this row produced.
@@ -87,24 +91,26 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
             (p1.pages - p0.pages).to_string(),
             batches.to_string(),
             format!("{avg:.1}"),
+            shrink_gens.to_string(),
+            final_buckets.to_string(),
         ]);
     };
 
     let p0 = pool::stats();
     let (inline, ind) = census_one::<SeqLock<Words<K>>>(n);
-    row("SeqLock", K, inline, ind, 0, p0);
+    row("SeqLock", K, inline, ind, 0, p0, 0, 0);
 
     let p0 = pool::stats();
     let (inline, ind) = census_one::<SimpLock<Words<K>>>(n);
-    row("SimpLock", K, inline, ind, 0, p0);
+    row("SimpLock", K, inline, ind, 0, p0, 0, 0);
 
     let p0 = pool::stats();
     let (inline, ind) = census_one::<Indirect<Words<K>>>(n);
-    row("Indirect", K, inline, ind, 0, p0);
+    row("Indirect", K, inline, ind, 0, p0, 0, 0);
 
     let p0 = pool::stats();
     let (inline, ind) = census_one::<CachedWaitFree<Words<K>>>(n);
-    row("Cached-WaitFree", K, inline, ind, 0, p0);
+    row("Cached-WaitFree", K, inline, ind, 0, p0, 0, 0);
 
     // MemEff: use a private domain so the pool is attributable.
     let p0 = pool::stats();
@@ -121,38 +127,51 @@ pub fn memory_census(_cfg: &FigureCfg) -> Report {
     // Node overhead: four flag bytes padded to words + the uninstall
     // stamp (see atomics::cached_memeff::Node).
     let pool_bytes = pool_nodes * (std::mem::size_of::<Words<K>>() + 40);
-    row("Cached-MemEff", K, inline, 0, pool_bytes, p0);
+    row("Cached-MemEff", K, inline, 0, pool_bytes, p0, 0, 0);
+
+    // Churn a hash table and let the shrink trigger return its peak
+    // footprint: grow from undersized, delete 15/16 of the keys (well
+    // below the hysteresis band), then drive maintenance until the
+    // resize engine goes idle at a stable capacity.
+    fn churn_and_converge<M: ConcurrentMap + Maintain>(table: &M, n: u64) -> usize {
+        for i in 0..n {
+            table.insert(crate::util::rng::mix64(i), i);
+        }
+        for i in 0..n * 15 / 16 {
+            table.remove(crate::util::rng::mix64(i));
+        }
+        let mut cap = table.capacity();
+        loop {
+            let idle = table.maintain();
+            let now = table.capacity();
+            if idle && now == cap {
+                return now;
+            }
+            cap = now;
+        }
+    }
 
     // The epoch-backed configuration (§4: chain links protected by
     // epochs): start the table undersized so the n inserts force online
     // growth — each drained chain becomes one `retire_page` batch — then
-    // delete half so the path-copied prefixes and promoted heads become
-    // epoch garbage the hazard column cannot see. LinkVal is 3 words
+    // delete most entries so the path-copied prefixes and promoted heads
+    // become epoch garbage the hazard column cannot see, and the shrink
+    // columns prove memory is actually returned. LinkVal is 3 words
     // (the k column).
     let p0 = pool::stats();
     let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(64);
-    for i in 0..n as u64 {
-        table.insert(crate::util::rng::mix64(i), i);
-    }
-    for i in 0..n as u64 / 2 {
-        table.remove(crate::util::rng::mix64(i));
-    }
-    let inline = table.capacity() * std::mem::size_of::<CachedMemEff<LinkVal>>();
-    row("CacheHash(MemEff)", 3, inline, 0, 0, p0);
+    let cap = churn_and_converge(&table, n as u64);
+    let inline = cap * std::mem::size_of::<CachedMemEff<LinkVal>>();
+    row("CacheHash(MemEff)", 3, inline, 0, 0, p0, table.shrink_generation(), cap);
 
     // The no-inline chaining table under the same churn: every entry
     // lives in a pooled chain node, so its allocation-rate and batch
     // columns isolate the pool's behavior without the inline-slot tier.
     let p0 = pool::stats();
     let table: Chaining = Chaining::new(64);
-    for i in 0..n as u64 {
-        table.insert(crate::util::rng::mix64(i), i);
-    }
-    for i in 0..n as u64 / 2 {
-        table.remove(crate::util::rng::mix64(i));
-    }
-    let inline = table.capacity() * std::mem::size_of::<usize>();
-    row("Chaining(no-inline)", 3, inline, 0, 0, p0);
+    let cap = churn_and_converge(&table, n as u64);
+    let inline = cap * std::mem::size_of::<usize>();
+    row("Chaining(no-inline)", 3, inline, 0, 0, p0, table.shrink_generation(), cap);
 
     rep
 }
@@ -181,6 +200,8 @@ mod tests {
             let _pages: u64 = r[8].parse().unwrap();
             let _batches: u64 = r[9].parse().unwrap();
             let _avg: f64 = r[10].parse().unwrap();
+            let _shrinks: usize = r[11].parse().unwrap();
+            let _final_buckets: usize = r[12].parse().unwrap();
         }
         // Both hash-table rows start undersized, so growth is forced and
         // every drained chain rides a retire_page batch: pages claimed
@@ -210,5 +231,18 @@ mod tests {
         let ch = rows.iter().find(|r| r[0] == "CacheHash(MemEff)").unwrap();
         let retired_epoch: usize = ch[7].parse().unwrap();
         assert!(retired_epoch > 0, "epoch census column still blind");
+        // Both hash rows drain 15/16 of their keys then converge through
+        // maintenance: the shrink columns must prove the peak footprint
+        // was returned (at least one shrink, final capacity below peak).
+        for imp in ["CacheHash(MemEff)", "Chaining(no-inline)"] {
+            let r = rows.iter().find(|r| r[0] == imp).unwrap();
+            let shrinks: usize = r[11].parse().unwrap();
+            let final_buckets: usize = r[12].parse().unwrap();
+            assert!(shrinks >= 1, "{imp}: no shrink generation completed");
+            assert!(
+                final_buckets < 1 << 14,
+                "{imp}: capacity {final_buckets} not below peak"
+            );
+        }
     }
 }

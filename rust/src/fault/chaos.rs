@@ -18,6 +18,13 @@
 //! * [`kill_allocator`] — kill a thread at the top of the page pool's
 //!   claim path during chain-heavy churn; the pool must stay live (no
 //!   lock or page leaked by the dying claimant) and the table exact.
+//! * [`kill_copier_shrink`] — the kill-copier windows armed while the
+//!   migration runs in the *shrink* direction: a drained table's
+//!   maintenance passes die at stripe claims and FROZEN seals, yet the
+//!   table must converge below its peak with every kept key exact.
+//! * [`kill_migrator`] — kill the background migrator mid-copy and at
+//!   the DONE publish; its per-pass supervision must absorb the deaths
+//!   and a later pass must still drive the table to convergence.
 //! * [`jitter`] — no kills, broad delays/yields/spurious CAS failures
 //!   over a full KV run; pure schedule-shaking, same ledger checks.
 //!
@@ -600,6 +607,226 @@ pub fn kill_allocator(seed: u64) -> ChaosReport {
     }
 }
 
+/// Kill-the-copier, shrink direction: a drained table converging
+/// through maintenance while copiers die in the seal/claim windows.
+///
+/// Grows an undersized [`CacheHash`] to several thousand keys
+/// (unarmed), drains 15/16 of them (still unarmed, so presence is
+/// exact), then arms `kill-copier-shrink` and drives [`Maintain`]
+/// passes under per-pass `catch_unwind` — the failpoints are
+/// direction-agnostic, and with the grow phase already complete every
+/// hit lands inside a *shrink* migration. The kills abandon claimed
+/// stripes and sealed buckets mid-shrink; later passes must re-cover
+/// them (the same takeover/sweep machinery as grow), and the table
+/// must converge below its peak with at least one shrink generation,
+/// every kept key exact, and every drained key still absent.
+pub fn kill_copier_shrink(seed: u64) -> ChaosReport {
+    use crate::hash::Maintain;
+
+    let _serial = scenario_lock();
+    let _disarm = ClearGuard;
+    let injected0 = injected();
+
+    const N: u64 = 4096;
+    let value_of = |k: u64| k ^ 0x5811_11E5;
+    let table: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(2);
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+
+    // Unarmed grow + drain: presence below is exact, and every armed
+    // failpoint hit afterwards belongs to a shrink-direction migration.
+    for i in 0..N {
+        table.insert(mix64(i + 1), value_of(mix64(i + 1)));
+    }
+    table.finish_resizes();
+    let peak = table.capacity();
+    for i in 0..N {
+        if i % 16 != 0 {
+            table.remove(mix64(i + 1));
+        }
+    }
+
+    if let Some(plan) = FaultPlan::named("kill-copier-shrink", seed) {
+        plan.install();
+    }
+    let mut panics = 0u64;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut cap = table.capacity();
+    loop {
+        // A killed pass abandons its stripe mid-shrink; the next pass
+        // must take the orphaned work over.
+        let idle = match catch_unwind(AssertUnwindSafe(|| table.maintain())) {
+            Ok(idle) => idle,
+            Err(_) => {
+                panics += 1;
+                false
+            }
+        };
+        let now = table.capacity();
+        if idle && now == cap {
+            break;
+        }
+        cap = now;
+        if Instant::now() > deadline {
+            violations.push("shrink never converged across copier deaths".into());
+            break;
+        }
+    }
+    clear_plan();
+    table.finish_resizes();
+
+    if table.shrink_generation() == 0 {
+        violations.push("no shrink generation completed".into());
+    }
+    if table.capacity() >= peak {
+        violations.push(format!(
+            "capacity {} not below peak {peak} after mass drain",
+            table.capacity()
+        ));
+    }
+    for i in 0..N {
+        let key = mix64(i + 1);
+        match (i % 16 == 0, table.find(key)) {
+            (true, Some(v)) if v == value_of(key) => {}
+            (true, Some(v)) => {
+                violations.push(format!("kept key {key:#x}: wrong value {v:#x}"))
+            }
+            (true, None) => {
+                violations.push(format!("kept key {key:#x} lost across shrink kills"))
+            }
+            (false, Some(_)) => {
+                violations.push(format!("drained key {key:#x} resurrected by shrink"))
+            }
+            (false, None) => {}
+        }
+    }
+    notes.push(format!(
+        "{panics} maintenance pass(es) killed; {peak} → {} buckets over {} shrink gen(s)",
+        table.capacity(),
+        table.shrink_generation()
+    ));
+
+    ChaosReport {
+        scenario: "kill-copier-shrink",
+        seed,
+        injected: injected() - injected0,
+        violations,
+        notes,
+    }
+}
+
+/// Kill-the-migrator: the [`BackgroundMigrator`] thread under injected
+/// deaths inside its own `finish_resizes` passes.
+///
+/// Same grow-then-drain setup as [`kill_copier_shrink`], but the
+/// convergence is driven entirely by a spawned [`BackgroundMigrator`]
+/// (zero foreground help) while `kill-migrator` kills its passes
+/// between per-entry copies and at the DONE publish. The migrator's
+/// per-pass supervision must count the deaths and keep going, and the
+/// quiescent table must still reach `resize_in_flight() == false`
+/// below its peak capacity with every surviving key exact.
+pub fn kill_migrator(seed: u64) -> ChaosReport {
+    use crate::hash::{BackgroundMigrator, Maintain};
+    use std::sync::Arc;
+
+    let _serial = scenario_lock();
+    let _disarm = ClearGuard;
+    let injected0 = injected();
+
+    const N: u64 = 4096;
+    let value_of = |k: u64| k ^ 0x317_A702; // "MIGRATOR"-ish
+    let table: Arc<CacheHash<CachedMemEff<LinkVal>>> = Arc::new(CacheHash::new(2));
+    let mut violations = Vec::new();
+    let mut notes = Vec::new();
+
+    for i in 0..N {
+        table.insert(mix64(i + 1), value_of(mix64(i + 1)));
+    }
+    table.finish_resizes();
+    let peak = table.capacity();
+    for i in 0..N {
+        if i % 16 != 0 {
+            table.remove(mix64(i + 1));
+        }
+    }
+
+    if let Some(plan) = FaultPlan::named("kill-migrator", seed) {
+        plan.install();
+    }
+    let migrator = BackgroundMigrator::spawn(
+        vec![Arc::clone(&table) as Arc<dyn Maintain>],
+        Duration::from_micros(200),
+    );
+    // Zero foreground ops from here: the migrator alone must converge,
+    // absorbing its own injected deaths. Stability = idle and capacity
+    // unchanged across a few consecutive polls.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut stable = 0u32;
+    let mut cap = table.capacity();
+    while stable < 5 {
+        std::thread::sleep(Duration::from_millis(2));
+        let now = table.capacity();
+        if !table.resize_in_flight() && now == cap {
+            stable += 1;
+        } else {
+            stable = 0;
+        }
+        cap = now;
+        if Instant::now() > deadline {
+            violations.push("background migrator never converged across kills".into());
+            break;
+        }
+    }
+    let pass_deaths = migrator.panics();
+    migrator.stop();
+    clear_plan();
+    table.finish_resizes();
+
+    let fired = injected() - injected0;
+    if fired > 0 && pass_deaths == 0 {
+        violations
+            .push("a kill fired but no migrator pass death was caught (supervision hole)".into());
+    }
+    if table.shrink_generation() == 0 {
+        violations.push("no shrink generation completed".into());
+    }
+    if table.capacity() >= peak {
+        violations.push(format!(
+            "capacity {} not below peak {peak} after quiescent convergence",
+            table.capacity()
+        ));
+    }
+    for i in 0..N {
+        let key = mix64(i + 1);
+        match (i % 16 == 0, table.find(key)) {
+            (true, Some(v)) if v == value_of(key) => {}
+            (true, Some(v)) => {
+                violations.push(format!("kept key {key:#x}: wrong value {v:#x}"))
+            }
+            (true, None) => {
+                violations.push(format!("kept key {key:#x} lost across migrator death"))
+            }
+            (false, Some(_)) => {
+                violations.push(format!("drained key {key:#x} resurrected by migrator"))
+            }
+            (false, None) => {}
+        }
+    }
+    notes.push(format!(
+        "{pass_deaths} migrator pass(es) killed; {peak} → {} buckets over {} shrink gen(s)",
+        table.capacity(),
+        table.shrink_generation()
+    ));
+
+    ChaosReport {
+        scenario: "kill-migrator",
+        seed,
+        injected: fired,
+        violations,
+        notes,
+    }
+}
+
 /// Jitter: no kills — broad delays/yields/spurious CAS failures across
 /// every protocol point during a full KV run. Shakes out interleavings;
 /// the ledger and accounting checks are the same as [`kill_worker`]'s.
@@ -664,8 +891,8 @@ pub fn jitter(seed: u64, secs: f64) -> ChaosReport {
 }
 
 /// Run one named scenario (`plan` = `kill-copier` | `stall-drainer` |
-/// `kill-worker` | `kill-allocator` | `jitter`), or all of them when
-/// `plan` is empty.
+/// `kill-worker` | `kill-allocator` | `kill-copier-shrink` |
+/// `kill-migrator` | `jitter`), or all of them when `plan` is empty.
 pub fn run(seed: u64, plan: &str, secs: f64) -> Result<Vec<ChaosReport>> {
     let reports = match plan {
         "" | "all" => vec![
@@ -673,15 +900,20 @@ pub fn run(seed: u64, plan: &str, secs: f64) -> Result<Vec<ChaosReport>> {
             stall_drainer(seed),
             kill_worker(seed, secs),
             kill_allocator(seed),
+            kill_copier_shrink(seed),
+            kill_migrator(seed),
             jitter(seed, secs),
         ],
         "kill-copier" => vec![kill_copier(seed)],
         "stall-drainer" => vec![stall_drainer(seed)],
         "kill-worker" => vec![kill_worker(seed, secs)],
         "kill-allocator" => vec![kill_allocator(seed)],
+        "kill-copier-shrink" => vec![kill_copier_shrink(seed)],
+        "kill-migrator" => vec![kill_migrator(seed)],
         "jitter" => vec![jitter(seed, secs)],
         other => crate::bail!(
-            "chaos plan {other}: use kill-copier|stall-drainer|kill-worker|kill-allocator|jitter|all"
+            "chaos plan {other}: use kill-copier|stall-drainer|kill-worker|kill-allocator|\
+             kill-copier-shrink|kill-migrator|jitter|all"
         ),
     };
     Ok(reports)

@@ -278,6 +278,13 @@ impl FaultPlan {
     /// - `kill-worker`: kill a KV worker mid-serve, once.
     /// - `kill-allocator`: kill a thread at the top of the pool's
     ///   page-claim path, once — modeling a crash at an allocation miss.
+    /// - `kill-copier-shrink`: same windows as `kill-copier`, armed
+    ///   while the migration runs in the *shrink* direction (the
+    ///   failpoints are direction-agnostic; the scenario provides the
+    ///   drained table).
+    /// - `kill-migrator`: kill a background maintenance pass mid-copy
+    ///   (between per-entry copies) and at the DONE publish — the
+    ///   migrator thread must absorb the death and converge anyway.
     /// - `jitter`: no kills — broad delays/yields/spurious CAS failures
     ///   across every retry-loop point, shaking out interleavings.
     pub fn named(name: &str, seed: u64) -> Option<Self> {
@@ -313,6 +320,32 @@ impl FaultPlan {
                 one_in: 1,
                 max: 1,
             }),
+            "kill-copier-shrink" => Self::new(seed)
+                .with_rule(Rule {
+                    point: Point::ResizeSealFrozen,
+                    action: FaultAction::Kill,
+                    one_in: 1,
+                    max: 1,
+                })
+                .with_rule(Rule {
+                    point: Point::ResizeStripeClaim,
+                    action: FaultAction::Kill,
+                    one_in: 2,
+                    max: 1,
+                }),
+            "kill-migrator" => Self::new(seed)
+                .with_rule(Rule {
+                    point: Point::ResizeCopyEntry,
+                    action: FaultAction::Kill,
+                    one_in: 1,
+                    max: 1,
+                })
+                .with_rule(Rule {
+                    point: Point::ResizePublishDone,
+                    action: FaultAction::Kill,
+                    one_in: 3,
+                    max: 1,
+                }),
             "jitter" => {
                 let mut plan = Self::new(seed);
                 for p in Point::ALL {
@@ -582,6 +615,8 @@ mod tests {
             "stall-drainer",
             "kill-worker",
             "kill-allocator",
+            "kill-copier-shrink",
+            "kill-migrator",
             "jitter",
         ] {
             assert!(FaultPlan::named(name, 7).is_some(), "{name} missing");

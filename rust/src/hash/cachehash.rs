@@ -18,43 +18,20 @@
 //!
 //! ## Online resize
 //!
-//! The table is a generation chain: the live generation is published
-//! through `root`, and a growth (triggered when a per-stripe occupancy
-//! estimate crosses [`GROW_LOAD_FACTOR`]) publishes a
-//! [`ResizeState`](super::ResizeState) descriptor — (old table, new
-//! table, stripe cursor) — through a `SeqLock` big atomic.  Every
-//! *update* entering the map claims one stripe of source buckets with
-//! the witnessing `compare_exchange` on the cursor and migrates it:
+//! Both directions (grow *and* shrink) run through the shared
+//! [`resize`](super::resize) engine — descriptor lifecycle, stripe
+//! claims, FROZEN→CLOSING→DONE seals, census-fenced copier takeover,
+//! drained-table retirement, and the hysteresis triggers all live
+//! there. This file contributes only the [`ResizeTable`] surface: the
+//! big-atomic [`Link`] bucket encoding, `copy_image` (re-hash the
+//! inlined pair + chain into the destination, insert-if-absent), and
+//! page-batched chain retirement.
 //!
-//! 1. **seal** — CAS the source bucket to its FROZEN image (same key /
-//!    value / chain, FORWARDED tag set).  The seal winner is the
-//!    *preferred* copier — but not a single point of failure: updates
-//!    that land on a FROZEN bucket wait a bounded number of beats and
-//!    then re-run the copy themselves (takeover), so a copier that
-//!    stalls or dies delays the bucket, never wedges it.  `find`s read
-//!    the frozen content in place — the frozen image *is* the current
-//!    state, because no mutation of those keys can complete before the
-//!    DONE transition.
-//! 2. **copy** — re-hash the inlined pair and every chain node into the
-//!    destination (fresh allocations; insert-if-absent, so concurrent
-//!    copiers of the same immutable image are idempotent). Copiers
-//!    announce themselves through the [`census`](super::census)
-//!    (announce → re-validate FROZEN → copy, RAII-cleared on unwind).
-//! 3. **CLOSING** — CAS FROZEN → the same image with the CLOSING mark:
-//!    no new copier joins past this point (the census validation
-//!    rejects it), and the publisher waits until no rival copier is
-//!    still announced — the fence that keeps every destination write
-//!    pre-DONE.
-//! 4. **DONE** — CAS CLOSING → the empty-forwarded sentinel.  From this
-//!    (big-atomic, hence linearizable) transition on, readers and
-//!    updaters fall through old → new, and the drained chain is retired
-//!    through the epoch scheme — by the unique transition winner.
-//!
-//! `find` therefore stays lock-free throughout: it never helps, never
-//! waits, and crosses generations only over DONE seal marks.  The
-//! drained table itself is retired with `S::retire_box` once every
-//! bucket is DONE — `RegionSmr` guarantees a pinned reader mid-fall-
-//! through cannot see a freed table.
+//! `find` stays lock-free throughout a migration: it never helps, never
+//! waits, reads FROZEN content in place, and crosses generations only
+//! over DONE seal marks. The drained table itself is retired with
+//! `S::retire_box` once every bucket is DONE — `RegionSmr` guarantees a
+//! pinned reader mid-fall-through cannot see a freed table.
 //!
 //! Chain traversals are unbounded, so reclamation needs a
 //! *region-grained* scheme ([`RegionSmr`]): epoch-based by default (§4:
@@ -69,7 +46,8 @@ use std::marker::PhantomData;
 use std::ptr::null_mut;
 use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
 
-use super::{bucket_for, census, table_capacity, ConcurrentMap, ResizeState};
+use super::resize::{self, Maintain, ResizeTable, FROZEN_PATIENCE, OCCUPANCY_STRIPE};
+use super::{bucket_for, table_capacity, ConcurrentMap, ResizeState};
 use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
 use crate::smr::{pool, Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
@@ -114,22 +92,6 @@ const FORWARDED: u64 = 2;
 /// nodes are 8-byte aligned, so bit 2 of the pointer is free.
 const CLOSING: u64 = 4;
 const TAG_MASK: u64 = OCCUPIED | FORWARDED | CLOSING;
-
-/// Source buckets migrated per helper claim (one stripe).
-const MIGRATION_STRIPE: usize = 64;
-
-/// Snoozes an update grants a FROZEN bucket's copier before copying the
-/// bucket out itself (the copier may be preempted — or dead).
-const FROZEN_PATIENCE: u32 = 16;
-
-/// Buckets covered by one occupancy counter (the growth estimator's
-/// grain — matches the migration stripe).
-const OCCUPANCY_STRIPE: usize = 64;
-
-/// Grow when a stripe's live-entry estimate exceeds this multiple of
-/// its bucket count (estimated load factor threshold — the paper's
-/// design point is load factor one; beyond ~2 the chains dominate).
-const GROW_LOAD_FACTOR: usize = 2;
 
 impl<K: AtomicValue, V: AtomicValue> Link<K, V> {
     /// An unoccupied bucket value.
@@ -217,9 +179,11 @@ struct ChainNode<K, V> {
     next: *mut ChainNode<K, V>,
 }
 
-/// One generation of the bucket array. Resizes allocate a fresh, larger
-/// `Table`, migrate into it, and epoch-retire the drained source.
-struct Table<A, K, V>
+/// One generation of the bucket array. Resizes allocate a fresh (larger
+/// or smaller) `Table`, migrate into it, and epoch-retire the drained
+/// source. Public only because it is the [`ResizeTable::Table`]
+/// associated type; its fields and methods are module-private.
+pub struct Table<A, K, V>
 where
     K: AtomicValue,
     V: AtomicValue,
@@ -307,8 +271,12 @@ where
     /// The migration descriptor (see [`ResizeState`]); a `SeqLock` big
     /// atomic so stripe claims are witness-fed CASes.
     resize: SeqLock<ResizeState>,
-    /// Completed growths (each retired one drained table through `S`).
+    /// Completed grows (each retired one drained table through `S`).
     generations: AtomicUsize,
+    /// Completed shrinks (the engine's other direction).
+    shrink_generations: AtomicUsize,
+    /// Construction-time capacity: shrink never halves below this.
+    floor: usize,
     name: &'static str,
     _kv: PhantomData<(Link<K, V>, fn() -> S)>,
 }
@@ -341,50 +309,20 @@ where
 {
     /// A table with capacity for ~`n` entries at load factor one.
     /// Undershooting is no longer fatal: the table grows online once the
-    /// estimated load factor crosses [`GROW_LOAD_FACTOR`].
+    /// estimated load factor crosses the engine's
+    /// [`GROW_LOAD_FACTOR`](resize::GROW_LOAD_FACTOR) — and drains back
+    /// down (never below this construction capacity) once it falls under
+    /// the shrink band.
     pub fn new(n: usize) -> Self {
         let cap = table_capacity(n);
         Self {
             root: AtomicPtr::new(Box::into_raw(Box::new(Table::new(cap)))),
             resize: SeqLock::new(ResizeState::default()),
             generations: AtomicUsize::new(0),
+            shrink_generations: AtomicUsize::new(0),
+            floor: cap,
             name: A::name(),
             _kv: PhantomData,
-        }
-    }
-
-    /// The live root table.
-    ///
-    /// # Safety (internal)
-    /// Callers must hold the region pin: drained tables are only
-    /// epoch-retired, so the reference stays valid for the pin's
-    /// lifetime even across concurrent resizes.
-    #[inline]
-    fn root_table(&self) -> &Table<A, K, V> {
-        // Ordering: Acquire — pairs with the Release root swing in
-        // `finish_resize` so the promoted table's contents are visible.
-        unsafe { &*self.root.load(Ordering::Acquire) }
-    }
-
-    /// The table a DONE seal mark in `t` forwards to: the in-flight
-    /// migration's destination when the descriptor matches `t` *and*
-    /// the root, else the (necessarily newer) root.
-    fn table_after(&self, t: &Table<A, K, V>) -> &Table<A, K, V> {
-        let rs = self.resize.load();
-        let root = self.root.load(Ordering::Acquire);
-        let tp = t as *const Table<A, K, V> as u64;
-        if rs.in_flight() && rs.old == root as u64 && rs.old == tp {
-            // SAFETY: the descriptor matches the live root, so `new` is
-            // the live in-flight destination — pinned-protected like
-            // every table.
-            unsafe { &*(rs.new as *const Table<A, K, V>) }
-        } else {
-            // The migration that sealed `t` has completed (the root is
-            // swung before the descriptor is cleared), or a later one is
-            // in flight: restart from the root, which is strictly newer
-            // than `t`.
-            // SAFETY: root is live under the caller's pin.
-            unsafe { &*root }
         }
     }
 
@@ -409,344 +347,23 @@ where
         self.resize.load().in_flight()
     }
 
-    /// Completed growths (old tables retired through `S`).
+    /// Completed grows (old tables retired through `S`).
     pub fn generation(&self) -> usize {
         self.generations.load(Ordering::Acquire)
     }
 
-    /// Drive any in-flight migration to completion — a cooperative
-    /// helper for maintenance threads, drops, and tests; normal updates
-    /// migrate one stripe at a time.
-    ///
-    /// Stall-proof: once the cursor is exhausted, this does not merely
-    /// wait for stragglers — it *sweeps* every not-yet-DONE bucket
-    /// itself. A claimant that died after advancing the cursor (so its
-    /// stripe was claimed but never copied) would otherwise leave
-    /// `migrated < len` forever with no helper able to reach the gap;
-    /// `migrate_bucket` is idempotent (FROZEN takeover + DONE election),
-    /// so re-covering a live straggler's stripe is harmless.
+    /// Completed shrinks (half-size migrations that returned memory).
+    pub fn shrink_generation(&self) -> usize {
+        self.shrink_generations.load(Ordering::Acquire)
+    }
+
+    /// Drive any in-flight migration (either direction) to completion —
+    /// a cooperative helper for maintenance threads, drops, and tests;
+    /// normal updates migrate one stripe at a time. See
+    /// [`resize::finish_resizes`] for the stall-proofing argument.
     pub fn finish_resizes(&self) {
         let _g = S::pin();
-        let mut bo = None;
-        loop {
-            let rs = self.resize.load();
-            if !rs.in_flight() {
-                return;
-            }
-            self.help_resize();
-            let root = self.root.load(Ordering::Acquire);
-            if rs.old == root as u64 {
-                // SAFETY: old == root — live under our pin.
-                let old = unsafe { &*root };
-                if rs.cursor as usize >= old.len() {
-                    // Cursor exhausted but descriptor still published:
-                    // re-cover any stripe whose claimant went missing.
-                    // SAFETY: the descriptor matched the root when
-                    // loaded; `new` is the live destination under our
-                    // pin (it cannot be retired while `old` is root).
-                    let new = unsafe { &*(rs.new as *const Table<A, K, V>) };
-                    for idx in 0..old.len() {
-                        self.migrate_bucket(old, idx, new);
-                    }
-                }
-            }
-            snooze_lazy(&mut bo);
-        }
-    }
-
-    /// Account a successful insert into `t`'s stripe estimate and
-    /// trigger growth when the stripe crosses the load-factor threshold.
-    fn note_insert(&self, t: &Table<A, K, V>, idx: usize) {
-        // Ordering: Relaxed — the stripe counters are a statistical
-        // estimate; nothing synchronizes through them.
-        let n = t.stripe(idx).fetch_add(1, Ordering::Relaxed) + 1;
-        let span = OCCUPANCY_STRIPE.min(t.len());
-        if n > (span * GROW_LOAD_FACTOR) as isize {
-            self.try_begin_grow(t);
-        }
-    }
-
-    fn note_remove(&self, t: &Table<A, K, V>, idx: usize) {
-        // Ordering: Relaxed — as in note_insert.
-        t.stripe(idx).fetch_sub(1, Ordering::Relaxed);
-    }
-
-    /// Publish a double-size destination for `t` if no migration is in
-    /// flight and `t` is still the root. Requires the caller's pin.
-    fn try_begin_grow(&self, t: &Table<A, K, V>) {
-        if self.resize.load().in_flight() {
-            return;
-        }
-        let tp = t as *const Table<A, K, V> as *mut Table<A, K, V>;
-        // Only the root grows; a mid-migration destination grows after
-        // promotion.
-        if self.root.load(Ordering::Acquire) != tp {
-            return;
-        }
-        let new: *mut Table<A, K, V> = Box::into_raw(Box::new(Table::new(t.len() * 2)));
-        let desc = ResizeState {
-            old: tp as u64,
-            new: new as u64,
-            cursor: 0,
-        };
-        if self.resize.compare_exchange(ResizeState::default(), desc).is_err() {
-            // Lost the publish race to another grower.
-            // SAFETY: never published.
-            drop(unsafe { Box::from_raw(new) });
-            return;
-        }
-        if self.root.load(Ordering::Acquire) != tp {
-            // A full resize completed between our root check and the
-            // publish: the descriptor is stale. Helpers ignore
-            // descriptors whose `old` is not the root (and `t` cannot be
-            // freed while we are pinned, so its address cannot be
-            // recycled into a new root), so a successful exact retract
-            // proves the fresh table is still unreferenced.
-            if self.resize.compare_exchange(desc, ResizeState::default()).is_ok() {
-                // SAFETY: unpublished again, never dereferenced.
-                drop(unsafe { Box::from_raw(new) });
-            }
-            return;
-        }
-        // Descriptor published and still rooted: this grow is real.
-        crate::counter!(ResizeGrowBegin);
-        // Kick-start: migrate the first stripe ourselves.
-        self.help_resize();
-    }
-
-    /// Claim and migrate one stripe of the in-flight resize (no-op when
-    /// idle). Requires the caller's pin.
-    fn help_resize(&self) {
-        let mut rs = self.resize.load();
-        if !rs.in_flight() {
-            return;
-        }
-        let root = self.root.load(Ordering::Acquire);
-        if rs.old != root as u64 {
-            return; // stale descriptor (retraction pending) or finishing
-        }
-        // SAFETY: old == root — live under the caller's pin.
-        let old = unsafe { &*root };
-        let len = old.len();
-        // Claim one stripe with the witnessing CAS on the cursor.
-        let (start, end) = loop {
-            if !rs.in_flight() || rs.old != root as u64 {
-                return;
-            }
-            let c = rs.cursor as usize;
-            if c >= len {
-                return; // fully claimed; stragglers still copying
-            }
-            let end = (c + MIGRATION_STRIPE).min(len);
-            match self.resize.compare_exchange(
-                rs,
-                ResizeState {
-                    cursor: end as u64,
-                    ..rs
-                },
-            ) {
-                Ok(_) => {
-                    crate::counter!(ResizeStripeClaim);
-                    // A kill here is the dead-claimant scenario: the
-                    // cursor has advanced past a stripe nobody will
-                    // copy. `finish_resizes`'s sweep re-covers it.
-                    crate::failpoint!(ResizeStripeClaim);
-                    break (c, end);
-                }
-                Err(w) => rs = w,
-            }
-        };
-        // SAFETY: the claimed descriptor matched the root — `new` is the
-        // live destination.
-        let new = unsafe { &*(rs.new as *const Table<A, K, V>) };
-        for idx in start..end {
-            self.migrate_bucket(old, idx, new);
-        }
-    }
-
-    /// Seal-and-copy one source bucket into `new`. The seal-CAS winner
-    /// is the *preferred* copier (updates landing on the FROZEN window
-    /// wait briefly; finds read the frozen content in place) — but not
-    /// the only one allowed: a FROZEN bucket whose copier stalled or
-    /// died is copied again by any helper. The copy is idempotent
-    /// ([`copy_entry`](Self::copy_entry) is CAS-if-absent over the
-    /// immutable frozen image), the census handshake keeps every copy
-    /// write pre-DONE, and the CLOSING→DONE CAS elects exactly one
-    /// winner, which alone retires the chain and accounts the bucket —
-    /// so a dead copier delays this bucket, never wedges it.
-    fn migrate_bucket(&self, old: &Table<A, K, V>, idx: usize, new: &Table<A, K, V>) {
-        let bucket = old.bucket(idx);
-        let mut head = bucket.load();
-        let mut bo = None;
-        loop {
-            if head.done() {
-                // Already migrated and accounted (re-entry via
-                // finish_resizes or the sweep).
-                return;
-            }
-            if head.frozen() {
-                // Takeover: the sealing copier may be stalled or dead.
-                if self.copy_frozen(bucket, head, new) {
-                    break; // our DONE transition: account below
-                }
-                return; // a rival's DONE transition accounted already
-            }
-            if head.closing() {
-                // Copy complete; a publisher died (or is racing us)
-                // between CLOSING and DONE. Drain stragglers and race
-                // the transition ourselves.
-                if self.publish_done(bucket, head) {
-                    break;
-                }
-                return;
-            }
-            if !head.occupied() {
-                // Empty source: seal straight to DONE.
-                match bucket.compare_exchange(head, Link::done_link()) {
-                    Ok(_) => break,
-                    Err(w) => {
-                        head = w;
-                        snooze_lazy(&mut bo);
-                    }
-                }
-                continue;
-            }
-            // Freeze the content: one-way — updates now wait, finds
-            // still read the (authoritative, immutable) frozen image.
-            match bucket.compare_exchange(head, head.sealed()) {
-                Ok(_) => {
-                    // A kill here leaves the bucket FROZEN with no
-                    // copier — the takeover arm above must recover it.
-                    crate::failpoint!(ResizeSealFrozen);
-                    if self.copy_frozen(bucket, head.sealed(), new) {
-                        break;
-                    }
-                    return; // a takeover helper beat us to DONE
-                }
-                Err(w) => {
-                    head = w;
-                    snooze_lazy(&mut bo);
-                }
-            }
-        }
-        // Exactly one DONE transition per bucket reports it migrated.
-        crate::counter!(ResizeBucketMigrate);
-        // Ordering: AcqRel — the finisher's promotion happens-after
-        // every copier's DONE publication.
-        if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
-            self.finish_resize(old);
-        }
-    }
-
-    /// An update ran out of patience with a FROZEN bucket: locate the
-    /// in-flight descriptor and help copy that one bucket out
-    /// (idempotent takeover via [`migrate_bucket`](Self::migrate_bucket)).
-    /// No-op when the descriptor moved on — the bucket's DONE transition
-    /// is then already imminent or published.
-    fn help_frozen_bucket(&self, t: &Table<A, K, V>, idx: usize) {
-        let rs = self.resize.load();
-        let tp = t as *const Table<A, K, V> as u64;
-        if !rs.in_flight() || rs.old != tp || self.root.load(Ordering::Acquire) as u64 != tp {
-            return;
-        }
-        crate::counter!(ResizeTakeover);
-        // SAFETY: the descriptor matches the live root — `new` is the
-        // live destination under the caller's pin.
-        let new = unsafe { &*(rs.new as *const Table<A, K, V>) };
-        self.migrate_bucket(t, idx, new);
-    }
-
-    /// Copy a FROZEN bucket's (immutable) image into the destination and
-    /// race it through CLOSING to DONE. Returns whether *we* won the
-    /// DONE transition — the winner alone retires the drained chain and
-    /// must account the bucket.
-    ///
-    /// Safe to run concurrently with the sealing copier or any number
-    /// of takeover helpers: `copy_entry` is CAS-if-absent over the same
-    /// immutable image, and the [`census`](super::census) handshake
-    /// guarantees no copier's destination write can land after DONE —
-    /// we announce, re-validate the bucket is still exactly FROZEN
-    /// (standing down if the window closed), copy, and clear the
-    /// announcement before anyone may publish DONE.
-    fn copy_frozen(&self, bucket: &A, frozen: Link<K, V>, new: &Table<A, K, V>) -> bool {
-        debug_assert!(frozen.frozen(), "copy_frozen on an unsealed bucket");
-        let addr = bucket as *const A as usize;
-        {
-            let _census = census::announce(addr);
-            // Re-validate post-announce (the Dekker edge — see the
-            // census module docs): if the bucket left FROZEN after our
-            // announcement, the publisher's scan may have missed us, so
-            // we must not write. The image is immutable, so any change
-            // means CLOSING or DONE.
-            if bucket.load() != frozen {
-                // `_census` clears on this early exit path too.
-            } else {
-                self.copy_entry(new, frozen.key, frozen.value);
-                // A kill here unwinds the census guard — the publisher
-                // stops waiting for us and the copy is re-run by a
-                // rival (idempotently).
-                crate::failpoint!(ResizeCopyEntry);
-                let mut p = frozen.next_ptr();
-                while !p.is_null() {
-                    // SAFETY: chain reachable from the frozen head
-                    // (DONE not published, nothing retired yet);
-                    // region-pinned.
-                    let n = unsafe { &*p };
-                    self.copy_entry(new, n.key, n.value);
-                    crate::failpoint!(ResizeCopyEntry);
-                    p = n.next;
-                }
-            }
-            // Guard dropped here: our destination writes are complete
-            // and visible before any publisher's scan can miss us.
-        }
-        // Close the copier window. One CAS winner; losers fall through
-        // to the publish race on the same (deterministic) image.
-        let closing = frozen.closing_image();
-        let _ = bucket.compare_exchange(frozen, closing);
-        self.publish_done(bucket, closing)
-    }
-
-    /// Drain straggling copiers off a CLOSING bucket, then race its
-    /// CLOSING→DONE transition. Returns whether *we* won — the winner
-    /// alone retires the drained chain.
-    fn publish_done(&self, bucket: &A, closing: Link<K, V>) -> bool {
-        debug_assert!(closing.closing(), "publish_done on a non-CLOSING image");
-        let addr = bucket as *const A as usize;
-        // Wait until no rival copier still announces this bucket: a
-        // live one finishes its (chain-length-bounded) copy and clears;
-        // a killed one's guard cleared on unwind. This wait is the
-        // fence that keeps every copy write pre-DONE.
-        let mut bo = None;
-        while census::rivals(addr) {
-            snooze_lazy(&mut bo);
-        }
-        // Publish DONE — the linearization point after which this
-        // bucket's keys live in the destination. A kill *before* the
-        // CAS re-opens the publish window (any helper re-runs this
-        // phase); after a successful CAS the accounting in
-        // `migrate_bucket` is fault-free by construction (no failpoints
-        // between the transition and the migrated increment).
-        crate::failpoint!(ResizePublishDone);
-        if bucket.compare_exchange(closing, Link::done_link()).is_err() {
-            return false; // a rival published DONE (the image is immutable)
-        }
-        // Retire the drained chain through the region scheme — winner
-        // only, exactly once per bucket, as ONE page batch (one retire
-        // entry and one eventual orphan-lock acquisition per chain).
-        let mut batch = pool::PageBatch::new();
-        let mut p = closing.next_ptr();
-        while !p.is_null() {
-            // SAFETY: unlinked by the DONE transition; lagging readers
-            // of the frozen image are pinned, which keeps the whole
-            // batch unrecycled until they unpin.
-            let nx = unsafe { (*p).next };
-            unsafe { batch.push(p) };
-            p = nx;
-        }
-        // SAFETY: every pushed node is unlinked and unique.
-        unsafe { S::retire_page(batch) };
-        true
+        resize::finish_resizes(self);
     }
 
     /// Insert-if-absent into the destination table (no growth trigger:
@@ -799,40 +416,172 @@ where
             }
         }
     }
+}
 
-    /// Run by the unique copier whose DONE transition drained the last
-    /// bucket: promote the destination, clear the descriptor, retire the
-    /// source.
-    fn finish_resize(&self, old: &Table<A, K, V>) {
-        let rs = self.resize.load();
-        let op = old as *const Table<A, K, V> as *mut Table<A, K, V>;
-        debug_assert!(rs.in_flight() && rs.old == op as u64, "finisher raced the descriptor");
-        let new = rs.new as *mut Table<A, K, V>;
-        // Ordering: AcqRel CAS — the Release half publishes the fully
-        // populated destination to readers' Acquire root loads.
-        let swung = self
-            .root
-            .compare_exchange(op, new, Ordering::AcqRel, Ordering::Acquire)
-            .is_ok();
-        debug_assert!(swung, "root moved before the finisher");
-        // Clear the descriptor only after the root swing so
-        // `table_after`'s descriptor-matches-root rule stays sound.
-        let mut cur = rs;
-        while cur.in_flight() && cur.old == op as u64 {
-            match self.resize.compare_exchange(cur, ResizeState::default()) {
-                Ok(_) => break,
-                Err(w) => cur = w,
-            }
+// SAFETY: every method is called under the region pin (`S: RegionSmr`);
+// bucket loads/CASes go through the big atomic `A` (linearizable with
+// witnessed failure); the FROZEN/CLOSING/DONE predicates mirror the
+// `Link` tag encoding exactly; `copy_image` is insert-if-absent over an
+// immutable image; `retire_image`/`retire_drained_table` go through the
+// region scheme, never freeing directly.
+unsafe impl<A, K, V, S> ResizeTable for CacheHash<A, K, V, S>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
+{
+    type Table = Table<A, K, V>;
+    type Image = Link<K, V>;
+
+    fn resize_cell(&self) -> &SeqLock<ResizeState> {
+        &self.resize
+    }
+
+    fn root_cell(&self) -> &AtomicPtr<Table<A, K, V>> {
+        &self.root
+    }
+
+    fn grow_cell(&self) -> &AtomicUsize {
+        &self.generations
+    }
+
+    fn shrink_cell(&self) -> &AtomicUsize {
+        &self.shrink_generations
+    }
+
+    fn floor(&self) -> usize {
+        self.floor
+    }
+
+    fn alloc_table(&self, cap: usize) -> *mut Table<A, K, V> {
+        Box::into_raw(Box::new(Table::new(cap)))
+    }
+
+    unsafe fn free_unpublished_table(&self, t: *mut Table<A, K, V>) {
+        // SAFETY: never published (engine contract) — plain Box drop;
+        // a fresh table has no chains.
+        drop(unsafe { Box::from_raw(t) });
+    }
+
+    unsafe fn retire_drained_table(&self, t: *mut Table<A, K, V>) {
+        // SAFETY: unlinked from root and descriptor (engine contract).
+        unsafe { S::retire_box(t) };
+    }
+
+    fn len_of(t: &Table<A, K, V>) -> usize {
+        t.len()
+    }
+
+    fn migrated_of(t: &Table<A, K, V>) -> &AtomicUsize {
+        &t.migrated
+    }
+
+    fn stripe_of(t: &Table<A, K, V>, idx: usize) -> &AtomicIsize {
+        t.stripe(idx)
+    }
+
+    fn occupancy_of(t: &Table<A, K, V>) -> isize {
+        // Ordering: Relaxed — estimate.
+        t.stripes.iter().map(|s| s.load(Ordering::Relaxed)).sum()
+    }
+
+    fn load_bucket(t: &Table<A, K, V>, idx: usize) -> Link<K, V> {
+        t.bucket(idx).load()
+    }
+
+    fn cas_bucket(
+        t: &Table<A, K, V>,
+        idx: usize,
+        cur: Link<K, V>,
+        new: Link<K, V>,
+    ) -> Result<(), Link<K, V>> {
+        t.bucket(idx).compare_exchange(cur, new).map(|_| ())
+    }
+
+    fn bucket_addr(t: &Table<A, K, V>, idx: usize) -> usize {
+        t.bucket(idx) as *const A as usize
+    }
+
+    fn is_done(img: Link<K, V>) -> bool {
+        img.done()
+    }
+
+    fn is_frozen(img: Link<K, V>) -> bool {
+        img.frozen()
+    }
+
+    fn is_closing(img: Link<K, V>) -> bool {
+        img.closing()
+    }
+
+    fn is_empty_img(img: Link<K, V>) -> bool {
+        !img.occupied() && !img.forwarded()
+    }
+
+    fn sealed(img: Link<K, V>) -> Link<K, V> {
+        img.sealed()
+    }
+
+    fn closing_of(img: Link<K, V>) -> Link<K, V> {
+        img.closing_image()
+    }
+
+    fn done_img() -> Link<K, V> {
+        Link::done_link()
+    }
+
+    fn copy_image(&self, new: &Table<A, K, V>, img: Link<K, V>) {
+        // The inlined pair, then every chain node, insert-if-absent.
+        self.copy_entry(new, img.key, img.value);
+        // A kill here unwinds the census guard — the publisher stops
+        // waiting for us and the copy is re-run by a rival
+        // (idempotently).
+        crate::failpoint!(ResizeCopyEntry);
+        let mut p = img.next_ptr();
+        while !p.is_null() {
+            // SAFETY: chain reachable from the frozen head (DONE not
+            // published, nothing retired yet); region-pinned.
+            let n = unsafe { &*p };
+            self.copy_entry(new, n.key, n.value);
+            crate::failpoint!(ResizeCopyEntry);
+            p = n.next;
         }
-        // Ordering: AcqRel — generation reads observe a promoted root.
-        self.generations.fetch_add(1, Ordering::AcqRel);
-        crate::counter!(ResizeFinish);
-        // Retire the drained generation — bucket array and all (every
-        // bucket holds a DONE seal; chains were retired at their DONE
-        // transitions). Pinned readers mid-fall-through keep it alive:
-        // the region guarantee of `S`.
-        // SAFETY: unlinked from both the root and the descriptor; unique.
-        unsafe { S::retire_box(op) };
+    }
+
+    unsafe fn retire_image(&self, img: Link<K, V>) {
+        // Retire the drained chain through the region scheme as ONE
+        // page batch (one retire entry and one eventual orphan-lock
+        // acquisition per chain).
+        let mut batch = pool::PageBatch::new();
+        let mut p = img.next_ptr();
+        while !p.is_null() {
+            // SAFETY: unlinked by the DONE transition; lagging readers
+            // of the frozen image are pinned, which keeps the whole
+            // batch unrecycled until they unpin.
+            let nx = unsafe { (*p).next };
+            unsafe { batch.push(p) };
+            p = nx;
+        }
+        // SAFETY: every pushed node is unlinked and unique.
+        unsafe { S::retire_page(batch) };
+    }
+}
+
+impl<A, K, V, S> Maintain for CacheHash<A, K, V, S>
+where
+    K: AtomicValue,
+    V: AtomicValue,
+    A: BigAtomic<Link<K, V>>,
+    S: RegionSmr,
+{
+    fn maintain(&self) -> bool {
+        {
+            let _g = S::pin();
+            resize::try_begin_shrink(self, resize::root_table(self));
+        }
+        self.finish_resizes();
+        !self.resize_in_flight()
     }
 }
 
@@ -845,13 +594,13 @@ where
 {
     fn find(&self, key: K) -> Option<V> {
         let _g = S::pin();
-        let mut t = self.root_table();
+        let mut t = resize::root_table(self);
         loop {
             let head = t.bucket(bucket_for(&key, t.len())).load();
             if head.done() {
                 // Fully migrated: fall through old → new. No lock, no
                 // helping, no waiting — the find path stays lock-free.
-                t = self.table_after(t);
+                t = resize::table_after(self, t);
                 continue;
             }
             if !head.occupied() {
@@ -867,8 +616,8 @@ where
     fn insert(&self, key: K, value: V) -> bool {
         let _g = S::pin();
         // Updates pay the incremental-migration toll: one stripe.
-        self.help_resize();
-        let mut t = self.root_table();
+        resize::help_resize(self);
+        let mut t = resize::root_table(self);
         let mut idx = bucket_for(&key, t.len());
         let mut bucket = t.bucket(idx);
         let mut head = bucket.load();
@@ -893,11 +642,11 @@ where
                     // copier died in it. Wait a bounded number of beats,
                     // then help: copy the frozen image ourselves and
                     // race its DONE transition (idempotent takeover).
-                    crate::counter!(ResizeFrozenWait);
+                    resize::note_frozen_wait(self, t);
                     frozen_waits += 1;
                     if frozen_waits > FROZEN_PATIENCE {
                         frozen_waits = 0;
-                        self.help_frozen_bucket(t, idx);
+                        resize::help_frozen_bucket(self, t, idx);
                     } else {
                         snooze_lazy(&mut bo);
                     }
@@ -905,7 +654,7 @@ where
                     continue;
                 }
                 // DONE: this bucket's keys live in a newer generation.
-                t = self.table_after(t);
+                t = resize::table_after(self, t);
                 idx = bucket_for(&key, t.len());
                 bucket = t.bucket(idx);
                 head = bucket.load();
@@ -917,7 +666,7 @@ where
                 // is the new head — no re-load.
                 match bucket.compare_exchange(head, Link::with_chain(key, value, null_mut())) {
                     Ok(_) => {
-                        self.note_insert(t, idx);
+                        resize::note_insert(self, t, idx);
                         return true;
                     }
                     Err(w) => {
@@ -946,7 +695,7 @@ where
             });
             match bucket.compare_exchange(head, Link::with_chain(key, value, spill)) {
                 Ok(_) => {
-                    self.note_insert(t, idx);
+                    resize::note_insert(self, t, idx);
                     return true;
                 }
                 Err(w) => {
@@ -962,8 +711,8 @@ where
     fn remove(&self, key: K) -> bool {
         let _g = S::pin();
         // Updates pay the incremental-migration toll: one stripe.
-        self.help_resize();
-        let mut t = self.root_table();
+        resize::help_resize(self);
+        let mut t = resize::root_table(self);
         let mut idx = bucket_for(&key, t.len());
         let mut bucket = t.bucket(idx);
         let mut head = bucket.load();
@@ -974,18 +723,18 @@ where
         loop {
             if head.forwarded() {
                 if head.frozen() || head.closing() {
-                    crate::counter!(ResizeFrozenWait);
+                    resize::note_frozen_wait(self, t);
                     frozen_waits += 1;
                     if frozen_waits > FROZEN_PATIENCE {
                         frozen_waits = 0;
-                        self.help_frozen_bucket(t, idx);
+                        resize::help_frozen_bucket(self, t, idx);
                     } else {
                         snooze_lazy(&mut bo);
                     }
                     head = bucket.load();
                     continue;
                 }
-                t = self.table_after(t);
+                t = resize::table_after(self, t);
                 idx = bucket_for(&key, t.len());
                 bucket = t.bucket(idx);
                 head = bucket.load();
@@ -1000,7 +749,7 @@ where
                     // Single inline entry -> empty.
                     match bucket.compare_exchange(head, Link::empty()) {
                         Ok(_) => {
-                            self.note_remove(t, idx);
+                            resize::note_remove(self, t, idx);
                             return true;
                         }
                         Err(w) => {
@@ -1018,7 +767,7 @@ where
                     Ok(_) => {
                         // SAFETY: p unlinked by the successful CAS.
                         unsafe { pool::retire_node::<S, _>(p) };
-                        self.note_remove(t, idx);
+                        resize::note_remove(self, t, idx);
                         return true;
                     }
                     Err(w) => {
@@ -1073,7 +822,7 @@ where
                             q = nx;
                         }
                     }
-                    self.note_remove(t, idx);
+                    resize::note_remove(self, t, idx);
                     return true;
                 }
                 Err(w) => {
@@ -1099,18 +848,16 @@ where
 
     fn capacity(&self) -> usize {
         let _g = S::pin();
-        self.root_table().len()
+        resize::root_table(self).len()
     }
 
     fn occupancy(&self) -> usize {
         let _g = S::pin();
-        self.root_table()
-            .stripes
-            .iter()
-            // Ordering: Relaxed — estimate.
-            .map(|s| s.load(Ordering::Relaxed))
-            .sum::<isize>()
-            .max(0) as usize
+        <Self as ResizeTable>::occupancy_of(resize::root_table(self)).max(0) as usize
+    }
+
+    fn shrink_generation(&self) -> usize {
+        CacheHash::shrink_generation(self)
     }
 }
 
@@ -1269,6 +1016,42 @@ mod tests {
             assert_eq!(t.find(k), Some(k ^ 0xBEEF), "key {k}");
             assert!(t.remove(k), "lost key {k}");
             assert!(!t.remove(k), "duplicated key {k}");
+        }
+    }
+
+    #[test]
+    fn test_shrink_after_drain_returns_to_floor() {
+        // Grow from the construction floor, drain completely, and let
+        // the removal-triggered + maintenance shrinks walk the capacity
+        // all the way back down — memory is actually returned, and the
+        // grow counter is untouched by the shrink generations.
+        let t: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(2);
+        for k in 0..10_000u64 {
+            assert!(t.insert(k, k));
+        }
+        t.finish_resizes();
+        let peak = t.capacity();
+        let grows = t.generation();
+        assert!(peak >= 2048);
+        for k in 0..10_000u64 {
+            assert!(t.remove(k));
+        }
+        // Each maintain pass publishes at most one halving; iterate
+        // until idle *and* stable.
+        loop {
+            let before = t.capacity();
+            let idle = t.maintain();
+            if idle && t.capacity() == before {
+                break;
+            }
+        }
+        assert_eq!(t.capacity(), 2, "drained table must return to its floor");
+        assert!(t.shrink_generation() >= 1, "no shrink completed");
+        assert_eq!(t.generation(), grows, "shrinks must not count as grows");
+        // Still a fully working table after the round trip.
+        for k in 0..100u64 {
+            assert!(t.insert(k, k * 3));
+            assert_eq!(t.find(k), Some(k * 3));
         }
     }
 

@@ -6,12 +6,15 @@
 //! and over the same region-grained reclamation parameter (epoch-based;
 //! see `smr` for why hazard pointers are rejected at the type level).
 //!
-//! Grows online exactly like `CacheHash` (see its module docs): a
-//! [`ResizeState`](super::ResizeState) descriptor, stripe-claimed
-//! migration, FROZEN (`ptr|1`, content intact) → CLOSING (`ptr|1|2`,
-//! copy complete, rival copiers draining) → DONE (`1`) bucket seals,
-//! lock-free finds falling through DONE marks, census-fenced copier
-//! takeover of stalled/dead copiers, and epoch-retired drained tables.
+//! Resizes online exactly like `CacheHash` — both run the shared
+//! [`resize`](super::resize) engine (descriptor lifecycle, stripe
+//! claims, seals, census-fenced takeover, hysteresis triggers for grow
+//! *and* shrink, drained-table retirement). This file contributes only
+//! the tagged-word bucket encoding — FROZEN (`ptr|1`, content intact) →
+//! CLOSING (`ptr|1|2`, copy complete, rival copiers draining) → DONE
+//! (`1`) — plus `copy_image` (insert-if-absent chain copy) and
+//! page-batched chain retirement. Finds stay lock-free, falling
+//! through DONE marks.
 //!
 //! The bucket protocol is on the memory-ordering diet (PR 3/4 house
 //! style): every access runs at the weakest sound ordering under the
@@ -24,10 +27,11 @@
 //! identifies the proven suffix).
 
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
 
-use super::{bucket_for, census, table_capacity, ConcurrentMap, ResizeState};
-use crate::atomics::{AtomicValue, BigAtomic, SeqLock};
+use super::resize::{self, Maintain, ResizeTable, FROZEN_PATIENCE, OCCUPANCY_STRIPE};
+use super::{bucket_for, table_capacity, ConcurrentMap, ResizeState};
+use crate::atomics::{AtomicValue, SeqLock};
 use crate::smr::{pool, Epoch, RegionSmr};
 use crate::util::backoff::snooze_lazy;
 use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
@@ -65,18 +69,10 @@ fn is_closing(raw: usize) -> bool {
     raw & CLOSING != 0
 }
 
-/// Source buckets migrated per helper claim / occupancy-counter grain /
-/// growth threshold — shared with `CacheHash` by construction.
-const MIGRATION_STRIPE: usize = 64;
-const OCCUPANCY_STRIPE: usize = 64;
-const GROW_LOAD_FACTOR: usize = 2;
-
-/// Snoozes an update grants a FROZEN bucket's copier before copying the
-/// bucket out itself (the copier may be preempted — or dead).
-const FROZEN_PATIENCE: u32 = 16;
-
 /// One generation of the bucket array (see `CacheHash`'s `Table`).
-struct CTable<K, V> {
+/// Public only because it is the [`ResizeTable::Table`] associated
+/// type; its fields and methods are module-private.
+pub struct CTable<K, V> {
     buckets: Box<[CachePadded<AtomicUsize>]>,
     stripes: Box<[CachePadded<std::sync::atomic::AtomicIsize>]>,
     migrated: AtomicUsize,
@@ -134,8 +130,12 @@ pub struct Chaining<K: AtomicValue = u64, V: AtomicValue = u64, S: RegionSmr = E
     root: AtomicPtr<CTable<K, V>>,
     /// The migration descriptor, published via a big atomic.
     resize: SeqLock<ResizeState>,
-    /// Completed growths.
+    /// Completed grows.
     generations: AtomicUsize,
+    /// Completed shrinks.
+    shrink_generations: AtomicUsize,
+    /// Construction-time capacity: shrink never halves below this.
+    floor: usize,
     _smr: PhantomData<fn() -> S>,
 }
 
@@ -150,32 +150,9 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             root: AtomicPtr::new(Box::into_raw(Box::new(CTable::new(cap)))),
             resize: SeqLock::new(ResizeState::default()),
             generations: AtomicUsize::new(0),
+            shrink_generations: AtomicUsize::new(0),
+            floor: cap,
             _smr: PhantomData,
-        }
-    }
-
-    /// The live root table (callers must hold the region pin).
-    #[inline]
-    fn root_table(&self) -> &CTable<K, V> {
-        // Ordering: ACQUIRE — pairs with the RELEASE root swing in
-        // `finish_resize` so the promoted table's contents are visible.
-        unsafe { &*self.root.load(P::ACQUIRE) }
-    }
-
-    /// The table a DONE mark in `t` forwards to (see
-    /// `CacheHash::table_after` for the full argument).
-    fn table_after(&self, t: &CTable<K, V>) -> &CTable<K, V> {
-        let rs = self.resize.load();
-        // Ordering: ACQUIRE — as in root_table.
-        let root = self.root.load(P::ACQUIRE);
-        let tp = t as *const CTable<K, V> as u64;
-        if rs.in_flight() && rs.old == root as u64 && rs.old == tp {
-            // SAFETY: descriptor matches the live root — `new` is the
-            // live destination, pin-protected.
-            unsafe { &*(rs.new as *const CTable<K, V>) }
-        } else {
-            // SAFETY: root is live under the caller's pin.
-            unsafe { &*root }
         }
     }
 
@@ -197,304 +174,22 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
         self.resize.load().in_flight()
     }
 
-    /// Completed growths (old tables retired through `S`).
+    /// Completed grows (old tables retired through `S`).
     pub fn generation(&self) -> usize {
         self.generations.load(Ordering::Acquire)
     }
 
-    /// Drive any in-flight migration to completion (tests, maintenance).
-    ///
-    /// Stall-proof like `CacheHash::finish_resizes`: once the cursor is
-    /// exhausted this *sweeps* every not-yet-DONE bucket itself, so a
-    /// claimant that died after advancing the cursor cannot leave
-    /// `migrated < len` forever (`migrate_bucket` is idempotent).
+    /// Completed shrinks (half-size migrations that returned memory).
+    pub fn shrink_generation(&self) -> usize {
+        self.shrink_generations.load(Ordering::Acquire)
+    }
+
+    /// Drive any in-flight migration (either direction) to completion
+    /// (tests, maintenance) — see [`resize::finish_resizes`] for the
+    /// stall-proofing argument.
     pub fn finish_resizes(&self) {
         let _g = S::pin();
-        let mut bo = None;
-        loop {
-            let rs = self.resize.load();
-            if !rs.in_flight() {
-                return;
-            }
-            self.help_resize();
-            let root = self.root.load(P::ACQUIRE);
-            if rs.old == root as u64 {
-                // SAFETY: old == root — live under our pin.
-                let old = unsafe { &*root };
-                if rs.cursor as usize >= old.len() {
-                    // Cursor exhausted but descriptor still published:
-                    // re-cover any stripe whose claimant went missing.
-                    // SAFETY: the descriptor matched the root when
-                    // loaded; `new` is the live destination under our
-                    // pin (it cannot be retired while `old` is root).
-                    let new = unsafe { &*(rs.new as *const CTable<K, V>) };
-                    for idx in 0..old.len() {
-                        self.migrate_bucket(old, idx, new);
-                    }
-                }
-            }
-            snooze_lazy(&mut bo);
-        }
-    }
-
-    fn note_insert(&self, t: &CTable<K, V>, idx: usize) {
-        // Ordering: RELAXED — statistical estimate only.
-        let n = t.stripe(idx).fetch_add(1, P::RELAXED) + 1;
-        let span = OCCUPANCY_STRIPE.min(t.len());
-        if n > (span * GROW_LOAD_FACTOR) as isize {
-            self.try_begin_grow(t);
-        }
-    }
-
-    fn note_remove(&self, t: &CTable<K, V>, idx: usize) {
-        // Ordering: RELAXED — as in note_insert.
-        t.stripe(idx).fetch_sub(1, P::RELAXED);
-    }
-
-    /// Publish a double-size destination (see `CacheHash::try_begin_grow`
-    /// for the stale-descriptor argument). Requires the caller's pin.
-    fn try_begin_grow(&self, t: &CTable<K, V>) {
-        if self.resize.load().in_flight() {
-            return;
-        }
-        let tp = t as *const CTable<K, V> as *mut CTable<K, V>;
-        if self.root.load(P::ACQUIRE) != tp {
-            return;
-        }
-        let new: *mut CTable<K, V> = Box::into_raw(Box::new(CTable::new(t.len() * 2)));
-        let desc = ResizeState {
-            old: tp as u64,
-            new: new as u64,
-            cursor: 0,
-        };
-        if self.resize.compare_exchange(ResizeState::default(), desc).is_err() {
-            // SAFETY: never published.
-            drop(unsafe { Box::from_raw(new) });
-            return;
-        }
-        if self.root.load(P::ACQUIRE) != tp {
-            if self.resize.compare_exchange(desc, ResizeState::default()).is_ok() {
-                // SAFETY: unpublished again, never dereferenced.
-                drop(unsafe { Box::from_raw(new) });
-            }
-            return;
-        }
-        // Descriptor published and still rooted: this grow is real.
-        crate::counter!(ResizeGrowBegin);
-        self.help_resize();
-    }
-
-    /// Claim and migrate one stripe (no-op when idle). Requires the pin.
-    fn help_resize(&self) {
-        let mut rs = self.resize.load();
-        if !rs.in_flight() {
-            return;
-        }
-        let root = self.root.load(P::ACQUIRE);
-        if rs.old != root as u64 {
-            return;
-        }
-        // SAFETY: old == root — live under the caller's pin.
-        let old = unsafe { &*root };
-        let len = old.len();
-        let (start, end) = loop {
-            if !rs.in_flight() || rs.old != root as u64 {
-                return;
-            }
-            let c = rs.cursor as usize;
-            if c >= len {
-                return;
-            }
-            let end = (c + MIGRATION_STRIPE).min(len);
-            match self.resize.compare_exchange(
-                rs,
-                ResizeState {
-                    cursor: end as u64,
-                    ..rs
-                },
-            ) {
-                Ok(_) => {
-                    crate::counter!(ResizeStripeClaim);
-                    // A kill here is the dead-claimant scenario: the
-                    // cursor has advanced past a stripe nobody will
-                    // copy. `finish_resizes`'s sweep re-covers it.
-                    crate::failpoint!(ResizeStripeClaim);
-                    break (c, end);
-                }
-                Err(w) => rs = w,
-            }
-        };
-        // SAFETY: claimed descriptor matched the root.
-        let new = unsafe { &*(rs.new as *const CTable<K, V>) };
-        for idx in start..end {
-            self.migrate_bucket(old, idx, new);
-        }
-    }
-
-    /// Seal-and-copy one source bucket (see `CacheHash::migrate_bucket`
-    /// for the takeover/census argument — identical protocol on the
-    /// tagged-word representation).
-    fn migrate_bucket(&self, old: &CTable<K, V>, idx: usize, new: &CTable<K, V>) {
-        let bucket = old.bucket(idx);
-        // Ordering: ACQUIRE — the head is dereferenced during the copy.
-        let mut raw = bucket.load(P::ACQUIRE);
-        let mut bo = None;
-        loop {
-            if raw == FWD {
-                // Already migrated and accounted (re-entry via
-                // finish_resizes or the sweep).
-                return;
-            }
-            if is_frozen(raw) {
-                // Takeover: the sealing copier may be stalled or dead.
-                if self.copy_frozen(bucket, raw, new) {
-                    break; // our DONE transition: account below
-                }
-                return; // a rival's DONE transition accounted already
-            }
-            if is_closing(raw) {
-                // Copy complete; a publisher died (or is racing us)
-                // between CLOSING and DONE.
-                if self.publish_done(bucket, raw) {
-                    break;
-                }
-                return;
-            }
-            if raw == 0 {
-                // Empty source: seal straight to DONE.
-                // Ordering: RELEASE publishes the seal before any
-                // reader's fall-through; ACQUIRE failure — the witness
-                // is dereferenced on retry.
-                match bucket.compare_exchange(0, FWD, P::RELEASE, P::ACQUIRE) {
-                    Ok(_) => break,
-                    Err(w) => {
-                        raw = w;
-                        snooze_lazy(&mut bo);
-                    }
-                }
-                continue;
-            }
-            // Freeze the content (one-way: updates wait, finds read).
-            // Ordering: RELEASE / ACQUIRE as above.
-            match bucket.compare_exchange(raw, raw | FWD, P::RELEASE, P::ACQUIRE) {
-                Ok(_) => {
-                    // A kill here leaves the bucket FROZEN with no
-                    // copier — the takeover arm above must recover it.
-                    crate::failpoint!(ResizeSealFrozen);
-                    if self.copy_frozen(bucket, raw | FWD, new) {
-                        break;
-                    }
-                    return; // a takeover helper beat us to DONE
-                }
-                Err(w) => {
-                    raw = w;
-                    snooze_lazy(&mut bo);
-                }
-            }
-        }
-        // Exactly one DONE transition per bucket reports it migrated.
-        crate::counter!(ResizeBucketMigrate);
-        // Ordering: AcqRel — the finisher's promotion happens-after
-        // every copier's DONE publication.
-        if old.migrated.fetch_add(1, Ordering::AcqRel) + 1 == old.len() {
-            self.finish_resize(old);
-        }
-    }
-
-    /// An update ran out of patience with a FROZEN bucket: locate the
-    /// in-flight descriptor and help copy that one bucket out. No-op
-    /// when the descriptor moved on.
-    fn help_frozen_bucket(&self, t: &CTable<K, V>, idx: usize) {
-        let rs = self.resize.load();
-        let tp = t as *const CTable<K, V> as u64;
-        if !rs.in_flight() || rs.old != tp || self.root.load(P::ACQUIRE) as u64 != tp {
-            return;
-        }
-        crate::counter!(ResizeTakeover);
-        // SAFETY: the descriptor matches the live root — `new` is the
-        // live destination under the caller's pin.
-        let new = unsafe { &*(rs.new as *const CTable<K, V>) };
-        self.migrate_bucket(t, idx, new);
-    }
-
-    /// Copy a FROZEN bucket's (immutable) chain into the destination and
-    /// race it through CLOSING to DONE — the census-fenced concurrent
-    /// copy of `CacheHash::copy_frozen`. Returns whether *we* won DONE.
-    fn copy_frozen(&self, bucket: &AtomicUsize, frozen: usize, new: &CTable<K, V>) -> bool {
-        debug_assert!(is_frozen(frozen), "copy_frozen on an unsealed bucket");
-        let addr = bucket as *const AtomicUsize as usize;
-        {
-            let _census = census::announce(addr);
-            // Re-validate post-announce (the Dekker edge — see the
-            // census module docs): any change means CLOSING or DONE,
-            // and we must not write.
-            // Ordering: ACQUIRE — the chain is dereferenced below; the
-            // announce's SeqCst fence provides the store-load edge.
-            if bucket.load(P::ACQUIRE) == frozen {
-                let mut p = node_of::<K, V>(frozen);
-                while !p.is_null() {
-                    // SAFETY: frozen chain, region-pinned.
-                    let n = unsafe { &*p };
-                    self.copy_entry(new, n.key, n.value);
-                    // A kill here unwinds the census guard — a rival
-                    // re-runs the copy idempotently.
-                    crate::failpoint!(ResizeCopyEntry);
-                    p = n.next;
-                }
-            }
-            // Guard dropped here: our destination writes are complete.
-        }
-        // Close the copier window. One CAS winner; losers fall through
-        // to the publish race on the same (deterministic) value.
-        // Ordering: RELEASE — orders the copies before the state change;
-        // RELAXED failure (the witness is not dereferenced).
-        let closing = frozen | CLOSING;
-        let _ = bucket.compare_exchange(frozen, closing, P::RELEASE, P::RELAXED);
-        self.publish_done(bucket, closing)
-    }
-
-    /// Drain straggling copiers off a CLOSING bucket, then race its
-    /// CLOSING→DONE transition. Returns whether *we* won — the winner
-    /// alone retires the drained chain.
-    fn publish_done(&self, bucket: &AtomicUsize, closing: usize) -> bool {
-        debug_assert!(is_closing(closing), "publish_done on a non-CLOSING word");
-        let addr = bucket as *const AtomicUsize as usize;
-        // Wait until no rival copier still announces this bucket (a
-        // killed one's guard cleared on unwind) — the fence that keeps
-        // every copy write pre-DONE.
-        let mut bo = None;
-        while census::rivals(addr) {
-            snooze_lazy(&mut bo);
-        }
-        // Publish DONE — the generation-crossing point. A kill *before*
-        // the CAS re-opens the publish window; after it, the accounting
-        // in `migrate_bucket` is fault-free by construction.
-        crate::failpoint!(ResizePublishDone);
-        // Ordering: RELEASE — the copies happen-before any reader's
-        // fall-through to the destination; RELAXED failure.
-        if bucket
-            .compare_exchange(closing, FWD, P::RELEASE, P::RELAXED)
-            .is_err()
-        {
-            return false; // a rival published DONE (the image is immutable)
-        }
-        // Retire the drained chain through the region scheme — winner
-        // only, exactly once per bucket, as ONE page batch (one retire
-        // entry and one eventual orphan-lock acquisition per chain,
-        // however long it was).
-        let mut batch = pool::PageBatch::new();
-        let mut p = node_of::<K, V>(closing);
-        while !p.is_null() {
-            // SAFETY: unlinked by the DONE transition; lagging
-            // frozen-image readers are pinned, which keeps the whole
-            // batch unrecycled until they unpin.
-            let nx = unsafe { (*p).next };
-            unsafe { batch.push(p) };
-            p = nx;
-        }
-        // SAFETY: every pushed node is unlinked and unique.
-        unsafe { S::retire_page(batch) };
-        true
+        resize::finish_resizes(self);
     }
 
     /// Insert-if-absent into the destination (no growth trigger — the
@@ -536,39 +231,165 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Chaining<K, V, S> {
             }
         }
     }
+}
 
-    /// Promote the destination, clear the descriptor, retire the source
-    /// (run by the unique finishing copier).
-    fn finish_resize(&self, old: &CTable<K, V>) {
-        let rs = self.resize.load();
-        let op = old as *const CTable<K, V> as *mut CTable<K, V>;
-        debug_assert!(rs.in_flight() && rs.old == op as u64);
-        let new = rs.new as *mut CTable<K, V>;
-        // Ordering: ACQREL CAS — the release half publishes the fully
-        // populated destination to readers' ACQUIRE root loads.
-        let swung = self
-            .root
-            .compare_exchange(op, new, P::ACQREL, P::ACQUIRE)
-            .is_ok();
-        debug_assert!(swung, "root moved before the finisher");
-        let mut cur = rs;
-        while cur.in_flight() && cur.old == op as u64 {
-            match self.resize.compare_exchange(cur, ResizeState::default()) {
-                Ok(_) => break,
-                Err(w) => cur = w,
-            }
+// SAFETY: every method is called under the region pin (`S: RegionSmr`);
+// buckets are plain atomic words with witnessed-failure CAS; the tag
+// predicates mirror the FWD/CLOSING encoding exactly; `copy_image` is
+// insert-if-absent over an immutable chain; `retire_image`/
+// `retire_drained_table` go through the region scheme.
+unsafe impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ResizeTable for Chaining<K, V, S> {
+    type Table = CTable<K, V>;
+    type Image = usize;
+
+    fn resize_cell(&self) -> &SeqLock<ResizeState> {
+        &self.resize
+    }
+
+    fn root_cell(&self) -> &AtomicPtr<CTable<K, V>> {
+        &self.root
+    }
+
+    fn grow_cell(&self) -> &AtomicUsize {
+        &self.generations
+    }
+
+    fn shrink_cell(&self) -> &AtomicUsize {
+        &self.shrink_generations
+    }
+
+    fn floor(&self) -> usize {
+        self.floor
+    }
+
+    fn alloc_table(&self, cap: usize) -> *mut CTable<K, V> {
+        Box::into_raw(Box::new(CTable::new(cap)))
+    }
+
+    unsafe fn free_unpublished_table(&self, t: *mut CTable<K, V>) {
+        // SAFETY: never published (engine contract) — plain Box drop;
+        // a fresh table has no chains.
+        drop(unsafe { Box::from_raw(t) });
+    }
+
+    unsafe fn retire_drained_table(&self, t: *mut CTable<K, V>) {
+        // SAFETY: unlinked from root and descriptor (engine contract).
+        unsafe { S::retire_box(t) };
+    }
+
+    fn len_of(t: &CTable<K, V>) -> usize {
+        t.len()
+    }
+
+    fn migrated_of(t: &CTable<K, V>) -> &AtomicUsize {
+        &t.migrated
+    }
+
+    fn stripe_of(t: &CTable<K, V>, idx: usize) -> &AtomicIsize {
+        t.stripe(idx)
+    }
+
+    fn occupancy_of(t: &CTable<K, V>) -> isize {
+        // Ordering: RELAXED — estimate.
+        t.stripes.iter().map(|s| s.load(P::RELAXED)).sum()
+    }
+
+    fn load_bucket(t: &CTable<K, V>, idx: usize) -> usize {
+        // Ordering: ACQUIRE — the head may be dereferenced by the
+        // engine's copy path.
+        t.bucket(idx).load(P::ACQUIRE)
+    }
+
+    fn cas_bucket(t: &CTable<K, V>, idx: usize, cur: usize, new: usize) -> Result<(), usize> {
+        // Ordering: RELEASE publishes seals/copies before the state
+        // change; ACQUIRE failure — the witness may be dereferenced on
+        // retry (a sound strengthening of the pre-engine RELAXED
+        // failure sites).
+        t.bucket(idx)
+            .compare_exchange(cur, new, P::RELEASE, P::ACQUIRE)
+            .map(|_| ())
+    }
+
+    fn bucket_addr(t: &CTable<K, V>, idx: usize) -> usize {
+        t.bucket(idx) as *const AtomicUsize as usize
+    }
+
+    fn is_done(img: usize) -> bool {
+        img == FWD
+    }
+
+    fn is_frozen(img: usize) -> bool {
+        is_frozen(img)
+    }
+
+    fn is_closing(img: usize) -> bool {
+        is_closing(img)
+    }
+
+    fn is_empty_img(img: usize) -> bool {
+        img == 0
+    }
+
+    fn sealed(img: usize) -> usize {
+        img | FWD
+    }
+
+    fn closing_of(img: usize) -> usize {
+        img | CLOSING
+    }
+
+    fn done_img() -> usize {
+        FWD
+    }
+
+    fn copy_image(&self, new: &CTable<K, V>, img: usize) {
+        let mut p = node_of::<K, V>(img);
+        while !p.is_null() {
+            // SAFETY: frozen chain (DONE not published, nothing retired
+            // yet), region-pinned.
+            let n = unsafe { &*p };
+            self.copy_entry(new, n.key, n.value);
+            // A kill here unwinds the census guard — a rival re-runs
+            // the copy idempotently.
+            crate::failpoint!(ResizeCopyEntry);
+            p = n.next;
         }
-        self.generations.fetch_add(1, Ordering::AcqRel);
-        crate::counter!(ResizeFinish);
-        // SAFETY: unlinked from the root and the descriptor; unique.
-        unsafe { S::retire_box(op) };
+    }
+
+    unsafe fn retire_image(&self, img: usize) {
+        // Retire the drained chain through the region scheme as ONE
+        // page batch (one retire entry and one eventual orphan-lock
+        // acquisition per chain, however long it was).
+        let mut batch = pool::PageBatch::new();
+        let mut p = node_of::<K, V>(img);
+        while !p.is_null() {
+            // SAFETY: unlinked by the DONE transition; lagging
+            // frozen-image readers are pinned, which keeps the whole
+            // batch unrecycled until they unpin.
+            let nx = unsafe { (*p).next };
+            unsafe { batch.push(p) };
+            p = nx;
+        }
+        // SAFETY: every pushed node is unlinked and unique.
+        unsafe { S::retire_page(batch) };
+    }
+}
+
+impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> Maintain for Chaining<K, V, S> {
+    fn maintain(&self) -> bool {
+        {
+            let _g = S::pin();
+            resize::try_begin_shrink(self, resize::root_table(self));
+        }
+        self.finish_resizes();
+        !self.resize_in_flight()
     }
 }
 
 impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chaining<K, V, S> {
     fn find(&self, key: K) -> Option<V> {
         let _g = S::pin();
-        let mut t = self.root_table();
+        let mut t = resize::root_table(self);
         loop {
             // Ordering: ACQUIRE — pairs with the RELEASE install CAS so
             // node contents are visible before the walk; the pin (not
@@ -576,7 +397,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
             let raw = t.bucket(bucket_for(&key, t.len())).load(P::ACQUIRE);
             if raw == FWD {
                 // DONE: fall through old → new, lock-free.
-                t = self.table_after(t);
+                t = resize::table_after(self, t);
                 continue;
             }
             // FROZEN (`p|1`) reads its content in place — the frozen
@@ -588,8 +409,8 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
     fn insert(&self, key: K, value: V) -> bool {
         let _g = S::pin();
         // Updates pay the incremental-migration toll: one stripe.
-        self.help_resize();
-        let mut t = self.root_table();
+        resize::help_resize(self);
+        let mut t = resize::root_table(self);
         let mut idx = bucket_for(&key, t.len());
         let mut bucket = t.bucket(idx);
         // Ordering: ACQUIRE — the head is dereferenced below.
@@ -613,11 +434,11 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                     // bounded — unless the copier died in it. Wait a
                     // bounded number of beats, then help (idempotent
                     // takeover via `help_frozen_bucket`).
-                    crate::counter!(ResizeFrozenWait);
+                    resize::note_frozen_wait(self, t);
                     frozen_waits += 1;
                     if frozen_waits > FROZEN_PATIENCE {
                         frozen_waits = 0;
-                        self.help_frozen_bucket(t, idx);
+                        resize::help_frozen_bucket(self, t, idx);
                     } else {
                         snooze_lazy(&mut bo);
                     }
@@ -625,7 +446,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                     continue;
                 }
                 // DONE: hop generations.
-                t = self.table_after(t);
+                t = resize::table_after(self, t);
                 idx = bucket_for(&key, t.len());
                 bucket = t.bucket(idx);
                 raw = bucket.load(P::ACQUIRE);
@@ -667,7 +488,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
             // is walked on retry (no re-load).
             match bucket.compare_exchange(raw, fresh as usize, P::RELEASE, P::ACQUIRE) {
                 Ok(_) => {
-                    self.note_insert(t, idx);
+                    resize::note_insert(self, t, idx);
                     return true;
                 }
                 Err(w) => {
@@ -683,8 +504,8 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
     fn remove(&self, key: K) -> bool {
         let _g = S::pin();
         // Updates pay the incremental-migration toll: one stripe.
-        self.help_resize();
-        let mut t = self.root_table();
+        resize::help_resize(self);
+        let mut t = resize::root_table(self);
         let mut idx = bucket_for(&key, t.len());
         let mut bucket = t.bucket(idx);
         // Ordering: ACQUIRE — the head is dereferenced below.
@@ -695,18 +516,18 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
         loop {
             if raw & FWD != 0 {
                 if raw != FWD {
-                    crate::counter!(ResizeFrozenWait);
+                    resize::note_frozen_wait(self, t);
                     frozen_waits += 1;
                     if frozen_waits > FROZEN_PATIENCE {
                         frozen_waits = 0;
-                        self.help_frozen_bucket(t, idx);
+                        resize::help_frozen_bucket(self, t, idx);
                     } else {
                         snooze_lazy(&mut bo);
                     }
                     raw = bucket.load(P::ACQUIRE);
                     continue;
                 }
-                t = self.table_after(t);
+                t = resize::table_after(self, t);
                 idx = bucket_for(&key, t.len());
                 bucket = t.bucket(idx);
                 raw = bucket.load(P::ACQUIRE);
@@ -757,7 +578,7 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
                             q = nx;
                         }
                     }
-                    self.note_remove(t, idx);
+                    resize::note_remove(self, t, idx);
                     return true;
                 }
                 Err(w) => {
@@ -781,18 +602,16 @@ impl<K: AtomicValue, V: AtomicValue, S: RegionSmr> ConcurrentMap<K, V> for Chain
 
     fn capacity(&self) -> usize {
         let _g = S::pin();
-        self.root_table().len()
+        resize::root_table(self).len()
     }
 
     fn occupancy(&self) -> usize {
         let _g = S::pin();
-        self.root_table()
-            .stripes
-            .iter()
-            // Ordering: RELAXED — estimate.
-            .map(|s| s.load(P::RELAXED))
-            .sum::<isize>()
-            .max(0) as usize
+        <Self as ResizeTable>::occupancy_of(resize::root_table(self)).max(0) as usize
+    }
+
+    fn shrink_generation(&self) -> usize {
+        Chaining::shrink_generation(self)
     }
 }
 

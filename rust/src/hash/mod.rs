@@ -10,15 +10,32 @@
 //! * [`ShardedLockMap`], [`GlobalLockMap`] — comparator stand-ins for the
 //!   §5.3 open-source tables (DESIGN.md §Substitutions).
 //!
-//! `CacheHash` and `Chaining` **grow online**: when a per-stripe
-//! occupancy estimate crosses the growth load factor, a double-size
-//! table is published through a [`ResizeState`] big atomic and updaters
-//! migrate the old buckets stripe by stripe (sealing each source bucket
-//! with a FORWARDED mark and re-hashing its inlined link plus chain into
-//! the destination), while `find` stays lock-free throughout — it reads
-//! sealed-but-uncopied buckets in place and falls through fully-migrated
-//! seal marks old→new.  Drained tables and migrated chain links are
-//! reclaimed through the epoch scheme (`S: RegionSmr`).
+//! `CacheHash` and `Chaining` **resize online in both directions**
+//! through ONE shared protocol, the [`resize`] engine: a descriptor
+//! ([`ResizeState`]) published through a big atomic names the source
+//! and destination tables, helpers claim migration stripes with the
+//! witnessing `compare_exchange` on its cursor (adapting their stripe
+//! grain to contention), and each source bucket is sealed
+//! FROZEN → CLOSING → DONE with census-fenced copier takeover, while
+//! `find` stays lock-free throughout — it reads sealed-but-uncopied
+//! buckets in place and falls through DONE marks old→new.  Drained
+//! tables and migrated chain links are reclaimed through the epoch
+//! scheme (`S: RegionSmr`).
+//!
+//! The protocol is direction-agnostic; only the *triggers* differ:
+//!
+//! * **Grow** — a per-stripe occupancy estimate crossing the growth
+//!   load factor publishes a double-size destination.
+//! * **Shrink** — occupancy falling below the hysteresis band (see
+//!   [`resize`] for the no-oscillation argument) publishes a half-size
+//!   destination, bounded below by the construction-time capacity.
+//!
+//! Updates help migrate incrementally; a quiescent half-migrated table
+//! converges through [`Maintain::maintain`], driven manually or by a
+//! [`BackgroundMigrator`] thread.  The per-table code contributes only
+//! its bucket word/link encoding and copy routine (the
+//! [`resize::ResizeTable`] contract); everything else lives once in the
+//! engine.
 //!
 //! All expose [`ConcurrentMap<K, V>`] for any
 //! [`AtomicValue`](crate::atomics::AtomicValue) key/value — `u64 → u64`
@@ -41,11 +58,13 @@ pub mod cachehash;
 pub(crate) mod census;
 pub mod chaining;
 pub mod globallock;
+pub mod resize;
 pub mod shardlock;
 
 pub use cachehash::{CacheHash, Link, LinkVal};
 pub use chaining::Chaining;
 pub use globallock::GlobalLockMap;
+pub use resize::{BackgroundMigrator, Maintain};
 pub use shardlock::ShardedLockMap;
 
 use crate::atomics::AtomicValue;
@@ -70,6 +89,12 @@ pub trait ConcurrentMap<K: AtomicValue = u64, V: AtomicValue = u64>: Send + Sync
     /// lock-free tables (approximate under concurrent updates and
     /// mid-migration), exact for the lock-based stand-ins.
     fn occupancy(&self) -> usize;
+    /// Completed shrink migrations (capacity halvings that returned
+    /// memory).  Zero for tables that never shrink (the lock-based
+    /// stand-ins keep the default).
+    fn shrink_generation(&self) -> usize {
+        0
+    }
 }
 
 /// Descriptor of an in-flight incremental table resize, published

@@ -1,0 +1,950 @@
+//! The one resize engine (grow **and** shrink), shared by both hash
+//! tables.
+//!
+//! PR 5 gave `CacheHash` and `Chaining` twin online-resize protocols and
+//! PR 8's crash tolerance deepened the duplication to ~2× the protocol's
+//! full surface. This module is the single remaining copy: the
+//! descriptor lifecycle ([`try_begin_resize`] → [`help_resize`] →
+//! `migrate_bucket` → `finish_resize` and the [`finish_resizes`] sweep),
+//! stripe claim/accounting, the FROZEN-patience + census/CLOSING
+//! takeover, and drained-table retirement — parameterized by the
+//! [`ResizeTable`] trait so each table keeps only what is genuinely its
+//! own: the bucket word encoding (a big-atomic [`Link`](super::Link) vs
+//! a tagged pointer word), `copy_entry` (insert-if-absent into the
+//! destination), and chain retirement.
+//!
+//! ## The protocol (direction-agnostic)
+//!
+//! A migration is a [`ResizeState`] descriptor — (old table, new table,
+//! stripe cursor) — published through a `SeqLock` big atomic. Every
+//! update entering the map claims one stripe of source buckets with the
+//! witnessing `compare_exchange` on the cursor and migrates it:
+//!
+//! 1. **seal** — CAS the source bucket to its FROZEN image. Finds read
+//!    the frozen content in place; updates wait [`FROZEN_PATIENCE`]
+//!    beats and then take the copy over themselves.
+//! 2. **copy** — re-hash every entry of the (immutable) frozen image
+//!    into the destination, insert-if-absent, under a
+//!    [`census`](super::census) announcement (announce → re-validate
+//!    FROZEN → copy; RAII-cleared on unwind).
+//! 3. **CLOSING** — no new copier joins; the publisher drains rival
+//!    copiers (the Dekker store-load fence that keeps every destination
+//!    write pre-DONE).
+//! 4. **DONE** — one CAS winner retires the drained chain and accounts
+//!    the bucket; the last bucket's winner promotes the destination.
+//!
+//! Nothing above cares whether the destination is larger or smaller —
+//! `bucket_for` re-hashes into whatever the destination's length is. The
+//! **direction** lives entirely in the triggers:
+//!
+//! * **grow** — a per-stripe occupancy estimate crosses
+//!   [`GROW_LOAD_FACTOR`] (load factor > 2 locally): publish a
+//!   double-size destination.
+//! * **shrink** — the *global* occupancy estimate falls below
+//!   `capacity / `[`SHRINK_FACTOR`] (load factor < 1/4) and half the
+//!   capacity still respects the construction-time floor: publish a
+//!   half-size destination.
+//!
+//! ## Hysteresis (why grow/shrink cannot oscillate)
+//!
+//! The two thresholds leave a 4× churn band between them, in both
+//! directions:
+//!
+//! * After a **shrink** the load factor is at most `2/SHRINK_FACTOR` =
+//!   1/2 (it was < 1/4 of the old capacity, which is 2× the new). To
+//!   grow, some stripe must exceed load factor [`GROW_LOAD_FACTOR`] = 2
+//!   — the table must roughly **quadruple** its live entries first.
+//! * After a **grow** the triggering stripe's load factor is ~1 (it was
+//!   just over 2 at half the capacity). To shrink, the *global* load
+//!   factor must fall below 1/4 — roughly **4× removal** first.
+//!
+//! Each completed migration therefore moves the occupancy at least a
+//! factor of 4 away from the opposite trigger; alternating bursts inside
+//! the band fire neither (`test_shrink_oscillation_guard` in the
+//! linearizability suite pins this).
+//!
+//! ## Self-convergence
+//!
+//! Updates drive migration incrementally, so a table that goes quiet
+//! half-migrated would historically stay half-migrated. Two hooks close
+//! that: [`finish_resizes`] (drive the in-flight migration to
+//! completion, sweeping stripes whose claimant died), and the
+//! [`Maintain`] trait + [`BackgroundMigrator`] — a maintenance thread
+//! that periodically evaluates the shrink trigger and drains any
+//! in-flight migration with **zero foreground operations**.
+//!
+//! ## Per-op stripe-grain adaptation
+//!
+//! The cursor-claim grain starts at [`MIGRATION_STRIPE`] and adapts per
+//! thread: every lost claim CAS halves it (down to [`MIN_STRIPE`] — more
+//! claimants, finer slices, less wasted double-copy work), and a
+//! first-try win doubles it (up to [`MAX_STRIPE`] — an uncontended
+//! copier takes bigger bites). The *occupancy* grain
+//! ([`OCCUPANCY_STRIPE`]) never adapts: accounting must stay stable.
+//!
+//! ## What a new table must provide
+//!
+//! Implement [`ResizeTable`]: the five state-cell accessors, table
+//! alloc/len/stripe/retire plumbing, the bucket load/CAS + image
+//! predicates for the FROZEN/CLOSING/DONE encoding, and the two real
+//! hooks — `copy_image` (copy every entry of a frozen image into the
+//! destination, insert-if-absent, with a `ResizeCopyEntry` failpoint
+//! between entries) and `retire_image` (retire a drained image's chain,
+//! winner-only). Everything else — triggers, claims, seals, takeover,
+//! retirement, shrink, background convergence — is inherited.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::{census, ResizeState};
+use crate::atomics::SeqLock;
+use crate::util::backoff::snooze_lazy;
+use crate::util::ordering::{DefaultPolicy as P, OrderingPolicy};
+
+/// Source buckets migrated per helper claim (the starting grain;
+/// adapts per thread between [`MIN_STRIPE`] and [`MAX_STRIPE`]).
+pub const MIGRATION_STRIPE: usize = 64;
+
+/// Buckets covered by one occupancy counter (the trigger estimators'
+/// grain). Fixed — unlike the migration grain, accounting cannot adapt.
+pub const OCCUPANCY_STRIPE: usize = 64;
+
+/// Grow when a stripe's live-entry estimate exceeds this multiple of its
+/// bucket count (the paper's design point is load factor one; beyond ~2
+/// the chains dominate).
+pub const GROW_LOAD_FACTOR: usize = 2;
+
+/// Shrink when the global live-entry estimate times this factor is below
+/// the bucket count (load factor < 1/4). Together with
+/// [`GROW_LOAD_FACTOR`] this leaves a 4× hysteresis band in each
+/// direction — see the module docs for the no-oscillation argument.
+pub const SHRINK_FACTOR: usize = 4;
+
+/// Snoozes an update grants a FROZEN bucket's copier before copying the
+/// bucket out itself (the copier may be preempted — or dead).
+pub const FROZEN_PATIENCE: u32 = 16;
+
+/// Smallest adaptive claim grain (a thread drowning in lost claim CASes
+/// takes slices this fine).
+pub const MIN_STRIPE: usize = 8;
+
+/// Largest adaptive claim grain (an uncontended copier takes bites this
+/// big).
+pub const MAX_STRIPE: usize = 256;
+
+thread_local! {
+    /// This thread's adaptive cursor-claim grain.
+    static STRIPE_GRAIN: Cell<usize> = const { Cell::new(MIGRATION_STRIPE) };
+}
+
+/// This thread's current adaptive claim grain (tests/telemetry).
+pub fn stripe_grain() -> usize {
+    STRIPE_GRAIN.with(Cell::get)
+}
+
+/// Which way an in-flight migration is headed (derived from the two
+/// table lengths — the descriptor itself is direction-blind).
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Direction {
+    Grow,
+    Shrink,
+}
+
+#[inline]
+fn direction(old_len: usize, new_len: usize) -> Direction {
+    if new_len >= old_len {
+        Direction::Grow
+    } else {
+        Direction::Shrink
+    }
+}
+
+/// The per-representation surface of the resize engine. Implemented by
+/// each table type (`CacheHash`, `Chaining`); the engine's free
+/// functions own everything protocol-shaped.
+///
+/// # Safety
+///
+/// Implementors must uphold the engine's aliasing contract:
+///
+/// * Every method is called under the table's region pin (`RegionSmr`),
+///   and tables referenced by a root-matching descriptor stay live for
+///   the pin's lifetime (`retire_drained_table` must go through the
+///   region scheme, never free directly).
+/// * `Image` is a bitwise snapshot of one bucket: `load_bucket` /
+///   `cas_bucket` must be atomic, `cas_bucket`'s failure must return the
+///   witnessed current image, and the FROZEN/CLOSING/DONE predicates and
+///   constructors must agree with the encoding `cas_bucket` installs
+///   (exactly one predicate true per sealed image; `sealed`/`closing_of`
+///   preserve content).
+/// * `copy_image` must be idempotent under concurrent callers copying
+///   the *same* immutable image (insert-if-absent), and `retire_image`
+///   must be safe to call exactly once per bucket, by the DONE winner,
+///   on an image whose chain the DONE transition just unlinked.
+/// * `alloc_table` returns a fresh, empty, never-shared table;
+///   `free_unpublished_table` is only called on tables never published
+///   through the descriptor.
+pub unsafe trait ResizeTable {
+    /// One generation of buckets.
+    type Table;
+    /// A bitwise snapshot of one bucket's contents.
+    type Image: Copy + PartialEq;
+
+    // -- state cells -------------------------------------------------------
+    /// The migration descriptor cell.
+    fn resize_cell(&self) -> &SeqLock<ResizeState>;
+    /// The live-generation root pointer.
+    fn root_cell(&self) -> &AtomicPtr<Self::Table>;
+    /// Completed grow migrations.
+    fn grow_cell(&self) -> &AtomicUsize;
+    /// Completed shrink migrations.
+    fn shrink_cell(&self) -> &AtomicUsize;
+    /// The construction-time capacity: shrink never goes below this.
+    fn floor(&self) -> usize;
+
+    // -- table plumbing ----------------------------------------------------
+    /// A fresh empty table of `cap` buckets (heap-allocated, unshared).
+    fn alloc_table(&self, cap: usize) -> *mut Self::Table;
+    /// Free a table that was never published (lost publish race /
+    /// retracted stale descriptor).
+    ///
+    /// # Safety
+    /// `t` must come from `alloc_table` and never have been reachable
+    /// through the descriptor or the root.
+    unsafe fn free_unpublished_table(&self, t: *mut Self::Table);
+    /// Retire a fully-drained source table through the region scheme.
+    ///
+    /// # Safety
+    /// `t` must be unlinked from both the root and the descriptor, with
+    /// every bucket DONE (chains already retired at their transitions).
+    unsafe fn retire_drained_table(&self, t: *mut Self::Table);
+    fn len_of(t: &Self::Table) -> usize;
+    /// Buckets sealed DONE; reaching `len_of` completes the migration.
+    fn migrated_of(t: &Self::Table) -> &AtomicUsize;
+    /// The occupancy-estimate counter covering bucket `idx`.
+    fn stripe_of(t: &Self::Table, idx: usize) -> &AtomicIsize;
+    /// Sum of all stripe estimates (may be transiently negative under
+    /// racing insert/remove pairs).
+    fn occupancy_of(t: &Self::Table) -> isize;
+
+    // -- bucket ops --------------------------------------------------------
+    fn load_bucket(t: &Self::Table, idx: usize) -> Self::Image;
+    /// Atomic bucket CAS; `Err` carries the witnessed current image.
+    fn cas_bucket(
+        t: &Self::Table,
+        idx: usize,
+        cur: Self::Image,
+        new: Self::Image,
+    ) -> Result<(), Self::Image>;
+    /// Stable address of the bucket cell — the census key.
+    fn bucket_addr(t: &Self::Table, idx: usize) -> usize;
+
+    // -- image predicates / constructors ------------------------------------
+    /// Sealed empty: contents live in the next generation.
+    fn is_done(img: Self::Image) -> bool;
+    /// Sealed with content, copier window open.
+    fn is_frozen(img: Self::Image) -> bool;
+    /// Sealed with content, copier window closed (publisher draining).
+    fn is_closing(img: Self::Image) -> bool;
+    /// Unsealed and empty.
+    fn is_empty_img(img: Self::Image) -> bool;
+    /// `img` with the FROZEN seal added (content preserved).
+    fn sealed(img: Self::Image) -> Self::Image;
+    /// A FROZEN `img` with the CLOSING mark added (content preserved).
+    fn closing_of(img: Self::Image) -> Self::Image;
+    /// The DONE sentinel.
+    fn done_img() -> Self::Image;
+
+    // -- the genuinely distinct parts ---------------------------------------
+    /// Copy every entry of the (immutable) frozen image into `new`,
+    /// insert-if-absent, firing `failpoint!(ResizeCopyEntry)` between
+    /// entries. Idempotent under concurrent copiers of the same image.
+    fn copy_image(&self, new: &Self::Table, img: Self::Image);
+    /// Retire the drained chain of a DONE'd image (winner-only, once per
+    /// bucket).
+    ///
+    /// # Safety
+    /// Caller must be the unique CLOSING→DONE transition winner for the
+    /// bucket this image was loaded from.
+    unsafe fn retire_image(&self, img: Self::Image);
+}
+
+/// The live root table. Callers must hold the region pin: drained tables
+/// are only region-retired, so the reference stays valid for the pin's
+/// lifetime even across concurrent resizes.
+#[inline]
+pub fn root_table<E: ResizeTable>(e: &E) -> &E::Table {
+    // Ordering: ACQUIRE — pairs with the RELEASE root swing in
+    // `finish_resize` so the promoted table's contents are visible.
+    unsafe { &*e.root_cell().load(P::ACQUIRE) }
+}
+
+/// The table a DONE seal mark in `t` forwards to: the in-flight
+/// migration's destination when the descriptor matches `t` *and* the
+/// root, else the (necessarily newer) root. Requires the caller's pin.
+pub fn table_after<'e, E: ResizeTable>(e: &'e E, t: &E::Table) -> &'e E::Table {
+    let rs = e.resize_cell().load();
+    // Ordering: ACQUIRE — as in `root_table`.
+    let root = e.root_cell().load(P::ACQUIRE);
+    let tp = t as *const E::Table as u64;
+    if rs.in_flight() && rs.old == root as u64 && rs.old == tp {
+        // SAFETY: the descriptor matches the live root, so `new` is the
+        // live in-flight destination — pin-protected like every table.
+        unsafe { &*(rs.new as *const E::Table) }
+    } else {
+        // The migration that sealed `t` has completed (the root is swung
+        // before the descriptor is cleared), or a later one is in
+        // flight: restart from the root, which is strictly newer than
+        // `t`.
+        // SAFETY: root is live under the caller's pin.
+        unsafe { &*root }
+    }
+}
+
+/// Account a successful insert into `t`'s stripe estimate and trigger a
+/// grow when the stripe crosses the load-factor threshold. Requires the
+/// caller's pin.
+pub fn note_insert<E: ResizeTable>(e: &E, t: &E::Table, idx: usize) {
+    // Ordering: RELAXED — the stripe counters are a statistical
+    // estimate; nothing synchronizes through them.
+    let n = E::stripe_of(t, idx).fetch_add(1, P::RELAXED) + 1;
+    let span = OCCUPANCY_STRIPE.min(E::len_of(t));
+    if n > (span * GROW_LOAD_FACTOR) as isize {
+        try_begin_resize(e, t, E::len_of(t) * 2);
+    }
+}
+
+/// Account a successful remove and evaluate the shrink trigger — but
+/// only on exact downward crossings of the per-stripe shrink estimate
+/// (`span/SHRINK_FACTOR` or zero), so the O(#stripes) global sum runs
+/// O(1) times per stripe per drain, not per op. Requires the caller's
+/// pin.
+pub fn note_remove<E: ResizeTable>(e: &E, t: &E::Table, idx: usize) {
+    // Ordering: RELAXED — as in note_insert.
+    let n = E::stripe_of(t, idx).fetch_sub(1, P::RELAXED) - 1;
+    let span = OCCUPANCY_STRIPE.min(E::len_of(t));
+    if n == (span / SHRINK_FACTOR) as isize || n == 0 {
+        try_begin_shrink(e, t);
+    }
+}
+
+/// Publish a half-size destination when the global occupancy estimate is
+/// below `capacity / SHRINK_FACTOR` and the halved capacity respects the
+/// construction floor. Safe to call any time (maintenance threads call
+/// it unconditionally); every condition is re-checked. Requires the
+/// caller's pin.
+pub fn try_begin_shrink<E: ResizeTable>(e: &E, t: &E::Table) {
+    let cap = E::len_of(t);
+    let target = cap / 2;
+    if target < e.floor() || target < 2 {
+        return; // never below what the user asked for
+    }
+    let occ = E::occupancy_of(t).max(0) as usize;
+    if occ * SHRINK_FACTOR >= cap {
+        return; // inside the hysteresis band
+    }
+    try_begin_resize(e, t, target);
+}
+
+/// Publish a `new_cap`-bucket destination for `t` if no migration is in
+/// flight and `t` is still the root (the direction falls out of
+/// `new_cap` vs `t`'s length). Requires the caller's pin.
+pub fn try_begin_resize<E: ResizeTable>(e: &E, t: &E::Table, new_cap: usize) {
+    if e.resize_cell().load().in_flight() {
+        return;
+    }
+    let tp = t as *const E::Table as *mut E::Table;
+    // Only the root resizes; a mid-migration destination resizes after
+    // promotion.
+    if e.root_cell().load(P::ACQUIRE) != tp {
+        return;
+    }
+    let new = e.alloc_table(new_cap);
+    let desc = ResizeState {
+        old: tp as u64,
+        new: new as u64,
+        cursor: 0,
+    };
+    if e.resize_cell().compare_exchange(ResizeState::default(), desc).is_err() {
+        // Lost the publish race to another resizer.
+        // SAFETY: never published.
+        unsafe { e.free_unpublished_table(new) };
+        return;
+    }
+    if e.root_cell().load(P::ACQUIRE) != tp {
+        // A full resize completed between our root check and the
+        // publish: the descriptor is stale. Helpers ignore descriptors
+        // whose `old` is not the root (and `t` cannot be freed while we
+        // are pinned, so its address cannot be recycled into a new
+        // root), so a successful exact retract proves the fresh table is
+        // still unreferenced.
+        if e.resize_cell().compare_exchange(desc, ResizeState::default()).is_ok() {
+            // SAFETY: unpublished again, never dereferenced.
+            unsafe { e.free_unpublished_table(new) };
+        }
+        return;
+    }
+    // Descriptor published and still rooted: this resize is real.
+    match direction(E::len_of(t), new_cap) {
+        Direction::Grow => {
+            crate::counter!(ResizeGrowBegin);
+        }
+        Direction::Shrink => {
+            crate::counter!(ResizeShrinkBegin);
+        }
+    }
+    // Kick-start: migrate the first stripe ourselves.
+    help_resize(e);
+}
+
+/// Claim and migrate one stripe of the in-flight resize (no-op when
+/// idle), adapting this thread's claim grain: halve on every lost claim
+/// CAS, double on a first-try win. Requires the caller's pin.
+pub fn help_resize<E: ResizeTable>(e: &E) {
+    let mut rs = e.resize_cell().load();
+    if !rs.in_flight() {
+        return;
+    }
+    let root = e.root_cell().load(P::ACQUIRE);
+    if rs.old != root as u64 {
+        return; // stale descriptor (retraction pending) or finishing
+    }
+    // SAFETY: old == root — live under the caller's pin.
+    let old = unsafe { &*root };
+    let len = E::len_of(old);
+    // SAFETY: while `old` is the root and the descriptor matches it,
+    // `new` is the live destination (it cannot be retired before the
+    // descriptor clears, which our in-flight checks below detect).
+    let new = unsafe { &*(rs.new as *const E::Table) };
+    let dir = direction(len, E::len_of(new));
+    let mut grain = STRIPE_GRAIN.with(Cell::get);
+    let mut lost = false;
+    // Claim one stripe with the witnessing CAS on the cursor.
+    let (start, end) = loop {
+        if !rs.in_flight() || rs.old != root as u64 {
+            STRIPE_GRAIN.with(|g| g.set(grain));
+            return;
+        }
+        let c = rs.cursor as usize;
+        if c >= len {
+            STRIPE_GRAIN.with(|g| g.set(grain));
+            return; // fully claimed; stragglers still copying
+        }
+        let end = (c + grain).min(len);
+        match e.resize_cell().compare_exchange(
+            rs,
+            ResizeState {
+                cursor: end as u64,
+                ..rs
+            },
+        ) {
+            Ok(_) => {
+                if !lost {
+                    // Uncontended: take bigger bites next time.
+                    grain = (grain * 2).min(MAX_STRIPE);
+                }
+                STRIPE_GRAIN.with(|g| g.set(grain));
+                match dir {
+                    Direction::Grow => {
+                        crate::counter!(ResizeStripeClaim);
+                    }
+                    Direction::Shrink => {
+                        crate::counter!(ResizeShrinkStripeClaim);
+                    }
+                }
+                // A kill here is the dead-claimant scenario: the cursor
+                // has advanced past a stripe nobody will copy.
+                // `finish_resizes`'s sweep re-covers it.
+                crate::failpoint!(ResizeStripeClaim);
+                break (c, end);
+            }
+            Err(w) => {
+                // Contended cursor: finer slices waste less double-copy.
+                lost = true;
+                grain = (grain / 2).max(MIN_STRIPE);
+                rs = w;
+            }
+        }
+    };
+    for idx in start..end {
+        migrate_bucket(e, old, idx, new, dir);
+    }
+}
+
+/// Drive any in-flight migration to completion — the cooperative helper
+/// for maintenance threads, drops, and tests; normal updates migrate one
+/// stripe at a time. Requires the caller's pin.
+///
+/// Stall-proof: once the cursor is exhausted, this does not merely wait
+/// for stragglers — it *sweeps* every not-yet-DONE bucket itself. A
+/// claimant that died after advancing the cursor (so its stripe was
+/// claimed but never copied) would otherwise leave `migrated < len`
+/// forever with no helper able to reach the gap; `migrate_bucket` is
+/// idempotent (FROZEN takeover + DONE election), so re-covering a live
+/// straggler's stripe is harmless.
+pub fn finish_resizes<E: ResizeTable>(e: &E) {
+    let mut bo = None;
+    loop {
+        let rs = e.resize_cell().load();
+        if !rs.in_flight() {
+            return;
+        }
+        help_resize(e);
+        let root = e.root_cell().load(P::ACQUIRE);
+        if rs.old == root as u64 {
+            // SAFETY: old == root — live under our pin.
+            let old = unsafe { &*root };
+            if rs.cursor as usize >= E::len_of(old) {
+                // Cursor exhausted but descriptor still published:
+                // re-cover any stripe whose claimant went missing.
+                // SAFETY: the descriptor matched the root when loaded;
+                // `new` is the live destination under our pin (it cannot
+                // be retired while `old` is root).
+                let new = unsafe { &*(rs.new as *const E::Table) };
+                let dir = direction(E::len_of(old), E::len_of(new));
+                for idx in 0..E::len_of(old) {
+                    migrate_bucket(e, old, idx, new, dir);
+                }
+            }
+        }
+        snooze_lazy(&mut bo);
+    }
+}
+
+/// An update ran out of patience with a FROZEN bucket: locate the
+/// in-flight descriptor and help copy that one bucket out (idempotent
+/// takeover via `migrate_bucket`). No-op when the descriptor moved on —
+/// the bucket's DONE transition is then already imminent or published.
+/// Requires the caller's pin.
+pub fn help_frozen_bucket<E: ResizeTable>(e: &E, t: &E::Table, idx: usize) {
+    let rs = e.resize_cell().load();
+    let tp = t as *const E::Table as u64;
+    if !rs.in_flight() || rs.old != tp || e.root_cell().load(P::ACQUIRE) as u64 != tp {
+        return;
+    }
+    crate::counter!(ResizeTakeover);
+    // SAFETY: the descriptor matches the live root — `new` is the live
+    // destination under the caller's pin.
+    let new = unsafe { &*(rs.new as *const E::Table) };
+    let dir = direction(E::len_of(t), E::len_of(new));
+    migrate_bucket(e, t, idx, new, dir);
+}
+
+/// Count an update's wait on a FROZEN bucket, labeled by the in-flight
+/// direction (telemetry builds only — the descriptor probe compiles out
+/// otherwise).
+pub fn note_frozen_wait<E: ResizeTable>(e: &E, t: &E::Table) {
+    #[cfg(feature = "telemetry")]
+    {
+        match frozen_wait_direction(e, t) {
+            Direction::Grow => {
+                crate::counter!(ResizeFrozenWait);
+            }
+            Direction::Shrink => {
+                crate::counter!(ResizeShrinkFrozenWait);
+            }
+        }
+    }
+    #[cfg(not(feature = "telemetry"))]
+    {
+        let _ = (e, t);
+    }
+}
+
+#[cfg(feature = "telemetry")]
+fn frozen_wait_direction<E: ResizeTable>(e: &E, t: &E::Table) -> Direction {
+    let rs = e.resize_cell().load();
+    let tp = t as *const E::Table as u64;
+    if rs.in_flight() && rs.old == tp && e.root_cell().load(P::ACQUIRE) as u64 == tp {
+        // SAFETY: descriptor matches the live root — `new` is the live
+        // destination under the caller's pin.
+        let new = unsafe { &*(rs.new as *const E::Table) };
+        return direction(E::len_of(t), E::len_of(new));
+    }
+    // Descriptor moved on (the wait is about to resolve): attribute to
+    // the common direction.
+    Direction::Grow
+}
+
+/// Seal-and-copy one source bucket into `new`. The seal-CAS winner is
+/// the *preferred* copier (updates landing on the FROZEN window wait
+/// briefly; finds read the frozen content in place) — but not the only
+/// one allowed: a FROZEN bucket whose copier stalled or died is copied
+/// again by any helper. The copy is idempotent (`copy_image` is
+/// CAS-if-absent over the immutable frozen image), the census handshake
+/// keeps every copy write pre-DONE, and the CLOSING→DONE CAS elects
+/// exactly one winner, which alone retires the chain and accounts the
+/// bucket — so a dead copier delays this bucket, never wedges it.
+fn migrate_bucket<E: ResizeTable>(
+    e: &E,
+    old: &E::Table,
+    idx: usize,
+    new: &E::Table,
+    dir: Direction,
+) {
+    let mut img = E::load_bucket(old, idx);
+    let mut bo = None;
+    loop {
+        if E::is_done(img) {
+            // Already migrated and accounted (re-entry via
+            // finish_resizes or the sweep).
+            return;
+        }
+        if E::is_frozen(img) {
+            // Takeover: the sealing copier may be stalled or dead.
+            if copy_frozen(e, old, idx, img, new) {
+                break; // our DONE transition: account below
+            }
+            return; // a rival's DONE transition accounted already
+        }
+        if E::is_closing(img) {
+            // Copy complete; a publisher died (or is racing us) between
+            // CLOSING and DONE. Drain stragglers and race the transition
+            // ourselves.
+            if publish_done(e, old, idx, img) {
+                break;
+            }
+            return;
+        }
+        if E::is_empty_img(img) {
+            // Empty source: seal straight to DONE.
+            match E::cas_bucket(old, idx, img, E::done_img()) {
+                Ok(()) => break,
+                Err(w) => {
+                    img = w;
+                    snooze_lazy(&mut bo);
+                }
+            }
+            continue;
+        }
+        // Freeze the content: one-way — updates now wait, finds still
+        // read the (authoritative, immutable) frozen image.
+        match E::cas_bucket(old, idx, img, E::sealed(img)) {
+            Ok(()) => {
+                // A kill here leaves the bucket FROZEN with no copier —
+                // the takeover arm above must recover it.
+                crate::failpoint!(ResizeSealFrozen);
+                if copy_frozen(e, old, idx, E::sealed(img), new) {
+                    break;
+                }
+                return; // a takeover helper beat us to DONE
+            }
+            Err(w) => {
+                img = w;
+                snooze_lazy(&mut bo);
+            }
+        }
+    }
+    // Exactly one DONE transition per bucket reports it migrated.
+    match dir {
+        Direction::Grow => {
+            crate::counter!(ResizeBucketMigrate);
+        }
+        Direction::Shrink => {
+            crate::counter!(ResizeShrinkBucketMigrate);
+        }
+    }
+    // Ordering: ACQREL — the finisher's promotion happens-after every
+    // copier's DONE publication.
+    if E::migrated_of(old).fetch_add(1, P::ACQREL) + 1 == E::len_of(old) {
+        finish_resize(e, old, dir);
+    }
+}
+
+/// Copy a FROZEN bucket's (immutable) image into the destination and
+/// race it through CLOSING to DONE. Returns whether *we* won the DONE
+/// transition — the winner alone retires the drained chain and must
+/// account the bucket.
+///
+/// Safe to run concurrently with the sealing copier or any number of
+/// takeover helpers: `copy_image` is CAS-if-absent over the same
+/// immutable image, and the [`census`](super::census) handshake
+/// guarantees no copier's destination write can land after DONE — we
+/// announce, re-validate the bucket is still exactly FROZEN (standing
+/// down if the window closed), copy, and clear the announcement before
+/// anyone may publish DONE.
+fn copy_frozen<E: ResizeTable>(
+    e: &E,
+    old: &E::Table,
+    idx: usize,
+    frozen: E::Image,
+    new: &E::Table,
+) -> bool {
+    debug_assert!(E::is_frozen(frozen), "copy_frozen on an unsealed bucket");
+    let addr = E::bucket_addr(old, idx);
+    {
+        let _census = census::announce(addr);
+        // Re-validate post-announce (the Dekker edge — see the census
+        // module docs): if the bucket left FROZEN after our
+        // announcement, the publisher's scan may have missed us, so we
+        // must not write. The image is immutable, so any change means
+        // CLOSING or DONE.
+        if E::load_bucket(old, idx) == frozen {
+            e.copy_image(new, frozen);
+        }
+        // Guard dropped here: our destination writes are complete and
+        // visible before any publisher's scan can miss us.
+    }
+    // Close the copier window. One CAS winner; losers fall through to
+    // the publish race on the same (deterministic) image.
+    let closing = E::closing_of(frozen);
+    let _ = E::cas_bucket(old, idx, frozen, closing);
+    publish_done(e, old, idx, closing)
+}
+
+/// Drain straggling copiers off a CLOSING bucket, then race its
+/// CLOSING→DONE transition. Returns whether *we* won — the winner alone
+/// retires the drained chain.
+fn publish_done<E: ResizeTable>(e: &E, old: &E::Table, idx: usize, closing: E::Image) -> bool {
+    debug_assert!(E::is_closing(closing), "publish_done on a non-CLOSING image");
+    let addr = E::bucket_addr(old, idx);
+    // Wait until no rival copier still announces this bucket: a live one
+    // finishes its (chain-length-bounded) copy and clears; a killed
+    // one's guard cleared on unwind. This wait is the fence that keeps
+    // every copy write pre-DONE.
+    let mut bo = None;
+    while census::rivals(addr) {
+        snooze_lazy(&mut bo);
+    }
+    // Publish DONE — the linearization point after which this bucket's
+    // keys live in the destination. A kill *before* the CAS re-opens the
+    // publish window (any helper re-runs this phase); after a successful
+    // CAS the accounting in `migrate_bucket` is fault-free by
+    // construction (no failpoints between the transition and the
+    // migrated increment).
+    crate::failpoint!(ResizePublishDone);
+    if E::cas_bucket(old, idx, closing, E::done_img()).is_err() {
+        return false; // a rival published DONE (the image is immutable)
+    }
+    // Retire the drained chain — winner only, exactly once per bucket.
+    // SAFETY: we are the unique DONE winner; the CAS just unlinked the
+    // image's chain.
+    unsafe { e.retire_image(closing) };
+    true
+}
+
+/// Run by the unique copier whose DONE transition drained the last
+/// bucket: promote the destination, clear the descriptor, retire the
+/// source, and account the completed migration to its direction's
+/// generation counter.
+fn finish_resize<E: ResizeTable>(e: &E, old: &E::Table, dir: Direction) {
+    let rs = e.resize_cell().load();
+    let op = old as *const E::Table as *mut E::Table;
+    debug_assert!(rs.in_flight() && rs.old == op as u64, "finisher raced the descriptor");
+    let new = rs.new as *mut E::Table;
+    // Ordering: ACQREL CAS — the release half publishes the fully
+    // populated destination to readers' ACQUIRE root loads.
+    let swung = e
+        .root_cell()
+        .compare_exchange(op, new, P::ACQREL, P::ACQUIRE)
+        .is_ok();
+    debug_assert!(swung, "root moved before the finisher");
+    // Clear the descriptor only after the root swing so `table_after`'s
+    // descriptor-matches-root rule stays sound.
+    let mut cur = rs;
+    while cur.in_flight() && cur.old == op as u64 {
+        match e.resize_cell().compare_exchange(cur, ResizeState::default()) {
+            Ok(_) => break,
+            Err(w) => cur = w,
+        }
+    }
+    // Ordering: ACQREL — generation reads observe a promoted root.
+    match dir {
+        Direction::Grow => {
+            e.grow_cell().fetch_add(1, P::ACQREL);
+            crate::counter!(ResizeFinish);
+        }
+        Direction::Shrink => {
+            e.shrink_cell().fetch_add(1, P::ACQREL);
+            crate::counter!(ResizeShrinkFinish);
+        }
+    }
+    // Retire the drained generation — bucket array and all (every bucket
+    // holds a DONE seal; chains were retired at their DONE transitions).
+    // Pinned readers mid-fall-through keep it alive: the region
+    // guarantee of the table's scheme.
+    // SAFETY: unlinked from both the root and the descriptor; unique.
+    unsafe { e.retire_drained_table(op) };
+}
+
+// ---------------------------------------------------------------------------
+// Background convergence
+// ---------------------------------------------------------------------------
+
+/// One maintenance pass over a table: evaluate the shrink trigger and
+/// drive any in-flight migration to completion, with zero foreground
+/// operations required. Implemented by both hash tables (pin, call
+/// [`try_begin_shrink`], then their `finish_resizes`).
+pub trait Maintain: Send + Sync {
+    /// Run one pass; returns `true` when the table is idle (no
+    /// descriptor in flight) on return.
+    fn maintain(&self) -> bool;
+}
+
+/// A maintenance thread that periodically runs [`Maintain::maintain`] on
+/// a set of tables, so a quiescent half-migrated table converges — and a
+/// quiescent drained table shrinks — without foreground traffic.
+///
+/// Each pass runs under `catch_unwind` (the chaos suite kills copiers
+/// *inside* maintenance passes; the next pass recovers idempotently), so
+/// the migrator itself survives an injected death mid-`finish_resizes`.
+/// Dropping the handle stops and joins the thread.
+pub struct BackgroundMigrator {
+    stop: Arc<AtomicBool>,
+    panics: Arc<AtomicUsize>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BackgroundMigrator {
+    /// Spawn the migrator over `tables`, running a full pass every
+    /// `interval`.
+    pub fn spawn(tables: Vec<Arc<dyn Maintain>>, interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let (flag, deaths) = (Arc::clone(&stop), Arc::clone(&panics));
+        let handle = std::thread::Builder::new()
+            .name("resize-migrator".into())
+            .spawn(move || {
+                // Ordering: Acquire — pairs with the Release in `stop`.
+                while !flag.load(Ordering::Acquire) {
+                    for t in &tables {
+                        if catch_unwind(AssertUnwindSafe(|| t.maintain())).is_err() {
+                            // An injected (or real) death mid-pass: the
+                            // protocol is takeover-safe, the next pass
+                            // re-covers whatever this one abandoned.
+                            deaths.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    // Sleep in short slices so `stop` stays prompt.
+                    let mut left = interval;
+                    while !left.is_zero() && !flag.load(Ordering::Acquire) {
+                        let nap = left.min(Duration::from_millis(1));
+                        std::thread::sleep(nap);
+                        left -= nap;
+                    }
+                }
+            })
+            .expect("spawn resize-migrator thread");
+        Self {
+            stop,
+            panics,
+            handle: Some(handle),
+        }
+    }
+
+    /// Maintenance passes that died by panic (fault-injection kills).
+    pub fn panics(&self) -> usize {
+        self.panics.load(Ordering::Relaxed)
+    }
+
+    /// Stop and join the migrator thread (also runs on drop).
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        // Ordering: Release — pairs with the Acquire in the thread loop.
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BackgroundMigrator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::{CacheHash, Chaining, ConcurrentMap, LinkVal};
+    use crate::atomics::CachedMemEff;
+
+    #[test]
+    fn test_hysteresis_band_is_at_least_4x_each_way() {
+        // The no-oscillation argument needs the two thresholds separated
+        // by a multiplicative churn band ≥ 4 in both directions (see the
+        // module docs); a future constant tweak must not silently close
+        // it.
+        assert!(GROW_LOAD_FACTOR * SHRINK_FACTOR >= 4);
+        assert!(SHRINK_FACTOR >= 2 * 1, "post-shrink LF must stay below grow trigger");
+        assert!(MIN_STRIPE >= 1 && MIN_STRIPE <= MIGRATION_STRIPE);
+        assert!(MAX_STRIPE >= MIGRATION_STRIPE);
+    }
+
+    #[test]
+    fn test_stripe_grain_starts_at_default() {
+        assert_eq!(stripe_grain(), MIGRATION_STRIPE);
+    }
+
+    #[test]
+    fn test_quiescent_drained_table_shrinks_via_maintain() {
+        // Build undersized (floor 2), grow by inserts, drain, then let
+        // maintain() alone return the memory — no foreground ops.
+        let t: Chaining = Chaining::new(2);
+        for k in 0..4096u64 {
+            assert!(t.insert(k, k));
+        }
+        while !t.maintain() {}
+        let peak = t.capacity();
+        assert!(peak >= 1024);
+        for k in 0..4096u64 {
+            assert!(t.remove(k));
+        }
+        // Converge the shrink chain: each pass publishes at most one
+        // halving, so iterate until idle *and* stable.
+        loop {
+            let before = t.capacity();
+            let idle = t.maintain();
+            if idle && t.capacity() == before {
+                break;
+            }
+        }
+        assert!(t.capacity() < peak, "no memory returned: {}", t.capacity());
+        assert_eq!(t.capacity(), 2, "empty table must shrink to its floor");
+        assert!(t.shrink_generation() >= 1);
+        // Still a working table.
+        assert!(t.insert(7, 70));
+        assert_eq!(t.find(7), Some(70));
+    }
+
+    #[test]
+    fn test_shrink_respects_construction_floor() {
+        // A table built at 256 and fully drained must NOT shrink below
+        // 256 — the user asked for that capacity.
+        let t: CacheHash<CachedMemEff<LinkVal>> = CacheHash::new(256);
+        for k in 0..100u64 {
+            assert!(t.insert(k, k));
+        }
+        for k in 0..100u64 {
+            assert!(t.remove(k));
+        }
+        for _ in 0..8 {
+            t.maintain();
+        }
+        assert_eq!(t.capacity(), 256);
+        assert_eq!(t.shrink_generation(), 0);
+    }
+
+    #[test]
+    fn test_background_migrator_stops_cleanly() {
+        let t: std::sync::Arc<Chaining> = std::sync::Arc::new(Chaining::new(16));
+        for k in 0..8u64 {
+            t.insert(k, k);
+        }
+        let mig = BackgroundMigrator::spawn(
+            vec![std::sync::Arc::clone(&t) as Arc<dyn Maintain>],
+            Duration::from_millis(1),
+        );
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(mig.panics(), 0);
+        mig.stop(); // joins; must not hang or panic
+        assert_eq!(t.find(3), Some(3));
+    }
+}

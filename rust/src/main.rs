@@ -145,7 +145,8 @@ OPTIONS:
   --reservoir R       kv: max raw latency samples retained [4096]
   --seed S            chaos: plan seed (decisions replay from it)
   --plan P            chaos: kill-copier|stall-drainer|kill-worker|
-                      kill-allocator|jitter
+                      kill-allocator|kill-copier-shrink|kill-migrator|
+                      jitter
                       (default: run all scenarios)
                       fault injection needs `--features fault`; without
                       it the scenarios run as a plain stress pass
@@ -369,5 +370,22 @@ fn exercise_subsystems(n: usize) {
         } else {
             std::hint::black_box(t.find(k));
         }
+    }
+    // Drain most of what survived and let maintenance walk the capacity
+    // back down, so the shrink-direction counters show up in the JSON.
+    use big_atomics::hash::Maintain;
+    for rank in 0..n.max(1 << 10) {
+        if rank % 3 != 0 && rank % 8 != 1 {
+            t.remove(big_atomics::util::rng::mix64(rank as u64));
+        }
+    }
+    let mut cap = t.capacity();
+    loop {
+        let idle = t.maintain();
+        let now = t.capacity();
+        if idle && now == cap {
+            break;
+        }
+        cap = now;
     }
 }

@@ -132,10 +132,24 @@ pub enum Event {
     /// The global orphan list's mutex was acquired (spill, drain, or
     /// census) — the traffic `retire_page` amortizes by the batch size.
     OrphanLock,
+    // -- hash/ online resize, shrink direction ------------------------------
+    // Grow keeps the original undirected names above (stable JSON keys);
+    // shrink-direction traffic lands here instead, so `repro stats`
+    // deltas separate the two migrations cleanly.
+    /// A shrink was published (half-size ResizeState installed).
+    ResizeShrinkBegin,
+    /// A migration stripe claimed while shrinking.
+    ResizeShrinkStripeClaim,
+    /// One source bucket sealed FROZEN and migrated while shrinking.
+    ResizeShrinkBucketMigrate,
+    /// An update waited on a FROZEN bucket of a shrinking table.
+    ResizeShrinkFrozenWait,
+    /// A shrink fully retired its old table (shrink generation bumped).
+    ResizeShrinkFinish,
 }
 
 /// Number of events (cells per thread row).
-pub const NUM_EVENTS: usize = Event::OrphanLock as usize + 1;
+pub const NUM_EVENTS: usize = Event::ResizeShrinkFinish as usize + 1;
 
 /// All events in cell order — drives snapshot naming; `test_all_dense`
 /// pins the `ALL[i] as usize == i` invariant.
@@ -184,6 +198,11 @@ pub const ALL: [Event; NUM_EVENTS] = [
     Event::PoolRecycle,
     Event::RetireBatch,
     Event::OrphanLock,
+    Event::ResizeShrinkBegin,
+    Event::ResizeShrinkStripeClaim,
+    Event::ResizeShrinkBucketMigrate,
+    Event::ResizeShrinkFrozenWait,
+    Event::ResizeShrinkFinish,
 ];
 
 impl Event {
@@ -234,6 +253,11 @@ impl Event {
             Event::PoolRecycle => "pool_recycle",
             Event::RetireBatch => "retire_batch",
             Event::OrphanLock => "orphan_lock",
+            Event::ResizeShrinkBegin => "resize_shrink_begin",
+            Event::ResizeShrinkStripeClaim => "resize_shrink_stripe_claim",
+            Event::ResizeShrinkBucketMigrate => "resize_shrink_bucket_migrate",
+            Event::ResizeShrinkFrozenWait => "resize_shrink_frozen_wait",
+            Event::ResizeShrinkFinish => "resize_shrink_finish",
         }
     }
 }

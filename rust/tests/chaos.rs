@@ -13,7 +13,8 @@
 //! invariants (and the injected-count assertions are gated off).
 
 use big_atomics::fault::chaos::{
-    self, jitter, kill_allocator, kill_copier, kill_worker, stall_drainer,
+    self, jitter, kill_allocator, kill_copier, kill_copier_shrink, kill_migrator, kill_worker,
+    stall_drainer,
 };
 
 /// Fail with the full report (notes + violations) — `assert!(rep.ok())`
@@ -67,6 +68,32 @@ fn test_chaos_kill_allocator_pinned_seeds() {
 }
 
 #[test]
+fn test_chaos_kill_copier_shrink_pinned_seeds() {
+    for seed in [0xC4A0_5u64, 17] {
+        let rep = kill_copier_shrink(seed);
+        assert_survived(&rep);
+        // The grow phase completes before the plan is armed, so every
+        // seal the one-shot kill can hit belongs to a shrink migration;
+        // the mass drain guarantees at least one such seal.
+        #[cfg(feature = "fault")]
+        assert!(rep.injected > 0, "kill-copier-shrink plan never fired: {rep}");
+    }
+}
+
+#[test]
+fn test_chaos_kill_migrator_pinned_seeds() {
+    for seed in [0xC4A0_5u64, 19] {
+        let rep = kill_migrator(seed);
+        assert_survived(&rep);
+        // The drained table guarantees a shrink with non-empty chains,
+        // so the per-entry-copy kill window is reached on the migrator's
+        // first converging pass.
+        #[cfg(feature = "fault")]
+        assert!(rep.injected > 0, "kill-migrator plan never fired: {rep}");
+    }
+}
+
+#[test]
 fn test_chaos_jitter_pinned_seed() {
     let rep = jitter(0xC4A0_5, 0.3);
     assert_survived(&rep);
@@ -77,7 +104,7 @@ fn test_chaos_jitter_pinned_seed() {
 #[test]
 fn test_chaos_run_all_dispatch() {
     let reports = chaos::run(3, "all", 0.2).expect("'all' is a valid plan name");
-    assert_eq!(reports.len(), 5, "all = every scenario");
+    assert_eq!(reports.len(), 7, "all = every scenario");
     for rep in &reports {
         assert_survived(rep);
     }

@@ -20,13 +20,13 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use big_atomics::atomics::{
     BigAtomic, CachedMemEff, CachedWaitFree, CachedWritable, HtmSim, Indirect, LockPool, SeqLock,
     SimpLock, Words,
 };
-use big_atomics::hash::{CacheHash, Chaining, ConcurrentMap, Link};
+use big_atomics::hash::{BackgroundMigrator, CacheHash, Chaining, ConcurrentMap, Link, Maintain};
 
 const K: usize = 4;
 type V = Words<K>;
@@ -485,6 +485,200 @@ fn test_chaining_resize_concurrent_mixed() {
     t.finish_resizes();
     assert!(t.capacity() > 16, "chaining table never grew");
     assert!(t.generation() >= 1);
+}
+
+/// Drive `maintain` until the table is idle (no migration in flight) and
+/// its capacity has stopped moving; returns the converged capacity.
+fn converge<M, K, V>(t: &M) -> usize
+where
+    M: ConcurrentMap<K, V> + Maintain,
+    K: big_atomics::atomics::AtomicValue,
+    V: big_atomics::atomics::AtomicValue,
+{
+    let mut cap = t.capacity();
+    loop {
+        let idle = t.maintain();
+        let now = t.capacity();
+        if idle && now == cap {
+            return now;
+        }
+        cap = now;
+    }
+}
+
+/// Grow → mass-remove → shrink with wide checksummed `Words<4>` values:
+/// after a concurrent grow and a concurrent 15/16 drain, maintenance must
+/// shrink the table below its peak without losing, duplicating, or
+/// resurrecting any key, and without disturbing the grow generation.
+#[test]
+fn test_wide_grow_mass_remove_shrink_linearizable() {
+    fn wval(i: u64) -> WK {
+        let a = i;
+        let b = i.wrapping_mul(0x9E3779B97F4A7C15);
+        let c = !i;
+        Words([a, b, c, a ^ b ^ c])
+    }
+    let t: Arc<CacheHash<CachedMemEff<Link<WK, WK>>, WK, WK>> = Arc::new(CacheHash::new(2));
+    let threads = 4u64;
+    let per = 2_048u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = (tix + 1) << 32;
+                for i in 0..per {
+                    assert!(t.insert(wkey(base + i), wval(base + i)));
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t.finish_resizes();
+    let peak = t.capacity();
+    let grow_gens = t.generation();
+    assert!(peak > 2, "wide table never grew");
+    // Concurrent 15/16 drain: removals race each other and the shrink
+    // migrations they kick off.
+    let handles: Vec<_> = (0..threads)
+        .map(|tix| {
+            let t = Arc::clone(&t);
+            std::thread::spawn(move || {
+                let base = (tix + 1) << 32;
+                for i in 0..per {
+                    if i % 16 != 0 {
+                        assert!(t.remove(wkey(base + i)), "lost key {}", base + i);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let cap = converge(&*t);
+    assert!(t.shrink_generation() >= 1, "drained table never shrank");
+    assert!(cap < peak, "capacity {cap} did not drop below peak {peak}");
+    assert_eq!(t.generation(), grow_gens, "shrink bumped the grow generation");
+    // Exactness: survivors keep their checksummed value, drained keys
+    // stay gone, and each survivor is present exactly once.
+    for tix in 0..threads {
+        let base = (tix + 1) << 32;
+        for i in 0..per {
+            let want = if i % 16 == 0 { Some(wval(base + i)) } else { None };
+            assert_eq!(t.find(wkey(base + i)), want, "key {}", base + i);
+        }
+    }
+    for tix in 0..threads {
+        let base = (tix + 1) << 32;
+        for i in (0..per).step_by(16) {
+            assert!(t.remove(wkey(base + i)), "survivor {} vanished", base + i);
+            assert!(!t.remove(wkey(base + i)), "survivor {} duplicated", base + i);
+        }
+    }
+}
+
+/// Oscillation guard: the 4x hysteresis band between the grow trigger
+/// (load factor 2) and the shrink trigger (load factor 1/4) means an
+/// occupancy oscillating well inside the band must not thrash resizes —
+/// after settling, alternating insert/remove bursts leave both generation
+/// counters and the capacity untouched (at most one residual shrink).
+#[test]
+fn test_shrink_grow_oscillation_guard() {
+    let t: Chaining = Chaining::new(2);
+    let n = 4_096u64;
+    for i in 0..n {
+        assert!(t.insert(i, i));
+    }
+    t.finish_resizes();
+    // Drop to 700 keys and converge: 700 * 4 >= any capacity the engine
+    // settles on, so the steady state sits inside the hysteresis band.
+    for i in 700..n {
+        assert!(t.remove(i));
+    }
+    let cap0 = converge(&t);
+    let grows0 = t.generation();
+    let shrinks0 = t.shrink_generation();
+    // 20 bursts oscillating occupancy between 700 and 1000 — a 1.43x
+    // swing against a 4x band.
+    for _ in 0..20 {
+        for i in 0..300u64 {
+            assert!(t.insert(n + i, i));
+        }
+        for i in 0..300u64 {
+            assert!(t.remove(n + i));
+        }
+        converge(&t);
+    }
+    assert_eq!(t.generation(), grows0, "in-band bursts triggered grows");
+    assert!(
+        t.shrink_generation() - shrinks0 <= 1,
+        "in-band bursts thrashed shrinks: {} -> {}",
+        shrinks0,
+        t.shrink_generation()
+    );
+    let cap = t.capacity();
+    assert!(
+        cap == cap0 || cap * 2 == cap0,
+        "capacity oscillated: settled {cap0}, now {cap}"
+    );
+    for i in 0..700u64 {
+        assert_eq!(t.find(i), Some(i), "resident key {i} lost in the bursts");
+    }
+}
+
+/// A quiescent half-migrated table must converge through the background
+/// migrator alone: after the drain returns (possibly mid-shrink), zero
+/// foreground operations touch the table — the migrator has to finish the
+/// in-flight migration and walk the capacity down by itself.
+#[test]
+fn test_background_migrator_quiescent_convergence() {
+    let t: Arc<Chaining> = Arc::new(Chaining::new(2));
+    let n = 4_096u64;
+    for i in 0..n {
+        assert!(t.insert(i, i ^ 0x77));
+    }
+    t.finish_resizes();
+    let peak = t.capacity();
+    for i in 256..n {
+        assert!(t.remove(i));
+    }
+    // From here on the table is quiescent: only the migrator may act.
+    let migrator = BackgroundMigrator::spawn(
+        vec![Arc::clone(&t) as Arc<dyn Maintain>],
+        Duration::from_micros(200),
+    );
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut stable = 0u32;
+    let mut cap = t.capacity();
+    while stable < 5 {
+        assert!(
+            Instant::now() < deadline,
+            "migrator never converged: in_flight={} capacity={}",
+            t.resize_in_flight(),
+            t.capacity()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+        let now = t.capacity();
+        if !t.resize_in_flight() && now == cap {
+            stable += 1;
+        } else {
+            stable = 0;
+        }
+        cap = now;
+    }
+    assert_eq!(migrator.panics(), 0, "migrator pass panicked");
+    migrator.stop();
+    assert!(!t.resize_in_flight(), "migration still in flight after stop");
+    assert!(t.capacity() < peak, "quiescent table never shrank below peak");
+    assert!(t.shrink_generation() >= 1);
+    for i in 0..256u64 {
+        assert_eq!(t.find(i), Some(i ^ 0x77), "resident key {i} corrupted");
+    }
+    for i in 256..n {
+        assert_eq!(t.find(i), None, "drained key {i} resurrected");
+    }
 }
 
 /// Stores interleaved with CASes: the writable implementations must keep
